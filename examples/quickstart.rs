@@ -1,0 +1,44 @@
+//! Quickstart: load the engine, generate a batch of 4 completions with
+//! BASS, and compare against regular decoding.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use bass::baseline::{RdConfig, RegularDecoder};
+use bass::bench_util::artifacts_root;
+use bass::runtime::Engine;
+use bass::spec::{SpecConfig, SpecEngine};
+use bass::tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(&artifacts_root())?;
+    println!("engine up on `{}` with {} artifacts\n",
+             engine.platform(), engine.manifest.artifacts.len());
+
+    let prompt = tokenizer::encode(
+        "def mul_3(x):\n    # multiplies x by 3\n    return");
+    let prompts = vec![prompt; 4];
+
+    // Warm-up (lazy artifact compilation), then a timed run.
+    let bass_engine = SpecEngine::new(&engine, SpecConfig::default());
+    let _ = bass_engine.generate(&prompts)?;
+    let res = bass_engine.generate(&prompts)?;
+    println!("BASS (batch=4, Algorithm-1 draft lengths):");
+    for (i, s) in res.seqs.iter().enumerate() {
+        println!("  [{i}] {:?}", tokenizer::decode(&s.generated));
+    }
+    println!("  acceptance {:.1}%  tokens/step {:.2}  mean PTL {:.2} ms\n",
+             res.metrics.acceptance_rate * 100.0,
+             res.metrics.tokens_per_step,
+             res.metrics.ptl_mean * 1e3);
+
+    let rd = RegularDecoder::new(&engine, RdConfig::default());
+    let _ = rd.generate(&prompts)?;
+    let rd_res = rd.generate(&prompts)?;
+    println!("Regular decoding (same batch):");
+    println!("  mean PTL {:.2} ms  ->  BASS speedup {:.2}x",
+             rd_res.metrics.ptl_mean * 1e3,
+             rd_res.metrics.ptl_mean / res.metrics.ptl_mean.max(1e-9));
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! **End-to-end validation driver** (DESIGN.md / EXPERIMENTS.md §E2E):
+//! bring up the full serving stack — PJRT engine, speculative BASS decoder,
+//! dynamic batcher, TCP server — and push a mixed real workload through it:
+//! code-completion requests with fan-out (same-prompt batches) interleaved
+//! with summarization requests (distinct-prompt batching). Reports
+//! end-to-end latency percentiles, throughput, acceptance rate and task
+//! accuracy, and writes `artifacts/results/serve_e2e.json`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e -- [n_rounds]
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bass::bench_util::{artifacts_root, save_result};
+use bass::coordinator::batcher::BatcherConfig;
+use bass::coordinator::{server, Coordinator, CoordinatorConfig};
+use bass::eval::{load_code_tasks, load_summ_tasks, rouge2_f1};
+use bass::metrics::Summary;
+use bass::runtime::json::Json;
+use bass::spec::SpecConfig;
+
+struct ClientStats {
+    latency: Summary,
+    queue_ms: Summary,
+    tokens: usize,
+    code_pass: usize,
+    code_total: usize,
+    rouge: Vec<f64>,
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_rounds: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(6);
+
+    let root = artifacts_root();
+    let code_tasks = load_code_tasks(&root)?;
+    let summ_tasks = load_summ_tasks(&root)?;
+
+    println!("== BASS end-to-end serving validation ==");
+    let t_warm = std::time::Instant::now();
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::new(
+        root.clone(),
+        SpecConfig { max_new_tokens: 64, ..SpecConfig::default() },
+        BatcherConfig {
+            max_batch: 8,
+            window: Duration::from_millis(10),
+        },
+    ))?);
+    println!("engine ready (prewarm {:.1}s)", t_warm.elapsed().as_secs_f64());
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = coord.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve(srv, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv()?;
+    println!("server listening on {addr}");
+
+    // Warm-up round compiles the lazy artifacts.
+    {
+        let t = &code_tasks[0];
+        let _ = request(addr, &t.prompt, 4, 24)?;
+        println!("warm-up complete; measuring {n_rounds} rounds\n");
+    }
+
+    let t_run = Instant::now();
+    let mut stats = ClientStats {
+        latency: Summary::default(),
+        queue_ms: Summary::default(),
+        tokens: 0,
+        code_pass: 0,
+        code_total: 0,
+        rouge: Vec::new(),
+    };
+
+    for round in 0..n_rounds {
+        // One fan-out code request (batch of 4 recommendations) and two
+        // concurrent single summarization requests — mixed traffic.
+        let code = code_tasks[round % code_tasks.len()].clone();
+        let s1 = summ_tasks[(2 * round) % summ_tasks.len()].clone();
+        let s2 = summ_tasks[(2 * round + 1) % summ_tasks.len()].clone();
+
+        let h_code = {
+            let prompt = code.prompt.clone();
+            std::thread::spawn(move || request(addr, &prompt, 4, 24))
+        };
+        let h_s1 = {
+            let prompt = s1.prompt.clone();
+            std::thread::spawn(move || request(addr, &prompt, 1, 48))
+        };
+        let h_s2 = {
+            let prompt = s2.prompt.clone();
+            std::thread::spawn(move || request(addr, &prompt, 1, 48))
+        };
+        let code_resp = h_code.join().expect("join")?;
+        let s1_resp = h_s1.join().expect("join")?;
+        let s2_resp = h_s2.join().expect("join")?;
+
+        for r in [&code_resp, &s1_resp, &s2_resp] {
+            stats.latency.add(r.e2e_ms);
+            stats.queue_ms.add(r.queue_ms);
+            stats.tokens += r.tokens;
+        }
+        stats.code_total += 1;
+        if code_resp.texts.iter().any(|t| code.passes(t)) {
+            stats.code_pass += 1;
+        }
+        for (resp, task) in [(&s1_resp, &s1), (&s2_resp, &s2)] {
+            let summary =
+                resp.texts[0].split('\n').next().unwrap_or("").trim();
+            stats.rouge.push(rouge2_f1(summary, &task.reference));
+        }
+        println!("round {round}: code {:.0} ms ({} seqs), summ {:.0}/{:.0} \
+                  ms, queue p50 {:.1} ms",
+                 code_resp.e2e_ms, code_resp.texts.len(), s1_resp.e2e_ms,
+                 s2_resp.e2e_ms, stats.queue_ms.percentile(0.5));
+    }
+
+    let wall = t_run.elapsed().as_secs_f64();
+    let rouge_mean =
+        stats.rouge.iter().sum::<f64>() / stats.rouge.len().max(1) as f64;
+    let throughput = stats.tokens as f64 / wall;
+    println!("\n== results over {n_rounds} rounds ({:.1}s) ==", wall);
+    println!("requests        : {}", stats.latency.n());
+    println!("e2e latency     : p50 {:.0} ms  p90 {:.0} ms  min {:.0} ms",
+             stats.latency.percentile(0.5), stats.latency.percentile(0.9),
+             stats.latency.min());
+    println!("queue wait      : p50 {:.1} ms", stats.queue_ms.percentile(0.5));
+    println!("throughput      : {:.1} tok/s ({} tokens)", throughput,
+             stats.tokens);
+    println!("code Pass@Batch : {:.0}% ({}/{})",
+             100.0 * stats.code_pass as f64 / stats.code_total.max(1) as f64,
+             stats.code_pass, stats.code_total);
+    println!("summ ROUGE-2    : {rouge_mean:.3}");
+
+    save_result("serve_e2e", Json::obj(vec![
+        ("rounds", n_rounds.into()),
+        ("requests", stats.latency.n().into()),
+        ("latency_p50_ms", stats.latency.percentile(0.5).into()),
+        ("latency_p90_ms", stats.latency.percentile(0.9).into()),
+        ("queue_p50_ms", stats.queue_ms.percentile(0.5).into()),
+        ("throughput_tok_s", throughput.into()),
+        ("tokens", stats.tokens.into()),
+        ("code_pass_at_batch",
+         (stats.code_pass as f64 / stats.code_total.max(1) as f64).into()),
+        ("summ_rouge2", rouge_mean.into()),
+    ]))?;
+    Ok(())
+}
+
+struct RespStats {
+    e2e_ms: f64,
+    queue_ms: f64,
+    tokens: usize,
+    texts: Vec<String>,
+}
+
+fn request(addr: std::net::SocketAddr, prompt: &str, n: usize,
+           max_new: usize) -> anyhow::Result<RespStats> {
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect(addr)?;
+    let req = Json::obj(vec![
+        ("prompt", prompt.into()),
+        ("n", n.into()),
+        ("max_new_tokens", max_new.into()),
+    ]);
+    stream.write_all(req.to_string_pretty().replace('\n', " ").as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    let j = Json::parse(&line)?;
+    anyhow::ensure!(j.get("ok")? == &Json::Bool(true), "server: {line}");
+    let seqs = j.get("seqs")?.as_arr()?;
+    Ok(RespStats {
+        e2e_ms: t0.elapsed().as_secs_f64() * 1e3,
+        queue_ms: j.get("queue_ms")?.as_f64()?,
+        tokens: seqs.iter()
+            .map(|s| s.get("n_tokens").and_then(|v| v.as_usize())
+                 .unwrap_or(0))
+            .sum(),
+        texts: seqs.iter()
+            .map(|s| Ok(s.get("text")?.as_str()?.to_string()))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    })
+}

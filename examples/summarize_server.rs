@@ -1,0 +1,94 @@
+//! Summarization-service scenario (paper Table 1's workload): run the
+//! coordinator + TCP server, fire concurrent summarization requests at it
+//! from client threads, and report ROUGE-2 plus queue/batch latency — the
+//! distinct-prompts batching case (paper footnote 5).
+//!
+//! ```bash
+//! cargo run --release --example summarize_server -- [n_requests]
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bass::bench_util::artifacts_root;
+use bass::coordinator::batcher::BatcherConfig;
+use bass::coordinator::{server, Coordinator, CoordinatorConfig};
+use bass::eval::{load_summ_tasks, rouge2_f1};
+use bass::runtime::json::Json;
+use bass::spec::SpecConfig;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8);
+
+    let root = artifacts_root();
+    let tasks = load_summ_tasks(&root)?;
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::new(
+        root.clone(),
+        SpecConfig { max_new_tokens: 48, ..SpecConfig::default() },
+        BatcherConfig {
+            max_batch: 8,
+            window: Duration::from_millis(20),
+        },
+    ))?);
+    println!("engine ready; starting server...");
+
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = coord.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve(srv, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv()?;
+    println!("server on {addr}; sending {n_requests} concurrent requests\n");
+
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let task = tasks[i % tasks.len()].clone();
+            std::thread::spawn(move || -> anyhow::Result<(f64, f64, f64)> {
+                let mut stream = TcpStream::connect(addr)?;
+                let req = Json::obj(vec![
+                    ("prompt", task.prompt.as_str().into()),
+                    ("n", 1usize.into()),
+                    ("max_new_tokens", 48usize.into()),
+                ]);
+                stream.write_all(
+                    req.to_string_pretty().replace('\n', " ").as_bytes())?;
+                stream.write_all(b"\n")?;
+                let mut line = String::new();
+                BufReader::new(stream).read_line(&mut line)?;
+                let j = Json::parse(&line)?;
+                anyhow::ensure!(j.get("ok")? == &Json::Bool(true),
+                                "server error: {line}");
+                let text = j.get("seqs")?.as_arr()?[0]
+                    .get("text")?.as_str()?.to_string();
+                let summary = text.split('\n').next().unwrap_or("").trim();
+                let rouge = rouge2_f1(summary, &task.reference);
+                Ok((rouge, j.get("batch_ms")?.as_f64()?,
+                    j.get("queue_ms")?.as_f64()?))
+            })
+        })
+        .collect();
+
+    let mut rouges = Vec::new();
+    let mut batch_ms = Vec::new();
+    let mut queue_ms = Vec::new();
+    for h in handles {
+        let (r, b, q) = h.join().expect("client thread")?;
+        rouges.push(r);
+        batch_ms.push(b);
+        queue_ms.push(q);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!("requests      : {n_requests}");
+    println!("mean ROUGE-2  : {:.3}", mean(&rouges));
+    println!("mean batch ms : {:.1}", mean(&batch_ms));
+    println!("mean queue ms : {:.1}", mean(&queue_ms));
+    Ok(())
+}

@@ -1,0 +1,322 @@
+"""AOT export pipeline: corpus → train → quantize → HLO-text artifacts.
+
+Runs once at ``make artifacts``; the Rust serving binary is self-contained
+afterwards. Exports **HLO text** (not serialized HloModuleProto): the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids), while the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Artifact grid (DESIGN.md §2): for each model and precision, a prefill
+program per batch size, a ragged verification ``decode`` program per
+(batch, Q) bucket for the main model, and a fused ``draft`` program per
+(batch, K) bucket for draft models. Buckets keep the artifact count finite;
+the Rust engine rounds Algorithm-1 draft lengths to the nearest bucket.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import bwt
+from compile.corpus import build_corpus, write_tasks
+from compile.model import (CONFIGS, ModelConfig, decode, draft_loop, prefill)
+from compile.quant import quantize_params
+from compile.train import TrainConfig, held_out_loss, train_model
+
+# ---------------------------------------------------------------------------
+# Export grid
+# ---------------------------------------------------------------------------
+
+BATCHES = [1, 2, 4, 8, 16]
+DRAFT_K_BUCKETS = [1, 2, 3, 4, 5, 6, 8, 10, 12, 16]   # Algorithm-1 range
+SMALL_K_BUCKETS = [2, 4, 6, 8]                         # draft_b / draft_c
+# Prompt capacity: must fit the longest task prompt (synth_xsum articles
+# run ~110 bytes); prompt + generation must stay within the *trained*
+# position range (TrainConfig.seq = 192).
+PREFILL_P = 112
+MAIN = "main"
+DRAFTS = ["draft_a", "draft_b", "draft_c"]
+PRECISIONS = {"main": ["f32", "int8"], "draft_a": ["f32", "int8"],
+              "draft_b": ["f32"], "draft_c": ["f32"]}
+# Pallas parity subset: proves the explicitly-tiled kernel path composes
+# end-to-end through PJRT (the rest of the grid uses the XLA-fused "dense"
+# realization of BASS-PAD, which is numerically identical — see
+# tests/test_model.py and DESIGN.md §6).
+PALLAS_SUBSET = [("main", "decode", 1, 5), ("main", "decode", 8, 5),
+                 ("draft_a", "draft", 8, 4)]
+
+
+def grid(quick: bool = False):
+    """Yield (model, precision, phase, batch, q, attn) artifact specs."""
+    batches = [1, 2] if quick else BATCHES
+    main_q = [1] + [k + 1 for k in DRAFT_K_BUCKETS]
+    if quick:
+        main_q, draft_k, small_k = [1, 5], [4], [4]
+        drafts = ["draft_a"]
+    else:
+        draft_k, small_k, drafts = DRAFT_K_BUCKETS, SMALL_K_BUCKETS, DRAFTS
+    for b in batches:
+        for prec in PRECISIONS[MAIN]:
+            yield (MAIN, prec, "prefill", b, PREFILL_P, "dense")
+            for q in main_q:
+                yield (MAIN, prec, "decode", b, q, "dense")
+        for d in drafts:
+            ks = draft_k if d == "draft_a" else small_k
+            for prec in PRECISIONS[d]:
+                yield (d, prec, "prefill", b, PREFILL_P, "dense")
+                for k in ks:
+                    yield (d, prec, "draft", b, k, "dense")
+    if not quick:
+        for (m, phase, b, q) in PALLAS_SUBSET:
+            yield (m, "f32", phase, b, q, "pallas")
+
+
+def artifact_name(model, prec, phase, batch, q, attn):
+    suffix = "_pallas" if attn == "pallas" else ""
+    return f"{model}_{prec}_{phase}{q}_b{batch}{suffix}"
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _flat_weights(params):
+    """Flatten params; returns (leaves, treedef, names, shape_dtype_specs)."""
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in paths]
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    return leaves, treedef, names, specs
+
+
+def _cache_specs(cfg: ModelConfig, batch):
+    shape = (batch, cfg.n_head, cfg.s_max, cfg.d_head)
+    return [jax.ShapeDtypeStruct(shape, jnp.float32)] * (2 * cfg.n_layer)
+
+
+def lower_artifact(cfg: ModelConfig, params, phase, batch, q, attn):
+    """Lower one artifact; returns HLO text.
+
+    Input order  : weights..., host tensors..., caches...
+    Output order : head outputs..., caches...
+    (cache buffers stay device-resident across steps in the Rust runtime).
+    """
+    _, treedef, _, wspecs = _flat_weights(params)
+    i32, f32 = jnp.int32, jnp.float32
+
+    if phase == "prefill":
+        def fn(flat_w, tokens, prompt_lens):
+            p = jax.tree_util.tree_unflatten(treedef, flat_w)
+            return prefill(p, tokens, prompt_lens, cfg, attn)
+        args = (wspecs, jax.ShapeDtypeStruct((batch, q), i32),
+                jax.ShapeDtypeStruct((batch,), i32))
+        jitted = jax.jit(fn)
+    elif phase == "decode":
+        def fn(flat_w, tokens, seq_lens, caches):
+            p = jax.tree_util.tree_unflatten(treedef, flat_w)
+            return decode(p, tokens, seq_lens, caches, cfg, attn)
+        args = (wspecs, jax.ShapeDtypeStruct((batch, q), i32),
+                jax.ShapeDtypeStruct((batch,), i32),
+                _cache_specs(cfg, batch))
+        jitted = jax.jit(fn, donate_argnums=(3,))
+    elif phase == "draft":
+        def fn(flat_w, tokens_in, n_in, seq_lens, uniforms, temp, top_p,
+               caches):
+            p = jax.tree_util.tree_unflatten(treedef, flat_w)
+            toks, qdists, caches = draft_loop(
+                p, tokens_in, n_in, seq_lens, caches, uniforms, temp, top_p,
+                cfg, attn)
+            return (toks, qdists, *caches)
+        args = (wspecs, jax.ShapeDtypeStruct((batch, 2), i32),
+                jax.ShapeDtypeStruct((batch,), i32),
+                jax.ShapeDtypeStruct((batch,), i32),
+                jax.ShapeDtypeStruct((batch, q), f32),
+                jax.ShapeDtypeStruct((), f32), jax.ShapeDtypeStruct((), f32),
+                _cache_specs(cfg, batch))
+        jitted = jax.jit(fn, donate_argnums=(7,))
+    else:
+        raise ValueError(phase)
+    return to_hlo_text(jitted.lower(*args))
+
+
+def lower_gemm_calib(n: int = 768) -> str:
+    """A big square matmul used by the Rust runtime to calibrate peak
+    FLOP/s for the Fig-1 utilization metric."""
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return to_hlo_text(jax.jit(lambda a, b: a @ b).lower(spec, spec))
+
+
+# ---------------------------------------------------------------------------
+# Weight I/O
+# ---------------------------------------------------------------------------
+
+def save_weights(out_dir, model_name, prec, params):
+    leaves, _, names, _ = _flat_weights(params)
+    tensors = [(n, np.asarray(l)) for n, l in zip(names, leaves)]
+    path = os.path.join(out_dir, "weights", f"{model_name}_{prec}.bwt")
+    bwt.write_bwt(path, tensors)
+    return [{"name": n, "dtype": str(a.dtype), "shape": list(a.shape)}
+            for n, a in tensors]
+
+
+def params_to_npz(path, params):
+    leaves, _, names, _ = _flat_weights(params)
+    np.savez(path, **{n: np.asarray(l) for n, l in zip(names, leaves)})
+
+
+def params_from_npz(path, cfg: ModelConfig, prec="f32"):
+    """Rebuild the pytree from an npz (names encode the paths)."""
+    from compile.model import init_params
+    base = init_params(jax.random.PRNGKey(0), cfg)
+    if prec == "int8":
+        base = quantize_params(base)
+    leaves, treedef = jax.tree_util.tree_flatten(base)
+    _, _, names, _ = _flat_weights(base)
+    data = np.load(path)
+    new = [jnp.asarray(data[n]) for n in names]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+# ---------------------------------------------------------------------------
+# Main driver
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny grid + tiny training, for CI/tests")
+    ap.add_argument("--steps-main", type=int, default=350)
+    ap.add_argument("--steps-draft", type=int, default=300)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = args.out
+    for sub in ["hlo", "weights", "tasks", "results"]:
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    t_start = time.time()
+    corpus, code_p, summ_p = build_corpus()
+    write_tasks(os.path.join(out, "tasks"), code_p, summ_p)
+    with open(os.path.join(out, "tasks", "corpus_stats.json"), "w") as f:
+        json.dump({"bytes": len(corpus), "code_tasks": len(code_p),
+                   "summ_tasks": len(summ_p)}, f)
+
+    # ---- train (or reuse) --------------------------------------------------
+    train_log = {}
+    model_names = [MAIN] + (["draft_a"] if args.quick else DRAFTS)
+    params_by_model = {}
+    for name in model_names:
+        cfg = CONFIGS[name]
+        npz = os.path.join(out, "weights", f"{name}.npz")
+        if os.path.exists(npz) and not args.force:
+            print(f"[aot] reusing trained weights for {name}")
+            params_by_model[name] = params_from_npz(npz, cfg)
+            continue
+        steps = args.steps_main if name == MAIN else args.steps_draft
+        if args.quick:
+            steps = 5
+        tc = TrainConfig(steps=steps)
+        params, hist = train_model(cfg, corpus, tc)
+        params_by_model[name] = params
+        train_log[name] = {
+            "steps": steps, "history": hist,
+            "held_out_loss": held_out_loss(params, cfg, corpus, tc),
+            "params": cfg.param_count(params),
+        }
+        params_to_npz(npz, params)
+    if train_log:
+        with open(os.path.join(out, "weights", "train_log.json"), "w") as f:
+            json.dump(train_log, f, indent=1)
+
+    # ---- weights (.bwt per precision) --------------------------------------
+    weight_manifest = {}
+    for name, params in params_by_model.items():
+        weight_manifest[name] = {}
+        for prec in PRECISIONS[name]:
+            p = params if prec == "f32" else quantize_params(params)
+            weight_manifest[name][prec] = save_weights(out, name, prec, p)
+
+    # ---- HLO artifacts ------------------------------------------------------
+    artifacts = []
+    n_done = 0
+    for (model, prec, phase, b, q, attn) in grid(args.quick):
+        name = artifact_name(model, prec, phase, b, q, attn)
+        path = os.path.join(out, "hlo", name + ".hlo.txt")
+        rec = {"file": f"hlo/{name}.hlo.txt", "model": model,
+               "precision": prec, "phase": phase, "batch": b, "q": q,
+               "attn": attn}
+        artifacts.append(rec)
+        if os.path.exists(path) and not args.force:
+            continue
+        cfg = CONFIGS[model]
+        params = params_by_model[model]
+        p = params if prec == "f32" else quantize_params(params)
+        t0 = time.time()
+        text = lower_artifact(cfg, p, phase, b, q, attn)
+        with open(path, "w") as f:
+            f.write(text)
+        n_done += 1
+        print(f"[aot] {name}: {len(text) / 1e6:.2f} MB in "
+              f"{time.time() - t0:.1f}s")
+
+    calib_path = os.path.join(out, "hlo", "gemm_calib.hlo.txt")
+    calib_n = 768
+    if not os.path.exists(calib_path) or args.force:
+        with open(calib_path, "w") as f:
+            f.write(lower_gemm_calib(calib_n))
+
+    # ---- manifest -----------------------------------------------------------
+    manifest = {
+        "version": 1,
+        "vocab": 256,
+        "eos": 0,
+        "prefill_p": PREFILL_P,
+        "draft_k_buckets": DRAFT_K_BUCKETS,
+        "small_k_buckets": SMALL_K_BUCKETS,
+        "batches": BATCHES if not args.quick else [1, 2],
+        "models": {
+            name: {
+                "n_layer": CONFIGS[name].n_layer,
+                "n_head": CONFIGS[name].n_head,
+                "d_model": CONFIGS[name].d_model,
+                "d_ff": CONFIGS[name].d_ff,
+                "s_max": CONFIGS[name].s_max,
+                "d_head": CONFIGS[name].d_head,
+                "param_count": CONFIGS[name].param_count(
+                    params_by_model[name]),
+                "weights": {prec: f"weights/{name}_{prec}.bwt"
+                            for prec in PRECISIONS[name]},
+                "weight_tensors": weight_manifest[name],
+            } for name in params_by_model
+        },
+        "artifacts": artifacts,
+        "calib": {"file": "hlo/gemm_calib.hlo.txt", "n": calib_n,
+                  "flops": 2 * calib_n ** 3},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] exported {n_done} new artifacts "
+          f"({len(artifacts)} total) in {time.time() - t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""BWT — the flat binary weight format shared by python (writer) and the
+Rust runtime (reader, ``rust/src/runtime/weights.rs``).
+
+Layout (all little-endian):
+
+    magic   4 bytes  b"BWT1"
+    count   u32      number of tensors
+    per tensor:
+      name_len u16, name utf-8 bytes
+      dtype    u8   (0 = f32, 1 = i8, 2 = i32)
+      ndim     u8
+      dims     u32 × ndim
+      data     raw bytes (row-major)
+
+Tensor order is the artifact *input order* (flattened-pytree order), so the
+Rust side can upload buffers positionally without re-deriving the pytree.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"BWT1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2}
+DTYPES_INV = {0: np.float32, 1: np.int8, 2: np.int32}
+
+
+def write_bwt(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_bwt(path: str) -> list[tuple[str, np.ndarray]]:
+    """Python-side reader (round-trip tests; Rust has its own)."""
+    out = []
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError("bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dtype = np.dtype(DTYPES_INV[dt])
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(n * dtype.itemsize), dtype).reshape(dims)
+            out.append((name, arr))
+    return out

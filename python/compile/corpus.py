@@ -1,0 +1,161 @@
+"""Deterministic synthetic corpus + evaluation tasks.
+
+The paper evaluates on XSum (summarization, OPT models) and HumanEval (code
+generation, CodeGen / a 7.8B code model). Neither a 13B model nor the real
+datasets fit this testbed, so we build the closest synthetic equivalent
+(DESIGN.md §1): a templated byte-level corpus with two registers —
+
+  * prose: entity/fact sentences, and Article→Summary pairs whose summary is
+    derivable from the article (gives ROUGE-2 a real signal);
+  * code: small python-like functions drawn from parameterized families
+    (arith ops, clamps, predicates, accumulators) with canonical one-line
+    bodies (gives Pass@K a programmatic checker).
+
+Main and draft models are trained on the *same* corpus (as in the paper,
+App. A.2), which is what produces realistic draft-token acceptance rates.
+Everything is seeded: the corpus, the train/test task splits and the task
+JSON files are bit-reproducible.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+from dataclasses import dataclass
+
+NAMES = ["alice", "bob", "carol", "dave", "erin", "frank", "grace", "heidi",
+         "ivan", "judy", "karl", "lena", "mike", "nora", "oscar", "peggy"]
+CITIES = ["paris", "tokyo", "berlin", "cairo", "oslo", "lima", "quito",
+          "seoul", "dakar", "milan", "delhi", "hanoi"]
+TOPICS = ["rivers", "bridges", "markets", "gardens", "museums", "harbors",
+          "stadiums", "forests", "castles", "libraries"]
+VERBS = ["studies", "maps", "paints", "records", "restores", "describes"]
+
+EOS = "\x00"  # byte-level end-of-sequence marker
+
+
+# ---------------------------------------------------------------------------
+# Code register (HumanEval analog)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CodeProblem:
+    task_id: str
+    prompt: str      # up to and including "    return"
+    canonical: str   # the canonical completion line, e.g. " x + 7"
+    family: str
+
+
+def _code_families(rng: random.Random):
+    """Parameterized function families with canonical single-line bodies."""
+    fams = []
+    for k in range(2, 30):
+        fams.append(("add", f"add_{k}", f"adds {k} to x", f" x + {k}"))
+        fams.append(("mul", f"mul_{k}", f"multiplies x by {k}", f" x * {k}"))
+        fams.append(("sub", f"sub_{k}", f"subtracts {k} from x", f" x - {k}"))
+    for k in range(2, 16):
+        fams.append(("gt", f"gt_{k}", f"checks if x exceeds {k}", f" x > {k}"))
+        fams.append(("mod", f"mod_{k}", f"takes x modulo {k}", f" x % {k}"))
+        fams.append(("clamp", f"clamp_{k}",
+                     f"clamps x to at most {k}", f" min(x, {k})"))
+    rng.shuffle(fams)
+    return fams
+
+
+def make_code_problem(fam) -> CodeProblem:
+    _, name, desc, body = fam
+    prompt = (f"def {name}(x):\n"
+              f"    # {desc}\n"
+              f"    return")
+    return CodeProblem(task_id=name, prompt=prompt, canonical=body,
+                       family=fam[0])
+
+
+def code_sample_text(p: CodeProblem) -> str:
+    return p.prompt + p.canonical + "\n" + EOS
+
+
+# ---------------------------------------------------------------------------
+# Prose register (XSum analog)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SummProblem:
+    task_id: str
+    prompt: str      # "article: ...\nsummary:"
+    reference: str   # the derivable summary
+
+
+def make_summ_problem(rng: random.Random, idx: int) -> SummProblem:
+    name = rng.choice(NAMES)
+    city = rng.choice(CITIES)
+    topic = rng.choice(TOPICS)
+    verb = rng.choice(VERBS)
+    other = rng.choice([t for t in TOPICS if t != topic])
+    year = rng.randint(1950, 2020)
+    # Kept short enough that prompt + summary fits the trained context
+    # (TrainConfig.seq) with headroom; the summary is the first fact.
+    art = (f"article: {name} {verb} the {topic} of {city}. "
+           f"the work began in {year}. "
+           f"the {other} are nearby.\n")
+    summary = f" {name} {verb} the {topic} of {city}."
+    return SummProblem(task_id=f"summ_{idx}", prompt=art + "summary:",
+                       reference=summary)
+
+
+def summ_sample_text(p: SummProblem) -> str:
+    return p.prompt + p.reference + "\n" + EOS
+
+
+# ---------------------------------------------------------------------------
+# Corpus assembly
+# ---------------------------------------------------------------------------
+
+def build_corpus(seed: int = 1234, n_code: int = 4000,
+                 n_summ: int = 3000) -> tuple[bytes, list, list]:
+    """Returns (corpus_bytes, held_out_code_problems, held_out_summ_problems).
+
+    Held-out problems use parameter combinations excluded from the training
+    text (same template distribution, unseen instances for prose; for code,
+    families repeat but each function appears in both — memorization is the
+    point: the tiny main model plays the "competent big model" role and the
+    drafts approximate it, reproducing the paper's alignment regime).
+    """
+    rng = random.Random(seed)
+    fams = _code_families(rng)
+    test_fams = fams[:48]
+    train_fams = fams  # code problems seen in training (memorization regime)
+
+    pieces: list[str] = []
+    for i in range(n_summ):
+        pieces.append(summ_sample_text(make_summ_problem(rng, i)))
+    for i in range(n_code):
+        fam = train_fams[rng.randrange(len(train_fams))]
+        pieces.append(code_sample_text(make_code_problem(fam)))
+    rng.shuffle(pieces)
+    text = "".join(pieces)
+
+    test_rng = random.Random(seed + 1)
+    code_problems = [make_code_problem(f) for f in test_fams]
+    summ_problems = [make_summ_problem(test_rng, 10000 + i) for i in range(48)]
+    return text.encode("latin-1"), code_problems, summ_problems
+
+
+def write_tasks(out_dir: str, code_problems, summ_problems) -> None:
+    """Emit the task JSONs consumed by the Rust eval harness."""
+    import os
+    os.makedirs(out_dir, exist_ok=True)
+    code = [{
+        "task_id": p.task_id,
+        "prompt": p.prompt,
+        "checker": {"type": "line_equals", "expected": p.canonical.strip()},
+    } for p in code_problems]
+    summ = [{
+        "task_id": p.task_id,
+        "prompt": p.prompt,
+        "reference": p.reference.strip(),
+    } for p in summ_problems]
+    with open(f"{out_dir}/synth_humaneval.json", "w") as f:
+        json.dump(code, f, indent=1)
+    with open(f"{out_dir}/synth_xsum.json", "w") as f:
+        json.dump(summ, f, indent=1)

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for BASS ragged attention."""
+
+from compile.kernels.ragged_attention import (  # noqa: F401
+    ragged_decode_attention,
+    ragged_prefill_attention,
+    split_decode_attention,
+)
+from compile.kernels.ref import (  # noqa: F401
+    ragged_decode_attention_ref,
+    ragged_prefill_attention_ref,
+)

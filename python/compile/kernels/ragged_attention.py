@@ -1,0 +1,167 @@
+"""Layer-1 Pallas kernels: BASS ragged-attention.
+
+The paper's kernel contribution (§3.2, Figure 4) is attention over *ragged*
+K/V/P tensors: after batched speculative verification, every sequence in the
+batch has its own length, so Q·Kᵀ, softmax and P·V cannot assume one
+rectangular sequence dimension. BASS-PAD pads K/V/P to the batch max and
+zeroes the probabilities of pad tokens; BASS-SPLIT launches per-sequence
+kernels.
+
+TPU/Pallas adaptation (DESIGN.md §6): the CUDA per-(batch,head) threadblock
+becomes a Pallas grid cell ``(b, h)``; the sequence dimension is streamed
+through VMEM in ``S_BLK``-sized tiles with a flash-attention running
+max/denominator, and raggedness is enforced with in-register iota masks —
+BASS-PAD's "zero probability for padded tokens" costs masked vector lanes,
+not extra HBM traffic. The QKᵀ and PV contractions are MXU-shaped
+``jnp.dot`` calls with f32 accumulation.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO so the same
+module is loadable by the Rust runtime. Real-TPU resource estimates live in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sequence tile streamed through VMEM per grid cell. 128 lanes matches the
+# TPU vector-register width; with Dh ≤ 64 a (S_BLK, Dh) f32 tile is ≤ 32 KiB.
+DEFAULT_S_BLK = 128
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, s_blk: int,
+                      scale: float):
+    """One (batch, head) grid cell of BASS-PAD ragged attention.
+
+    Block shapes (leading singleton dims dropped by BlockSpec):
+      len_ref: ()        int32   — tokens already in the cache for this seq
+      q_ref:   (Q, Dh)           — the Q new (draft/verify) token queries
+      k_ref:   (S, Dh)           — padded key cache (S = batch max capacity)
+      v_ref:   (S, Dh)           — padded value cache
+      o_ref:   (Q, Dh)           — attention output
+
+    Query row j may attend cache positions < len + j + 1 (its own K/V has
+    already been appended at position len + j). Positions ≥ len + Q are pad:
+    they receive zero probability, exactly the BASS-PAD contract.
+    """
+    q_len, d_head = q_ref.shape
+    s_max = k_ref.shape[0]
+    n_blocks = s_max // s_blk
+
+    seq_len = len_ref[0]
+    q = q_ref[...].astype(jnp.float32) * scale
+    # Row j attends strictly below this bound.
+    row_bound = seq_len + 1 + jax.lax.broadcasted_iota(jnp.int32, (q_len, 1), 0)
+
+    def body(blk, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = blk * s_blk
+        k_blk = k_ref[pl.dslice(start, s_blk), :].astype(jnp.float32)
+        v_blk = v_ref[pl.dslice(start, s_blk), :].astype(jnp.float32)
+        # (Q, S_BLK) MXU contraction.
+        scores = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        col = start + jax.lax.broadcasted_iota(jnp.int32, (1, s_blk), 1)
+        scores = jnp.where(col < row_bound, scores, NEG_INF)
+        # Flash-style running softmax.
+        m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(scores - m_cur)
+        l_cur = l_prev * correction + jnp.sum(p, axis=1, keepdims=True)
+        acc_cur = acc_prev * correction + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_cur, l_cur, acc_cur
+
+    m0 = jnp.full((q_len, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_len, 1), jnp.float32)
+    acc0 = jnp.zeros((q_len, d_head), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s_blk",))
+def ragged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            seq_lens: jax.Array,
+                            s_blk: int = DEFAULT_S_BLK) -> jax.Array:
+    """BASS-PAD ragged attention over a padded KV cache.
+
+    Args:
+      q: ``(B, H, Q, Dh)`` queries for the Q newly appended tokens.
+      k: ``(B, H, S, Dh)`` padded key cache; positions ``seq_lens[b] + j``
+        hold the new tokens' keys.
+      v: ``(B, H, S, Dh)`` padded value cache.
+      seq_lens: ``(B,)`` int32 — per-sequence token counts *before* the Q
+        new tokens were appended (the ragged lengths).
+      s_blk: VMEM tile along the sequence dimension; must divide S.
+
+    Returns:
+      ``(B, H, Q, Dh)`` attention outputs, same dtype as ``q``.
+    """
+    b, h, q_len, d_head = q.shape
+    s_max = k.shape[2]
+    if s_max % s_blk != 0:
+        raise ValueError(f"S={s_max} not divisible by s_blk={s_blk}")
+    if k.shape != (b, h, s_max, d_head) or v.shape != k.shape:
+        raise ValueError(f"bad kv shapes {k.shape} {v.shape}")
+    scale = 1.0 / (d_head ** 0.5)
+    kernel = functools.partial(_attention_kernel, s_blk=s_blk, scale=scale)
+    grid = (b, h)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((None, None, q_len, d_head), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s_max, d_head), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s_max, d_head), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, q_len, d_head),
+                               lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, q_len, d_head), q.dtype),
+        interpret=True,
+    )(seq_lens, q, k, v)
+
+
+def ragged_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             s_blk: int = DEFAULT_S_BLK) -> jax.Array:
+    """Causal self-attention for the prefill phase.
+
+    Prefill is the ``seq_lens = 0`` special case of the decode kernel: query
+    row j attends cache positions ``0..j``. Pad rows beyond a sequence's
+    prompt length produce garbage that the model discards (their K/V slots
+    are overwritten as generation appends real tokens).
+    """
+    b = q.shape[0]
+    zeros = jnp.zeros((b,), jnp.int32)
+    return ragged_decode_attention(q, k, v, zeros, s_blk=s_blk)
+
+
+def split_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           seq_lens: jax.Array,
+                           s_blk: int = DEFAULT_S_BLK) -> jax.Array:
+    """BASS-SPLIT ragged attention: one kernel launch per sequence.
+
+    Mirrors Figure 4(c): the batch dimension is peeled and each sequence
+    gets its own ``pallas_call`` (B=1), so no pad lanes are computed at the
+    cost of B kernel launches. On the serving path the Rust coordinator
+    realizes SPLIT as per-sequence *executables* dispatched concurrently
+    (DESIGN.md §6); this in-graph variant exists for kernel-level parity
+    tests and the Table 6 microbenchmarks.
+    """
+    b = q.shape[0]
+    outs = [
+        ragged_decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                seq_lens[i:i + 1], s_blk=s_blk)
+        for i in range(b)
+    ]
+    return jnp.concatenate(outs, axis=0)

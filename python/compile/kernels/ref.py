@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the BASS ragged-attention kernels.
+
+This is the correctness contract for Layer 1: an explicit-mask softmax
+attention with no tiling, no running statistics and no Pallas. pytest
+(``python/tests/test_kernel.py``) asserts the Pallas kernels match this
+oracle across shapes, dtypes and ragged length patterns.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ragged_decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                                seq_lens: jax.Array) -> jax.Array:
+    """Reference BASS-PAD attention. Shapes as in the Pallas kernel.
+
+    Query row j of sequence b attends cache positions < seq_lens[b] + j + 1;
+    everything else (the pad region) gets exactly zero probability.
+    """
+    b, h, q_len, d_head = q.shape
+    s_max = k.shape[2]
+    scale = 1.0 / (d_head ** 0.5)
+    scores = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    row = jnp.arange(q_len)[None, :, None]            # (1, Q, 1)
+    col = jnp.arange(s_max)[None, None, :]            # (1, 1, S)
+    bound = seq_lens[:, None, None] + row + 1         # (B, Q, 1)
+    mask = col < bound                                # (B, Q, S)
+    scores = jnp.where(mask[:, None, :, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask[:, None, :, :], p, 0.0)        # exact-zero pad prob
+    out = jnp.einsum("bhqs,bhsd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ragged_prefill_attention_ref(q: jax.Array, k: jax.Array,
+                                 v: jax.Array) -> jax.Array:
+    """Causal prefill reference: the seq_lens = 0 case."""
+    zeros = jnp.zeros((q.shape[0],), jnp.int32)
+    return ragged_decode_attention_ref(q, k, v, zeros)

@@ -1,0 +1,374 @@
+"""Layer-2 JAX model: decoder-only transformer with a ragged KV cache.
+
+This is the compute graph that BASS coordinates. Two inference entry points
+are AOT-exported per model (see ``aot.py``):
+
+  * ``prefill``  — context encoding of the prompt batch (paper §2.1 phase a);
+  * ``decode``   — incremental/speculative step over ``Q`` new tokens per
+    sequence at per-sequence offsets ``seq_lens`` (phase b; for the main
+    model ``Q = draft_len + 1`` verification, for drafts ``Q = 1``
+    auto-regressive drafting). Raggedness is carried by ``seq_lens`` and
+    resolved inside the Layer-1 Pallas attention kernel (BASS-PAD).
+
+The cache is one tensor ``f32[L, 2, B, H, S, Dh]`` so the Rust runtime can
+keep it as a single device-resident PJRT buffer fed back step to step.
+
+Training uses a dense-attention path (``lm_loss``) — Pallas interpret mode
+is needless overhead under autodiff; pytest asserts the dense and Pallas
+paths agree (``test_model.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ragged_decode_attention
+from compile.kernels.ref import ragged_decode_attention_ref
+from compile.quant import maybe_dequant
+
+VOCAB = 256  # byte-level
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (paper Table 4 analog grid)."""
+    name: str
+    n_layer: int
+    n_head: int
+    d_model: int
+    d_ff: int
+    s_max: int = 256      # padded KV capacity (BASS-PAD max length)
+    p_max: int = 64       # prefill prompt capacity
+    vocab: int = VOCAB
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def cache_shape(self, batch: int) -> tuple:
+        return (self.n_layer, 2, batch, self.n_head, self.s_max, self.d_head)
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            params = init_params(jax.random.PRNGKey(0), self)
+        return sum(int(jnp.size(x)) for x in jax.tree_util.tree_leaves(params))
+
+
+# The model zoo: one "main" model and the three draft variants of Table 4
+# (A shallow-wide, B deeper, C wider) at ~1:7 / 1:4 / 1:2 parameter ratios.
+CONFIGS: Dict[str, ModelConfig] = {
+    "main": ModelConfig("main", n_layer=4, n_head=8, d_model=256, d_ff=1024),
+    "draft_a": ModelConfig("draft_a", n_layer=2, n_head=4, d_model=128,
+                           d_ff=512),
+    "draft_b": ModelConfig("draft_b", n_layer=4, n_head=4, d_model=128,
+                           d_ff=512),
+    "draft_c": ModelConfig("draft_c", n_layer=2, n_head=8, d_model=256,
+                           d_ff=1024),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    """GPT-2-style init. LM head is tied to the token embedding."""
+    d, ff = cfg.d_model, cfg.d_ff
+    std = 0.02
+
+    def dense(k, n_in, n_out):
+        return {"w": jax.random.normal(k, (n_in, n_out), jnp.float32) * std,
+                "b": jnp.zeros((n_out,), jnp.float32)}
+
+    keys = jax.random.split(key, 2 + 4 * cfg.n_layer)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, d), jnp.float32) * std,
+        "pos": jax.random.normal(keys[1], (cfg.s_max, d), jnp.float32) * std,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "blocks": [],
+    }
+    for l in range(cfg.n_layer):
+        k0, k1, k2, k3 = keys[2 + 4 * l: 6 + 4 * l]
+        params["blocks"].append({
+            "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "qkv": dense(k0, d, 3 * d),
+            "proj": dense(k1, d, d),
+            "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "fc": dense(k2, d, ff),
+            "out": dense(k3, ff, d),
+        })
+    return params
+
+
+def _ln(x, p):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def _dense(x, p):
+    return x @ maybe_dequant(p["w"]) + p["b"]
+
+
+def _split_heads(x, n_head):  # [B,T,D] -> [B,H,T,Dh]
+    b, t, d = x.shape
+    return x.reshape(b, t, n_head, d // n_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):  # [B,H,T,Dh] -> [B,T,D]
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# Ragged cache write (the "incremental context encoding" of §2.2)
+# ---------------------------------------------------------------------------
+#
+# The KV cache is a flat list ``[k_0, v_0, k_1, v_1, ...]`` of per-layer
+# ``f32[B, H, S, Dh]`` tensors rather than one stacked tensor: each tensor is
+# then an independent PJRT buffer that the Rust runtime feeds back
+# device-resident between steps, and XLA can update each in place under
+# donation (jnp.stack would force a full-cache copy every step — measured 2-5×
+# slower on the steady-state path; see EXPERIMENTS.md §Perf).
+
+def cache_spec(cfg: "ModelConfig", batch: int):
+    """Shapes of the per-layer cache buffers, in artifact I/O order."""
+    shape = (batch, cfg.n_head, cfg.s_max, cfg.d_head)
+    return [shape] * (2 * cfg.n_layer)
+
+
+def init_cache(cfg: "ModelConfig", batch: int):
+    return [jnp.zeros(s, jnp.float32) for s in cache_spec(cfg, batch)]
+
+
+def _append_kv(cache_k, cache_v, k_new, v_new, seq_lens):
+    """Write K/V for Q new tokens at per-sequence offsets.
+
+    cache_k/v: [B,H,S,Dh]; k_new/v_new: [B,H,Q,Dh]; seq_lens: [B].
+    A vmap'd dynamic_update_slice lowers to a batched scatter — the XLA
+    analog of the per-sequence pointer arithmetic in the paper's CUDA cache
+    append.
+    """
+    def upd(c, n, start):
+        return jax.lax.dynamic_update_slice(c, n, (0, start, 0))
+    ck = jax.vmap(upd)(cache_k, k_new, seq_lens)
+    cv = jax.vmap(upd)(cache_v, v_new, seq_lens)
+    return ck, cv
+
+
+def _dense_ragged_attention(q, k, v, seq_lens):
+    """jnp BASS-PAD attention (same contract as the Pallas kernel).
+
+    Used by the training path and as the ``dense`` attention variant of the
+    exported artifacts (DESIGN.md §6: BASS-PAD *is* pad+mask; this is the
+    XLA-fused realization, the Pallas kernel is the explicitly-tiled one).
+    """
+    return ragged_decode_attention_ref(q, k, v, seq_lens)
+
+
+ATTN_IMPLS = {
+    "pallas": ragged_decode_attention,
+    "dense": _dense_ragged_attention,
+}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def decode(params, tokens, seq_lens, caches, cfg: ModelConfig,
+           attn_impl: str = "pallas"):
+    """Process Q new tokens per sequence against a ragged cache.
+
+    Args:
+      tokens: int32[B, Q] — for the main model, ``[last_accepted, d_1..d_k]``
+        (verification); for drafts, the resync/draft tokens.
+      seq_lens: int32[B] — tokens already in each sequence's cache.
+      caches: list ``[k_0, v_0, ...]`` of f32[B, H, S, Dh].
+
+    Returns:
+      (logits f32[B, Q, V], new_caches). ``logits[:, j]`` is the next-token
+      distribution after consuming ``tokens[:, j]``.
+    """
+    attn = ATTN_IMPLS[attn_impl]
+    b, q_len = tokens.shape
+    pos_ids = seq_lens[:, None] + jnp.arange(q_len)[None, :]      # [B,Q]
+    x = maybe_dequant(params["embed"])[tokens] + \
+        maybe_dequant(params["pos"])[pos_ids]
+
+    new_caches = []
+    for l, blk in enumerate(params["blocks"]):
+        h = _ln(x, blk["ln1"])
+        qkv = _dense(h, blk["qkv"])
+        qh, kh, vh = jnp.split(qkv, 3, axis=-1)
+        qh = _split_heads(qh, cfg.n_head)
+        kh = _split_heads(kh, cfg.n_head)
+        vh = _split_heads(vh, cfg.n_head)
+        ck, cv = _append_kv(caches[2 * l], caches[2 * l + 1], kh, vh,
+                            seq_lens)
+        attn_out = attn(qh, ck, cv, seq_lens)
+        x = x + _dense(_merge_heads(attn_out), blk["proj"])
+        h2 = _ln(x, blk["ln2"])
+        x = x + _dense(jax.nn.gelu(_dense(h2, blk["fc"])), blk["out"])
+        new_caches += [ck, cv]
+
+    x = _ln(x, params["ln_f"])
+    logits = x @ maybe_dequant(params["embed"]).T                  # tied head
+    return logits, new_caches
+
+
+def prefill(params, tokens, prompt_lens, cfg: ModelConfig,
+            attn_impl: str = "pallas"):
+    """Context-encode a prompt batch into a fresh ragged cache.
+
+    tokens: int32[B, P] right-padded prompts; prompt_lens: int32[B].
+    Returns (last_logits f32[B, V], caches). ``last_logits[b]`` is the
+    distribution after the final real prompt token of sequence b.
+
+    Convention (see rust/src/spec/engine.rs): the engine sets the post-
+    prefill cache length to ``prompt_len - 1`` and carries the final prompt
+    token as the pending input ``t0`` of the first speculative step — its
+    K/V is simply rewritten with identical values, which keeps every step's
+    "one pending token" invariant uniform.
+    """
+    b, p_len = tokens.shape
+    caches = init_cache(cfg, b)
+    zeros = jnp.zeros((b,), jnp.int32)
+    logits, caches = decode(params, tokens, zeros, caches, cfg, attn_impl)
+    idx = jnp.clip(prompt_lens - 1, 0, p_len - 1)
+    last = logits[jnp.arange(b), idx]
+    return last, caches
+
+
+# ---------------------------------------------------------------------------
+# In-graph nucleus sampling + the fused draft loop
+# ---------------------------------------------------------------------------
+
+def sample_top_p(logits, u, temperature, top_p):
+    """Temperature + nucleus warp, then CDF-inversion sampling.
+
+    Args:
+      logits: f32[B, V]; u: f32[B] uniforms in [0,1);
+      temperature, top_p: f32 scalars.
+
+    Returns (tokens i32[B], warped f32[B, V]) where ``warped`` is the
+    renormalized post-top-p distribution — the q(x) the speculative
+    accept/reject rule needs (rust/src/sampling.rs implements the identical
+    warp for the main model so the composed distribution is exact).
+
+    The nucleus is defined *value-wise*: token i is kept iff the total mass
+    of strictly-more-probable tokens is < top_p (ties are all kept). This
+    avoids ``lax.top_k``, whose modern ``topk(..., largest=true)`` HLO the
+    image's XLA 0.5.1 text parser cannot read, and is O(V²) with V = 256 —
+    negligible. The top-1 token is always kept.
+    """
+    b, v = logits.shape
+    probs = jax.nn.softmax(logits / jnp.maximum(temperature, 1e-4), axis=-1)
+    # mass_before[b, i] = sum of probs strictly greater than probs[b, i].
+    # Deliberately O(V²): at V = 256 the vectorized compare+sum beats a
+    # sort-based O(V log V) cutoff on CPU XLA by ~12% per draft step
+    # (measured; EXPERIMENTS.md §Perf #5), and `lax.top_k` is unusable —
+    # its modern `topk(..., largest=true)` HLO breaks the runtime's
+    # XLA 0.5.1 text parser.
+    gt = probs[:, None, :] > probs[:, :, None]                    # [B, i, j]
+    mass_before = jnp.sum(jnp.where(gt, probs[:, None, :], 0.0), axis=-1)
+    keep = mass_before < top_p
+    filt = jnp.where(keep, probs, 0.0)
+    warped = filt / jnp.sum(filt, -1, keepdims=True)
+    cdf = jnp.cumsum(warped, axis=-1)
+    # First index with cdf > u (u scaled down a hair to dodge the fp edge).
+    u = (u * (1.0 - 1e-6))[:, None]
+    tokens = jnp.argmax(cdf > u, axis=-1).astype(jnp.int32)
+    return tokens, warped
+
+
+def draft_loop(params, tokens_in, n_in, seq_lens, caches, uniforms,
+               temperature, top_p, cfg: ModelConfig,
+               attn_impl: str = "pallas"):
+    """One fused drafting call: resync + K auto-regressive draft steps.
+
+    This is the testbed analog of the paper's cheap draft phase: running the
+    whole draft loop inside one XLA program amortizes the per-launch cost
+    exactly the way GPU speculative decoding amortizes weight I/O (DESIGN.md
+    §1). Sampling (temperature + top-p) happens in-graph from host-supplied
+    uniforms, so Python stays off the request path and Rust stays in charge
+    of randomness.
+
+    Args:
+      tokens_in: i32[B, 2] — the 1 or 2 tokens the draft must ingest to
+        catch up with the verified stream (last accepted/corrected token;
+        two when the previous step accepted the whole draft and added a
+        bonus token). Slot 1 is ignored where ``n_in == 1``.
+      n_in: i32[B] in {1, 2}.
+      seq_lens: i32[B] — valid draft-cache lengths (ragged).
+      uniforms: f32[B, K] — one uniform per drafted token.
+
+    Returns (draft_tokens i32[B, K], qdists f32[B, K, V], new_caches).
+    qdists[b, j] is the warped draft distribution d_{j} was sampled from.
+    """
+    b, k_draft = uniforms.shape
+    # Resync: ingest up to two catch-up tokens at ragged offsets.
+    logits2, caches = decode(params, tokens_in, seq_lens, caches, cfg,
+                             attn_impl)
+    first_logits = logits2[jnp.arange(b), n_in - 1]               # [B, V]
+    d0, q0 = sample_top_p(first_logits, uniforms[:, 0], temperature, top_p)
+    lens = seq_lens + n_in
+
+    # The K-1 remaining steps are unrolled: lax.scan would stack the
+    # per-layer cache buffers into one carry tensor, defeating per-buffer
+    # donation. K is small (≤16) and bucketed, so unrolling is cheap.
+    toks, qs = [d0], [q0]
+    tok, cur = d0, lens
+    for j in range(1, k_draft):
+        logits, caches = decode(params, tok[:, None], cur, caches, cfg,
+                                attn_impl)
+        tok, q = sample_top_p(logits[:, 0], uniforms[:, j], temperature,
+                              top_p)
+        cur = cur + 1
+        toks.append(tok)
+        qs.append(q)
+    draft_tokens = jnp.stack(toks, axis=1)                        # [B, K]
+    qdists = jnp.stack(qs, axis=1)                                # [B, K, V]
+    return draft_tokens, qdists, caches
+
+
+# ---------------------------------------------------------------------------
+# Training path (dense attention, no cache)
+# ---------------------------------------------------------------------------
+
+def lm_logits(params, tokens, cfg: ModelConfig):
+    """Full causal forward over [B, T] for training/eval."""
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:t][None]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"])
+        qkv = h @ blk["qkv"]["w"] + blk["qkv"]["b"]
+        qh, kh, vh = jnp.split(qkv, 3, axis=-1)
+        qh = _split_heads(qh, cfg.n_head)
+        kh = _split_heads(kh, cfg.n_head)
+        vh = _split_heads(vh, cfg.n_head)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / (cfg.d_head ** 0.5)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        attn_out = jnp.einsum("bhqk,bhkd->bhqd",
+                              jax.nn.softmax(scores, -1), vh)
+        x = x + _merge_heads(attn_out) @ blk["proj"]["w"] + blk["proj"]["b"]
+        h2 = _ln(x, blk["ln2"])
+        x = x + jax.nn.gelu(h2 @ blk["fc"]["w"] + blk["fc"]["b"]) \
+            @ blk["out"]["w"] + blk["out"]["b"]
+    x = _ln(x, params["ln_f"])
+    return x @ params["embed"].T
+
+
+def lm_loss(params, tokens, cfg: ModelConfig):
+    """Next-byte cross-entropy over a [B, T] batch."""
+    logits = lm_logits(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], -1)[..., 0]
+    return jnp.mean(nll)

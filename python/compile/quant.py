@@ -1,0 +1,65 @@
+"""INT8 weight-only quantization (paper Appendix A.1 analog).
+
+The paper fuses CUTLASS INT8 GEMMs with dequantize epilogues; the XLA
+analog is storing weights as ``int8`` plus per-output-channel f32 scales and
+dequantizing *in-graph* — XLA fuses the ``convert × scale`` into the
+consuming GEMM, so the weight memory traffic (the decode bottleneck, §2.1)
+halves while logits move only slightly. Granularity matches the paper: the
+quantization range is per inner-product dimension (per output channel).
+
+A quantized leaf is a dict ``{"q": int8[..., n], "s": f32[n]}``; model code
+calls :func:`maybe_dequant` at every weight use so the same forward works
+for both precisions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_tensor(w: jax.Array) -> dict:
+    """Symmetric per-output-channel int8 quantization of a [..., n] weight."""
+    amax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def maybe_dequant(p) -> jax.Array:
+    """Return the f32 view of a (possibly quantized) weight leaf."""
+    if isinstance(p, dict) and "q" in p:
+        return p["q"].astype(jnp.float32) * p["s"]
+    return p
+
+
+def quantize_params(params) -> dict:
+    """Quantize every 2-D weight matrix; keep vectors/norms in f32.
+
+    Embedding and position tables stay f32 as well (they are gathers, not
+    GEMMs — quantizing them saves little and hurts the tied LM head).
+    """
+    def walk(p, path=()):
+        if isinstance(p, dict):
+            return {k: walk(v, path + (k,)) for k, v in p.items()}
+        if isinstance(p, list):
+            return [walk(v, path + (str(i),)) for i, v in enumerate(p)]
+        if p.ndim == 2 and path[-1] == "w":
+            return quantize_tensor(p)
+        return p
+
+    return walk(params)
+
+
+def dequantize_params(qparams):
+    """Materialize an f32 pytree (for tests / accuracy deltas)."""
+    def walk(p):
+        if isinstance(p, dict) and "q" in p:
+            return maybe_dequant(p)
+        if isinstance(p, dict):
+            return {k: walk(v) for k, v in p.items()}
+        if isinstance(p, list):
+            return [walk(v) for v in p]
+        return p
+
+    return walk(qparams)

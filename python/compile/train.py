@@ -1,0 +1,125 @@
+"""Build-time trainer for the main model and the draft zoo.
+
+Reproduces the draft-training recipe of Appendix A.2 at testbed scale:
+AdamW (β1=0.9, β2=0.95, ε=1e-8), warmup → cosine decay to 10% of peak LR,
+global-norm gradient clipping at 1.0, all models trained on the same corpus.
+Hand-rolled optimizer (optax is not available in this image).
+
+Runs once from ``aot.py`` during ``make artifacts``; never on the request
+path.
+"""
+
+from __future__ import annotations
+
+import time
+import zlib
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import ModelConfig, init_params, lm_loss
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 600
+    batch: int = 12
+    # Train positions 0..seq-1; must cover prompt + generation (the padded
+    # KV capacity is 256 but only trained positions produce sane logits).
+    seq: int = 192
+    lr: float = 3e-3
+    warmup: int = 60
+    min_lr_frac: float = 0.1
+    weight_decay: float = 0.01
+    clip: float = 1.0
+    seed: int = 0
+    eval_every: int = 50
+    eval_batches: int = 4
+
+
+def _lr_at(step, tc: TrainConfig):
+    warm = jnp.minimum(1.0, (step + 1) / tc.warmup)
+    prog = jnp.clip((step - tc.warmup) / max(1, tc.steps - tc.warmup), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = tc.min_lr_frac + (1 - tc.min_lr_frac) * cos
+    return tc.lr * warm * frac
+
+
+def _adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+@partial(jax.jit, static_argnames=("cfg", "tc"), donate_argnums=(0, 1))
+def _update(params, opt, tokens, cfg: ModelConfig, tc: TrainConfig):
+    loss, grads = jax.value_and_grad(lm_loss)(params, tokens, cfg)
+    # Global-norm clip.
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, tc.clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    t = opt["t"] + 1
+    lr = _lr_at(t, tc)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + tc.weight_decay * p)
+        return p, m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    opt = {"m": jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+           "v": jax.tree_util.tree_unflatten(tdef, [o[2] for o in out]),
+           "t": t}
+    return params, opt, loss
+
+
+def _batches(data: np.ndarray, rng: np.random.Generator, batch, seq):
+    idx = rng.integers(0, len(data) - seq - 1, size=batch)
+    return np.stack([data[i:i + seq + 1] for i in idx]).astype(np.int32)
+
+
+def train_model(cfg: ModelConfig, corpus: bytes, tc: TrainConfig,
+                log=print):
+    """Train one model; returns (params, history list of (step, loss))."""
+    data = np.frombuffer(corpus, np.uint8)
+    name_salt = zlib.crc32(cfg.name.encode()) % 1000   # stable across runs
+    rng = np.random.default_rng(tc.seed + name_salt)
+    params = init_params(jax.random.PRNGKey(tc.seed), cfg)
+    opt = _adamw_init(params)
+    history = []
+    t0 = time.time()
+    for step in range(tc.steps):
+        tokens = jnp.asarray(_batches(data, rng, tc.batch, tc.seq))
+        params, opt, loss = _update(params, opt, tokens, cfg, tc)
+        if step % tc.eval_every == 0 or step == tc.steps - 1:
+            l = float(loss)
+            history.append((step, l))
+            log(f"[train {cfg.name}] step {step:5d} loss {l:.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params, history
+
+
+def held_out_loss(params, cfg: ModelConfig, corpus: bytes, tc: TrainConfig):
+    """Loss on deterministic windows from the corpus tail."""
+    data = np.frombuffer(corpus, np.uint8)
+    rng = np.random.default_rng(9999)
+    losses = []
+    for _ in range(tc.eval_batches):
+        tokens = jnp.asarray(_batches(data, rng, tc.batch, tc.seq))
+        losses.append(float(lm_loss(params, tokens, cfg)))
+    return float(np.mean(losses))

@@ -1,0 +1,86 @@
+"""Corpus determinism, task-file integrity, trainer sanity, and the BWT
+weight-format round trip."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import bwt
+from compile.corpus import build_corpus, make_code_problem, write_tasks
+from compile.model import ModelConfig
+from compile.train import TrainConfig, held_out_loss, train_model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_corpus_is_deterministic():
+    c1, code1, summ1 = build_corpus(seed=5, n_code=50, n_summ=50)
+    c2, code2, summ2 = build_corpus(seed=5, n_code=50, n_summ=50)
+    assert c1 == c2
+    assert [p.prompt for p in code1] == [p.prompt for p in code2]
+    assert [p.reference for p in summ1] == [p.reference for p in summ2]
+    c3, _, _ = build_corpus(seed=6, n_code=50, n_summ=50)
+    assert c1 != c3
+
+
+def test_corpus_contains_both_registers():
+    c, code, summ = build_corpus(n_code=100, n_summ=100)
+    text = c.decode("latin-1")
+    assert "def " in text and "article: " in text and "summary:" in text
+    assert len(code) == 48 and len(summ) == 48
+    # Prompts must fit the AOT prompt capacity.
+    from compile.aot import PREFILL_P
+    assert all(len(p.prompt) <= PREFILL_P for p in code)
+    assert all(len(p.prompt) <= PREFILL_P for p in summ)
+
+
+def test_code_problem_checker_matches_sample():
+    p = make_code_problem(("add", "add_5", "adds 5 to x", " x + 5"))
+    assert p.prompt.endswith("return")
+    assert p.canonical == " x + 5"
+
+
+def test_write_tasks_json(tmp_path):
+    _, code, summ = build_corpus(n_code=20, n_summ=20)
+    write_tasks(str(tmp_path), code, summ)
+    with open(tmp_path / "synth_humaneval.json") as f:
+        data = json.load(f)
+    assert data[0]["checker"]["type"] == "line_equals"
+    with open(tmp_path / "synth_xsum.json") as f:
+        data = json.load(f)
+    assert "summary:" in data[0]["prompt"]
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    cfg = ModelConfig("tiny", n_layer=1, n_head=2, d_model=32, d_ff=64)
+    corpus, _, _ = build_corpus(n_code=200, n_summ=200)
+    tc = TrainConfig(steps=30, batch=4, seq=64, eval_every=29, warmup=5)
+    params, hist = train_model(cfg, corpus, tc, log=lambda *_: None)
+    assert hist[0][1] > hist[-1][1] * 1.2, f"loss did not drop: {hist}"
+    h = held_out_loss(params, cfg, corpus, tc)
+    assert h < hist[0][1]
+
+
+def test_bwt_roundtrip(tmp_path):
+    tensors = [
+        ("a/w", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("a/q", np.array([-3, 0, 7], dtype=np.int8)),
+        ("scalar", np.array(5, dtype=np.int32)),
+    ]
+    path = str(tmp_path / "t.bwt")
+    bwt.write_bwt(path, tensors)
+    back = bwt.read_bwt(path)
+    assert [n for n, _ in back] == [n for n, _ in tensors]
+    for (_, a), (_, b) in zip(tensors, back):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+
+
+def test_bwt_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        bwt.write_bwt(str(tmp_path / "bad.bwt"),
+                      [("x", np.zeros(3, np.float64))])

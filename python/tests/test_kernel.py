@@ -1,0 +1,180 @@
+"""Layer-1 correctness: Pallas ragged-attention kernels vs the jnp oracle.
+
+This is the CORE kernel correctness signal: hypothesis sweeps shapes, dtypes
+and ragged length patterns and asserts allclose against ``kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    ragged_decode_attention,
+    ragged_decode_attention_ref,
+    ragged_prefill_attention,
+    ragged_prefill_attention_ref,
+    split_decode_attention,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _make_inputs(seed, b, h, q, s, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        _rand(ks[0], (b, h, q, d), dtype),
+        _rand(ks[1], (b, h, s, d), dtype),
+        _rand(ks[2], (b, h, s, d), dtype),
+    )
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=3e-5, rtol=3e-5)
+
+
+def _check(out, ref, dtype):
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: shapes / dtypes / ragged lengths
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    q=st.integers(1, 9),
+    s=st.sampled_from([128, 256]),
+    d=st.sampled_from([16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    data=st.data(),
+)
+def test_decode_matches_ref_hypothesis(seed, b, h, q, s, d, dtype, data):
+    qx, kx, vx = _make_inputs(seed, b, h, q, s, d, dtype)
+    max_len = s - q
+    lens = jnp.array(
+        data.draw(st.lists(st.integers(0, max_len), min_size=b, max_size=b)),
+        jnp.int32)
+    out = ragged_decode_attention(qx, kx, vx, lens)
+    ref = ragged_decode_attention_ref(qx, kx, vx, lens)
+    _check(out, ref, dtype)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 3),
+    q=st.integers(1, 6),
+    data=st.data(),
+)
+def test_split_matches_pad(seed, b, q, data):
+    """BASS-SPLIT and BASS-PAD compute identical attention (Fig 4b vs 4c)."""
+    h, s, d = 2, 128, 16
+    qx, kx, vx = _make_inputs(seed, b, h, q, s, d, jnp.float32)
+    lens = jnp.array(
+        data.draw(st.lists(st.integers(0, s - q), min_size=b, max_size=b)),
+        jnp.int32)
+    pad = ragged_decode_attention(qx, kx, vx, lens)
+    split = split_decode_attention(qx, kx, vx, lens)
+    _check(split, pad, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Directed edge cases
+# ---------------------------------------------------------------------------
+
+def test_single_token_single_seq():
+    q, k, v = _make_inputs(0, 1, 1, 1, 128, 16, jnp.float32)
+    lens = jnp.array([0], jnp.int32)
+    out = ragged_decode_attention(q, k, v, lens)
+    ref = ragged_decode_attention_ref(q, k, v, lens)
+    _check(out, ref, jnp.float32)
+
+
+def test_zero_length_attends_only_self():
+    """len=0, Q=1: the token can only attend itself -> out == its own value."""
+    q, k, v = _make_inputs(1, 1, 2, 1, 128, 16, jnp.float32)
+    lens = jnp.array([0], jnp.int32)
+    out = ragged_decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, :, :1]),
+                               atol=1e-6)
+
+
+def test_full_cache_boundary():
+    """Lengths at the very end of the padded cache (len + Q == S)."""
+    b, h, qn, s, d = 2, 2, 4, 128, 16
+    q, k, v = _make_inputs(2, b, h, qn, s, d, jnp.float32)
+    lens = jnp.array([s - qn, s - qn], jnp.int32)
+    out = ragged_decode_attention(q, k, v, lens)
+    ref = ragged_decode_attention_ref(q, k, v, lens)
+    _check(out, ref, jnp.float32)
+
+
+def test_pad_region_is_ignored():
+    """Garbage beyond seq_len must not change the output (BASS-PAD contract)."""
+    b, h, qn, s, d = 2, 2, 3, 256, 32
+    q, k, v = _make_inputs(3, b, h, qn, s, d, jnp.float32)
+    lens = jnp.array([10, 50], jnp.int32)
+    out1 = ragged_decode_attention(q, k, v, lens)
+    # Poison the pad region with huge values.
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    for i, l in enumerate([10, 50]):
+        k2[i, :, l + qn:] = 1e4
+        v2[i, :, l + qn:] = -1e4
+    out2 = ragged_decode_attention(q, jnp.asarray(k2), jnp.asarray(v2), lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_causality_within_draft_block():
+    """Row j must not see the keys of rows > j (future draft tokens)."""
+    b, h, qn, s, d = 1, 1, 4, 128, 16
+    q, k, v = _make_inputs(4, b, h, qn, s, d, jnp.float32)
+    lens = jnp.array([7], jnp.int32)
+    out1 = ragged_decode_attention(q, k, v, lens)
+    # Mutate the last draft token's K/V (position lens + qn - 1): rows < qn-1
+    # must be unchanged.
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    k2[0, :, 7 + qn - 1] = 123.0
+    v2[0, :, 7 + qn - 1] = -77.0
+    out2 = ragged_decode_attention(q, jnp.asarray(k2), jnp.asarray(v2), lens)
+    np.testing.assert_allclose(np.asarray(out1)[:, :, :qn - 1],
+                               np.asarray(out2)[:, :, :qn - 1], atol=1e-6)
+    assert not np.allclose(np.asarray(out1)[:, :, qn - 1],
+                           np.asarray(out2)[:, :, qn - 1])
+
+
+def test_prefill_is_causal():
+    b, h, p, d = 2, 2, 64, 16
+    q, k, v = _make_inputs(5, b, h, p, 128, d, jnp.float32)
+    out = ragged_prefill_attention(q, k, v)
+    ref = ragged_prefill_attention_ref(q, k, v)
+    _check(out, ref, jnp.float32)
+
+
+def test_s_blk_variants_agree():
+    """Tiling must be value-invariant: different S_BLK, same result."""
+    q, k, v = _make_inputs(6, 2, 2, 5, 256, 32, jnp.float32)
+    lens = jnp.array([30, 200], jnp.int32)
+    a = ragged_decode_attention(q, k, v, lens, s_blk=64)
+    b_ = ragged_decode_attention(q, k, v, lens, s_blk=128)
+    c = ragged_decode_attention(q, k, v, lens, s_blk=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+
+
+def test_bad_shapes_raise():
+    q, k, v = _make_inputs(7, 1, 1, 1, 128, 16, jnp.float32)
+    with pytest.raises(ValueError):
+        ragged_decode_attention(q, k, v, jnp.zeros((1,), jnp.int32), s_blk=100)
+    with pytest.raises(ValueError):
+        ragged_decode_attention(q, k[:, :, :, :8], v, jnp.zeros((1,), jnp.int32))

@@ -1,0 +1,173 @@
+"""Layer-2 model correctness: KV-cache consistency, raggedness, and the
+pallas/dense attention parity inside the full transformer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (CONFIGS, ModelConfig, decode, draft_loop,
+                           init_cache, init_params, lm_logits, prefill,
+                           sample_top_p)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig("tiny", n_layer=2, n_head=2, d_model=32, d_ff=64)
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def rand_tokens(seed, shape):
+    return jnp.asarray(
+        np.random.RandomState(seed).randint(1, 256, shape), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Cache consistency: incremental decode == full forward
+# ---------------------------------------------------------------------------
+
+def test_prefill_matches_full_forward():
+    toks = rand_tokens(0, (2, 10))
+    plens = jnp.array([6, 10], jnp.int32)
+    last, _ = prefill(PARAMS, toks, plens, CFG, attn_impl="dense")
+    full = lm_logits(PARAMS, toks, CFG)
+    np.testing.assert_allclose(last[0], full[0, 5], atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(last[1], full[1, 9], atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    p1=st.integers(2, 10),
+    p2=st.integers(2, 10),
+    q=st.integers(1, 5),
+)
+def test_ragged_decode_matches_full_forward(seed, p1, p2, q):
+    """Two sequences at *different* lengths decode Q tokens each; logits
+    must equal the full forward over each concatenated stream — the core
+    ragged-batch property of BASS."""
+    p_max = 10
+    toks = rand_tokens(seed, (2, p_max))
+    plens = jnp.array([p1, p2], jnp.int32)
+    _, caches = prefill(PARAMS, toks, plens, CFG, attn_impl="dense")
+    new = rand_tokens(seed + 1, (2, q))
+    logits, _ = decode(PARAMS, new, plens, caches, CFG, attn_impl="dense")
+    for b, p in enumerate([p1, p2]):
+        stream = jnp.concatenate([toks[b, :p], new[b]])[None]
+        full = lm_logits(PARAMS, stream, CFG)
+        np.testing.assert_allclose(logits[b], full[0, p:p + q],
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_decode_pallas_matches_dense_in_model():
+    toks = rand_tokens(2, (2, 8))
+    plens = jnp.array([5, 8], jnp.int32)
+    _, caches = prefill(PARAMS, toks, plens, CFG, attn_impl="dense")
+    new = rand_tokens(3, (2, 3))
+    ld, _ = decode(PARAMS, new, plens, caches, CFG, attn_impl="dense")
+    lp, _ = decode(PARAMS, new, plens, caches, CFG, attn_impl="pallas")
+    np.testing.assert_allclose(ld, lp, atol=1e-4, rtol=1e-4)
+
+
+def test_stale_cache_tail_is_invisible():
+    """Rollback = length truncation: poisoned entries beyond seq_lens must
+    not affect decode (the paper's rejection-rollback scheme)."""
+    toks = rand_tokens(4, (1, 8))
+    plens = jnp.array([8], jnp.int32)
+    _, caches = prefill(PARAMS, toks, plens, CFG, attn_impl="dense")
+    new = rand_tokens(5, (1, 2))
+    base, _ = decode(PARAMS, new, plens, caches, CFG, attn_impl="dense")
+    poisoned = [c.at[:, :, 12:, :].set(1e3) for c in caches]
+    pois, _ = decode(PARAMS, new, plens, poisoned, CFG, attn_impl="dense")
+    np.testing.assert_allclose(base, pois, atol=1e-5)
+
+
+def test_cache_write_positions_are_ragged():
+    """Decode must write K/V at each sequence's own offset."""
+    toks = rand_tokens(6, (2, 8))
+    plens = jnp.array([3, 7], jnp.int32)
+    _, caches = prefill(PARAMS, toks, plens, CFG, attn_impl="dense")
+    new = rand_tokens(7, (2, 2))
+    _, newc = decode(PARAMS, new, plens, caches, CFG, attn_impl="dense")
+    k_old, k_new = np.asarray(caches[0]), np.asarray(newc[0])
+    # Row 0: positions 3,4 changed; row 1: positions 7,8 changed.
+    assert not np.allclose(k_old[0, :, 3:5], k_new[0, :, 3:5])
+    np.testing.assert_allclose(k_old[0, :, 5:], k_new[0, :, 5:])
+    assert not np.allclose(k_old[1, :, 7:9], k_new[1, :, 7:9])
+    np.testing.assert_allclose(k_old[1, :, 0:7], k_new[1, :, 0:7])
+
+
+# ---------------------------------------------------------------------------
+# Draft loop
+# ---------------------------------------------------------------------------
+
+def test_draft_loop_resync_two_tokens():
+    """n_in=2 must condition the first draft on both catch-up tokens."""
+    toks = rand_tokens(8, (1, 8))
+    plens = jnp.array([6], jnp.int32)
+    _, caches = prefill(PARAMS, toks, plens, CFG, attn_impl="dense")
+    extra = rand_tokens(9, (1, 2))
+    u = jnp.full((1, 3), 0.31, jnp.float32)
+    t, tp = jnp.float32(0.01), jnp.float32(0.95)
+    d2, _, _ = draft_loop(PARAMS, extra, jnp.array([2], jnp.int32),
+                          plens - 1, caches, u, t, tp, CFG,
+                          attn_impl="dense")
+    # Reference: full forward over prompt[:5] + last_prompt? Use stream:
+    # prefill covers toks[:6]; pending convention starts at len-1 = 5 with
+    # inputs extra[0], extra[1].
+    stream = jnp.concatenate([toks[0, :5], extra[0]])[None]
+    full = lm_logits(PARAMS, stream, CFG)
+    expected = int(jnp.argmax(full[0, -1]))
+    assert int(d2[0, 0]) == expected
+
+
+def test_draft_loop_k_tokens_advance():
+    toks = rand_tokens(10, (2, 8))
+    plens = jnp.array([4, 8], jnp.int32)
+    _, caches = prefill(PARAMS, toks, plens, CFG, attn_impl="dense")
+    t0 = jnp.stack([toks[jnp.arange(2), plens - 1],
+                    jnp.zeros(2, jnp.int32)], axis=1)
+    u = jnp.full((2, 5), 0.5, jnp.float32)
+    dt, qd, newc = draft_loop(PARAMS, t0, jnp.array([1, 1], jnp.int32),
+                              plens - 1, caches, u, jnp.float32(0.2),
+                              jnp.float32(0.95), CFG, attn_impl="dense")
+    assert dt.shape == (2, 5)
+    assert qd.shape == (2, 5, 256)
+    np.testing.assert_allclose(np.asarray(qd).sum(-1), 1.0, atol=1e-5)
+    assert all(c.shape == caches[i].shape for i, c in enumerate(newc))
+
+
+# ---------------------------------------------------------------------------
+# In-graph sampler
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       temp=st.floats(0.05, 2.0),
+       top_p=st.floats(0.1, 1.0))
+def test_sample_top_p_valid_distribution(seed, temp, top_p):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (3, 64)) * 3
+    u = jax.random.uniform(jax.random.PRNGKey(seed + 1), (3,))
+    tok, warped = sample_top_p(logits, u, jnp.float32(temp),
+                               jnp.float32(top_p))
+    w = np.asarray(warped)
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    assert (w >= 0).all()
+    # The sampled token must have non-zero warped probability.
+    for b in range(3):
+        assert w[b, int(tok[b])] > 0
+
+
+def test_sample_top_p_greedy_limit():
+    logits = jnp.array([[0.0, 3.0, 1.0, -2.0]])
+    tok, w = sample_top_p(logits, jnp.array([0.7]), jnp.float32(0.01),
+                          jnp.float32(0.9))
+    assert int(tok[0]) == 1
+    assert float(w[0, 1]) > 0.999
+
+
+def test_config_registry():
+    assert set(CONFIGS) == {"main", "draft_a", "draft_b", "draft_c"}
+    for cfg in CONFIGS.values():
+        assert cfg.d_model % cfg.n_head == 0
+        assert cfg.d_head == cfg.d_model // cfg.n_head
+    assert len(init_cache(CFG, 3)) == 2 * CFG.n_layer

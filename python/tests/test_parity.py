@@ -1,0 +1,65 @@
+"""Cross-language sampler parity: the in-graph nucleus warp
+(`model.sample_top_p`) and the Rust host warp (`rust/src/sampling.rs`)
+implement the same value-wise rule. This test pins the *python* side's
+semantics with directed cases whose expected outputs were computed by hand;
+the Rust unit tests pin the same cases, so both sides are anchored to the
+same contract (exactness of speculative sampling depends on it)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import sample_top_p
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def warp_reference(logits, temperature, top_p):
+    """Straight-line NumPy restatement of the contract."""
+    x = np.asarray(logits, np.float64) / max(temperature, 1e-4)
+    p = np.exp(x - x.max())
+    p /= p.sum()
+    keep = np.zeros_like(p, bool)
+    for i in range(len(p)):
+        mass_before = p[p > p[i]].sum()
+        keep[i] = mass_before < top_p
+    f = np.where(keep, p, 0.0)
+    return f / f.sum()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 100_000),
+       temp=st.floats(0.05, 2.0),
+       top_p=st.floats(0.05, 1.0))
+def test_warp_matches_reference(seed, temp, top_p):
+    logits = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), (16,)) * 2.5)
+    _, warped = sample_top_p(jnp.asarray(logits)[None],
+                             jnp.array([0.5]), jnp.float32(temp),
+                             jnp.float32(top_p))
+    ref = warp_reference(logits, temp, top_p)
+    np.testing.assert_allclose(np.asarray(warped[0]), ref, atol=2e-4)
+
+
+def test_warp_directed_case():
+    """Pinned case shared with rust/src/sampling.rs::warp_matches_python."""
+    logits = jnp.array([[0.0, 1.0, 2.0, -1.0]])
+    _, w = sample_top_p(logits, jnp.array([0.5]), jnp.float32(1.0),
+                        jnp.float32(0.8))
+    # softmax(0,1,2,-1) = [0.0871, 0.2369, 0.6439, 0.0321]
+    # mass_before: t2 -> 0 (<0.8 keep), t1 -> .6439 (<0.8 keep),
+    # t0 -> .8808 (drop), t3 -> .9679 (drop); renorm over {t1, t2}.
+    w = np.asarray(w[0])
+    np.testing.assert_allclose(w[2], 0.6439 / 0.8808, atol=2e-3)
+    np.testing.assert_allclose(w[1], 0.2369 / 0.8808, atol=2e-3)
+    assert w[0] == 0.0 and w[3] == 0.0
+
+
+def test_cdf_inversion_directed():
+    """Token selection = first index with cdf > u, in index order."""
+    logits = jnp.log(jnp.array([[0.25, 0.25, 0.25, 0.25]]))
+    for u, want in [(0.05, 0), (0.3, 1), (0.55, 2), (0.9, 3)]:
+        tok, _ = sample_top_p(logits, jnp.array([u]), jnp.float32(1.0),
+                              jnp.float32(1.0))
+        assert int(tok[0]) == want, (u, int(tok[0]))

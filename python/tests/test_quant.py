@@ -1,0 +1,68 @@
+"""INT8 weight-only quantization: round-trip error bounds and model-level
+logit drift (the Tables 1–3 precision axis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import ModelConfig, init_params, lm_logits
+from compile.quant import (dequantize_params, maybe_dequant,
+                           quantize_params, quantize_tensor)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       rows=st.integers(1, 64),
+       cols=st.integers(1, 64),
+       scale=st.floats(0.01, 100.0))
+def test_quantize_tensor_error_bound(seed, rows, cols, scale):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * scale
+    q = quantize_tensor(w)
+    assert q["q"].dtype == jnp.int8
+    assert q["s"].shape == (cols,)
+    deq = maybe_dequant(q)
+    # Per-channel symmetric int8: |err| <= scale/2 per element, where
+    # scale = amax / 127.
+    amax = np.abs(np.asarray(w)).max(axis=0)
+    bound = amax / 127.0 * 0.5 + 1e-7
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    assert (err <= bound[None, :] + 1e-6).all()
+
+
+def test_quantize_params_structure():
+    cfg = ModelConfig("tiny", n_layer=2, n_head=2, d_model=32, d_ff=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params)
+    # Embedding stays f32; block weight matrices become {"q","s"} dicts.
+    assert isinstance(qp["embed"], jnp.ndarray)
+    assert "q" in qp["blocks"][0]["qkv"]["w"]
+    assert isinstance(qp["blocks"][0]["qkv"]["b"], jnp.ndarray)
+    # Leaf count grows by one scale per quantized matrix (qkv, proj, fc,
+    # out = 4 per block).
+    n_f32 = len(jax.tree_util.tree_leaves(params))
+    n_q = len(jax.tree_util.tree_leaves(qp))
+    assert n_q == n_f32 + 4 * cfg.n_layer
+
+
+def test_model_level_logit_drift_small():
+    cfg = ModelConfig("tiny", n_layer=2, n_head=2, d_model=32, d_ff=64)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    toks = jnp.asarray(
+        np.random.RandomState(0).randint(1, 256, (2, 12)), jnp.int32)
+    full = lm_logits(params, toks, cfg)
+    deq = lm_logits(dequantize_params(quantize_params(params)), toks, cfg)
+    # Quantization perturbs logits slightly; ranking of the argmax should
+    # mostly survive and the numeric drift stays bounded.
+    drift = np.abs(np.asarray(full) - np.asarray(deq)).max()
+    assert drift < 0.5, f"excessive int8 drift {drift}"
+    agree = (np.argmax(np.asarray(full), -1)
+             == np.argmax(np.asarray(deq), -1)).mean()
+    assert agree > 0.8
+
+
+def test_maybe_dequant_passthrough():
+    x = jnp.ones((3, 3))
+    assert maybe_dequant(x) is x

@@ -1,0 +1,36 @@
+//! Shared scaffolding for the paper-table benches.
+
+use bass::bench_util::{artifacts_available, artifacts_root};
+use bass::runtime::Engine;
+
+/// Standard bench entry: loads the engine or exits politely.
+pub fn engine_or_exit(name: &str) -> Engine {
+    if !artifacts_available() {
+        eprintln!("[{name}] SKIP: artifacts/ missing — run `make artifacts`");
+        std::process::exit(0);
+    }
+    println!("[{name}] loading engine...");
+    Engine::load(&artifacts_root()).expect("engine load")
+}
+
+/// Fast mode trims problem counts/batch grids (`BASS_FAST=1`).
+pub fn fast_mode() -> bool {
+    std::env::var("BASS_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Batch grid for table benches.
+pub fn batch_grid(full: &[usize]) -> Vec<usize> {
+    if fast_mode() {
+        full.iter().copied().filter(|&b| b <= 4).collect()
+    } else {
+        full.to_vec()
+    }
+}
+
+pub fn n_problems(full: usize) -> usize {
+    if fast_mode() {
+        (full / 3).max(2)
+    } else {
+        full
+    }
+}

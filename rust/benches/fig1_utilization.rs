@@ -1,0 +1,105 @@
+//! **Figure 1** — per-token latency and compute utilization of regular
+//! decoding (RD), single-sequence speculative decoding (SD, = BASS at
+//! B=1) and BASS, across batch sizes.
+//!
+//! "GPU utilization" is achieved model FLOP/s over a peak calibrated with
+//! a large GEMM at startup (the testbed stand-in for the A100 datasheet
+//! number the paper uses). Paper shape to reproduce: RD-1 ≈ 0.4%,
+//! batched RD up to ≈ 4.8%, BASS up to ≈ 15.8% — i.e. BASS ≫ RD at every
+//! batch size, growing with batch.
+
+mod common;
+
+use bass::baseline::{RdConfig, RegularDecoder};
+use bass::bench_util::{artifacts_root, bench_prompts, save_result, Table};
+use bass::runtime::json::Json;
+use bass::spec::{SpecConfig, SpecEngine};
+
+fn main() -> anyhow::Result<()> {
+    let engine = common::engine_or_exit("fig1");
+    let root = artifacts_root();
+    let n_rep = common::n_problems(3);
+    // Summarization prompts: ~36-token generations — long enough for
+    // speculative amortization to show (code completions EOS after ~8
+    // tokens, hiding the draft win; see EXPERIMENTS.md).
+    let max_new = 48;
+
+    println!("[fig1] calibrating peak FLOP/s...");
+    let peak = engine.calibrate_peak_flops(8)?;
+    println!("[fig1] peak ≈ {:.1} GFLOP/s", peak / 1e9);
+
+    let mut table = Table::new(&[
+        "method", "batch", "PTL ms", "tokens/s", "utilization",
+    ]);
+    let mut records = Vec::new();
+    let mut add = |method: &str, b: usize, ptl: f64, tps: f64, util: f64,
+                   records: &mut Vec<Json>, table: &mut Table| {
+        table.row(vec![
+            method.into(), b.to_string(), format!("{:.2}", ptl * 1e3),
+            format!("{tps:.0}"), format!("{:.2}%", util * 100.0),
+        ]);
+        records.push(Json::obj(vec![
+            ("method", method.into()),
+            ("batch", b.into()),
+            ("ptl_ms", (ptl * 1e3).into()),
+            ("tokens_per_sec", tps.into()),
+            ("utilization", util.into()),
+            ("peak_gflops", (peak / 1e9).into()),
+        ]));
+    };
+
+    for &b in &common::batch_grid(&[1, 2, 4, 8, 16]) {
+        let prompts = bench_prompts(&root, "summ", b)?;
+        // RD ------------------------------------------------------------------
+        let rd = RegularDecoder::new(&engine, RdConfig {
+            max_new_tokens: max_new,
+            ..RdConfig::default()
+        });
+        let _ = rd.generate(&prompts)?;
+        let (mut ptl, mut tps, mut util) = (0.0, 0.0, 0.0);
+        for rep in 0..n_rep {
+            let rd = RegularDecoder::new(&engine, RdConfig {
+                max_new_tokens: max_new,
+                seed: rep as u64,
+                ..RdConfig::default()
+            });
+            let _ = rd.generate(&prompts)?; // warm (same seed)
+            let r = rd.generate(&prompts)?;
+            ptl += r.metrics.ptl_mean;
+            tps += r.metrics.tokens_per_sec;
+            util += r.flops.utilization(r.metrics.wall_secs
+                                        + r.prefill_secs, peak);
+        }
+        let n = n_rep as f64;
+        add("RD", b, ptl / n, tps / n, util / n, &mut records, &mut table);
+
+        // BASS ----------------------------------------------------------------
+        let spec = SpecEngine::new(&engine, SpecConfig {
+            max_new_tokens: max_new,
+            ..SpecConfig::default()
+        });
+        let _ = spec.generate(&prompts)?;
+        let (mut ptl, mut tps, mut util) = (0.0, 0.0, 0.0);
+        for rep in 0..n_rep {
+            let spec = SpecEngine::new(&engine, SpecConfig {
+                max_new_tokens: max_new,
+                seed: rep as u64,
+                ..SpecConfig::default()
+            });
+            let _ = spec.generate(&prompts)?; // warm (same seed)
+            let r = spec.generate(&prompts)?;
+            ptl += r.metrics.ptl_mean;
+            tps += r.metrics.tokens_per_sec;
+            util += r.flops.utilization(r.metrics.wall_secs
+                                        + r.prefill_secs, peak);
+        }
+        let method = if b == 1 { "SD (BASS b=1)" } else { "BASS" };
+        add(method, b, ptl / n, tps / n, util / n, &mut records, &mut table);
+    }
+
+    println!("\nFigure 1 — latency & utilization vs batch \
+              (paper: RD-1 0.4%, RD-max 4.8%, BASS up to 15.8%):");
+    table.print();
+    save_result("fig1_utilization", Json::Arr(records))?;
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! **Figure 5** — accuracy within a wall-clock budget: Pass@First (top
+//! mean-logP finished candidate) and Pass@Finished vs batch size at two
+//! temperatures, under a budget chosen so that regular decoding cannot
+//! finish (paper: 2.5 s for 256 tokens on an A100; here the budget is
+//! scaled to 80% of RD's single-sequence completion time).
+
+mod common;
+
+use bass::baseline::{RdConfig, RegularDecoder};
+use bass::bench_util::{artifacts_root, save_result, Table};
+use bass::eval::{aggregate, judge, load_code_tasks, Candidate};
+use bass::kv::FinishReason;
+use bass::runtime::json::Json;
+use bass::spec::{SpecConfig, SpecEngine};
+use bass::tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = common::engine_or_exit("fig5");
+    let root = artifacts_root();
+    let tasks = load_code_tasks(&root)?;
+    let n_prob = common::n_problems(12);
+    let max_new = 48;
+
+    // Scale the paper's 2.5 s budget: measure warm RD at B=1 and take 80%
+    // of its completion time, so RD provably cannot finish.
+    let probe = vec![tokenizer::encode(&tasks[0].prompt)];
+    let rd = RegularDecoder::new(&engine, RdConfig {
+        max_new_tokens: max_new,
+        temperature: 0.8, // discourage early EOS for the probe
+        top_p: 1.0,
+        ..RdConfig::default()
+    });
+    let _ = rd.generate(&probe)?;
+    let r = rd.generate(&probe)?;
+    let budget = 0.8 * r.metrics.ptl_mean * max_new as f64;
+    println!("[fig5] RD B=1 needs {:.0} ms for {max_new} tokens -> budget \
+              {:.0} ms", r.metrics.ptl_mean * max_new as f64 * 1e3,
+             budget * 1e3);
+
+    let mut table = Table::new(&[
+        "temp", "batch", "Pass@First", "Pass@Finished", "mean finished",
+    ]);
+    let mut records = Vec::new();
+
+    for temp in [0.2f32, 0.6] {
+        for &b in &common::batch_grid(&[1, 2, 4, 8, 16]) {
+            let spec_cfg = SpecConfig {
+                temperature: temp,
+                max_new_tokens: max_new,
+                time_budget_secs: Some(budget),
+                ..SpecConfig::default()
+            };
+            // Warm without budget so compiles don't eat the budget.
+            let warm_prompts =
+                vec![tokenizer::encode(&tasks[0].prompt); b];
+            for warm_seed in 0..3u64 {
+                let _ = SpecEngine::new(&engine, SpecConfig {
+                    time_budget_secs: None,
+                    max_new_tokens: 24,
+                    seed: warm_seed,
+                    ..spec_cfg.clone()
+                }).generate(&warm_prompts)?;
+            }
+
+            let mut outcomes = Vec::new();
+            let mut finished = 0usize;
+            for (pi, t) in tasks.iter().take(n_prob).enumerate() {
+                let prompts = vec![tokenizer::encode(&t.prompt); b];
+                let spec = SpecEngine::new(&engine, SpecConfig {
+                    seed: pi as u64,
+                    ..spec_cfg.clone()
+                });
+                let res = spec.generate(&prompts)?;
+                let cands: Vec<Candidate> = res.seqs.iter().map(|s| {
+                    let text = tokenizer::decode(&s.generated);
+                    Candidate {
+                        passes: t.passes(&text),
+                        text,
+                        finished: s.finish != FinishReason::Running,
+                        mean_logp: s.mean_logp(),
+                    }
+                }).collect();
+                finished += cands.iter().filter(|c| c.finished).count();
+                outcomes.push(judge(&cands));
+            }
+            let rates = aggregate(&outcomes);
+            table.row(vec![
+                format!("{temp}"), b.to_string(),
+                format!("{:.1}%", rates.pass_first * 100.0),
+                format!("{:.1}%", rates.pass_finished * 100.0),
+                format!("{:.1}", finished as f64 / n_prob as f64),
+            ]);
+            records.push(Json::obj(vec![
+                ("temperature", (temp as f64).into()),
+                ("batch", b.into()),
+                ("budget_ms", (budget * 1e3).into()),
+                ("pass_first", rates.pass_first.into()),
+                ("pass_finished", rates.pass_finished.into()),
+                ("mean_finished",
+                 (finished as f64 / n_prob as f64).into()),
+            ]));
+        }
+    }
+    println!("\nFigure 5 — accuracy within a time budget RD cannot meet \
+              (paper: Pass@Finished up to 61%, Pass@First up to 43%, both \
+              rising with batch):");
+    table.print();
+    save_result("fig5_time_budget", Json::Arr(records))?;
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Micro-benchmarks of the runtime hot path: per-phase executable
+//! latencies across (batch, Q) — the fixed-vs-variable cost structure that
+//! drives all speculative economics on this testbed — plus compile times
+//! and H2D/D2H traffic. Feeds the §Perf analysis in EXPERIMENTS.md.
+
+mod common;
+
+use std::time::Instant;
+
+use bass::bench_util::{measure, save_result, Table};
+use bass::runtime::json::Json;
+use bass::runtime::{Attn, Precision};
+
+fn main() -> anyhow::Result<()> {
+    let engine = common::engine_or_exit("microbench");
+    let p_cap = engine.manifest.prefill_p;
+    let reps = if common::fast_mode() { 5 } else { 20 };
+
+    let mut table = Table::new(&[
+        "phase", "model", "prec", "B", "Q", "mean ms", "p90 ms",
+        "ms/token",
+    ]);
+    let mut records = Vec::new();
+
+    let combos: Vec<(&str, Precision, usize, usize)> = vec![
+        // Verify-shaped decode calls on the main model.
+        ("main", Precision::F32, 1, 1),
+        ("main", Precision::F32, 1, 5),
+        ("main", Precision::F32, 8, 1),
+        ("main", Precision::F32, 8, 5),
+        ("main", Precision::F32, 8, 9),
+        ("main", Precision::F32, 16, 5),
+        ("main", Precision::Int8, 8, 5),
+    ];
+    for (model, prec, b, q) in combos {
+        let toks = vec![65i32; b * p_cap];
+        let lens = vec![20i32; b];
+        let pre = engine.prefill(model, prec, Attn::Dense, b, &toks, &lens)?;
+        let mut caches = Some(pre.caches);
+        let step_toks = vec![66i32; b * q];
+        let mut seq = 20i32;
+        // Warm compile.
+        let out = engine.decode(model, prec, Attn::Dense, b, q, &step_toks,
+                                &vec![seq; b], caches.take().unwrap())?;
+        caches = Some(out.caches);
+        seq += 1;
+        let s = measure(2, reps, || {
+            let out = engine.decode(model, prec, Attn::Dense, b, q,
+                                    &step_toks, &vec![seq; b],
+                                    caches.take().unwrap())?;
+            caches = Some(out.caches);
+            seq = (seq + 1).min(180);
+            Ok(())
+        })?;
+        table.row(vec![
+            "decode".into(), model.into(), prec.as_str().into(),
+            b.to_string(), q.to_string(),
+            format!("{:.3}", s.mean() * 1e3),
+            format!("{:.3}", s.percentile(0.9) * 1e3),
+            format!("{:.3}", s.mean() * 1e3 / (b * q) as f64),
+        ]);
+        records.push(Json::obj(vec![
+            ("phase", "decode".into()), ("model", model.into()),
+            ("precision", prec.as_str().into()), ("batch", b.into()),
+            ("q", q.into()), ("mean_ms", (s.mean() * 1e3).into()),
+        ]));
+    }
+
+    // Fused draft call vs K sequential draft calls ---------------------------
+    for (b, k) in [(1usize, 4usize), (8, 4), (8, 8)] {
+        let toks = vec![65i32; b * p_cap];
+        let lens = vec![20i32; b];
+        let pre = engine.prefill("draft_a", Precision::F32, Attn::Dense, b,
+                                 &toks, &lens)?;
+        let mut caches = Some(pre.caches);
+        let tokens_in = vec![66i32; b * 2];
+        let n_in = vec![1i32; b];
+        let uni = vec![0.5f32; b * k];
+        let mut seq = 20i32;
+        let out = engine.draft("draft_a", Precision::F32, Attn::Dense, b, k,
+                               &tokens_in, &n_in, &vec![seq; b], &uni, 0.2,
+                               0.95, caches.take().unwrap())?;
+        caches = Some(out.caches);
+        let s = measure(2, reps, || {
+            let out = engine.draft("draft_a", Precision::F32, Attn::Dense,
+                                   b, k, &tokens_in, &n_in, &vec![seq; b],
+                                   &uni, 0.2, 0.95,
+                                   caches.take().unwrap())?;
+            caches = Some(out.caches);
+            seq = (seq + 1).min(150);
+            Ok(())
+        })?;
+        table.row(vec![
+            format!("draft k={k}"), "draft_a".into(), "f32".into(),
+            b.to_string(), k.to_string(),
+            format!("{:.3}", s.mean() * 1e3),
+            format!("{:.3}", s.percentile(0.9) * 1e3),
+            format!("{:.3}", s.mean() * 1e3 / (b * k) as f64),
+        ]);
+        records.push(Json::obj(vec![
+            ("phase", "draft".into()), ("batch", b.into()),
+            ("k", k.into()), ("mean_ms", (s.mean() * 1e3).into()),
+        ]));
+    }
+
+    // Prefill --------------------------------------------------------------
+    for b in [1usize, 8] {
+        let toks = vec![65i32; b * p_cap];
+        let lens = vec![40i32; b];
+        let _ = engine.prefill("main", Precision::F32, Attn::Dense, b,
+                               &toks, &lens)?;
+        let s = measure(1, reps / 2, || {
+            let _ = engine.prefill("main", Precision::F32, Attn::Dense, b,
+                                   &toks, &lens)?;
+            Ok(())
+        })?;
+        table.row(vec![
+            "prefill".into(), "main".into(), "f32".into(), b.to_string(),
+            p_cap.to_string(), format!("{:.3}", s.mean() * 1e3),
+            format!("{:.3}", s.percentile(0.9) * 1e3),
+            format!("{:.3}", s.mean() * 1e3 / (b * p_cap) as f64),
+        ]);
+    }
+
+    // Pallas-vs-dense artifact latency (the L1 parity subset) --------------
+    for (b, q) in [(1usize, 5usize), (8, 5)] {
+        let toks = vec![65i32; b * p_cap];
+        let lens = vec![20i32; b];
+        for attn in [Attn::Dense, Attn::Pallas] {
+            let pre = engine.prefill("main", Precision::F32, Attn::Dense, b,
+                                     &toks, &lens)?;
+            let mut caches = Some(pre.caches);
+            let step = vec![66i32; b * q];
+            let out = engine.decode("main", Precision::F32, attn, b, q,
+                                    &step, &vec![20; b],
+                                    caches.take().unwrap())?;
+            caches = Some(out.caches);
+            let s = measure(1, reps / 2, || {
+                let out = engine.decode("main", Precision::F32, attn, b, q,
+                                        &step, &vec![21; b],
+                                        caches.take().unwrap())?;
+                caches = Some(out.caches);
+                Ok(())
+            })?;
+            table.row(vec![
+                format!("decode[{}]", if attn == Attn::Pallas {
+                    "pallas"
+                } else {
+                    "dense"
+                }),
+                "main".into(), "f32".into(), b.to_string(), q.to_string(),
+                format!("{:.3}", s.mean() * 1e3),
+                format!("{:.3}", s.percentile(0.9) * 1e3),
+                format!("{:.3}", s.mean() * 1e3 / (b * q) as f64),
+            ]);
+            records.push(Json::obj(vec![
+                ("phase", "decode_attn_variant".into()),
+                ("attn", if attn == Attn::Pallas { "pallas" } else {
+                    "dense"
+                }.into()),
+                ("batch", b.into()), ("q", q.into()),
+                ("mean_ms", (s.mean() * 1e3).into()),
+            ]));
+        }
+    }
+
+    println!("\nMicrobench — executable latencies (fixed-vs-variable cost \
+              structure):");
+    table.print();
+
+    // Compile-time + engine stats summary.
+    let st = engine.stats.borrow().clone();
+    println!("\ncompiles: {} in {:.1}s  (mean {:.0} ms)", st.compiles,
+             st.compile_secs,
+             st.compile_secs / (st.compiles.max(1) as f64) * 1e3);
+    println!("H2D {:.1} MB, D2H {:.1} MB", st.h2d_bytes as f64 / 1e6,
+             st.d2h_bytes as f64 / 1e6);
+    let t0 = Instant::now();
+    let peak = engine.calibrate_peak_flops(5)?;
+    println!("peak {:.1} GFLOP/s (calibrated in {:.1}s)", peak / 1e9,
+             t0.elapsed().as_secs_f64());
+
+    records.push(Json::obj(vec![
+        ("compiles", (st.compiles as usize).into()),
+        ("compile_secs", st.compile_secs.into()),
+        ("peak_gflops", (peak / 1e9).into()),
+    ]));
+    save_result("microbench", Json::Arr(records))?;
+    Ok(())
+}

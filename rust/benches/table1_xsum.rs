@@ -1,0 +1,125 @@
+//! **Table 1** — summarization (synth_xsum): ROUGE-2 and per-token latency
+//! (first / last / all) for regular decoding vs BASS, across batch sizes
+//! and precisions. Paper: OPT 13B + OPT 125M on XSum; here: `main` +
+//! `draft_a` on the templated summarization task (DESIGN.md §1).
+
+mod common;
+
+use bass::baseline::{RdConfig, RegularDecoder};
+use bass::bench_util::{artifacts_root, save_result, speedup, Table};
+use bass::eval::load_summ_tasks;
+use bass::eval::rouge2_f1;
+use bass::runtime::json::Json;
+use bass::runtime::Precision;
+use bass::spec::{SpecConfig, SpecEngine};
+use bass::tokenizer;
+
+// Paper Table 1 anchors (mean per-token latency, ms) for shape comparison.
+const PAPER: &[(&str, usize, f64, f64, f64)] = &[
+    // (precision, batch, RD all-ms, BASS all-ms, BASS all-speedup)
+    ("f32", 1, 23.4, 10.8, 2.16),
+    ("f32", 2, 25.9, 11.0, 2.34),
+    ("f32", 4, 27.0, 12.7, 2.13),
+    ("int8", 1, 17.4, 8.5, 2.05),
+    ("int8", 2, 20.1, 9.3, 2.16),
+    ("int8", 4, 21.1, 11.2, 1.88),
+    ("int8", 8, 23.5, 14.5, 1.62),
+];
+
+fn main() -> anyhow::Result<()> {
+    let engine = common::engine_or_exit("table1");
+    let root = artifacts_root();
+    let tasks = load_summ_tasks(&root)?;
+    let n_prob = common::n_problems(6);
+    let max_new = 48;
+
+    let mut table = Table::new(&[
+        "prec", "batch", "method", "ROUGE-2", "first ms", "last ms",
+        "all ms", "speedup(all)", "paper",
+    ]);
+    let mut records = Vec::new();
+
+    for prec in [Precision::F32, Precision::Int8] {
+        for &b in &common::batch_grid(&[1, 2, 4, 8]) {
+            let mut rd_ptl = (0.0, 0.0, 0.0);
+            let mut rd_rouge = 0.0;
+            let mut bass_ptl = (0.0, 0.0, 0.0);
+            let mut bass_rouge = 0.0;
+            for (pi, t) in tasks.iter().take(n_prob).enumerate() {
+                let prompts = vec![tokenizer::encode(&t.prompt); b];
+                // RD --------------------------------------------------------
+                let rd = RegularDecoder::new(&engine, RdConfig {
+                    precision: prec,
+                    max_new_tokens: max_new,
+                    seed: pi as u64,
+                    ..RdConfig::default()
+                });
+                // Identical-seed warm run: deterministic K-trajectory
+                // means the timed run touches only compiled executables.
+                let _ = rd.generate(&prompts)?;
+                let r = rd.generate(&prompts)?;
+                rd_ptl.0 += r.metrics.ptl_first;
+                rd_ptl.1 += r.metrics.ptl_last;
+                rd_ptl.2 += r.metrics.ptl_mean;
+                let text = tokenizer::decode(&r.seqs[0].generated);
+                rd_rouge +=
+                    rouge2_f1(t.extract_summary(&text), &t.reference);
+                // BASS ------------------------------------------------------
+                let spec = SpecEngine::new(&engine, SpecConfig {
+                    precision: prec,
+                    max_new_tokens: max_new,
+                    seed: pi as u64,
+                    ..SpecConfig::default()
+                });
+                let _ = spec.generate(&prompts)?;
+                let s = spec.generate(&prompts)?;
+                bass_ptl.0 += s.metrics.ptl_first;
+                bass_ptl.1 += s.metrics.ptl_last;
+                bass_ptl.2 += s.metrics.ptl_mean;
+                let text = tokenizer::decode(&s.seqs[0].generated);
+                bass_rouge +=
+                    rouge2_f1(t.extract_summary(&text), &t.reference);
+            }
+            let n = n_prob as f64;
+            let paper = PAPER.iter()
+                .find(|(p, pb, ..)| *p == prec.as_str() && *pb == b);
+            let paper_str = paper
+                .map(|(_, _, rd, ba, sp)| {
+                    format!("RD {rd:.1} / BASS {ba:.1} ({sp:.2}x)")
+                })
+                .unwrap_or_else(|| "-".into());
+            table.row(vec![
+                prec.as_str().into(), b.to_string(), "RD".into(),
+                format!("{:.3}", rd_rouge / n),
+                format!("{:.2}", rd_ptl.0 / n * 1e3),
+                format!("{:.2}", rd_ptl.1 / n * 1e3),
+                format!("{:.2}", rd_ptl.2 / n * 1e3),
+                "1.00x".into(), paper_str.clone(),
+            ]);
+            table.row(vec![
+                prec.as_str().into(), b.to_string(), "BASS".into(),
+                format!("{:.3}", bass_rouge / n),
+                format!("{:.2}", bass_ptl.0 / n * 1e3),
+                format!("{:.2}", bass_ptl.1 / n * 1e3),
+                format!("{:.2}", bass_ptl.2 / n * 1e3),
+                speedup(rd_ptl.2, bass_ptl.2), String::new(),
+            ]);
+            records.push(Json::obj(vec![
+                ("precision", prec.as_str().into()),
+                ("batch", b.into()),
+                ("rd_rouge2", (rd_rouge / n).into()),
+                ("bass_rouge2", (bass_rouge / n).into()),
+                ("rd_ptl_all_ms", (rd_ptl.2 / n * 1e3).into()),
+                ("bass_ptl_first_ms", (bass_ptl.0 / n * 1e3).into()),
+                ("bass_ptl_last_ms", (bass_ptl.1 / n * 1e3).into()),
+                ("bass_ptl_all_ms", (bass_ptl.2 / n * 1e3).into()),
+                ("speedup_all", (rd_ptl.2 / bass_ptl.2.max(1e-12)).into()),
+            ]));
+        }
+    }
+    println!("\nTable 1 (synth_xsum, temp 0.2, top-p 0.95, {n_prob} \
+              problems, {max_new} new tokens):");
+    table.print();
+    save_result("table1_xsum", Json::Arr(records))?;
+    Ok(())
+}

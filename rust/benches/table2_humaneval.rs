@@ -1,0 +1,140 @@
+//! **Tables 2 & 3** — code generation (synth_humaneval): Pass@Batch and
+//! per-token latency for RD vs BASS across batches and precisions.
+//! Paper Table 2: CodeGen-16B + 350M draft; Table 3: a 7.8B code model
+//! with the Table-4 "A" draft (the `--table3` / BASS_TABLE3=1 variant here
+//! extends the batch grid to 16, matching Table 3's extra row).
+
+mod common;
+
+use bass::baseline::{RdConfig, RegularDecoder};
+use bass::bench_util::{artifacts_root, save_result, speedup, Table};
+use bass::eval::{aggregate, judge, load_code_tasks, Candidate};
+use bass::kv::FinishReason;
+use bass::runtime::json::Json;
+use bass::runtime::Precision;
+use bass::spec::{SpecConfig, SpecEngine};
+use bass::tokenizer;
+
+// Paper anchors: Table 2 (CodeGen 16B) and Table 3 (7.8B) mean-PTL rows.
+const PAPER_T2: &[(&str, usize, f64, f64)] = &[
+    ("f32", 1, 23.6, 10.2), ("f32", 2, 26.3, 10.8), ("f32", 4, 27.0, 13.0),
+    ("f32", 8, 28.9, 14.9), ("int8", 1, 16.8, 9.3), ("int8", 2, 19.6, 10.1),
+    ("int8", 4, 20.4, 11.2), ("int8", 8, 21.9, 14.3),
+];
+const PAPER_T3: &[(&str, usize, f64, f64)] = &[
+    ("f32", 1, 14.4, 4.6), ("f32", 2, 14.6, 5.0), ("f32", 4, 15.1, 5.7),
+    ("f32", 8, 16.0, 7.1), ("f32", 16, 16.9, 9.6),
+];
+
+fn main() -> anyhow::Result<()> {
+    let table3 = std::env::args().any(|a| a == "--table3")
+        || std::env::var("BASS_TABLE3").map(|v| v == "1").unwrap_or(false);
+    let name = if table3 { "table3" } else { "table2" };
+    let engine = common::engine_or_exit(name);
+    let root = artifacts_root();
+    let tasks = load_code_tasks(&root)?;
+    let n_prob = common::n_problems(6);
+    let max_new = 32;
+    let batches: &[usize] =
+        if table3 { &[1, 2, 4, 8, 16] } else { &[1, 2, 4, 8] };
+
+    let mut table = Table::new(&[
+        "prec", "batch", "method", "Pass@Batch", "first ms", "last ms",
+        "all ms", "speedup(all)", "paper(all)",
+    ]);
+    let mut records = Vec::new();
+
+    for prec in [Precision::F32, Precision::Int8] {
+        for &b in &common::batch_grid(batches) {
+            let mut rd_ptl = (0.0, 0.0, 0.0);
+            let mut bass_ptl = (0.0, 0.0, 0.0);
+            let mut rd_outcomes = Vec::new();
+            let mut bass_outcomes = Vec::new();
+            for (pi, t) in tasks.iter().take(n_prob).enumerate() {
+                let prompts = vec![tokenizer::encode(&t.prompt); b];
+                let rd = RegularDecoder::new(&engine, RdConfig {
+                    precision: prec,
+                    max_new_tokens: max_new,
+                    seed: pi as u64,
+                    ..RdConfig::default()
+                });
+                // Identical-seed warm run keeps compiles out of timing.
+                let _ = rd.generate(&prompts)?;
+                let r = rd.generate(&prompts)?;
+                rd_ptl.0 += r.metrics.ptl_first;
+                rd_ptl.1 += r.metrics.ptl_last;
+                rd_ptl.2 += r.metrics.ptl_mean;
+                rd_outcomes.push(judge(&candidates(t, &r.seqs)));
+
+                let spec = SpecEngine::new(&engine, SpecConfig {
+                    precision: prec,
+                    max_new_tokens: max_new,
+                    seed: pi as u64,
+                    ..SpecConfig::default()
+                });
+                let _ = spec.generate(&prompts)?;
+                let s = spec.generate(&prompts)?;
+                bass_ptl.0 += s.metrics.ptl_first;
+                bass_ptl.1 += s.metrics.ptl_last;
+                bass_ptl.2 += s.metrics.ptl_mean;
+                bass_outcomes.push(judge(&candidates(t, &s.seqs)));
+            }
+            let n = n_prob as f64;
+            let rd_rates = aggregate(&rd_outcomes);
+            let bass_rates = aggregate(&bass_outcomes);
+            let paper = if table3 { PAPER_T3 } else { PAPER_T2 };
+            let paper_str = paper.iter()
+                .find(|(p, pb, ..)| *p == prec.as_str() && *pb == b)
+                .map(|(_, _, rd, ba)| format!("RD {rd:.1} / BASS {ba:.1}"))
+                .unwrap_or_else(|| "-".into());
+            table.row(vec![
+                prec.as_str().into(), b.to_string(), "RD".into(),
+                format!("{:.1}%", rd_rates.pass_batch * 100.0),
+                format!("{:.2}", rd_ptl.0 / n * 1e3),
+                format!("{:.2}", rd_ptl.1 / n * 1e3),
+                format!("{:.2}", rd_ptl.2 / n * 1e3),
+                "1.00x".into(), paper_str,
+            ]);
+            table.row(vec![
+                prec.as_str().into(), b.to_string(), "BASS".into(),
+                format!("{:.1}%", bass_rates.pass_batch * 100.0),
+                format!("{:.2}", bass_ptl.0 / n * 1e3),
+                format!("{:.2}", bass_ptl.1 / n * 1e3),
+                format!("{:.2}", bass_ptl.2 / n * 1e3),
+                speedup(rd_ptl.2, bass_ptl.2), String::new(),
+            ]);
+            records.push(Json::obj(vec![
+                ("precision", prec.as_str().into()),
+                ("batch", b.into()),
+                ("rd_pass_batch", rd_rates.pass_batch.into()),
+                ("bass_pass_batch", bass_rates.pass_batch.into()),
+                ("rd_ptl_all_ms", (rd_ptl.2 / n * 1e3).into()),
+                ("bass_ptl_first_ms", (bass_ptl.0 / n * 1e3).into()),
+                ("bass_ptl_last_ms", (bass_ptl.1 / n * 1e3).into()),
+                ("bass_ptl_all_ms", (bass_ptl.2 / n * 1e3).into()),
+                ("speedup_all", (rd_ptl.2 / bass_ptl.2.max(1e-12)).into()),
+            ]));
+        }
+    }
+    println!("\n{} (synth_humaneval, temp 0.2, top-p 0.95, {n_prob} \
+              problems, {max_new} new tokens):",
+             if table3 { "Table 3" } else { "Table 2" });
+    table.print();
+    save_result(name, Json::Arr(records))?;
+    Ok(())
+}
+
+fn candidates(t: &bass::eval::CodeTask, seqs: &[bass::kv::SeqState])
+              -> Vec<Candidate> {
+    seqs.iter()
+        .map(|s| {
+            let text = tokenizer::decode(&s.generated);
+            Candidate {
+                passes: t.passes(&text),
+                text,
+                finished: s.finish != FinishReason::Running,
+                mean_logp: s.mean_logp(),
+            }
+        })
+        .collect()
+}

@@ -1,0 +1,127 @@
+//! **Tables 4 & 5** — draft-model architecture study: standalone draft
+//! accuracy, token acceptance rate, draft-alone per-token latency, and
+//! BASS first-sequence PTL, for the three draft variants (A shallow-wide,
+//! B deeper, C wider) against the same main model.
+//!
+//! Paper findings to reproduce in shape: the better-aligned draft (higher
+//! acceptance) is not automatically the fastest end-to-end, because its
+//! own latency enters every step (Table 4); and a *bigger* draft can be
+//! strictly worse on both counts (Table 5).
+
+mod common;
+
+use bass::baseline::{DraftOnlyDecoder, RdConfig};
+use bass::bench_util::{artifacts_root, save_result, Table};
+use bass::eval::load_code_tasks;
+use bass::runtime::json::Json;
+use bass::spec::{SpecConfig, SpecEngine};
+use bass::tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = common::engine_or_exit("table45");
+    let root = artifacts_root();
+    let tasks = load_code_tasks(&root)?;
+    let n_prob = common::n_problems(6);
+    let batches = common::batch_grid(&[1, 2, 4, 8, 16]);
+    let drafts = ["draft_a", "draft_b", "draft_c"];
+    let max_new = 32;
+
+    // ---- standalone draft quality & PTL -------------------------------------
+    let mut head = Table::new(&[
+        "draft", "#layer", "#head", "d_model", "#param", "pass@1",
+        "accept%",
+    ]);
+    let mut ptl_table = Table::new(&[
+        "draft", "batch", "draft PTL ms", "1st-seq PTL ms (BASS)",
+    ]);
+    let mut records = Vec::new();
+
+    for d in drafts {
+        let info = engine.manifest.model(d)?.clone();
+        // Standalone pass@1 with the draft alone (its own sampler).
+        let mut pass = 0usize;
+        let dd = DraftOnlyDecoder::new(&engine, RdConfig {
+            model: d.into(),
+            max_new_tokens: max_new,
+            ..RdConfig::default()
+        });
+        for t in tasks.iter().take(n_prob) {
+            let res = dd.generate(&[tokenizer::encode(&t.prompt)])?;
+            let text = tokenizer::decode(&res.seqs[0].generated);
+            if t.passes(&text) {
+                pass += 1;
+            }
+        }
+        // Acceptance rate with BASS at batch 2 (stable estimate).
+        let spec = SpecEngine::new(&engine, SpecConfig {
+            draft_model: d.into(),
+            max_new_tokens: max_new,
+            ..SpecConfig::default()
+        });
+        let prompts = vec![tokenizer::encode(&tasks[0].prompt); 2];
+        let _ = spec.generate(&prompts)?; // warm
+        let mut acc = 0.0;
+        for t in tasks.iter().take(n_prob) {
+            let prompts = vec![tokenizer::encode(&t.prompt); 2];
+            acc += spec.generate(&prompts)?.metrics.acceptance_rate;
+        }
+        acc /= n_prob as f64;
+        head.row(vec![
+            d.into(), info.n_layer.to_string(), info.n_head.to_string(),
+            info.d_model.to_string(), info.param_count.to_string(),
+            format!("{:.1}%", 100.0 * pass as f64 / n_prob as f64),
+            format!("{:.1}%", acc * 100.0),
+        ]);
+
+        // Per-batch PTLs.
+        for &b in &batches {
+            let prompts: Vec<Vec<u8>> = (0..b)
+                .map(|i| tokenizer::encode(&tasks[i % tasks.len()].prompt))
+                .collect();
+            let _ = dd.generate(&prompts)?; // warm this batch bucket
+            let mut dptl = 0.0;
+            let mut first_ptl = 0.0;
+            for pi in 0..n_prob.min(3) {
+                let dd_run = DraftOnlyDecoder::new(&engine, RdConfig {
+                    model: d.into(),
+                    max_new_tokens: max_new,
+                    seed: pi as u64,
+                    ..RdConfig::default()
+                });
+                let _ = dd_run.generate(&prompts)?; // warm (same seed)
+                dptl += dd_run.generate(&prompts)?.metrics.ptl_mean;
+                let spec_run = SpecEngine::new(&engine, SpecConfig {
+                    draft_model: d.into(),
+                    max_new_tokens: max_new,
+                    seed: pi as u64,
+                    ..SpecConfig::default()
+                });
+                let _ = spec_run.generate(&prompts)?; // warm (same seed)
+                first_ptl += spec_run.generate(&prompts)?.metrics.ptl_first;
+            }
+            let n = n_prob.min(3) as f64;
+            ptl_table.row(vec![
+                d.into(), b.to_string(),
+                format!("{:.2}", dptl / n * 1e3),
+                format!("{:.2}", first_ptl / n * 1e3),
+            ]);
+            records.push(Json::obj(vec![
+                ("draft", d.into()),
+                ("batch", b.into()),
+                ("draft_ptl_ms", (dptl / n * 1e3).into()),
+                ("first_seq_ptl_ms", (first_ptl / n * 1e3).into()),
+                ("acceptance", acc.into()),
+                ("pass1", (pass as f64 / n_prob as f64).into()),
+            ]));
+        }
+    }
+
+    println!("\nTable 4/5 — draft architecture comparison \
+              (paper: A 87.4% / B 88.5% / C 87.2% acceptance; B best \
+              stand-alone but slower per step):");
+    head.print();
+    println!();
+    ptl_table.print();
+    save_result("table45_draft_models", Json::Arr(records))?;
+    Ok(())
+}

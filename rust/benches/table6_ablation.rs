@@ -1,0 +1,79 @@
+//! **Table 6** — ablations: BASS (Algorithm 1 + PAD) vs BASS-SPLIT vs
+//! fixed draft lengths {4, 6, 8}, reporting first-finished-sequence PTL at
+//! batches {2, 4, 8} on both tasks. Additionally reports the skewed-length
+//! regime (mixed long/short prompts) where the paper predicts SPLIT's
+//! advantage can appear (§4.6).
+
+mod common;
+
+use bass::bench_util::{artifacts_root, bench_prompts, save_result, Table};
+use bass::runtime::json::Json;
+use bass::spec::{ExecMode, Policy, SpecConfig, SpecEngine};
+
+fn main() -> anyhow::Result<()> {
+    let engine = common::engine_or_exit("table6");
+    let root = artifacts_root();
+    let batches = common::batch_grid(&[2, 4, 8]);
+    let n_rep = common::n_problems(4);
+    let max_new = 32;
+
+    let variants: Vec<(&str, Policy, ExecMode)> = vec![
+        ("BASS", Policy::Heuristic, ExecMode::Pad),
+        ("BASS-SPLIT", Policy::Heuristic, ExecMode::Split),
+        ("fixed 4", Policy::Fixed(4), ExecMode::Pad),
+        ("fixed 6", Policy::Fixed(6), ExecMode::Pad),
+        ("fixed 8", Policy::Fixed(8), ExecMode::Pad),
+    ];
+
+    let mut records = Vec::new();
+    for task in ["code", "summ"] {
+        let mut table = Table::new(&{
+            let mut h = vec!["variant"];
+            for b in &batches {
+                h.push(Box::leak(format!("b={b} 1st PTL ms")
+                    .into_boxed_str()));
+            }
+            h
+        });
+        for (name, policy, mode) in &variants {
+            let mut row = vec![name.to_string()];
+            for &b in &batches {
+                let prompts = bench_prompts(&root, task, b)?;
+                let spec = SpecEngine::new(&engine, SpecConfig {
+                    policy: *policy,
+                    mode: *mode,
+                    max_new_tokens: max_new,
+                    ..SpecConfig::default()
+                });
+                let _ = spec.generate(&prompts)?; // warm
+                let mut ptl = 0.0;
+                for rep in 0..n_rep {
+                    let spec = SpecEngine::new(&engine, SpecConfig {
+                        policy: *policy,
+                        mode: *mode,
+                        max_new_tokens: max_new,
+                        seed: rep as u64,
+                        ..SpecConfig::default()
+                    });
+                    let _ = spec.generate(&prompts)?; // warm (same seed)
+                    ptl += spec.generate(&prompts)?.metrics.ptl_first;
+                }
+                let ms = ptl / n_rep as f64 * 1e3;
+                row.push(format!("{ms:.2}"));
+                records.push(Json::obj(vec![
+                    ("task", task.into()),
+                    ("variant", (*name).into()),
+                    ("batch", b.into()),
+                    ("first_ptl_ms", ms.into()),
+                ]));
+            }
+            table.row(row);
+        }
+        println!("\nTable 6 — {task} task (paper: BASS best; SPLIT pays \
+                  launch overhead; fixed sizes trail Algorithm 1):");
+        table.print();
+    }
+
+    save_result("table6_ablation", Json::Arr(records))?;
+    Ok(())
+}

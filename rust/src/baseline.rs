@@ -1,0 +1,284 @@
+//! Optimized auto-regressive **regular decoding** (RD) — the paper's 1×
+//! anchor in every table. One ragged decode call (Q = 1) per output token,
+//! host-side nucleus sampling, static batching: the same structure as the
+//! paper's DeepSpeed baseline.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::flops::FlopCounter;
+use crate::kv::SeqState;
+use crate::metrics::BatchMetrics;
+use crate::runtime::{Attn, Engine, Precision};
+use crate::sampling::{logp_of, sample_cdf, warp_top_p, Pcg32};
+
+/// Configuration of a regular-decoding run.
+#[derive(Debug, Clone)]
+pub struct RdConfig {
+    pub model: String,
+    pub precision: Precision,
+    pub attn: Attn,
+    pub temperature: f32,
+    pub top_p: f32,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+    pub time_budget_secs: Option<f64>,
+}
+
+impl Default for RdConfig {
+    fn default() -> Self {
+        RdConfig {
+            model: "main".into(),
+            precision: Precision::F32,
+            attn: Attn::Dense,
+            temperature: 0.2,
+            top_p: 0.95,
+            max_new_tokens: 96,
+            seed: 0,
+            time_budget_secs: None,
+        }
+    }
+}
+
+/// Result of a regular-decoding batch.
+#[derive(Debug)]
+pub struct RdResult {
+    pub seqs: Vec<SeqState>,
+    pub metrics: BatchMetrics,
+    pub prefill_secs: f64,
+    pub flops: FlopCounter,
+}
+
+pub struct RegularDecoder<'a> {
+    pub engine: &'a Engine,
+    pub cfg: RdConfig,
+}
+
+impl<'a> RegularDecoder<'a> {
+    pub fn new(engine: &'a Engine, cfg: RdConfig) -> RegularDecoder<'a> {
+        RegularDecoder { engine, cfg }
+    }
+
+    pub fn generate(&self, prompts: &[Vec<u8>]) -> Result<RdResult> {
+        let cfg = &self.cfg;
+        let eng = self.engine;
+        let man = &eng.manifest;
+        let b_real = prompts.len();
+        if b_real == 0 {
+            bail!("empty prompt batch");
+        }
+        let b = man.bucket_batch(b_real)?;
+        let p_cap = man.prefill_p;
+        let info = man.model(&cfg.model)?.clone();
+        let s_max = info.s_max as i32;
+        let vocab = man.vocab;
+
+        let mut tokens = vec![0i32; b * p_cap];
+        let mut plens = vec![0i32; b];
+        let mut states = Vec::with_capacity(b);
+        for i in 0..b {
+            let src = &prompts[i.min(b_real - 1)];
+            let tail: &[u8] = if src.len() > p_cap {
+                &src[src.len() - p_cap..]
+            } else {
+                src
+            };
+            if tail.is_empty() {
+                bail!("empty prompt");
+            }
+            for (j, &byte) in tail.iter().enumerate() {
+                tokens[i * p_cap + j] = byte as i32;
+            }
+            plens[i] = tail.len() as i32;
+            states.push(SeqState::new(tail.to_vec(), *tail.last().unwrap(),
+                                      tail.len() as i32));
+        }
+
+        let mut flops = FlopCounter::default();
+        let t_prefill = Instant::now();
+        let out = eng.prefill(&cfg.model, cfg.precision, cfg.attn, b,
+                              &tokens, &plens)?;
+        flops.add_prefill(&info, b, p_cap);
+        let mut caches = out.caches;
+        let prefill_secs = t_prefill.elapsed().as_secs_f64();
+
+        let mut rngs: Vec<Pcg32> = (0..b)
+            .map(|i| Pcg32::new(cfg.seed, i as u64))
+            .collect();
+
+        let t0 = Instant::now();
+        while states[..b_real].iter().any(|s| s.active()) {
+            if let Some(budget) = cfg.time_budget_secs {
+                if t0.elapsed().as_secs_f64() >= budget {
+                    break;
+                }
+            }
+            let step_tokens: Vec<i32> =
+                states.iter().map(|s| s.pending_main as i32).collect();
+            let lens: Vec<i32> = states.iter().map(|s| s.main_len).collect();
+            let out = eng.decode(&cfg.model, cfg.precision, cfg.attn, b, 1,
+                                 &step_tokens, &lens, caches)?;
+            caches = out.caches;
+            let ctx = states.iter().map(|s| s.main_len as usize)
+                .sum::<usize>() / b;
+            flops.add_step(&info, b, 1, ctx);
+
+            let t_now = t0.elapsed().as_secs_f64();
+            for i in 0..b {
+                if !states[i].active() {
+                    continue;
+                }
+                let row = &out.logits[i * vocab..(i + 1) * vocab];
+                let warped = warp_top_p(row, cfg.temperature, cfg.top_p);
+                let tok = sample_cdf(&warped, rngs[i].next_f32());
+                let logp = logp_of(&warped, tok) as f64;
+                // RD is the k=0 degenerate case of a speculative step.
+                let emitted = states[i].apply_step(&[], tok as u8, false, 0,
+                                                   1, logp);
+                states[i].check_eos(man.eos, emitted, t_now);
+                states[i].check_limits(cfg.max_new_tokens, s_max, 2, t_now);
+            }
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        states.truncate(b_real);
+        let metrics = BatchMetrics::from_seqs(&states, wall);
+        Ok(RdResult { seqs: states, metrics, prefill_secs, flops })
+    }
+}
+
+/// Auto-regressive generation with a **draft** model alone (draft models
+/// export `draft` artifacts, not `decode` ones; K=1 drafting with in-graph
+/// sampling *is* one RD step). Used for the standalone draft rows of
+/// Tables 4/5 (draft per-token latency, draft-alone accuracy).
+pub struct DraftOnlyDecoder<'a> {
+    pub engine: &'a Engine,
+    pub cfg: RdConfig,
+}
+
+impl<'a> DraftOnlyDecoder<'a> {
+    pub fn new(engine: &'a Engine, cfg: RdConfig) -> DraftOnlyDecoder<'a> {
+        DraftOnlyDecoder { engine, cfg }
+    }
+
+    pub fn generate(&self, prompts: &[Vec<u8>]) -> Result<RdResult> {
+        let cfg = &self.cfg;
+        let eng = self.engine;
+        let man = &eng.manifest;
+        let b_real = prompts.len();
+        let b = man.bucket_batch(b_real)?;
+        let p_cap = man.prefill_p;
+        let info = man.model(&cfg.model)?.clone();
+        let s_max = info.s_max as i32;
+
+        let mut tokens = vec![0i32; b * p_cap];
+        let mut plens = vec![0i32; b];
+        let mut states = Vec::with_capacity(b);
+        for i in 0..b {
+            let src = &prompts[i.min(b_real - 1)];
+            let tail: &[u8] = if src.len() > p_cap {
+                &src[src.len() - p_cap..]
+            } else {
+                src
+            };
+            for (j, &byte) in tail.iter().enumerate() {
+                tokens[i * p_cap + j] = byte as i32;
+            }
+            plens[i] = tail.len() as i32;
+            states.push(SeqState::new(tail.to_vec(), *tail.last().unwrap(),
+                                      tail.len() as i32));
+        }
+
+        let mut flops = FlopCounter::default();
+        let t_prefill = Instant::now();
+        let out = eng.prefill(&cfg.model, cfg.precision, cfg.attn, b,
+                              &tokens, &plens)?;
+        flops.add_prefill(&info, b, p_cap);
+        let mut caches = out.caches;
+        let prefill_secs = t_prefill.elapsed().as_secs_f64();
+
+        let mut rngs: Vec<Pcg32> = (0..b)
+            .map(|i| Pcg32::new(cfg.seed, i as u64))
+            .collect();
+
+        // The smallest exported draft bucket for this model (draft_a ships
+        // K=1; the Table-4 comparison drafts start at K=2 — all K tokens
+        // are emitted per call since there is no verifier to reject them).
+        let k = man.k_buckets(&cfg.model)[0];
+
+        let t0 = Instant::now();
+        while states[..b_real].iter().any(|s| s.active()) {
+            if let Some(budget) = cfg.time_budget_secs {
+                if t0.elapsed().as_secs_f64() >= budget {
+                    break;
+                }
+            }
+            let mut tokens_in = vec![0i32; b * 2];
+            let mut n_in = vec![1i32; b];
+            let mut lens = vec![0i32; b];
+            let mut uniforms = vec![0f32; b * k];
+            for i in 0..b {
+                tokens_in[2 * i] = states[i].pending_draft[0] as i32;
+                tokens_in[2 * i + 1] = states[i].pending_draft[1] as i32;
+                n_in[i] = states[i].n_pending_draft;
+                lens[i] = states[i].draft_len;
+                for j in 0..k {
+                    uniforms[i * k + j] = rngs[i].next_f32();
+                }
+            }
+            let out = eng.draft(&cfg.model, cfg.precision, cfg.attn, b, k,
+                                &tokens_in, &n_in, &lens, &uniforms,
+                                cfg.temperature, cfg.top_p, caches)?;
+            caches = out.caches;
+            let ctx = states.iter().map(|s| s.draft_len as usize)
+                .sum::<usize>() / b;
+            flops.add_step(&info, b, k + 1, ctx);
+
+            let t_now = t0.elapsed().as_secs_f64();
+            let vocab = man.vocab;
+            for i in 0..b {
+                if !states[i].active() {
+                    continue;
+                }
+                let n_in_used = states[i].n_pending_draft;
+                let mut last = 0u8;
+                for j in 0..k {
+                    let tok = out.tokens[i * k + j] as usize;
+                    let q = &out.qdists[(i * k + j) * vocab
+                                        ..(i * k + j + 1) * vocab];
+                    states[i].logp_sum +=
+                        crate::sampling::logp_of(q, tok) as f64;
+                    states[i].generated.push(tok as u8);
+                    last = tok as u8;
+                }
+                // All k drafts "accepted": the cache holds entries through
+                // d_{k-1}; d_k rides as the next resync token.
+                states[i].main_len += k as i32;
+                states[i].draft_len += n_in_used + k as i32 - 1;
+                states[i].pending_draft = [last, 0];
+                states[i].n_pending_draft = 1;
+                states[i].pending_main = last;
+                states[i].check_eos(man.eos, k, t_now);
+                states[i].check_limits(cfg.max_new_tokens, s_max,
+                                       (k + 2) as i32, t_now);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        states.truncate(b_real);
+        let metrics = BatchMetrics::from_seqs(&states, wall);
+        Ok(RdResult { seqs: states, metrics, prefill_secs, flops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config() {
+        let c = RdConfig::default();
+        assert_eq!(c.model, "main");
+        assert_eq!(c.max_new_tokens, 96);
+    }
+}

@@ -1,0 +1,150 @@
+//! Benchmark harness shared by `rust/benches/*` (criterion is unavailable
+//! in this offline image; this is a small measured-run harness with
+//! warmup, repetitions and table/JSON output).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::metrics::Summary;
+use crate::runtime::json::Json;
+
+/// Resolve the artifacts directory (env override for CI layouts).
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("BASS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True when artifacts exist; benches/integration tests bail politely
+/// otherwise.
+pub fn artifacts_available() -> bool {
+    artifacts_root().join("manifest.json").exists()
+}
+
+/// Time `f` with warmup; returns per-iteration seconds summary.
+pub fn measure<F: FnMut() -> Result<()>>(warmup: usize, iters: usize,
+                                         mut f: F) -> Result<Summary> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut s = Summary::default();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f()?;
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    Ok(s)
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        for (i, c) in cells.iter().enumerate() {
+            if i < self.widths.len() {
+                self.widths[i] = self.widths[i].max(c.len());
+            }
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers, &self.widths);
+        println!("{}", "-".repeat(
+            self.widths.iter().sum::<usize>() + 2 * self.widths.len()));
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Append a machine-readable result record under `artifacts/results/`.
+pub fn save_result(name: &str, record: Json) -> Result<()> {
+    let dir = artifacts_root().join("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, record.to_string_pretty())?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+/// Load prompts for benchmarking from a task file, cycling if needed.
+pub fn bench_prompts(root: &Path, task: &str, n: usize)
+                     -> Result<Vec<Vec<u8>>> {
+    let prompts: Vec<Vec<u8>> = match task {
+        "code" => crate::eval::load_code_tasks(root)?
+            .into_iter()
+            .map(|t| crate::tokenizer::encode(&t.prompt))
+            .collect(),
+        "summ" => crate::eval::load_summ_tasks(root)?
+            .into_iter()
+            .map(|t| crate::tokenizer::encode(&t.prompt))
+            .collect(),
+        _ => anyhow::bail!("unknown task '{task}'"),
+    };
+    Ok((0..n).map(|i| prompts[i % prompts.len()].clone()).collect())
+}
+
+/// Format milliseconds with a sensible precision.
+pub fn ms(secs: f64) -> String {
+    format!("{:.2}", secs * 1e3)
+}
+
+/// Format a speedup ratio like the paper ("2.16x").
+pub fn speedup(base: f64, ours: f64) -> String {
+    if ours <= 0.0 {
+        return "-".into();
+    }
+    format!("{:.2}x", base / ours)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0;
+        let s = measure(2, 5, || {
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 7);
+        assert_eq!(s.n(), 5);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    fn speedup_formats() {
+        assert_eq!(speedup(2.0, 1.0), "2.00x");
+        assert_eq!(speedup(1.0, 0.0), "-");
+    }
+}

@@ -1,0 +1,114 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `bass <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (element 0 is the binary).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().skip(1).peekable();
+        match it.next() {
+            Some(s) if !s.starts_with('-') => {
+                args.subcommand = s.clone();
+            }
+            Some(s) => bail!("expected subcommand, got '{s}'"),
+            None => bail!("missing subcommand"),
+        }
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    args.flags.insert(name.to_string(),
+                                      (*v).clone());
+                    it.next();
+                }
+                _ => args.switches.push(name.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn f32_flag(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: bad float '{v}'")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Result<Args> {
+        let v: Vec<String> =
+            std::iter::once("bass").chain(s.iter().copied())
+                .map(String::from)
+                .collect();
+        Args::parse(&v)
+    }
+
+    #[test]
+    fn full_grammar() {
+        let a = parse(&["serve", "--port", "8000", "--verbose",
+                        "--batch", "8"]).unwrap();
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.flag("port"), Some("8000"));
+        assert_eq!(a.usize_flag("batch", 1).unwrap(), 8);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse(&[]).is_err());
+        assert!(parse(&["--x"]).is_err());
+        assert!(parse(&["run", "stray"]).is_err());
+        assert!(parse(&["run", "--n", "abc"]).unwrap()
+                .usize_flag("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["eval", "--fast"]).unwrap();
+        assert!(a.switch("fast"));
+    }
+}

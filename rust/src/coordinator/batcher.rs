@@ -1,0 +1,129 @@
+//! Dynamic batching policy: group queued requests into one speculative
+//! batch, the way the paper's serving scenario batches multiple
+//! recommendations for one prompt *and* unrelated prompts together (§1,
+//! footnote 5).
+
+use std::time::{Duration, Instant};
+
+/// A queued generation request, pre-expansion.
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub request_id: u64,
+    /// Number of sequences this request fans out to (same prompt, distinct
+    /// RNG streams).
+    pub n_seqs: usize,
+    pub enqueued: Instant,
+}
+
+/// Batching limits.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Hard cap on sequences per engine batch (largest exported bucket).
+    pub max_batch: usize,
+    /// How long the head-of-line request may wait for co-batching.
+    pub window: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, window: Duration::from_millis(5) }
+    }
+}
+
+/// Decide how many queued requests to admit into the next batch.
+///
+/// Greedy in arrival order: admit requests while the sequence budget
+/// holds; always admit at least the head request (clamping its fan-out to
+/// the cap). Returns the number of requests to take and the total
+/// sequences.
+pub fn plan_batch(queue: &[Pending], cfg: &BatcherConfig)
+                  -> (usize, usize) {
+    if queue.is_empty() {
+        return (0, 0);
+    }
+    let mut taken = 0usize;
+    let mut seqs = 0usize;
+    for p in queue {
+        let n = p.n_seqs.max(1);
+        if taken > 0 && seqs + n > cfg.max_batch {
+            break;
+        }
+        seqs += n;
+        taken += 1;
+        if seqs >= cfg.max_batch {
+            break;
+        }
+    }
+    (taken, seqs.min(cfg.max_batch))
+}
+
+/// Should the worker run now or keep waiting for co-batchable requests?
+pub fn should_flush(queue: &[Pending], cfg: &BatcherConfig,
+                    now: Instant) -> bool {
+    match queue.first() {
+        None => false,
+        Some(head) => {
+            let seqs: usize = queue.iter().map(|p| p.n_seqs.max(1)).sum();
+            seqs >= cfg.max_batch
+                || now.duration_since(head.enqueued) >= cfg.window
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pend(id: u64, n: usize) -> Pending {
+        Pending { request_id: id, n_seqs: n, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn admits_while_budget_holds() {
+        let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
+        let q = vec![pend(1, 2), pend(2, 4), pend(3, 4)];
+        let (taken, seqs) = plan_batch(&q, &cfg);
+        assert_eq!(taken, 2);
+        assert_eq!(seqs, 6);
+    }
+
+    #[test]
+    fn head_always_admitted_even_if_oversized() {
+        let cfg = BatcherConfig { max_batch: 4, ..Default::default() };
+        let (taken, seqs) = plan_batch(&[pend(1, 9)], &cfg);
+        assert_eq!(taken, 1);
+        assert_eq!(seqs, 4); // clamped to cap
+    }
+
+    #[test]
+    fn exact_fill_stops() {
+        let cfg = BatcherConfig { max_batch: 4, ..Default::default() };
+        let q = vec![pend(1, 2), pend(2, 2), pend(3, 1)];
+        let (taken, seqs) = plan_batch(&q, &cfg);
+        assert_eq!(taken, 2);
+        assert_eq!(seqs, 4);
+    }
+
+    #[test]
+    fn flush_on_full_or_timeout() {
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            window: Duration::from_millis(10),
+        };
+        let now = Instant::now();
+        assert!(!should_flush(&[], &cfg, now));
+        let young = vec![pend(1, 1)];
+        assert!(!should_flush(&young, &cfg, now));
+        assert!(should_flush(&young, &cfg,
+                             now + Duration::from_millis(11)));
+        let full = vec![pend(1, 2), pend(2, 2)];
+        assert!(should_flush(&full, &cfg, now));
+    }
+
+    #[test]
+    fn zero_fanout_counts_as_one() {
+        let cfg = BatcherConfig::default();
+        let (taken, seqs) = plan_batch(&[pend(1, 0)], &cfg);
+        assert_eq!((taken, seqs), (1, 1));
+    }
+}

@@ -1,0 +1,279 @@
+//! Layer-3 serving coordinator: request queue → dynamic batcher → the
+//! speculative engine on a dedicated worker thread → responses.
+//!
+//! The engine (PJRT handles) is **not** `Send`, so it is constructed inside
+//! the worker thread and owns the device for the process lifetime — the
+//! same single-engine-loop architecture vLLM's scheduler uses. Requests and
+//! responses cross threads over mpsc channels; the TCP front-end
+//! ([`server`]) is just a thin line-protocol adapter.
+
+pub mod batcher;
+pub mod server;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Engine;
+use crate::spec::{SpecConfig, SpecEngine};
+use batcher::{plan_batch, should_flush, BatcherConfig, Pending};
+
+/// One generation request.
+#[derive(Debug)]
+pub struct Request {
+    pub prompt: Vec<u8>,
+    /// Fan-out: number of sequences to sample for this prompt.
+    pub n_seqs: usize,
+    pub max_new_tokens: Option<usize>,
+    pub temperature: Option<f32>,
+    pub top_p: Option<f32>,
+}
+
+/// One generated sequence.
+#[derive(Debug, Clone)]
+pub struct GenSeq {
+    pub text: String,
+    pub finished: bool,
+    pub mean_logp: f64,
+    pub n_tokens: usize,
+}
+
+/// Response to one request.
+#[derive(Debug)]
+pub struct Response {
+    pub seqs: Vec<GenSeq>,
+    /// Engine wall seconds spent on the batch this request rode in.
+    pub batch_secs: f64,
+    /// Sequences in that engine batch (yours + co-batched).
+    pub batch_size: usize,
+    /// Queue wait before the batch started.
+    pub queue_secs: f64,
+}
+
+enum Msg {
+    Job(Request, Sender<Result<Response>>),
+    Shutdown,
+}
+
+/// Handle to the serving worker.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_root: std::path::PathBuf,
+    pub spec: SpecConfig,
+    pub batcher: BatcherConfig,
+    /// Compile all needed executables at startup (slower start, no
+    /// lazy-compile spikes on the request path). Default true.
+    pub prewarm: bool,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifacts_root: std::path::PathBuf, spec: SpecConfig,
+               batcher: BatcherConfig) -> Self {
+        CoordinatorConfig { artifacts_root, spec, batcher, prewarm: true }
+    }
+}
+
+impl Coordinator {
+    /// Spawn the worker (builds the PJRT engine inside the thread).
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("bass-engine".into())
+            .spawn(move || worker(cfg, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Coordinator { tx, handle: Some(handle) })
+    }
+
+    /// Submit a request; the receiver yields the response when its batch
+    /// completes.
+    pub fn submit(&self, req: Request) -> Receiver<Result<Response>> {
+        let (tx, rx) = channel();
+        // A send error means the worker is gone; the receiver will report
+        // a disconnect to the caller.
+        let _ = self.tx.send(Msg::Job(req, tx));
+        rx
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn generate(&self, req: Request) -> Result<Response> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("engine thread terminated"))?
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct QueuedJob {
+    req: Request,
+    reply: Sender<Result<Response>>,
+    pending: Pending,
+}
+
+fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
+          ready: Sender<Result<()>>) {
+    let engine = match Engine::load(&cfg.artifacts_root) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    if cfg.prewarm {
+        let batches: Vec<usize> = engine.manifest.batches.iter().copied()
+            .filter(|&b| b <= cfg.batcher.max_batch)
+            .collect();
+        for b in batches {
+            for model in [&cfg.spec.main_model, &cfg.spec.draft_model] {
+                if let Err(e) = engine.prewarm(model, cfg.spec.precision, b) {
+                    let _ = ready.send(Err(e));
+                    return;
+                }
+            }
+        }
+    }
+    let _ = ready.send(Ok(()));
+    let mut queue: Vec<QueuedJob> = Vec::new();
+    let mut next_id = 0u64;
+    let mut open = true;
+
+    while open || !queue.is_empty() {
+        // Pull messages; block only when the queue is empty.
+        loop {
+            let msg = if queue.is_empty() && open {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        open = false;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            };
+            match msg {
+                Msg::Shutdown => {
+                    open = false;
+                    break;
+                }
+                Msg::Job(req, reply) => {
+                    next_id += 1;
+                    let pending = Pending {
+                        request_id: next_id,
+                        n_seqs: req.n_seqs.max(1),
+                        enqueued: Instant::now(),
+                    };
+                    queue.push(QueuedJob { req, reply, pending });
+                }
+            }
+        }
+        if queue.is_empty() {
+            continue;
+        }
+        let pendings: Vec<Pending> =
+            queue.iter().map(|j| j.pending.clone()).collect();
+        if open && !should_flush(&pendings, &cfg.batcher, Instant::now()) {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            continue;
+        }
+        let (n_take, _) = plan_batch(&pendings, &cfg.batcher);
+        let jobs: Vec<QueuedJob> = queue.drain(..n_take).collect();
+        run_batch(&engine, &cfg, jobs);
+    }
+}
+
+fn run_batch(engine: &Engine, cfg: &CoordinatorConfig,
+             jobs: Vec<QueuedJob>) {
+    // Expand fan-outs into a flat prompt batch.
+    let mut prompts: Vec<Vec<u8>> = Vec::new();
+    let mut slices: Vec<(usize, usize)> = Vec::new();
+    let cap = cfg.batcher.max_batch;
+    for j in &jobs {
+        let n = j.req.n_seqs.max(1).min(cap - prompts.len().min(cap - 1));
+        let start = prompts.len();
+        for _ in 0..n {
+            prompts.push(j.req.prompt.clone());
+        }
+        slices.push((start, n));
+    }
+
+    // Per-batch overrides come from the first request (co-batched requests
+    // share sampling params; the server groups compatible requests).
+    let mut spec = cfg.spec.clone();
+    if let Some(t) = jobs[0].req.temperature {
+        spec.temperature = t;
+    }
+    if let Some(p) = jobs[0].req.top_p {
+        spec.top_p = p;
+    }
+    if let Some(m) = jobs[0].req.max_new_tokens {
+        spec.max_new_tokens = m;
+    }
+
+    let t0 = Instant::now();
+    let result = SpecEngine::new(engine, spec).generate(&prompts);
+    let batch_secs = t0.elapsed().as_secs_f64();
+
+    match result {
+        Ok(res) => {
+            for (j, (start, n)) in jobs.into_iter().zip(slices) {
+                let seqs = res.seqs[start..start + n]
+                    .iter()
+                    .map(|s| GenSeq {
+                        text: crate::tokenizer::decode(&s.generated),
+                        finished: s.finish
+                            != crate::kv::FinishReason::Running,
+                        mean_logp: s.mean_logp(),
+                        n_tokens: s.tokens_generated(),
+                    })
+                    .collect();
+                let queue_secs =
+                    t0.duration_since(j.pending.enqueued).as_secs_f64();
+                let _ = j.reply.send(Ok(Response {
+                    seqs,
+                    batch_secs,
+                    batch_size: prompts.len(),
+                    queue_secs,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for j in jobs {
+                let _ = j.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! TCP line-protocol front-end over the [`Coordinator`].
+//!
+//! One JSON object per line in, one per line out:
+//!
+//! ```text
+//! -> {"prompt": "def add_7(x):\n    return", "n": 4, "max_new_tokens": 32}
+//! <- {"ok": true, "seqs": [{"text": " x + 7", "finished": true, ...}],
+//!     "batch_size": 4, "batch_ms": 120.5, "queue_ms": 0.8}
+//! ```
+//!
+//! A thread per connection forwards requests to the engine worker; the
+//! dynamic batcher co-batches concurrent connections into single
+//! speculative batches.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{Coordinator, Request};
+use crate::runtime::json::Json;
+
+/// Serve until the listener errors (bind to port 0 for an ephemeral port;
+/// the bound address is passed to `on_ready`).
+pub fn serve(coord: Arc<Coordinator>, addr: &str,
+             on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_ready(listener.local_addr()?);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            let peer = stream.peer_addr().ok();
+            if let Err(e) = handle_conn(&coord, stream) {
+                eprintln!("[server] connection {peer:?} error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(coord: &Coordinator, stream: TcpStream) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Ok(req) => match coord.generate(req) {
+                Ok(resp) => response_json(&resp),
+                Err(e) => error_json(&format!("{e:#}")),
+            },
+            Err(e) => error_json(&format!("bad request: {e:#}")),
+        };
+        writer.write_all(reply.to_string_pretty().replace('\n', " ")
+            .as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line)?;
+    Ok(Request {
+        prompt: crate::tokenizer::encode(j.get("prompt")?.as_str()?),
+        n_seqs: j.opt("n").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
+        max_new_tokens: j
+            .opt("max_new_tokens")
+            .map(|v| v.as_usize())
+            .transpose()?,
+        temperature: j
+            .opt("temperature")
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .transpose()?,
+        top_p: j
+            .opt("top_p")
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .transpose()?,
+    })
+}
+
+pub fn response_json(resp: &super::Response) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("batch_size", resp.batch_size.into()),
+        ("batch_ms", (resp.batch_secs * 1e3).into()),
+        ("queue_ms", (resp.queue_secs * 1e3).into()),
+        ("seqs", Json::Arr(resp.seqs.iter().map(|s| {
+            Json::obj(vec![
+                ("text", s.text.as_str().into()),
+                ("finished", s.finished.into()),
+                ("mean_logp", s.mean_logp.into()),
+                ("n_tokens", s.n_tokens.into()),
+            ])
+        }).collect())),
+    ])
+}
+
+fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", msg.into())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_request() {
+        let r = parse_request(
+            r#"{"prompt": "hi", "n": 4, "max_new_tokens": 8,
+               "temperature": 0.7, "top_p": 0.9}"#).unwrap();
+        assert_eq!(r.prompt, b"hi");
+        assert_eq!(r.n_seqs, 4);
+        assert_eq!(r.max_new_tokens, Some(8));
+        assert!((r.temperature.unwrap() - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_minimal_request() {
+        let r = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(r.n_seqs, 1);
+        assert_eq!(r.max_new_tokens, None);
+    }
+
+    #[test]
+    fn parse_rejects_missing_prompt() {
+        assert!(parse_request(r#"{"n": 2}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+}

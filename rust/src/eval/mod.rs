@@ -1,0 +1,9 @@
+//! Evaluation harnesses for the paper's accuracy metrics.
+
+pub mod passk;
+pub mod rouge2;
+pub mod tasks;
+
+pub use passk::{aggregate, judge, Candidate, PassOutcome, PassRates};
+pub use rouge2::rouge2_f1;
+pub use tasks::{load_code_tasks, load_summ_tasks, CodeTask, SummTask};

@@ -1,0 +1,115 @@
+//! Pass@Batch / Pass@First / Pass@Finished metrics (Tables 2–3, Fig 5).
+//!
+//! * **Pass@Batch** — fraction of problems where at least one sequence in
+//!   the generated batch passes the checker (paper §4.3).
+//! * **Pass@First** — the top-ranked (mean-logP) *finished* sequence
+//!   passes (paper §4.5: "the first displayed recommendation").
+//! * **Pass@Finished** — at least one *finished* sequence passes within
+//!   the time budget.
+
+/// One generated candidate with its ranking inputs.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub text: String,
+    pub finished: bool,
+    /// Mean log-probability under the warped main distribution.
+    pub mean_logp: f64,
+    pub passes: bool,
+}
+
+/// Per-problem outcome under the three metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PassOutcome {
+    pub pass_batch: bool,
+    pub pass_first: bool,
+    pub pass_finished: bool,
+    pub n_finished: usize,
+}
+
+pub fn judge(cands: &[Candidate]) -> PassOutcome {
+    let pass_batch = cands.iter().any(|c| c.passes);
+    let finished: Vec<&Candidate> =
+        cands.iter().filter(|c| c.finished).collect();
+    let pass_finished = finished.iter().any(|c| c.passes);
+    let first = finished.iter().max_by(|a, b| {
+        a.mean_logp.partial_cmp(&b.mean_logp).unwrap()
+    });
+    PassOutcome {
+        pass_batch,
+        pass_first: first.map(|c| c.passes).unwrap_or(false),
+        pass_finished,
+        n_finished: finished.len(),
+    }
+}
+
+/// Aggregate outcomes across problems into percentage rates.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PassRates {
+    pub n: usize,
+    pub pass_batch: f64,
+    pub pass_first: f64,
+    pub pass_finished: f64,
+}
+
+pub fn aggregate(outcomes: &[PassOutcome]) -> PassRates {
+    let n = outcomes.len();
+    if n == 0 {
+        return PassRates::default();
+    }
+    let frac = |f: fn(&PassOutcome) -> bool| {
+        outcomes.iter().filter(|o| f(o)).count() as f64 / n as f64
+    };
+    PassRates {
+        n,
+        pass_batch: frac(|o| o.pass_batch),
+        pass_first: frac(|o| o.pass_first),
+        pass_finished: frac(|o| o.pass_finished),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(passes: bool, finished: bool, logp: f64) -> Candidate {
+        Candidate { text: String::new(), finished, mean_logp: logp, passes }
+    }
+
+    #[test]
+    fn ranking_picks_highest_logp_finished() {
+        let cands = vec![
+            cand(false, true, -0.1), // ranked first, fails
+            cand(true, true, -0.5),
+            cand(true, false, -0.01), // unfinished: ignored by ranking
+        ];
+        let o = judge(&cands);
+        assert!(o.pass_batch);
+        assert!(o.pass_finished);
+        assert!(!o.pass_first);
+        assert_eq!(o.n_finished, 2);
+    }
+
+    #[test]
+    fn no_finished_candidates() {
+        let o = judge(&[cand(true, false, -0.1)]);
+        assert!(o.pass_batch);
+        assert!(!o.pass_finished);
+        assert!(!o.pass_first);
+    }
+
+    #[test]
+    fn aggregate_rates() {
+        let outcomes = vec![
+            PassOutcome { pass_batch: true, pass_first: true,
+                          pass_finished: true, n_finished: 1 },
+            PassOutcome { pass_batch: true, pass_first: false,
+                          pass_finished: false, n_finished: 0 },
+        ];
+        let r = aggregate(&outcomes);
+        assert_eq!(r.n, 2);
+        assert!((r.pass_batch - 1.0).abs() < 1e-9);
+        assert!((r.pass_first - 0.5).abs() < 1e-9);
+        assert!((r.pass_finished - 0.5).abs() < 1e-9);
+        assert_eq!(aggregate(&[]).n, 0);
+    }
+}

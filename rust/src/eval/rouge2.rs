@@ -1,0 +1,80 @@
+//! ROUGE-2 F1 (Lin 2004) — the XSum accuracy metric of Table 1.
+
+use std::collections::HashMap;
+
+fn bigrams(text: &str) -> HashMap<(String, String), usize> {
+    let words: Vec<String> = text
+        .split_whitespace()
+        .map(|w| {
+            w.chars()
+                .filter(|c| c.is_alphanumeric())
+                .collect::<String>()
+                .to_lowercase()
+        })
+        .filter(|w| !w.is_empty())
+        .collect();
+    let mut map = HashMap::new();
+    for pair in words.windows(2) {
+        *map.entry((pair[0].clone(), pair[1].clone())).or_insert(0) += 1;
+    }
+    map
+}
+
+/// ROUGE-2 F1 between a candidate and a reference.
+pub fn rouge2_f1(candidate: &str, reference: &str) -> f64 {
+    let c = bigrams(candidate);
+    let r = bigrams(reference);
+    let c_total: usize = c.values().sum();
+    let r_total: usize = r.values().sum();
+    if c_total == 0 || r_total == 0 {
+        return 0.0;
+    }
+    let overlap: usize = c
+        .iter()
+        .map(|(k, &v)| v.min(*r.get(k).unwrap_or(&0)))
+        .sum();
+    let p = overlap as f64 / c_total as f64;
+    let rec = overlap as f64 / r_total as f64;
+    if p + rec == 0.0 {
+        0.0
+    } else {
+        2.0 * p * rec / (p + rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_one() {
+        let s = "alice maps the rivers of paris";
+        assert!((rouge2_f1(s, s) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        assert_eq!(rouge2_f1("a b c", "x y z"), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap() {
+        // cand bigrams: (a,b),(b,c); ref bigrams: (a,b),(b,d)
+        let f1 = rouge2_f1("a b c", "a b d");
+        // p = 1/2, r = 1/2 -> f1 = 1/2
+        assert!((f1 - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn case_and_punct_normalized() {
+        assert!((rouge2_f1("Alice maps, the rivers!",
+                           "alice maps the rivers") - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_safe() {
+        assert_eq!(rouge2_f1("", "a b"), 0.0);
+        assert_eq!(rouge2_f1("a b", ""), 0.0);
+        assert_eq!(rouge2_f1("one", "one"), 0.0); // no bigrams
+    }
+}

@@ -1,0 +1,113 @@
+//! Task loaders for the paper's two evaluation workloads (testbed analogs):
+//! `synth_humaneval` (code completion with programmatic checkers, Tables
+//! 2/3, Fig 5) and `synth_xsum` (summarization with ROUGE-2, Table 1).
+//! Files are emitted by `python/compile/corpus.py` at `make artifacts`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::json::Json;
+
+/// A code-completion problem with its checker.
+#[derive(Debug, Clone)]
+pub struct CodeTask {
+    pub task_id: String,
+    pub prompt: String,
+    /// Expected canonical completion (first generated line must equal it).
+    pub expected: String,
+}
+
+impl CodeTask {
+    /// The HumanEval-style pass check: the first non-empty generated line
+    /// must equal the canonical body expression.
+    pub fn passes(&self, generated: &str) -> bool {
+        generated
+            .lines()
+            .map(str::trim)
+            .find(|l| !l.is_empty())
+            .map(|l| l == self.expected)
+            .unwrap_or(false)
+    }
+}
+
+/// A summarization example.
+#[derive(Debug, Clone)]
+pub struct SummTask {
+    pub task_id: String,
+    pub prompt: String,
+    pub reference: String,
+}
+
+impl SummTask {
+    /// The generated summary: everything up to the first newline.
+    pub fn extract_summary<'a>(&self, generated: &'a str) -> &'a str {
+        generated.split('\n').next().unwrap_or("").trim()
+    }
+}
+
+pub fn load_code_tasks(root: &Path) -> Result<Vec<CodeTask>> {
+    let path = root.join("tasks/synth_humaneval.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text)?;
+    let mut out = Vec::new();
+    for t in j.as_arr()? {
+        let checker = t.get("checker")?;
+        if checker.get("type")?.as_str()? != "line_equals" {
+            bail!("unsupported checker type");
+        }
+        out.push(CodeTask {
+            task_id: t.get("task_id")?.as_str()?.to_string(),
+            prompt: t.get("prompt")?.as_str()?.to_string(),
+            expected: checker.get("expected")?.as_str()?.to_string(),
+        });
+    }
+    Ok(out)
+}
+
+pub fn load_summ_tasks(root: &Path) -> Result<Vec<SummTask>> {
+    let path = root.join("tasks/synth_xsum.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text)?;
+    let mut out = Vec::new();
+    for t in j.as_arr()? {
+        out.push(SummTask {
+            task_id: t.get("task_id")?.as_str()?.to_string(),
+            prompt: t.get("prompt")?.as_str()?.to_string(),
+            reference: t.get("reference")?.as_str()?.to_string(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_checker_first_line() {
+        let t = CodeTask {
+            task_id: "add_7".into(),
+            prompt: "def add_7(x):\n    return".into(),
+            expected: "x + 7".into(),
+        };
+        assert!(t.passes(" x + 7\n"));
+        assert!(t.passes("\n  x + 7 \ndef next()"));
+        assert!(!t.passes(" x + 8\n"));
+        assert!(!t.passes(""));
+    }
+
+    #[test]
+    fn summary_extraction() {
+        let t = SummTask {
+            task_id: "s".into(),
+            prompt: "p".into(),
+            reference: "r".into(),
+        };
+        assert_eq!(t.extract_summary(" alice maps paris.\nextra"),
+                   "alice maps paris.");
+        assert_eq!(t.extract_summary(""), "");
+    }
+}

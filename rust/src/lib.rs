@@ -1,0 +1,41 @@
+//! # BASS — Batched Attention-optimized Speculative Sampling
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *BASS: Batched
+//! Attention-optimized Speculative Sampling* (ACL Findings 2024): a serving
+//! engine that performs speculative decoding over a **batch** of sequences,
+//! letting every sequence advance past its own reject points (ragged KV
+//! state), with the paper's dynamic draft-length heuristic (Algorithm 1)
+//! and both ragged-attention execution strategies (BASS-PAD / BASS-SPLIT).
+//!
+//! Layering (see `DESIGN.md`):
+//! * Layer 1/2 (Pallas kernels + JAX model) are AOT-compiled at build time
+//!   by `python/compile/aot.py` into HLO-text artifacts; Python is never on
+//!   the request path.
+//! * This crate is Layer 3: it loads the artifacts through the PJRT C API
+//!   (`xla` crate), keeps the KV cache device-resident, and runs the
+//!   speculative coordination loop — drafting, verification, acceptance
+//!   sampling, draft-length control, batching, serving and evaluation.
+//!
+//! Entry points:
+//! * [`runtime::Engine`] — PJRT client + artifact registry + weights.
+//! * [`spec::SpecEngine`] — the BASS decode loop (the paper's §3).
+//! * [`baseline::RegularDecoder`] — optimized auto-regressive decoding
+//!   (the paper's RD anchor).
+//! * [`coordinator::Coordinator`] — request queue, dynamic batcher, server.
+//! * [`eval`] — ROUGE-2 / Pass@K harnesses for the paper's tasks.
+
+pub mod baseline;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod eval;
+pub mod flops;
+pub mod kv;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod spec;
+pub mod tokenizer;
+
+/// Crate-wide result alias (anyhow-based; PJRT errors are stringly typed).
+pub type Result<T> = anyhow::Result<T>;

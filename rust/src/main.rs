@@ -1,0 +1,243 @@
+//! `bass` — the serving binary.
+//!
+//! Subcommands:
+//! * `selftest`  — load artifacts, run a tiny generation on every path.
+//! * `generate`  — one batched generation from a prompt (`--prompt`,
+//!   `--n`, `--mode pad|split`, `--precision f32|int8`, ...).
+//! * `serve`     — TCP line-protocol server over the coordinator.
+//! * `eval`      — run a task (`--task code|summ`) and report accuracy.
+//! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
+//! * `info`      — print the manifest summary.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use bass::baseline::{RdConfig, RegularDecoder};
+use bass::bench_util::artifacts_root;
+use bass::cli::Args;
+use bass::coordinator::{server, Coordinator, CoordinatorConfig};
+use bass::eval::{aggregate, judge, Candidate};
+use bass::kv::FinishReason;
+use bass::runtime::{Attn, Engine, Precision};
+use bass::spec::{ExecMode, Policy, SpecConfig, SpecEngine};
+use bass::tokenizer;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn spec_config_from(args: &Args) -> Result<SpecConfig> {
+    Ok(SpecConfig {
+        main_model: args.flag_or("main-model", "main"),
+        draft_model: args.flag_or("draft-model", "draft_a"),
+        precision: Precision::parse(&args.flag_or("precision", "f32"))?,
+        attn: if args.switch("pallas") { Attn::Pallas } else { Attn::Dense },
+        temperature: args.f32_flag("temperature", 0.2)?,
+        top_p: args.f32_flag("top-p", 0.95)?,
+        max_new_tokens: args.usize_flag("max-new-tokens", 96)?,
+        policy: match args.flag("fixed-draft") {
+            Some(k) => Policy::Fixed(k.parse()?),
+            None => Policy::Heuristic,
+        },
+        mode: match args.flag_or("mode", "pad").as_str() {
+            "pad" => ExecMode::Pad,
+            "split" => ExecMode::Split,
+            m => bail!("unknown mode '{m}'"),
+        },
+        seed: args.usize_flag("seed", 0)? as u64,
+        time_budget_secs: args
+            .flag("time-budget")
+            .map(|v| v.parse::<f64>())
+            .transpose()?,
+    })
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let root = artifacts_root();
+    match args.subcommand.as_str() {
+        "info" => {
+            let engine = Engine::load(&root)?;
+            let m = &engine.manifest;
+            println!("platform : {}", engine.platform());
+            println!("vocab    : {} (eos={})", m.vocab, m.eos);
+            println!("batches  : {:?}", m.batches);
+            println!("k buckets: {:?}", m.draft_k_buckets);
+            println!("artifacts: {}", m.artifacts.len());
+            for (name, info) in &m.models {
+                println!("model {name}: L={} H={} d={} ff={} params={} \
+                          precisions={:?}",
+                         info.n_layer, info.n_head, info.d_model, info.d_ff,
+                         info.param_count,
+                         info.weights.keys().collect::<Vec<_>>());
+            }
+            Ok(())
+        }
+        "calibrate" => {
+            let engine = Engine::load(&root)?;
+            let iters = args.usize_flag("iters", 10)?;
+            let peak = engine.calibrate_peak_flops(iters)?;
+            println!("peak ≈ {:.1} GFLOP/s ({} iters of {}-flop GEMM)",
+                     peak / 1e9, iters, engine.manifest.calib_flops);
+            Ok(())
+        }
+        "selftest" => selftest(&args),
+        "generate" => generate(&args),
+        "eval" => eval_task(&args),
+        "serve" => serve_cmd(&args),
+        other => bail!(
+            "unknown subcommand '{other}' \
+             (try: info|calibrate|selftest|generate|eval|serve)"),
+    }
+}
+
+fn selftest(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_root())?;
+    println!("[selftest] platform = {}", engine.platform());
+    let prompt = tokenizer::encode("def add_7(x):\n    return");
+    let max_new = args.usize_flag("max-new-tokens", 24)?;
+    for (label, cfg) in [
+        ("BASS-PAD f32", SpecConfig::default()),
+        ("BASS-SPLIT f32", SpecConfig {
+            mode: ExecMode::Split,
+            ..SpecConfig::default()
+        }),
+        ("BASS-PAD int8", SpecConfig {
+            precision: Precision::Int8,
+            ..SpecConfig::default()
+        }),
+    ] {
+        let cfg = SpecConfig { max_new_tokens: max_new, ..cfg };
+        let res = SpecEngine::new(&engine, cfg)
+            .generate(&[prompt.clone(), prompt.clone()])?;
+        println!("[selftest] {label}: steps={} accept={:.0}% out[0]={:?}",
+                 res.steps, res.metrics.acceptance_rate * 100.0,
+                 tokenizer::decode(&res.seqs[0].generated));
+    }
+    let rd = RegularDecoder::new(&engine, RdConfig {
+        max_new_tokens: max_new,
+        ..RdConfig::default()
+    });
+    let res = rd.generate(&[prompt.clone()])?;
+    println!("[selftest] RD: out={:?}",
+             tokenizer::decode(&res.seqs[0].generated));
+    println!("[selftest] OK");
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_root())?;
+    let prompt_text = args.flag_or("prompt", "def add_7(x):\n    return");
+    let n = args.usize_flag("n", 1)?;
+    let prompts = vec![tokenizer::encode(&prompt_text); n];
+    let cfg = spec_config_from(args)?;
+    let use_rd = args.switch("regular");
+    let t0 = std::time::Instant::now();
+    if use_rd {
+        let rd = RegularDecoder::new(&engine, RdConfig {
+            model: cfg.main_model.clone(),
+            precision: cfg.precision,
+            attn: cfg.attn,
+            temperature: cfg.temperature,
+            top_p: cfg.top_p,
+            max_new_tokens: cfg.max_new_tokens,
+            seed: cfg.seed,
+            time_budget_secs: cfg.time_budget_secs,
+        });
+        let res = rd.generate(&prompts)?;
+        print_seqs(&res.seqs, t0.elapsed().as_secs_f64());
+        println!("-- RD: ptl first/mean/last = {:.2}/{:.2}/{:.2} ms",
+                 res.metrics.ptl_first * 1e3, res.metrics.ptl_mean * 1e3,
+                 res.metrics.ptl_last * 1e3);
+    } else {
+        let res = SpecEngine::new(&engine, cfg).generate(&prompts)?;
+        print_seqs(&res.seqs, t0.elapsed().as_secs_f64());
+        println!("-- BASS: steps={} acceptance={:.1}% tokens/step={:.2}",
+                 res.steps, res.metrics.acceptance_rate * 100.0,
+                 res.metrics.tokens_per_step);
+        println!("-- ptl first/mean/last = {:.2}/{:.2}/{:.2} ms",
+                 res.metrics.ptl_first * 1e3, res.metrics.ptl_mean * 1e3,
+                 res.metrics.ptl_last * 1e3);
+    }
+    Ok(())
+}
+
+fn print_seqs(seqs: &[bass::kv::SeqState], wall: f64) {
+    for (i, s) in seqs.iter().enumerate() {
+        println!("[{i}] ({:?}, {} tokens) {:?}", s.finish,
+                 s.tokens_generated(), tokenizer::decode(&s.generated));
+    }
+    println!("-- wall {:.1} ms", wall * 1e3);
+}
+
+fn eval_task(args: &Args) -> Result<()> {
+    let root = artifacts_root();
+    let engine = Engine::load(&root)?;
+    let cfg = spec_config_from(args)?;
+    let task = args.flag_or("task", "code");
+    let n_problems = args.usize_flag("problems", 16)?;
+    let batch = args.usize_flag("batch", 4)?;
+    match task.as_str() {
+        "code" => {
+            let tasks = bass::eval::load_code_tasks(&root)?;
+            let mut outcomes = Vec::new();
+            for t in tasks.iter().take(n_problems) {
+                let prompts = vec![tokenizer::encode(&t.prompt); batch];
+                let res = SpecEngine::new(&engine, cfg.clone())
+                    .generate(&prompts)?;
+                let cands: Vec<Candidate> = res.seqs.iter().map(|s| {
+                    let text = tokenizer::decode(&s.generated);
+                    Candidate {
+                        passes: t.passes(&text),
+                        text,
+                        finished: s.finish != FinishReason::Running,
+                        mean_logp: s.mean_logp(),
+                    }
+                }).collect();
+                outcomes.push(judge(&cands));
+            }
+            let r = aggregate(&outcomes);
+            println!("code task: n={} Pass@Batch={:.1}% Pass@First={:.1}% \
+                      Pass@Finished={:.1}%",
+                     r.n, r.pass_batch * 100.0, r.pass_first * 100.0,
+                     r.pass_finished * 100.0);
+        }
+        "summ" => {
+            let tasks = bass::eval::load_summ_tasks(&root)?;
+            let mut scores = Vec::new();
+            for t in tasks.iter().take(n_problems) {
+                let prompts = vec![tokenizer::encode(&t.prompt); batch];
+                let res = SpecEngine::new(&engine, cfg.clone())
+                    .generate(&prompts)?;
+                let text = tokenizer::decode(&res.seqs[0].generated);
+                scores.push(bass::eval::rouge2_f1(
+                    t.extract_summary(&text), &t.reference));
+            }
+            let mean: f64 =
+                scores.iter().sum::<f64>() / scores.len().max(1) as f64;
+            println!("summ task: n={} ROUGE-2={:.3}", scores.len(), mean);
+        }
+        other => bail!("unknown task '{other}'"),
+    }
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let cfg = CoordinatorConfig::new(
+        artifacts_root(),
+        spec_config_from(args)?,
+        bass::coordinator::batcher::BatcherConfig {
+            max_batch: args.usize_flag("max-batch", 8)?,
+            window: std::time::Duration::from_millis(
+                args.usize_flag("window-ms", 5)? as u64),
+        },
+    );
+    let addr = format!("127.0.0.1:{}", args.usize_flag("port", 4781)?);
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    println!("[serve] engine ready");
+    server::serve(coord, &addr, |a| println!("[serve] listening on {a}"))
+}

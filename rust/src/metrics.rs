@@ -1,0 +1,167 @@
+//! Latency/throughput metrics matching the paper's reporting (§4.1):
+//! per-token latency (PTL) of the **first** finished sequence, the
+//! **last**, and the **mean** across the batch — latency is *not* divided
+//! by batch size (footnote 6).
+
+use crate::kv::SeqState;
+
+/// Per-batch generation metrics.
+#[derive(Debug, Clone, Default)]
+pub struct BatchMetrics {
+    /// Per-token latency (seconds) of each sequence: finish_time / tokens.
+    pub ptl: Vec<f64>,
+    /// PTL of the first sequence to finish.
+    pub ptl_first: f64,
+    /// PTL of the last sequence to finish.
+    pub ptl_last: f64,
+    /// Mean PTL across the batch.
+    pub ptl_mean: f64,
+    /// Wall-clock seconds for the whole batch.
+    pub wall_secs: f64,
+    /// Total generated tokens across the batch.
+    pub total_tokens: usize,
+    /// Aggregate throughput, tokens per second.
+    pub tokens_per_sec: f64,
+    /// Draft-token acceptance rate (speculative runs only).
+    pub acceptance_rate: f64,
+    /// Mean tokens emitted per speculative step (accepted + 1).
+    pub tokens_per_step: f64,
+    /// Speculative steps taken (0 for regular decoding).
+    pub steps: usize,
+    /// Achieved FLOP/s over calibrated peak (Fig-1 utilization).
+    pub utilization: f64,
+}
+
+impl BatchMetrics {
+    /// Compute PTL metrics from finished sequence states. Sequences that
+    /// generated zero tokens are skipped (they carry no latency signal).
+    pub fn from_seqs(seqs: &[SeqState], wall_secs: f64) -> BatchMetrics {
+        let mut ptl = Vec::new();
+        let mut total_tokens = 0usize;
+        for s in seqs {
+            let n = s.tokens_generated();
+            total_tokens += n;
+            if n > 0 {
+                let t = if s.finish_secs > 0.0 { s.finish_secs } else {
+                    wall_secs
+                };
+                ptl.push(t / n as f64);
+            }
+        }
+        let (first, last, mean) = if ptl.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            let mut sorted = ptl.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (sorted[0], *sorted.last().unwrap(),
+             ptl.iter().sum::<f64>() / ptl.len() as f64)
+        };
+        BatchMetrics {
+            ptl,
+            ptl_first: first,
+            ptl_last: last,
+            ptl_mean: mean,
+            wall_secs,
+            total_tokens,
+            tokens_per_sec: if wall_secs > 0.0 {
+                total_tokens as f64 / wall_secs
+            } else {
+                0.0
+            },
+            ..Default::default()
+        }
+    }
+}
+
+/// Simple streaming statistics for benchmark harnesses.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::FinishReason;
+
+    fn seq_with(tokens: usize, finish_secs: f64) -> SeqState {
+        let mut s = SeqState::new(vec![1, 2], 2, 2);
+        for _ in 0..tokens {
+            s.generated.push(7);
+        }
+        s.finish_at(FinishReason::Eos, finish_secs);
+        s
+    }
+
+    #[test]
+    fn ptl_first_last_mean() {
+        let seqs = vec![seq_with(10, 1.0), seq_with(10, 2.0),
+                        seq_with(5, 1.5)];
+        let m = BatchMetrics::from_seqs(&seqs, 2.0);
+        assert!((m.ptl_first - 0.1).abs() < 1e-9);
+        assert!((m.ptl_last - 0.3).abs() < 1e-9);
+        assert!((m.ptl_mean - (0.1 + 0.2 + 0.3) / 3.0).abs() < 1e-9);
+        assert_eq!(m.total_tokens, 25);
+        assert!((m.tokens_per_sec - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unfinished_uses_wall_clock() {
+        let mut s = seq_with(4, 0.0);
+        s.finish = FinishReason::Running;
+        s.finish_secs = 0.0;
+        let m = BatchMetrics::from_seqs(&[s], 2.0);
+        assert!((m.ptl_first - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_token_seqs_skipped() {
+        let seqs = vec![seq_with(0, 1.0), seq_with(10, 1.0)];
+        let m = BatchMetrics::from_seqs(&seqs, 1.0);
+        assert_eq!(m.ptl.len(), 1);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::default();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(1.0), 100.0);
+        assert_eq!(s.percentile(0.5), 51.0); // round(49.5) = 50 -> s[50]
+        assert_eq!(s.min(), 1.0);
+    }
+}

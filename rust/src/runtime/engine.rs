@@ -1,0 +1,337 @@
+//! The PJRT execution engine: loads AOT artifacts, owns device-resident
+//! weights and KV-cache buffers, and exposes typed `prefill` / `decode` /
+//! `draft` calls to the Layer-3 coordinator.
+//!
+//! Design points (DESIGN.md §7):
+//! * **Lazy compilation** — HLO text is parsed and compiled on first use of
+//!   an [`ArtifactKey`], then cached for the process lifetime.
+//! * **Weights uploaded once** per (model, precision) and shared by every
+//!   call; they are never donated.
+//! * **KV caches stay on device**: each step consumes the previous step's
+//!   cache buffers (donated to the executable via `input_output_alias`) and
+//!   returns fresh handles. Only logits / draft tokens cross to the host.
+//! * Single-threaded by construction (PJRT wrapper types are not `Send`);
+//!   the coordinator runs the engine on a dedicated worker thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, HloModuleProto, PjRtBuffer, PjRtClient,
+          PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactKey, Attn, Manifest, Phase, Precision};
+use super::weights::{read_bwt, DType};
+
+/// Per-phase call accounting (drives the utilization + overhead metrics).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    /// phase name -> (calls, total seconds inside PJRT execute).
+    pub exec: HashMap<String, (u64, f64)>,
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+impl EngineStats {
+    fn record(&mut self, phase: &str, secs: f64) {
+        let e = self.exec.entry(phase.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+
+    pub fn total_exec_secs(&self) -> f64 {
+        self.exec.values().map(|(_, s)| s).sum()
+    }
+}
+
+/// Output of a prefill / decode step.
+pub struct StepOut {
+    /// Row-major logits; `[B, V]` after prefill, `[B, Q, V]` after decode.
+    pub logits: Vec<f32>,
+    pub caches: Vec<PjRtBuffer>,
+}
+
+/// Output of one fused draft call.
+pub struct DraftOut {
+    /// `[B, K]` drafted tokens.
+    pub tokens: Vec<i32>,
+    /// `[B, K, V]` warped draft distributions (the q(x) of the
+    /// accept/reject rule).
+    pub qdists: Vec<f32>,
+    pub caches: Vec<PjRtBuffer>,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    executables: RefCell<HashMap<ArtifactKey, Rc<PjRtLoadedExecutable>>>,
+    weights: RefCell<HashMap<(String, Precision), Rc<Vec<PjRtBuffer>>>>,
+    pub stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifact directory.
+    pub fn load(root: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(root)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    // -- artifact / weight caches -------------------------------------------
+
+    /// Compile (or fetch the cached) executable for a key.
+    pub fn executable(&self, key: &ArtifactKey)
+                      -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(key)?;
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)?;
+        let exe = self
+            .client
+            .compile(&XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compiling {key}"))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.executables.borrow_mut().insert(key.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload (or fetch) the device-resident weight buffers of a model.
+    pub fn weights(&self, model: &str, precision: Precision)
+                   -> Result<Rc<Vec<PjRtBuffer>>> {
+        let cache_key = (model.to_string(), precision);
+        if let Some(w) = self.weights.borrow().get(&cache_key) {
+            return Ok(w.clone());
+        }
+        let info = self.manifest.model(model)?;
+        let rel = info.weights.get(&precision).with_context(|| {
+            format!("model {model} has no {precision} weights")
+        })?;
+        let tensors = read_bwt(&self.manifest.root.join(rel))?;
+        let mut bufs = Vec::with_capacity(tensors.len());
+        let mut bytes = 0u64;
+        for t in &tensors {
+            let ty = match t.dtype {
+                DType::F32 => ElementType::F32,
+                DType::I8 => ElementType::S8,
+                DType::I32 => ElementType::S32,
+            };
+            bytes += t.data.len() as u64;
+            bufs.push(self.client.buffer_from_host_raw_bytes(
+                ty, &t.data, &t.dims, None)?);
+        }
+        self.stats.borrow_mut().h2d_bytes += bytes;
+        let rc = Rc::new(bufs);
+        self.weights.borrow_mut().insert(cache_key, rc.clone());
+        Ok(rc)
+    }
+
+    // -- host<->device helpers ------------------------------------------------
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().h2d_bytes += 4 * data.len() as u64;
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().h2d_bytes += 4 * data.len() as u64;
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn download_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let v = buf.to_literal_sync()?.to_vec::<f32>()?;
+        self.stats.borrow_mut().d2h_bytes += 4 * v.len() as u64;
+        Ok(v)
+    }
+
+    fn download_i32(&self, buf: &PjRtBuffer) -> Result<Vec<i32>> {
+        let v = buf.to_literal_sync()?.to_vec::<i32>()?;
+        self.stats.borrow_mut().d2h_bytes += 4 * v.len() as u64;
+        Ok(v)
+    }
+
+    fn run(&self, key: &ArtifactKey, inputs: &[&PjRtBuffer], phase: &str)
+           -> Result<Vec<PjRtBuffer>> {
+        let exe = self.executable(key)?;
+        let t0 = Instant::now();
+        let mut outs = exe.execute_b(inputs)?;
+        self.stats.borrow_mut().record(phase, t0.elapsed().as_secs_f64());
+        if outs.is_empty() || outs[0].is_empty() {
+            bail!("{key}: empty execution result");
+        }
+        Ok(outs.swap_remove(0))
+    }
+
+    // -- typed phase calls ------------------------------------------------------
+
+    /// Context-encode a prompt batch. `tokens` is row-major `[B, P]`
+    /// (P = `manifest.prefill_p`), `prompt_lens` per-sequence true lengths.
+    /// Returns last-token logits `[B, V]` and fresh cache buffers.
+    pub fn prefill(&self, model: &str, precision: Precision, attn: Attn,
+                   batch: usize, tokens: &[i32], prompt_lens: &[i32])
+                   -> Result<StepOut> {
+        let p = self.manifest.prefill_p;
+        if tokens.len() != batch * p || prompt_lens.len() != batch {
+            bail!("prefill shape mismatch: {} tokens for B={batch} P={p}",
+                  tokens.len());
+        }
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::Prefill,
+            batch, q: p, attn,
+        };
+        let w = self.weights(model, precision)?;
+        let t = self.upload_i32(tokens, &[batch, p])?;
+        let l = self.upload_i32(prompt_lens, &[batch])?;
+        let mut inputs: Vec<&PjRtBuffer> = w.iter().collect();
+        inputs.push(&t);
+        inputs.push(&l);
+        let mut outs = self.run(&key, &inputs, "prefill")?;
+        let n_cache = self.manifest.model(model)?.n_cache_bufs();
+        if outs.len() != 1 + n_cache {
+            bail!("prefill: expected {} outputs, got {}", 1 + n_cache,
+                  outs.len());
+        }
+        let caches = outs.split_off(1);
+        let logits = self.download_f32(&outs[0])?;
+        Ok(StepOut { logits, caches })
+    }
+
+    /// Ragged decode/verify step. `tokens` `[B, Q]`, `seq_lens` `[B]`;
+    /// consumes `caches` (donated) and returns logits `[B, Q, V]` plus the
+    /// successor cache buffers.
+    pub fn decode(&self, model: &str, precision: Precision, attn: Attn,
+                  batch: usize, q: usize, tokens: &[i32], seq_lens: &[i32],
+                  caches: Vec<PjRtBuffer>) -> Result<StepOut> {
+        if tokens.len() != batch * q || seq_lens.len() != batch {
+            bail!("decode shape mismatch");
+        }
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::Decode,
+            batch, q, attn,
+        };
+        let w = self.weights(model, precision)?;
+        let t = self.upload_i32(tokens, &[batch, q])?;
+        let l = self.upload_i32(seq_lens, &[batch])?;
+        let mut inputs: Vec<&PjRtBuffer> = w.iter().collect();
+        inputs.push(&t);
+        inputs.push(&l);
+        inputs.extend(caches.iter());
+        let mut outs = self.run(&key, &inputs, "decode")?;
+        drop(caches); // donated: handles must not be reused
+        let n_cache = self.manifest.model(model)?.n_cache_bufs();
+        if outs.len() != 1 + n_cache {
+            bail!("decode: expected {} outputs, got {}", 1 + n_cache,
+                  outs.len());
+        }
+        let new_caches = outs.split_off(1);
+        let logits = self.download_f32(&outs[0])?;
+        Ok(StepOut { logits, caches: new_caches })
+    }
+
+    /// One fused draft call: ingest 1–2 catch-up tokens per sequence, then
+    /// draft `k` tokens with in-graph nucleus sampling. `uniforms` `[B, K]`
+    /// supplies the randomness (host-controlled, reproducible).
+    #[allow(clippy::too_many_arguments)]
+    pub fn draft(&self, model: &str, precision: Precision, attn: Attn,
+                 batch: usize, k: usize, tokens_in: &[i32], n_in: &[i32],
+                 seq_lens: &[i32], uniforms: &[f32], temperature: f32,
+                 top_p: f32, caches: Vec<PjRtBuffer>) -> Result<DraftOut> {
+        if tokens_in.len() != batch * 2 || uniforms.len() != batch * k {
+            bail!("draft shape mismatch");
+        }
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::Draft,
+            batch, q: k, attn,
+        };
+        let w = self.weights(model, precision)?;
+        let t = self.upload_i32(tokens_in, &[batch, 2])?;
+        let n = self.upload_i32(n_in, &[batch])?;
+        let l = self.upload_i32(seq_lens, &[batch])?;
+        let u = self.upload_f32(uniforms, &[batch, k])?;
+        let temp = self.upload_f32(&[temperature], &[])?;
+        let tp = self.upload_f32(&[top_p], &[])?;
+        let mut inputs: Vec<&PjRtBuffer> = w.iter().collect();
+        inputs.extend([&t, &n, &l, &u, &temp, &tp]);
+        inputs.extend(caches.iter());
+        let mut outs = self.run(&key, &inputs, "draft")?;
+        drop(caches);
+        let n_cache = self.manifest.model(model)?.n_cache_bufs();
+        if outs.len() != 2 + n_cache {
+            bail!("draft: expected {} outputs, got {}", 2 + n_cache,
+                  outs.len());
+        }
+        let new_caches = outs.split_off(2);
+        let tokens = self.download_i32(&outs[0])?;
+        let qdists = self.download_f32(&outs[1])?;
+        Ok(DraftOut { tokens, qdists, caches: new_caches })
+    }
+
+    /// Compile every artifact of a model at one (precision, batch) ahead
+    /// of time, so serving latency never pays lazy-compile costs. Returns
+    /// the number of executables compiled (cached ones are free).
+    pub fn prewarm(&self, model: &str, precision: Precision,
+                   batch: usize) -> Result<usize> {
+        let keys: Vec<ArtifactKey> = self
+            .manifest
+            .artifacts
+            .keys()
+            .filter(|k| k.model == model && k.precision == precision
+                    && k.batch == batch && k.attn == Attn::Dense)
+            .cloned()
+            .collect();
+        let before = self.stats.borrow().compiles;
+        self.weights(model, precision)?;
+        for k in &keys {
+            self.executable(k)?;
+        }
+        Ok((self.stats.borrow().compiles - before) as usize)
+    }
+
+    // -- calibration -------------------------------------------------------------
+
+    /// Measure sustained peak FLOP/s with the exported GEMM artifact; this
+    /// is the denominator of the Fig-1 utilization metric (the testbed
+    /// stand-in for the A100 datasheet number).
+    pub fn calibrate_peak_flops(&self, iters: usize) -> Result<f64> {
+        let path = self.manifest.root.join(&self.manifest.calib_file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)?;
+        let exe = self.client.compile(&XlaComputation::from_proto(&proto))?;
+        let n = (self.manifest.calib_flops as f64 / 2.0).cbrt() as usize;
+        let host = vec![1.0f32; n * n];
+        let a = self.upload_f32(&host, &[n, n])?;
+        let b = self.upload_f32(&host, &[n, n])?;
+        // Warm up, then time.
+        let out = exe.execute_b(&[&a, &b])?;
+        drop(out);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let out = exe.execute_b(&[&a, &b])?;
+            // Force completion by touching the result.
+            let _ = out[0][0].to_literal_sync()?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        Ok(self.manifest.calib_flops as f64 / dt)
+    }
+}

@@ -1,0 +1,309 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` describes the trained models, their weight
+//! files per precision, and the full grid of AOT-compiled HLO programs
+//! (prefill / decode / draft × batch × Q-bucket × precision). The engine
+//! resolves [`ArtifactKey`]s against this index and lazily compiles the
+//! HLO text on first use.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::Json;
+
+/// Numeric precision of a model's weights (paper Tables 1–3 axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Precision::F32,
+            "int8" => Precision::Int8,
+            _ => bail!("unknown precision '{s}'"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Which AOT program an artifact holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Context encoding of the prompt batch; `q` = padded prompt capacity.
+    Prefill,
+    /// Ragged verification step of the main model; `q` = tokens per seq.
+    Decode,
+    /// Fused draft loop (resync + K auto-regressive steps); `q` = K.
+    Draft,
+}
+
+impl Phase {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "prefill" => Phase::Prefill,
+            "decode" => Phase::Decode,
+            "draft" => Phase::Draft,
+            _ => bail!("unknown phase '{s}'"),
+        })
+    }
+}
+
+/// Attention realization inside the artifact (both are BASS-PAD; see
+/// DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Attn {
+    /// XLA-fused pad+mask attention (default production path).
+    Dense,
+    /// Explicitly-tiled Pallas kernel lowered in interpret mode (parity
+    /// subset proving the L1 path composes through PJRT).
+    Pallas,
+}
+
+/// Unique identity of one AOT program.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub model: String,
+    pub precision: Precision,
+    pub phase: Phase,
+    pub batch: usize,
+    pub q: usize,
+    pub attn: Attn,
+}
+
+impl fmt::Display for ArtifactKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}_{}_{:?}{}_b{}{}", self.model, self.precision,
+               self.phase, self.q, self.batch,
+               if self.attn == Attn::Pallas { "_pallas" } else { "" })
+    }
+}
+
+/// Architecture + weight index of one model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub s_max: usize,
+    pub d_head: usize,
+    pub param_count: usize,
+    /// precision -> weights file (relative to the artifact root).
+    pub weights: HashMap<Precision, String>,
+}
+
+impl ModelInfo {
+    /// Shape of each per-layer KV cache buffer at a given batch size.
+    pub fn cache_dims(&self, batch: usize) -> [usize; 4] {
+        [batch, self.n_head, self.s_max, self.d_head]
+    }
+
+    /// Number of per-layer cache buffers (K and V per layer).
+    pub fn n_cache_bufs(&self) -> usize {
+        2 * self.n_layer
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab: usize,
+    pub eos: u8,
+    pub prefill_p: usize,
+    pub batches: Vec<usize>,
+    pub draft_k_buckets: Vec<usize>,
+    pub small_k_buckets: Vec<usize>,
+    pub models: HashMap<String, ModelInfo>,
+    pub artifacts: HashMap<ArtifactKey, String>,
+    pub calib_file: String,
+    pub calib_flops: u64,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(root, &text)
+    }
+
+    pub fn parse(root: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let usize_arr = |v: &Json| -> Result<Vec<usize>> {
+            v.as_arr()?.iter().map(|x| x.as_usize()).collect()
+        };
+
+        let mut models = HashMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let mut weights = HashMap::new();
+            for (prec, file) in m.get("weights")?.as_obj()? {
+                weights.insert(Precision::parse(prec)?,
+                               file.as_str()?.to_string());
+            }
+            models.insert(name.clone(), ModelInfo {
+                name: name.clone(),
+                n_layer: m.get("n_layer")?.as_usize()?,
+                n_head: m.get("n_head")?.as_usize()?,
+                d_model: m.get("d_model")?.as_usize()?,
+                d_ff: m.get("d_ff")?.as_usize()?,
+                s_max: m.get("s_max")?.as_usize()?,
+                d_head: m.get("d_head")?.as_usize()?,
+                param_count: m.get("param_count")?.as_usize()?,
+                weights,
+            });
+        }
+
+        let mut artifacts = HashMap::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let key = ArtifactKey {
+                model: a.get("model")?.as_str()?.to_string(),
+                precision: Precision::parse(a.get("precision")?.as_str()?)?,
+                phase: Phase::parse(a.get("phase")?.as_str()?)?,
+                batch: a.get("batch")?.as_usize()?,
+                q: a.get("q")?.as_usize()?,
+                attn: match a.get("attn")?.as_str()? {
+                    "pallas" => Attn::Pallas,
+                    _ => Attn::Dense,
+                },
+            };
+            artifacts.insert(key, a.get("file")?.as_str()?.to_string());
+        }
+
+        let calib = j.get("calib")?;
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            vocab: j.get("vocab")?.as_usize()?,
+            eos: j.get("eos")?.as_usize()? as u8,
+            prefill_p: j.get("prefill_p")?.as_usize()?,
+            batches: usize_arr(j.get("batches")?)?,
+            draft_k_buckets: usize_arr(j.get("draft_k_buckets")?)?,
+            small_k_buckets: usize_arr(j.get("small_k_buckets")?)?,
+            models,
+            artifacts,
+            calib_file: calib.get("file")?.as_str()?.to_string(),
+            calib_flops: calib.get("flops")?.as_f64()? as u64,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    pub fn artifact_path(&self, key: &ArtifactKey) -> Result<PathBuf> {
+        let rel = self
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("no artifact for {key} in manifest"))?;
+        Ok(self.root.join(rel))
+    }
+
+    /// Draft-length buckets available for a model (draft_a has the full
+    /// Algorithm-1 range; the Table-4 comparison drafts ship a subset).
+    pub fn k_buckets(&self, model: &str) -> &[usize] {
+        if model == "draft_a" {
+            &self.draft_k_buckets
+        } else {
+            &self.small_k_buckets
+        }
+    }
+
+    /// Round a requested draft length down to the nearest exported bucket
+    /// (never below the smallest bucket).
+    pub fn bucket_k(&self, model: &str, k: usize) -> usize {
+        let buckets = self.k_buckets(model);
+        let mut best = buckets[0];
+        for &b in buckets {
+            if b <= k && b > best {
+                best = b;
+            }
+        }
+        best.max(buckets[0])
+    }
+
+    /// Smallest exported batch bucket that fits `n` sequences.
+    pub fn bucket_batch(&self, n: usize) -> Result<usize> {
+        self.batches
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| anyhow!("batch {n} exceeds largest bucket"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "vocab": 256, "eos": 0, "prefill_p": 64,
+      "batches": [1, 2, 4], "draft_k_buckets": [1, 2, 4, 8],
+      "small_k_buckets": [2, 4],
+      "models": {"main": {"n_layer": 4, "n_head": 8, "d_model": 256,
+        "d_ff": 1024, "s_max": 256, "d_head": 32, "param_count": 3290624,
+        "weights": {"f32": "weights/main_f32.bwt"}}},
+      "artifacts": [{"file": "hlo/main_f32_decode1_b1.hlo.txt",
+        "model": "main", "precision": "f32", "phase": "decode",
+        "batch": 1, "q": 1, "attn": "dense"}],
+      "calib": {"file": "hlo/gemm_calib.hlo.txt", "n": 768,
+        "flops": 905969664}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.vocab, 256);
+        let mi = m.model("main").unwrap();
+        assert_eq!(mi.n_layer, 4);
+        assert_eq!(mi.cache_dims(2), [2, 8, 256, 32]);
+        let key = ArtifactKey {
+            model: "main".into(),
+            precision: Precision::F32,
+            phase: Phase::Decode,
+            batch: 1,
+            q: 1,
+            attn: Attn::Dense,
+        };
+        assert!(m.artifact_path(&key).is_ok());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_logic() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.bucket_k("draft_a", 5), 4);
+        assert_eq!(m.bucket_k("draft_a", 1), 1);
+        assert_eq!(m.bucket_k("draft_a", 100), 8);
+        assert_eq!(m.bucket_k("draft_b", 3), 2);
+        assert_eq!(m.bucket_batch(3).unwrap(), 4);
+        assert_eq!(m.bucket_batch(1).unwrap(), 1);
+        assert!(m.bucket_batch(5).is_err());
+    }
+}

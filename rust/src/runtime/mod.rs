@@ -1,0 +1,17 @@
+//! Runtime layer: PJRT client, artifact registry, weight upload, JSON.
+//!
+//! Adapts the `/opt/xla-example/load_hlo` pattern: HLO **text** artifacts
+//! (AOT-lowered by `python/compile/aot.py`) are parsed with
+//! `HloModuleProto::from_text_file`, compiled on the PJRT CPU client and
+//! executed with device-resident buffers. The crate-local patched `xla`
+//! crate (`third_party/xla-rs`) sets `untuple_result`, so multi-output
+//! programs return one buffer per output — the property that lets KV caches
+//! live on device across steps.
+
+mod engine;
+pub mod json;
+mod manifest;
+pub mod weights;
+
+pub use engine::{DraftOut, Engine, EngineStats, StepOut};
+pub use manifest::{ArtifactKey, Attn, Manifest, ModelInfo, Phase, Precision};

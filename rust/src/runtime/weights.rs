@@ -1,0 +1,189 @@
+//! `.bwt` weight loader — the Rust half of `python/compile/bwt.py`.
+//!
+//! Weights are uploaded to the PJRT device **once** per (model, precision)
+//! and the resulting buffers are reused by every executable call; they are
+//! never donated, so the same handles stay valid for the process lifetime.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a weight tensor (subset the models use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            t => bail!("unknown dtype tag {t}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// One host-side weight tensor as read from a `.bwt` file.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian row-major bytes.
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn f32_vec(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{}: not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Read all tensors from a `.bwt` file, preserving on-disk (= artifact
+/// input) order.
+pub fn read_bwt(path: &Path) -> Result<Vec<HostTensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_bwt(&buf).with_context(|| format!("parse {}", path.display()))
+}
+
+fn parse_bwt(buf: &[u8]) -> Result<Vec<HostTensor>> {
+    let mut r = Cursor { b: buf, i: 0 };
+    if r.take(4)? != b"BWT1" {
+        bail!("bad magic");
+    }
+    let count = r.u32()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = r.u16()? as usize;
+        let name = String::from_utf8(r.take(nlen)?.to_vec())?;
+        let dtype = DType::from_tag(r.u8()?)?;
+        let ndim = r.u8()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(r.u32()? as usize);
+        }
+        let nbytes =
+            dims.iter().product::<usize>().max(1) * dtype.size();
+        let data = r.take(nbytes)?.to_vec();
+        out.push(HostTensor { name, dtype, dims, data });
+    }
+    if r.i != buf.len() {
+        bail!("trailing bytes: {} of {}", buf.len() - r.i, buf.len());
+    }
+    Ok(out)
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bwt() -> Vec<u8> {
+        // Two tensors: "a" f32[2,2], "b" i8[3].
+        let mut v = b"BWT1".to_vec();
+        v.extend(2u32.to_le_bytes());
+        v.extend(1u16.to_le_bytes());
+        v.extend(b"a");
+        v.push(0); // f32
+        v.push(2);
+        v.extend(2u32.to_le_bytes());
+        v.extend(2u32.to_le_bytes());
+        for x in [1.0f32, 2.0, 3.0, 4.0] {
+            v.extend(x.to_le_bytes());
+        }
+        v.extend(1u16.to_le_bytes());
+        v.extend(b"b");
+        v.push(1); // i8
+        v.push(1);
+        v.extend(3u32.to_le_bytes());
+        v.extend_from_slice(&[250, 0, 7]);
+        v
+    }
+
+    #[test]
+    fn parse_sample() {
+        let ts = parse_bwt(&sample_bwt()).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "a");
+        assert_eq!(ts[0].dims, vec![2, 2]);
+        assert_eq!(ts[0].f32_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ts[1].dtype, DType::I8);
+        assert_eq!(ts[1].data, vec![250, 0, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut v = sample_bwt();
+        v[0] = b'X';
+        assert!(parse_bwt(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let v = sample_bwt();
+        assert!(parse_bwt(&v[..v.len() - 1]).is_err());
+        assert!(parse_bwt(&v[..10]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let mut v = sample_bwt();
+        v.push(0);
+        assert!(parse_bwt(&v).is_err());
+    }
+}

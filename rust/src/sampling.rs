@@ -1,0 +1,367 @@
+//! Host-side sampling: temperature + nucleus warping, categorical sampling,
+//! and the speculative accept/reject rule (Leviathan et al. 2023 / Chen et
+//! al. 2023) the paper builds on (§2.2).
+//!
+//! The warp **must** match the in-graph draft sampler
+//! (`python/compile/model.py::sample_top_p`) bit-for-bit in structure:
+//! softmax at `logits/max(T, 1e-4)`, descending sort, keep tokens while
+//! `cum - p_i < top_p`, renormalize, then CDF inversion *in original token
+//! order*. Only then does the composed speculative distribution equal
+//! direct sampling from the warped main distribution — the property the
+//! `spec_accept_matches_direct_sampling` property test checks.
+
+/// Deterministic PCG32 RNG (O'Neill 2014). One independent stream per
+/// sequence keeps batched generation reproducible regardless of batch
+/// composition.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Pcg32 {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+}
+
+/// Numerically-stable in-place softmax.
+pub fn softmax(x: &mut [f32]) {
+    let m = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Temperature + nucleus (top-p) warp of raw logits into a renormalized
+/// probability vector. Mirrors the jax in-graph sampler exactly: token i is
+/// kept iff the mass of *strictly more probable* tokens is < top_p (ties
+/// all kept; top-1 always kept).
+pub fn warp_top_p(logits: &[f32], temperature: f32, top_p: f32) -> Vec<f32> {
+    let t = temperature.max(1e-4);
+    let mut probs: Vec<f32> = logits.iter().map(|&l| l / t).collect();
+    softmax(&mut probs);
+    // Sort descending once, then mass_before(p) = prefix mass of strictly
+    // greater values (O(V log V), equivalent to the in-graph O(V²) rule).
+    let mut sorted: Vec<f32> = probs.clone();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut keep = vec![false; probs.len()];
+    for (i, &p) in probs.iter().enumerate() {
+        let mut mass_before = 0.0f32;
+        for &s in &sorted {
+            if s > p {
+                mass_before += s;
+            } else {
+                break;
+            }
+        }
+        keep[i] = mass_before < top_p;
+    }
+    let mass: f32 = probs
+        .iter()
+        .zip(&keep)
+        .map(|(&p, &k)| if k { p } else { 0.0 })
+        .sum();
+    let inv = 1.0 / mass;
+    probs
+        .iter()
+        .zip(&keep)
+        .map(|(&p, &k)| if k { p * inv } else { 0.0 })
+        .collect()
+}
+
+/// Sample by CDF inversion in original index order — the same convention as
+/// the in-graph sampler (`argmax(cdf > u)`).
+pub fn sample_cdf(probs: &[f32], u: f32) -> usize {
+    let u = u * (1.0 - 1e-6);
+    let mut cdf = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        cdf += p;
+        if cdf > u {
+            return i;
+        }
+    }
+    // Float underflow tail: return the last token with non-zero mass.
+    probs
+        .iter()
+        .rposition(|&p| p > 0.0)
+        .unwrap_or(probs.len() - 1)
+}
+
+/// Outcome of verifying one sequence's draft tokens against the main model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecOutcome {
+    /// How many draft tokens were accepted (0..=k).
+    pub accepted: usize,
+    /// The next stream token: the corrected token on rejection, or the
+    /// bonus token when all k drafts were accepted.
+    pub next_token: usize,
+    /// True iff all k drafts were accepted (`next_token` is the bonus).
+    pub bonus: bool,
+}
+
+/// The stochastic speculative sampling rule over *warped* distributions.
+///
+/// * `p_main[j]` — warped main-model distribution after consuming stream
+///   token j (j = 0..k inclusive; index k is the bonus distribution).
+/// * `draft_tokens[j]` — draft token d_{j+1}.
+/// * `q_draft[j]` — warped draft distribution d_{j+1} was sampled from.
+///
+/// Token d is accepted with probability `min(1, p(d)/q(d))`; on rejection
+/// the corrected token is sampled from `norm(max(0, p - q))`. This composes
+/// to exact sampling from `p` (Leviathan et al. 2023, Thm 1).
+pub fn spec_accept(
+    p_main: &[&[f32]],
+    draft_tokens: &[usize],
+    q_draft: &[&[f32]],
+    rng: &mut Pcg32,
+) -> SpecOutcome {
+    let k = draft_tokens.len();
+    debug_assert_eq!(p_main.len(), k + 1);
+    debug_assert_eq!(q_draft.len(), k);
+    for j in 0..k {
+        let d = draft_tokens[j];
+        let p = p_main[j][d];
+        let q = q_draft[j][d];
+        let r = rng.next_f32();
+        let accept = q <= 0.0 || r < (p / q).min(1.0);
+        if q <= 0.0 {
+            // d was sampled from q, so q(d) > 0 in exact arithmetic; treat
+            // an fp-zero as a reject to stay conservative.
+        }
+        if accept && q > 0.0 {
+            continue;
+        }
+        // Reject: sample from the residual distribution.
+        let mut residual: Vec<f32> = p_main[j]
+            .iter()
+            .zip(q_draft[j])
+            .map(|(&p, &q)| (p - q).max(0.0))
+            .collect();
+        let mass: f32 = residual.iter().sum();
+        if mass > 1e-12 {
+            let inv = 1.0 / mass;
+            for v in residual.iter_mut() {
+                *v *= inv;
+            }
+        } else {
+            // p == q exactly: resampling from p is distribution-correct.
+            residual = p_main[j].to_vec();
+        }
+        let c = sample_cdf(&residual, rng.next_f32());
+        return SpecOutcome { accepted: j, next_token: c, bonus: false };
+    }
+    let bonus = sample_cdf(p_main[k], rng.next_f32());
+    SpecOutcome { accepted: k, next_token: bonus, bonus: true }
+}
+
+/// Log-probability of `token` under the warped distribution (used by the
+/// Fig-5 mean-logP ranking).
+pub fn logp_of(warped: &[f32], token: usize) -> f32 {
+    warped[token].max(1e-30).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn pcg_is_deterministic_and_uniform() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 1);
+        let mut c = Pcg32::new(42, 2);
+        let xs: Vec<f32> = (0..1000).map(|_| a.next_f32()).collect();
+        let ys: Vec<f32> = (0..1000).map(|_| b.next_f32()).collect();
+        assert_eq!(xs, ys);
+        let zs: Vec<f32> = (0..1000).map(|_| c.next_f32()).collect();
+        assert_ne!(xs, zs);
+        let mean = xs.iter().sum::<f32>() / 1000.0;
+        assert_close(mean, 0.5, 0.05);
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0, -1000.0];
+        softmax(&mut x);
+        assert_close(x.iter().sum::<f32>(), 1.0, 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+        assert!(x[3] < 1e-20);
+    }
+
+    #[test]
+    fn warp_keeps_top1_even_with_tiny_top_p() {
+        let logits = vec![0.0, 5.0, 1.0];
+        let w = warp_top_p(&logits, 1.0, 0.01);
+        assert_close(w[1], 1.0, 1e-6);
+        assert_eq!(w[0], 0.0);
+    }
+
+    #[test]
+    fn warp_matches_python() {
+        // Pinned case shared with python/tests/test_parity.py.
+        let w = warp_top_p(&[0.0, 1.0, 2.0, -1.0], 1.0, 0.8);
+        assert_close(w[2], 0.6439 / 0.8808, 2e-3);
+        assert_close(w[1], 0.2369 / 0.8808, 2e-3);
+        assert_eq!(w[0], 0.0);
+        assert_eq!(w[3], 0.0);
+    }
+
+    #[test]
+    fn warp_top_p_1_is_plain_softmax() {
+        let logits = vec![0.3, -0.2, 1.7, 0.0];
+        let w = warp_top_p(&logits, 1.0, 1.0);
+        let mut s = logits.clone();
+        softmax(&mut s);
+        for (a, b) in w.iter().zip(&s) {
+            assert_close(*a, *b, 1e-6);
+        }
+    }
+
+    #[test]
+    fn warp_low_temperature_concentrates() {
+        let logits = vec![0.0, 0.5, 0.4];
+        let w = warp_top_p(&logits, 0.01, 1.0);
+        assert!(w[1] > 0.999);
+    }
+
+    #[test]
+    fn sample_cdf_inverts() {
+        let probs = vec![0.0, 0.25, 0.0, 0.75];
+        assert_eq!(sample_cdf(&probs, 0.1), 1);
+        assert_eq!(sample_cdf(&probs, 0.24), 1);
+        assert_eq!(sample_cdf(&probs, 0.26), 3);
+        assert_eq!(sample_cdf(&probs, 0.999999), 3);
+    }
+
+    #[test]
+    fn sample_cdf_empirical_distribution() {
+        let probs = vec![0.1, 0.0, 0.6, 0.3];
+        let mut rng = Pcg32::new(7, 0);
+        let mut counts = [0usize; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            counts[sample_cdf(&probs, rng.next_f32())] += 1;
+        }
+        for i in 0..4 {
+            assert_close(counts[i] as f32 / n as f32, probs[i], 0.01);
+        }
+    }
+
+    /// THE core correctness property of speculative sampling: composing
+    /// draft sampling + accept/reject + residual/bonus sampling must equal
+    /// direct sampling from the main distribution.
+    #[test]
+    fn spec_accept_matches_direct_sampling() {
+        // Hand-rolled property test (proptest is unavailable offline):
+        // sweep several random (p, q) pairs on a small vocab and compare
+        // empirical next-token frequencies at draft position 0.
+        let vocab = 6;
+        for case in 0..8u64 {
+            let mut setup = Pcg32::new(100 + case, 3);
+            let mk_dist = |rng: &mut Pcg32| {
+                let mut v: Vec<f32> =
+                    (0..vocab).map(|_| rng.next_f32() + 0.01).collect();
+                let s: f32 = v.iter().sum();
+                v.iter_mut().for_each(|x| *x /= s);
+                v
+            };
+            let p0 = mk_dist(&mut setup);
+            let p1 = mk_dist(&mut setup);
+            let q0 = mk_dist(&mut setup);
+
+            let n = 60_000;
+            let mut freq = vec![0f32; vocab];
+            let mut rng = Pcg32::new(case, 9);
+            for _ in 0..n {
+                // Draft one token from q0, then run the rule.
+                let d = sample_cdf(&q0, rng.next_f32());
+                let out = spec_accept(
+                    &[&p0, &p1],
+                    &[d],
+                    &[&q0],
+                    &mut rng,
+                );
+                // The first emitted stream token: accepted draft or
+                // correction.
+                let first = if out.accepted >= 1 { d } else { out.next_token };
+                freq[first] += 1.0;
+            }
+            for f in freq.iter_mut() {
+                *f /= n as f32;
+            }
+            for i in 0..vocab {
+                assert_close(freq[i], p0[i], 0.015);
+            }
+        }
+    }
+
+    #[test]
+    fn spec_accept_identical_dists_accepts_everything() {
+        let p = vec![0.25f32, 0.25, 0.25, 0.25];
+        let pr: &[f32] = &p;
+        let mut rng = Pcg32::new(1, 1);
+        let mut bonus_count = 0;
+        for _ in 0..200 {
+            let d = sample_cdf(&p, rng.next_f32());
+            let out = spec_accept(&[pr, pr, pr], &[d, d], &[pr, pr], &mut rng);
+            assert_eq!(out.accepted, 2);
+            if out.bonus {
+                bonus_count += 1;
+            }
+        }
+        assert_eq!(bonus_count, 200);
+    }
+
+    #[test]
+    fn spec_accept_disjoint_dists_rejects_immediately() {
+        // q puts all mass on token 0, p on token 1: always reject at 0 and
+        // correct to token 1.
+        let p = vec![0.0f32, 1.0, 0.0];
+        let q = vec![1.0f32, 0.0, 0.0];
+        let mut rng = Pcg32::new(2, 2);
+        for _ in 0..100 {
+            let out = spec_accept(&[&p, &p], &[0], &[&q], &mut rng);
+            assert_eq!(out, SpecOutcome {
+                accepted: 0,
+                next_token: 1,
+                bonus: false
+            });
+        }
+    }
+
+    #[test]
+    fn logp_of_is_safe_on_zero() {
+        assert!(logp_of(&[0.0, 1.0], 0).is_finite());
+        assert_close(logp_of(&[0.5, 0.5], 1), 0.5f32.ln(), 1e-6);
+    }
+}

@@ -1,0 +1,181 @@
+//! Draft-length control: the paper's **Algorithm 1** plus the fixed-length
+//! baselines it is ablated against (Table 6).
+//!
+//! Rationale (paper §3.2): grow the draft when at least one sequence
+//! accepted everything last step; shrink it otherwise, faster when the
+//! current draft is long and on consecutive shrinks — but never below the
+//! best acceptance observed in the batch.
+
+/// A policy choosing the next step's (uniform-across-batch) draft length.
+pub trait DraftLenPolicy {
+    /// Draft length to use for the next speculative step.
+    fn current(&self) -> usize;
+    /// Observe the per-sequence accepted counts of the last step.
+    fn observe(&mut self, accepted: &[usize]);
+    fn name(&self) -> String;
+}
+
+/// Paper Algorithm 1 with its published constants
+/// (l0 = 7, l_incre = 2, l_mod = 10, l_limit = 32).
+#[derive(Debug, Clone)]
+pub struct Heuristic {
+    l: usize,
+    s: usize,
+    pub l0: usize,
+    pub l_incre: usize,
+    pub l_mod: usize,
+    pub l_limit: usize,
+}
+
+impl Heuristic {
+    pub fn paper() -> Heuristic {
+        Heuristic::new(7, 2, 10, 32)
+    }
+
+    /// Constants scaled to this testbed's exported bucket range
+    /// (l_limit = 16 matches `DRAFT_K_BUCKETS`; see DESIGN.md §2).
+    pub fn testbed() -> Heuristic {
+        Heuristic::new(7, 2, 10, 16)
+    }
+
+    pub fn new(l0: usize, l_incre: usize, l_mod: usize, l_limit: usize)
+               -> Heuristic {
+        assert!(l0 >= 1 && l_limit >= l0);
+        Heuristic { l: l0, s: 0, l0, l_incre, l_mod, l_limit }
+    }
+}
+
+impl DraftLenPolicy for Heuristic {
+    fn current(&self) -> usize {
+        self.l
+    }
+
+    fn observe(&mut self, accepted: &[usize]) {
+        let xmax = accepted.iter().copied().max().unwrap_or(0);
+        if xmax == self.l {
+            // At least one sequence accepted the whole draft: grow.
+            self.l = (self.l + self.l_incre).min(self.l_limit);
+            self.s = 0;
+        } else {
+            // Shrink: faster when long, faster on consecutive shrinks,
+            // but never below the best acceptance (or 1).
+            let dec = self.l.div_ceil(self.l_mod) + self.s;
+            let next = self.l as i64 - dec as i64;
+            self.l = next.max(1).max(xmax as i64) as usize;
+            self.s = 1;
+        }
+        debug_assert!((1..=self.l_limit).contains(&self.l));
+    }
+
+    fn name(&self) -> String {
+        format!("heuristic(l0={},inc={},mod={},lim={})", self.l0,
+                self.l_incre, self.l_mod, self.l_limit)
+    }
+}
+
+/// Constant draft length (the "fixed draft size k" rows of Table 6).
+#[derive(Debug, Clone)]
+pub struct Fixed(pub usize);
+
+impl DraftLenPolicy for Fixed {
+    fn current(&self) -> usize {
+        self.0
+    }
+
+    fn observe(&mut self, _accepted: &[usize]) {}
+
+    fn name(&self) -> String {
+        format!("fixed({})", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_on_full_accept() {
+        let mut h = Heuristic::paper();
+        assert_eq!(h.current(), 7);
+        h.observe(&[3, 7]); // one sequence accepted all 7
+        assert_eq!(h.current(), 9);
+        h.observe(&[9, 2]);
+        assert_eq!(h.current(), 11);
+    }
+
+    #[test]
+    fn caps_at_limit() {
+        let mut h = Heuristic::paper();
+        for _ in 0..40 {
+            let l = h.current();
+            h.observe(&[l]);
+        }
+        assert_eq!(h.current(), 32);
+    }
+
+    #[test]
+    fn shrinks_and_accelerates() {
+        let mut h = Heuristic::new(20, 2, 10, 32);
+        h.observe(&[0, 1]); // miss: dec = ceil(20/10) + 0 = 2 -> 18
+        assert_eq!(h.current(), 18);
+        h.observe(&[0, 0]); // consecutive: dec = ceil(18/10) + 1 = 3 -> 15
+        assert_eq!(h.current(), 15);
+        h.observe(&[1, 0]); // dec = 2 + 1 = 3 -> 12
+        assert_eq!(h.current(), 12);
+    }
+
+    #[test]
+    fn never_below_max_accepted() {
+        let mut h = Heuristic::new(8, 2, 10, 32);
+        h.observe(&[6, 2]); // dec = 1, would be 7; max accepted 6 < 7
+        assert_eq!(h.current(), 7);
+        h.observe(&[6, 6]); // dec = 1 + 1 = 2 -> 5, clamped up to 6
+        assert_eq!(h.current(), 6);
+    }
+
+    #[test]
+    fn never_below_one() {
+        let mut h = Heuristic::new(1, 2, 10, 32);
+        for _ in 0..10 {
+            h.observe(&[0]);
+            assert!(h.current() >= 1);
+        }
+    }
+
+    /// Hand-rolled property sweep: for random acceptance patterns the
+    /// invariants of Algorithm 1 hold at every step.
+    #[test]
+    fn property_invariants_random_walk() {
+        use crate::sampling::Pcg32;
+        let mut rng = Pcg32::new(11, 4);
+        for _ in 0..200 {
+            let mut h = Heuristic::testbed();
+            for _ in 0..100 {
+                let l = h.current();
+                let b = 1 + (rng.next_u32() % 8) as usize;
+                let accepted: Vec<usize> = (0..b)
+                    .map(|_| (rng.next_u32() as usize) % (l + 1))
+                    .collect();
+                let xmax = *accepted.iter().max().unwrap();
+                let prev = h.current();
+                h.observe(&accepted);
+                let cur = h.current();
+                assert!((1..=16).contains(&cur));
+                assert!(cur >= xmax.min(16), "dropped below max accepted");
+                if xmax == prev {
+                    assert!(cur >= prev, "must not shrink on full accept");
+                } else {
+                    assert!(cur <= prev.max(xmax), "must not grow on miss");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_is_fixed() {
+        let mut f = Fixed(6);
+        f.observe(&[6, 6]);
+        f.observe(&[0]);
+        assert_eq!(f.current(), 6);
+    }
+}

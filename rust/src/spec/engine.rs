@@ -1,0 +1,464 @@
+//! The BASS speculative decoding loop (paper §3): batched drafting,
+//! batched ragged verification, per-sequence acceptance, draft-length
+//! control and PAD/SPLIT execution.
+//!
+//! One step, for a batch where every sequence `i` has its own cache length:
+//!
+//! ```text
+//!   k  = bucket(policy.current())
+//!   draft : d_1..d_k per sequence  (one fused draft artifact call)
+//!   verify: main decode over [pending, d_1..d_k]  (Q = k+1)
+//!   per sequence: stochastic accept/reject (sampling.rs) -> a_i accepted,
+//!     corrected/bonus next token; cache lengths advance by 1 + a_i
+//!     (raggedly!), draft rolls back to its accepted prefix
+//!   policy.observe(a_1..a_b)   (Algorithm 1)
+//! ```
+//!
+//! BASS-PAD runs one batched artifact padded to the bucket size; BASS-SPLIT
+//! runs per-sequence B=1 artifacts, skipping finished sequences entirely —
+//! the same compute/launch trade the paper's Figure 4 kernels make.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
+
+use crate::flops::FlopCounter;
+use crate::kv::SeqState;
+use crate::metrics::BatchMetrics;
+use crate::runtime::{Attn, Engine, Precision};
+use crate::sampling::{logp_of, spec_accept, warp_top_p, Pcg32};
+use crate::spec::draft_len::{DraftLenPolicy, Fixed, Heuristic};
+
+/// How model calls are batched (paper Fig 4b vs 4c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One batched artifact padded to the batch bucket (BASS-PAD).
+    Pad,
+    /// Per-sequence B=1 artifacts (BASS-SPLIT).
+    Split,
+}
+
+/// Draft-length policy selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Paper Algorithm 1 (testbed constants, l_limit matching buckets).
+    Heuristic,
+    /// Constant draft length (Table 6 ablation rows).
+    Fixed(usize),
+}
+
+/// Configuration of one speculative generation run.
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    pub main_model: String,
+    pub draft_model: String,
+    pub precision: Precision,
+    pub attn: Attn,
+    pub temperature: f32,
+    pub top_p: f32,
+    pub max_new_tokens: usize,
+    pub policy: Policy,
+    pub mode: ExecMode,
+    pub seed: u64,
+    /// Wall-clock budget from generation start (Fig 5); sequences still
+    /// running when it expires are left unfinished.
+    pub time_budget_secs: Option<f64>,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig {
+            main_model: "main".into(),
+            draft_model: "draft_a".into(),
+            precision: Precision::F32,
+            attn: Attn::Dense,
+            temperature: 0.2,
+            top_p: 0.95,
+            max_new_tokens: 96,
+            policy: Policy::Heuristic,
+            mode: ExecMode::Pad,
+            seed: 0,
+            time_budget_secs: None,
+        }
+    }
+}
+
+/// Result of one batched speculative generation.
+#[derive(Debug)]
+pub struct SpecResult {
+    /// Final state of every *real* (non-padding) sequence.
+    pub seqs: Vec<SeqState>,
+    pub metrics: BatchMetrics,
+    /// Total draft tokens proposed / accepted (acceptance-rate numerator
+    /// counts accepted drafts only, not corrections).
+    pub drafted: usize,
+    pub accepted: usize,
+    pub steps: usize,
+    /// Prefill wall time (reported separately; PTL clocks start after
+    /// prefill, matching the paper's incremental-decoding focus).
+    pub prefill_secs: f64,
+    pub draft_secs: f64,
+    pub verify_secs: f64,
+    pub flops: FlopCounter,
+    /// History of (draft length used, accepted counts) per step.
+    pub step_log: Vec<(usize, Vec<usize>)>,
+}
+
+/// Device cache handles, PAD (one set) or SPLIT (one set per sequence).
+enum CacheStore {
+    Pad { main: Vec<PjRtBuffer>, draft: Vec<PjRtBuffer> },
+    Split { main: Vec<Vec<PjRtBuffer>>, draft: Vec<Vec<PjRtBuffer>> },
+}
+
+pub struct SpecEngine<'a> {
+    pub engine: &'a Engine,
+    pub cfg: SpecConfig,
+}
+
+impl<'a> SpecEngine<'a> {
+    pub fn new(engine: &'a Engine, cfg: SpecConfig) -> SpecEngine<'a> {
+        SpecEngine { engine, cfg }
+    }
+
+    /// Generate completions for a batch of prompts (1 ≤ n ≤ largest batch
+    /// bucket). Prompts longer than the prefill capacity keep their tail.
+    pub fn generate(&self, prompts: &[Vec<u8>]) -> Result<SpecResult> {
+        let cfg = &self.cfg;
+        let eng = self.engine;
+        let man = &eng.manifest;
+        let b_real = prompts.len();
+        if b_real == 0 {
+            bail!("empty prompt batch");
+        }
+        let b = match cfg.mode {
+            ExecMode::Pad => man.bucket_batch(b_real)?,
+            ExecMode::Split => b_real,
+        };
+        let p_cap = man.prefill_p;
+        let main_info = man.model(&cfg.main_model)?.clone();
+        let draft_info = man.model(&cfg.draft_model)?.clone();
+        let s_max = main_info.s_max as i32;
+        let vocab = man.vocab;
+
+        // ---- prompt prep (pad rows replicate row 0) ------------------------
+        let mut tokens = vec![0i32; b * p_cap];
+        let mut plens = vec![0i32; b];
+        let mut states: Vec<SeqState> = Vec::with_capacity(b);
+        for i in 0..b {
+            let src = &prompts[i.min(b_real - 1)];
+            let tail: &[u8] = if src.len() > p_cap {
+                &src[src.len() - p_cap..]
+            } else {
+                src
+            };
+            if tail.is_empty() {
+                bail!("empty prompt");
+            }
+            for (j, &byte) in tail.iter().enumerate() {
+                tokens[i * p_cap + j] = byte as i32;
+            }
+            plens[i] = tail.len() as i32;
+            states.push(SeqState::new(tail.to_vec(), *tail.last().unwrap(),
+                                      tail.len() as i32));
+        }
+
+        // ---- prefill --------------------------------------------------------
+        let t_prefill = Instant::now();
+        let mut flops = FlopCounter::default();
+        let mut store = self.prefill_all(b, &tokens, &plens, &mut flops,
+                                         &main_info, &draft_info)?;
+        let prefill_secs = t_prefill.elapsed().as_secs_f64();
+
+        // ---- the speculative loop -------------------------------------------
+        let mut policy: Box<dyn DraftLenPolicy> = match cfg.policy {
+            Policy::Heuristic => Box::new(Heuristic::testbed()),
+            Policy::Fixed(k) => Box::new(Fixed(k)),
+        };
+        let mut rng_draft: Vec<Pcg32> = (0..b)
+            .map(|i| Pcg32::new(cfg.seed, 2 * i as u64))
+            .collect();
+        let mut rng_accept: Vec<Pcg32> = (0..b)
+            .map(|i| Pcg32::new(cfg.seed, 2 * i as u64 + 1))
+            .collect();
+
+        let t0 = Instant::now();
+        let now = |t: Instant| t.elapsed().as_secs_f64();
+        let mut drafted = 0usize;
+        let mut accepted_total = 0usize;
+        let mut steps = 0usize;
+        let mut draft_secs = 0.0f64;
+        let mut verify_secs = 0.0f64;
+        let mut step_log = Vec::new();
+
+        while states[..b_real].iter().any(|s| s.active()) {
+            if let Some(budget) = cfg.time_budget_secs {
+                if now(t0) >= budget {
+                    break;
+                }
+            }
+            let k = man.bucket_k(&cfg.draft_model, policy.current());
+
+            // -- draft ---------------------------------------------------------
+            let mut tokens_in = vec![0i32; b * 2];
+            let mut n_in = vec![1i32; b];
+            let mut dlens = vec![0i32; b];
+            let mut uniforms = vec![0f32; b * k];
+            for i in 0..b {
+                let s = &states[i];
+                tokens_in[i * 2] = s.pending_draft[0] as i32;
+                tokens_in[i * 2 + 1] = s.pending_draft[1] as i32;
+                n_in[i] = s.n_pending_draft;
+                dlens[i] = s.draft_len;
+                for j in 0..k {
+                    uniforms[i * k + j] = rng_draft[i].next_f32();
+                }
+            }
+            let td = Instant::now();
+            let (draft_tokens, qdists) = self.draft_all(
+                &mut store, b, k, &tokens_in, &n_in, &dlens, &uniforms,
+                &states)?;
+            draft_secs += now(td);
+            let ctx_d = states.iter().map(|s| s.draft_len as usize)
+                .sum::<usize>() / b;
+            flops.add_step(&draft_info, self.active_count(&states, b),
+                           k + 1, ctx_d);
+
+            // -- verify ----------------------------------------------------------
+            let q = k + 1;
+            let mut vtokens = vec![0i32; b * q];
+            let mut mlens = vec![0i32; b];
+            for i in 0..b {
+                vtokens[i * q] = states[i].pending_main as i32;
+                for j in 0..k {
+                    vtokens[i * q + 1 + j] = draft_tokens[i * k + j];
+                }
+                mlens[i] = states[i].main_len;
+            }
+            let tv = Instant::now();
+            let logits = self.verify_all(&mut store, b, q, &vtokens, &mlens,
+                                         &states)?;
+            verify_secs += now(tv);
+            let ctx_m = states.iter().map(|s| s.main_len as usize)
+                .sum::<usize>() / b;
+            flops.add_step(&main_info, self.active_count(&states, b), q,
+                           ctx_m);
+
+            // -- accept/reject per sequence (host) --------------------------------
+            let mut accepted_counts = Vec::new();
+            for i in 0..b {
+                if !states[i].active() {
+                    continue;
+                }
+                // Warp main distributions for positions 0..=k.
+                let warped: Vec<Vec<f32>> = (0..q)
+                    .map(|j| {
+                        let row = &logits[(i * q + j) * vocab
+                                          ..(i * q + j + 1) * vocab];
+                        warp_top_p(row, cfg.temperature, cfg.top_p)
+                    })
+                    .collect();
+                let p_refs: Vec<&[f32]> =
+                    warped.iter().map(|w| w.as_slice()).collect();
+                let d_tokens: Vec<usize> = (0..k)
+                    .map(|j| draft_tokens[i * k + j] as usize)
+                    .collect();
+                let q_refs: Vec<&[f32]> = (0..k)
+                    .map(|j| &qdists[(i * k + j) * vocab
+                                     ..(i * k + j + 1) * vocab])
+                    .collect();
+                let out = spec_accept(&p_refs, &d_tokens, &q_refs,
+                                      &mut rng_accept[i]);
+
+                let acc_bytes: Vec<u8> = d_tokens[..out.accepted]
+                    .iter()
+                    .map(|&t| t as u8)
+                    .collect();
+                let mut logp = logp_of(&warped[out.accepted],
+                                       out.next_token) as f64;
+                for (j, &d) in d_tokens[..out.accepted].iter().enumerate() {
+                    logp += logp_of(&warped[j], d) as f64;
+                }
+                let n_in_used = states[i].n_pending_draft;
+                let emitted = states[i].apply_step(
+                    &acc_bytes, out.next_token as u8, out.bonus, k,
+                    n_in_used, logp);
+                if i < b_real {
+                    drafted += k;
+                    accepted_total += out.accepted;
+                    accepted_counts.push(out.accepted);
+                }
+                let t_now = now(t0);
+                states[i].check_eos(man.eos, emitted, t_now);
+                states[i].check_limits(cfg.max_new_tokens, s_max,
+                                       (k + 2) as i32, t_now);
+                debug_assert!(states[i].check_invariants(s_max).is_ok());
+            }
+            steps += 1;
+            step_log.push((k, accepted_counts.clone()));
+            policy.observe(&accepted_counts);
+        }
+
+        // ---- wrap up -----------------------------------------------------------
+        let wall = now(t0);
+        states.truncate(b_real);
+        let mut metrics = BatchMetrics::from_seqs(&states, wall);
+        metrics.steps = steps;
+        metrics.acceptance_rate = if drafted > 0 {
+            accepted_total as f64 / drafted as f64
+        } else {
+            0.0
+        };
+        metrics.tokens_per_step = if steps > 0 {
+            metrics.total_tokens as f64 / steps as f64
+        } else {
+            0.0
+        };
+        Ok(SpecResult {
+            seqs: states,
+            metrics,
+            drafted,
+            accepted: accepted_total,
+            steps,
+            prefill_secs,
+            draft_secs,
+            verify_secs,
+            flops,
+            step_log,
+        })
+    }
+
+    fn active_count(&self, states: &[SeqState], b: usize) -> usize {
+        match self.cfg.mode {
+            // PAD computes every row, active or not.
+            ExecMode::Pad => b,
+            ExecMode::Split => states.iter().filter(|s| s.active()).count(),
+        }
+    }
+
+    // -- mode-dispatched model calls ---------------------------------------------
+
+    fn prefill_all(&self, b: usize, tokens: &[i32], plens: &[i32],
+                   flops: &mut FlopCounter,
+                   main_info: &crate::runtime::ModelInfo,
+                   draft_info: &crate::runtime::ModelInfo)
+                   -> Result<CacheStore> {
+        let cfg = &self.cfg;
+        let eng = self.engine;
+        let p = eng.manifest.prefill_p;
+        flops.add_prefill(main_info, b, p);
+        flops.add_prefill(draft_info, b, p);
+        match cfg.mode {
+            ExecMode::Pad => {
+                let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn,
+                                    b, tokens, plens)?;
+                let d = eng.prefill(&cfg.draft_model, cfg.precision,
+                                    cfg.attn, b, tokens, plens)?;
+                Ok(CacheStore::Pad { main: m.caches, draft: d.caches })
+            }
+            ExecMode::Split => {
+                let mut main = Vec::with_capacity(b);
+                let mut draft = Vec::with_capacity(b);
+                for i in 0..b {
+                    let row = &tokens[i * p..(i + 1) * p];
+                    let m = eng.prefill(&cfg.main_model, cfg.precision,
+                                        cfg.attn, 1, row, &plens[i..=i])?;
+                    let d = eng.prefill(&cfg.draft_model, cfg.precision,
+                                        cfg.attn, 1, row, &plens[i..=i])?;
+                    main.push(m.caches);
+                    draft.push(d.caches);
+                }
+                Ok(CacheStore::Split { main, draft })
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn draft_all(&self, store: &mut CacheStore, b: usize, k: usize,
+                 tokens_in: &[i32], n_in: &[i32], dlens: &[i32],
+                 uniforms: &[f32], states: &[SeqState])
+                 -> Result<(Vec<i32>, Vec<f32>)> {
+        let cfg = &self.cfg;
+        let eng = self.engine;
+        let vocab = eng.manifest.vocab;
+        match store {
+            CacheStore::Pad { draft, .. } => {
+                let caches = std::mem::take(draft);
+                let out = eng.draft(&cfg.draft_model, cfg.precision,
+                                    cfg.attn, b, k, tokens_in, n_in, dlens,
+                                    uniforms, cfg.temperature, cfg.top_p,
+                                    caches)?;
+                *draft = out.caches;
+                Ok((out.tokens, out.qdists))
+            }
+            CacheStore::Split { draft, .. } => {
+                let mut toks = vec![0i32; b * k];
+                let mut qd = vec![0f32; b * k * vocab];
+                for i in 0..b {
+                    if !states[i].active() {
+                        continue; // SPLIT skips finished sequences
+                    }
+                    let caches = std::mem::take(&mut draft[i]);
+                    let out = eng.draft(
+                        &cfg.draft_model, cfg.precision, cfg.attn, 1, k,
+                        &tokens_in[i * 2..i * 2 + 2], &n_in[i..=i],
+                        &dlens[i..=i], &uniforms[i * k..(i + 1) * k],
+                        cfg.temperature, cfg.top_p, caches)?;
+                    draft[i] = out.caches;
+                    toks[i * k..(i + 1) * k].copy_from_slice(&out.tokens);
+                    qd[i * k * vocab..(i + 1) * k * vocab]
+                        .copy_from_slice(&out.qdists);
+                }
+                Ok((toks, qd))
+            }
+        }
+    }
+
+    fn verify_all(&self, store: &mut CacheStore, b: usize, q: usize,
+                  vtokens: &[i32], mlens: &[i32], states: &[SeqState])
+                  -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let eng = self.engine;
+        let vocab = eng.manifest.vocab;
+        match store {
+            CacheStore::Pad { main, .. } => {
+                let caches = std::mem::take(main);
+                let out = eng.decode(&cfg.main_model, cfg.precision,
+                                     cfg.attn, b, q, vtokens, mlens,
+                                     caches)?;
+                *main = out.caches;
+                Ok(out.logits)
+            }
+            CacheStore::Split { main, .. } => {
+                let mut logits = vec![0f32; b * q * vocab];
+                for i in 0..b {
+                    if !states[i].active() {
+                        continue;
+                    }
+                    let caches = std::mem::take(&mut main[i]);
+                    let out = eng.decode(
+                        &cfg.main_model, cfg.precision, cfg.attn, 1, q,
+                        &vtokens[i * q..(i + 1) * q], &mlens[i..=i],
+                        caches)?;
+                    main[i] = out.caches;
+                    logits[i * q * vocab..(i + 1) * q * vocab]
+                        .copy_from_slice(&out.logits);
+                }
+                Ok(logits)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_is_sane() {
+        let c = SpecConfig::default();
+        assert_eq!(c.main_model, "main");
+        assert_eq!(c.mode, ExecMode::Pad);
+        assert!(matches!(c.policy, Policy::Heuristic));
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper's contribution: batched speculative sampling (§3).
+//!
+//! * [`draft_len`] — Algorithm 1 and fixed-length baselines.
+//! * [`engine`] — the BASS decode loop with PAD/SPLIT execution.
+
+pub mod draft_len;
+mod engine;
+
+pub use draft_len::{DraftLenPolicy, Fixed, Heuristic};
+pub use engine::{ExecMode, Policy, SpecConfig, SpecEngine, SpecResult};

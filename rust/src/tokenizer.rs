@@ -1,0 +1,40 @@
+//! Byte-level tokenizer (vocab = 256, EOS = 0x00) — matching the corpus
+//! and models trained by `python/compile/`.
+
+/// Encode text to token bytes (latin-1 semantics: non-latin1 chars are
+/// replaced by '?', matching the corpus generator's charset).
+pub fn encode(text: &str) -> Vec<u8> {
+    text.chars()
+        .map(|c| if (c as u32) < 256 { c as u8 } else { b'?' })
+        .collect()
+}
+
+/// Decode token bytes back to text (latin-1).
+pub fn decode(tokens: &[u8]) -> String {
+    tokens.iter().map(|&b| b as char).collect()
+}
+
+/// The end-of-sequence byte the corpus uses between samples.
+pub const EOS: u8 = 0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "def add_7(x):\n    return x + 7\n";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn latin1_roundtrip() {
+        let s = "café";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn non_latin1_replaced() {
+        assert_eq!(decode(&encode("a☃b")), "a?b");
+    }
+}

@@ -1,0 +1,116 @@
+//! Coordinator + TCP server integration tests: request queueing, dynamic
+//! co-batching, fan-out slicing and the line protocol, over real artifacts.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bass::bench_util::{artifacts_available, artifacts_root};
+use bass::coordinator::batcher::BatcherConfig;
+use bass::coordinator::{server, Coordinator, CoordinatorConfig, Request};
+use bass::runtime::json::Json;
+use bass::spec::SpecConfig;
+use bass::tokenizer;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn coordinator(max_batch: usize, window_ms: u64) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        artifacts_root: artifacts_root(),
+        spec: SpecConfig { max_new_tokens: 12, ..SpecConfig::default() },
+        batcher: BatcherConfig {
+            max_batch,
+            window: Duration::from_millis(window_ms),
+        },
+        prewarm: false, // keep tests fast; lazy compiles are fine here
+    })
+    .expect("coordinator start")
+}
+
+fn code_request(n: usize) -> Request {
+    Request {
+        prompt: tokenizer::encode(
+            "def add_7(x):\n    # adds 7 to x\n    return"),
+        n_seqs: n,
+        max_new_tokens: Some(12),
+        temperature: None,
+        top_p: None,
+    }
+}
+
+#[test]
+fn single_request_roundtrip() {
+    require_artifacts!();
+    let coord = coordinator(4, 1);
+    let resp = coord.generate(code_request(2)).unwrap();
+    assert_eq!(resp.seqs.len(), 2);
+    assert!(resp.seqs[0].n_tokens > 0);
+    assert!(resp.batch_secs > 0.0);
+}
+
+#[test]
+fn concurrent_requests_are_cobatched() {
+    require_artifacts!();
+    let coord = Arc::new(coordinator(8, 30));
+    // Warm the engine so the co-batch window isn't dwarfed by compiles.
+    let _ = coord.generate(code_request(1));
+    let rx1 = coord.submit(code_request(2));
+    let rx2 = coord.submit(code_request(2));
+    let r1 = rx1.recv().unwrap().unwrap();
+    let r2 = rx2.recv().unwrap().unwrap();
+    assert_eq!(r1.seqs.len(), 2);
+    assert_eq!(r2.seqs.len(), 2);
+    // Both rode the same engine batch (2 + 2 sequences).
+    assert_eq!(r1.batch_size, 4);
+    assert_eq!(r2.batch_size, 4);
+}
+
+#[test]
+fn fanout_clamped_to_max_batch() {
+    require_artifacts!();
+    let coord = coordinator(4, 1);
+    let resp = coord.generate(code_request(9)).unwrap();
+    assert_eq!(resp.seqs.len(), 4);
+}
+
+#[test]
+fn tcp_server_line_protocol() {
+    require_artifacts!();
+    let coord = Arc::new(coordinator(4, 1));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv_coord = coord.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve(srv_coord, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(
+            b"{\"prompt\": \"def add_7(x):\\n    # adds 7 to x\\n    \
+              return\", \"n\": 2, \"max_new_tokens\": 8}\n")
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(j.get("seqs").unwrap().as_arr().unwrap().len(), 2);
+
+    // Malformed request gets a structured error, connection stays open.
+    stream.write_all(b"not json\n").unwrap();
+    let mut line2 = String::new();
+    reader.read_line(&mut line2).unwrap();
+    let j2 = Json::parse(&line2).unwrap();
+    assert_eq!(j2.get("ok").unwrap(), &Json::Bool(false));
+}

@@ -1,0 +1,301 @@
+//! Integration tests over real artifacts (require `make artifacts`).
+//!
+//! These exercise the full stack: HLO-text load → PJRT compile → device-
+//! resident cache feedback → speculative loop → metrics. They are skipped
+//! (with a loud message) when artifacts are absent so `cargo test` stays
+//! runnable on a fresh checkout.
+
+use bass::baseline::{RdConfig, RegularDecoder};
+use bass::bench_util::{artifacts_available, artifacts_root};
+use bass::kv::FinishReason;
+use bass::runtime::{Attn, Engine, Precision};
+use bass::spec::{ExecMode, Policy, SpecConfig, SpecEngine};
+use bass::tokenizer;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn engine() -> Engine {
+    Engine::load(&artifacts_root()).expect("engine load")
+}
+
+fn code_prompt() -> Vec<u8> {
+    tokenizer::encode("def add_7(x):\n    # adds 7 to x\n    return")
+}
+
+fn small_cfg() -> SpecConfig {
+    SpecConfig { max_new_tokens: 16, ..SpecConfig::default() }
+}
+
+#[test]
+fn engine_loads_manifest_and_weights() {
+    require_artifacts!();
+    let e = engine();
+    assert_eq!(e.manifest.vocab, 256);
+    assert!(e.manifest.models.contains_key("main"));
+    assert!(e.manifest.models.contains_key("draft_a"));
+    let w = e.weights("main", Precision::F32).unwrap();
+    assert_eq!(w.len(), 52); // 4 blocks × 12 + embed/pos + ln_f g/b
+    let w8 = e.weights("main", Precision::Int8).unwrap();
+    assert!(w8.len() > w.len()); // quantized leaves carry scales
+}
+
+#[test]
+fn prefill_logits_are_finite_and_prompt_dependent() {
+    require_artifacts!();
+    let e = engine();
+    let p = e.manifest.prefill_p;
+    let mk = |text: &str| {
+        let enc = tokenizer::encode(text);
+        let mut toks = vec![0i32; p];
+        for (i, &b) in enc.iter().enumerate() {
+            toks[i] = b as i32;
+        }
+        (toks, enc.len() as i32)
+    };
+    let (t1, l1) = mk("def add_7(x):");
+    let (t2, l2) = mk("article: alice");
+    let o1 = e.prefill("main", Precision::F32, Attn::Dense, 1, &t1, &[l1])
+        .unwrap();
+    let o2 = e.prefill("main", Precision::F32, Attn::Dense, 1, &t2, &[l2])
+        .unwrap();
+    assert_eq!(o1.logits.len(), 256);
+    assert!(o1.logits.iter().all(|x| x.is_finite()));
+    assert_ne!(o1.logits, o2.logits);
+}
+
+#[test]
+fn decode_cache_feedback_changes_distribution() {
+    require_artifacts!();
+    let e = engine();
+    let p = e.manifest.prefill_p;
+    let mut toks = vec![0i32; p];
+    for (i, &b) in code_prompt().iter().enumerate() {
+        toks[i] = b as i32;
+    }
+    let plen = code_prompt().len() as i32;
+    let out = e.prefill("main", Precision::F32, Attn::Dense, 1, &toks,
+                        &[plen]).unwrap();
+    // Step twice with the same input token at advancing offsets; the
+    // logits must differ because the cache grew.
+    let s1 = e.decode("main", Precision::F32, Attn::Dense, 1, 1, &[32],
+                      &[plen - 1], out.caches).unwrap();
+    let s2 = e.decode("main", Precision::F32, Attn::Dense, 1, 1, &[32],
+                      &[plen], s1.caches).unwrap();
+    assert_ne!(s1.logits, s2.logits);
+}
+
+#[test]
+fn pallas_and_dense_artifacts_agree() {
+    require_artifacts!();
+    let e = engine();
+    let p = e.manifest.prefill_p;
+    let mut toks = vec![0i32; p];
+    for (i, &b) in code_prompt().iter().enumerate() {
+        toks[i] = b as i32;
+    }
+    let plen = code_prompt().len() as i32;
+    // Fresh prefill per variant (decode donates its caches).
+    let run = |attn: Attn| {
+        let pre = e.prefill("main", Precision::F32, Attn::Dense, 1, &toks,
+                            &[plen]).unwrap();
+        let tokens = [32i32, 97, 98, 99, 100];
+        e.decode("main", Precision::F32, attn, 1, 5, &tokens, &[plen - 1],
+                 pre.caches).unwrap().logits
+    };
+    let dense = run(Attn::Dense);
+    let pallas = run(Attn::Pallas);
+    assert_eq!(dense.len(), pallas.len());
+    for (a, b) in dense.iter().zip(&pallas) {
+        assert!((a - b).abs() < 1e-3, "pallas/dense divergence: {a} vs {b}");
+    }
+}
+
+#[test]
+fn spec_generates_and_accepts_in_distribution() {
+    require_artifacts!();
+    let e = engine();
+    let prompts = vec![code_prompt(); 2];
+    let res = SpecEngine::new(&e, small_cfg()).generate(&prompts).unwrap();
+    assert_eq!(res.seqs.len(), 2);
+    for s in &res.seqs {
+        assert!(s.tokens_generated() > 0);
+        assert_ne!(s.finish, FinishReason::Running);
+    }
+    // In-distribution prompts must get a healthy acceptance rate — this is
+    // the paper's core operating regime (~78-88%).
+    assert!(res.metrics.acceptance_rate > 0.5,
+            "acceptance {:.2} too low", res.metrics.acceptance_rate);
+    assert!(res.metrics.tokens_per_step > 1.0);
+    assert!(res.drafted >= res.accepted);
+}
+
+#[test]
+fn spec_is_deterministic_for_fixed_seed() {
+    require_artifacts!();
+    let e = engine();
+    let prompts = vec![code_prompt(); 2];
+    let r1 = SpecEngine::new(&e, small_cfg()).generate(&prompts).unwrap();
+    let r2 = SpecEngine::new(&e, small_cfg()).generate(&prompts).unwrap();
+    for (a, b) in r1.seqs.iter().zip(&r2.seqs) {
+        assert_eq!(a.generated, b.generated);
+    }
+    let r3 = SpecEngine::new(&e, SpecConfig { seed: 7, ..small_cfg() })
+        .generate(&prompts).unwrap();
+    // Different seed should (overwhelmingly) change at least one output.
+    assert!(r1.seqs.iter().zip(&r3.seqs)
+            .any(|(a, b)| a.generated != b.generated));
+}
+
+#[test]
+fn pad_and_split_produce_identical_streams() {
+    require_artifacts!();
+    // PAD and SPLIT are different *executions* of the same math with the
+    // same RNG streams: outputs must match exactly (Fig 4b ≡ 4c).
+    let e = engine();
+    let prompts = vec![code_prompt(); 2];
+    let pad = SpecEngine::new(&e, small_cfg()).generate(&prompts).unwrap();
+    let split = SpecEngine::new(&e, SpecConfig {
+        mode: ExecMode::Split,
+        ..small_cfg()
+    }).generate(&prompts).unwrap();
+    for (a, b) in pad.seqs.iter().zip(&split.seqs) {
+        assert_eq!(a.generated, b.generated,
+                   "PAD vs SPLIT divergence");
+    }
+}
+
+#[test]
+fn batch_padding_rows_do_not_affect_real_rows() {
+    require_artifacts!();
+    // 3 prompts ride in the B=4 bucket; results must equal the same
+    // prompts in a B=4 batch position-for-position (independence across
+    // the batch — the paper's §3 claim).
+    let e = engine();
+    let p = code_prompt();
+    let r3 = SpecEngine::new(&e, small_cfg())
+        .generate(&[p.clone(), p.clone(), p.clone()]).unwrap();
+    let r4 = SpecEngine::new(&e, small_cfg())
+        .generate(&[p.clone(), p.clone(), p.clone(), p.clone()]).unwrap();
+    for i in 0..3 {
+        assert_eq!(r3.seqs[i].generated, r4.seqs[i].generated);
+    }
+}
+
+#[test]
+fn int8_runs_and_roughly_tracks_f32() {
+    require_artifacts!();
+    let e = engine();
+    let prompts = vec![code_prompt(); 2];
+    let res = SpecEngine::new(&e, SpecConfig {
+        precision: Precision::Int8,
+        ..small_cfg()
+    }).generate(&prompts).unwrap();
+    assert!(res.seqs[0].tokens_generated() > 0);
+    assert!(res.metrics.acceptance_rate > 0.3);
+}
+
+#[test]
+fn fixed_draft_policy_uses_constant_length() {
+    require_artifacts!();
+    let e = engine();
+    let res = SpecEngine::new(&e, SpecConfig {
+        policy: Policy::Fixed(4),
+        ..small_cfg()
+    }).generate(&[code_prompt()]).unwrap();
+    assert!(res.step_log.iter().all(|(k, _)| *k == 4));
+}
+
+#[test]
+fn heuristic_draft_length_adapts() {
+    require_artifacts!();
+    let e = engine();
+    let res = SpecEngine::new(&e, SpecConfig {
+        max_new_tokens: 48,
+        ..SpecConfig::default()
+    }).generate(&[code_prompt()]).unwrap();
+    let lens: Vec<usize> = res.step_log.iter().map(|(k, _)| *k).collect();
+    assert!(!lens.is_empty());
+    // Algorithm 1 must stay within the exported bucket range.
+    assert!(lens.iter().all(|&k| (1..=16).contains(&k)));
+}
+
+#[test]
+fn rd_baseline_generates() {
+    require_artifacts!();
+    let e = engine();
+    let rd = RegularDecoder::new(&e, RdConfig {
+        max_new_tokens: 12,
+        ..RdConfig::default()
+    });
+    let res = rd.generate(&[code_prompt(), code_prompt()]).unwrap();
+    assert_eq!(res.seqs.len(), 2);
+    assert!(res.seqs[0].tokens_generated() > 0);
+    assert!(res.metrics.ptl_mean > 0.0);
+    assert!(res.metrics.ptl_first <= res.metrics.ptl_last);
+}
+
+#[test]
+fn time_budget_stops_generation() {
+    require_artifacts!();
+    let e = engine();
+    // Warm the executables so the budget measures steady state.
+    let _ = SpecEngine::new(&e, small_cfg()).generate(&[code_prompt()]);
+    let res = SpecEngine::new(&e, SpecConfig {
+        max_new_tokens: 100_000,
+        time_budget_secs: Some(0.25),
+        temperature: 2.0, // keep it rambling (avoid instant EOS)
+        ..SpecConfig::default()
+    }).generate(&[code_prompt()]).unwrap();
+    // The budget is checked at step granularity; the first run may also
+    // lazily compile larger-K artifacts mid-loop, so allow generous slack —
+    // the point is that generation stops long before 100k tokens would.
+    assert!(res.metrics.wall_secs < 30.0,
+            "budget ignored: ran {:.1}s", res.metrics.wall_secs);
+    assert!(res.seqs[0].tokens_generated() < 10_000);
+}
+
+#[test]
+fn capacity_limit_finishes_sequences() {
+    require_artifacts!();
+    let e = engine();
+    let res = SpecEngine::new(&e, SpecConfig {
+        max_new_tokens: 100_000,
+        temperature: 3.0,
+        top_p: 1.0,
+        ..SpecConfig::default()
+    }).generate(&[tokenizer::encode("article: ")]).unwrap();
+    let s = &res.seqs[0];
+    assert_ne!(s.finish, FinishReason::Running);
+    // Either it rambled to capacity or found an EOS byte; both are valid,
+    // but the state must still satisfy the invariants.
+    s.check_invariants(e.manifest.model("main").unwrap().s_max as i32)
+        .unwrap();
+}
+
+#[test]
+fn eval_tasks_load_and_check() {
+    require_artifacts!();
+    let root = artifacts_root();
+    let code = bass::eval::load_code_tasks(&root).unwrap();
+    assert!(code.len() >= 32);
+    assert!(code[0].prompt.contains("def "));
+    let summ = bass::eval::load_summ_tasks(&root).unwrap();
+    assert!(summ.len() >= 32);
+    assert!(summ[0].prompt.contains("summary:"));
+}
+
+#[test]
+fn calibration_returns_plausible_flops() {
+    require_artifacts!();
+    let e = engine();
+    let peak = e.calibrate_peak_flops(3).unwrap();
+    assert!(peak > 1e9, "peak {peak:.2e} implausibly low");
+    assert!(peak < 1e13, "peak {peak:.2e} implausibly high");
+}
