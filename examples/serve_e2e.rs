@@ -1,10 +1,12 @@
 //! **End-to-end validation driver** (DESIGN.md / EXPERIMENTS.md §E2E):
 //! bring up the full serving stack — PJRT engine, speculative BASS decoder,
-//! dynamic batcher, TCP server — and push a mixed real workload through it:
-//! code-completion requests with fan-out (same-prompt batches) interleaved
-//! with summarization requests (distinct-prompt batching). Reports
-//! end-to-end latency percentiles, throughput, acceptance rate and task
-//! accuracy, and writes `artifacts/results/serve_e2e.json`.
+//! continuous batcher (step-boundary admission, immediate retirement), TCP
+//! server — and push a mixed real workload through it: code-completion
+//! requests with fan-out (same-prompt batches) interleaved with
+//! summarization requests (distinct-prompt batching), plus a streaming
+//! request that reads per-step event lines. Reports end-to-end latency
+//! percentiles, throughput, acceptance rate and task accuracy, and writes
+//! `artifacts/results/serve_e2e.json`.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_e2e -- [n_rounds]
@@ -124,6 +126,14 @@ fn main() -> anyhow::Result<()> {
                  s2_resp.e2e_ms, stats.queue_ms.percentile(0.5));
     }
 
+    // Streaming demo: per-step event lines before the final response.
+    {
+        let t = &code_tasks[0];
+        let (deltas, text) = stream_request(addr, &t.prompt, 24)?;
+        println!("\nstreaming demo: {} step events, {} chars",
+                 deltas, text.len());
+    }
+
     let wall = t_run.elapsed().as_secs_f64();
     let rouge_mean =
         stats.rouge.iter().sum::<f64>() / stats.rouge.len().max(1) as f64;
@@ -154,6 +164,39 @@ fn main() -> anyhow::Result<()> {
         ("summ_rouge2", rouge_mean.into()),
     ]))?;
     Ok(())
+}
+
+/// One streaming request: count event lines, verify the deltas reassemble
+/// the final text, and return (n_events, final_text).
+fn stream_request(addr: std::net::SocketAddr, prompt: &str,
+                  max_new: usize) -> anyhow::Result<(usize, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = Json::obj(vec![
+        ("prompt", prompt.into()),
+        ("max_new_tokens", max_new.into()),
+        ("stream", Json::Bool(true)),
+    ]);
+    stream.write_all(req.to_string_pretty().replace('\n', " ").as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut assembled = String::new();
+    let mut events = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let j = Json::parse(&line)?;
+        if j.opt("event").is_some() {
+            events += 1;
+            assembled.push_str(j.get("delta")?.as_str()?);
+            continue;
+        }
+        anyhow::ensure!(j.get("ok")? == &Json::Bool(true), "server: {line}");
+        let text = j.get("seqs")?.as_arr()?[0]
+            .get("text")?.as_str()?.to_string();
+        anyhow::ensure!(assembled == text,
+                        "streamed deltas disagree with final text");
+        return Ok((events, text));
+    }
 }
 
 struct RespStats {

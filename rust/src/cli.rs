@@ -59,6 +59,15 @@ impl Args {
         }
     }
 
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
     pub fn f32_flag(&self, name: &str, default: f32) -> Result<f32> {
         match self.flag(name) {
             None => Ok(default),
@@ -92,6 +101,8 @@ mod tests {
         assert_eq!(a.subcommand, "serve");
         assert_eq!(a.flag("port"), Some("8000"));
         assert_eq!(a.usize_flag("batch", 1).unwrap(), 8);
+        assert_eq!(a.u64_flag("port", 1).unwrap(), 8000);
+        assert_eq!(a.u64_flag("missing", 9).unwrap(), 9);
         assert!(a.switch("verbose"));
         assert!(!a.switch("quiet"));
         assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
@@ -104,6 +115,8 @@ mod tests {
         assert!(parse(&["run", "stray"]).is_err());
         assert!(parse(&["run", "--n", "abc"]).unwrap()
                 .usize_flag("n", 0).is_err());
+        assert!(parse(&["run", "--seed", "-3"]).unwrap()
+                .u64_flag("seed", 0).is_err());
     }
 
     #[test]

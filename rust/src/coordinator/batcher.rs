@@ -1,7 +1,12 @@
-//! Dynamic batching policy: group queued requests into one speculative
-//! batch, the way the paper's serving scenario batches multiple
-//! recommendations for one prompt *and* unrelated prompts together (§1,
-//! footnote 5).
+//! Dynamic batching policy: decide which queued requests to admit into
+//! the speculative batch's **free slots** at each step boundary — the
+//! continuous-batching generalization of the paper's serving scenario
+//! (§1, footnote 5), where multiple recommendations for one prompt *and*
+//! unrelated prompts ride the same engine batch.
+//!
+//! Unlike a flush-the-queue batcher, `plan_batch` plans against however
+//! many slots the running batch has free right now; the coordinator calls
+//! it again at the next step boundary as sequences retire.
 
 use std::time::{Duration, Instant};
 
@@ -30,41 +35,57 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Decide how many queued requests to admit into the next batch.
-///
-/// Greedy in arrival order: admit requests while the sequence budget
-/// holds; always admit at least the head request (clamping its fan-out to
-/// the cap). Returns the number of requests to take and the total
-/// sequences.
-pub fn plan_batch(queue: &[Pending], cfg: &BatcherConfig)
-                  -> (usize, usize) {
-    if queue.is_empty() {
+/// Decide how many queued requests to admit into `free_slots` open batch
+/// slots. Greedy in arrival order; a request's fan-out is admitted
+/// atomically (its sequences must land in the same batch generation so
+/// one response can carry them all). The head request is special-cased:
+/// if its fan-out exceeds even an *empty* batch (`free_slots ==
+/// max_batch`), it is admitted clamped to the cap rather than starving;
+/// against a merely *partially full* batch it waits for more slots to
+/// drain. Returns (requests to take, total sequences they admit).
+pub fn plan_batch(queue: &[Pending], free_slots: usize,
+                  cfg: &BatcherConfig) -> (usize, usize) {
+    let free = free_slots.min(cfg.max_batch);
+    if queue.is_empty() || free == 0 {
         return (0, 0);
     }
     let mut taken = 0usize;
     let mut seqs = 0usize;
     for p in queue {
         let n = p.n_seqs.max(1);
-        if taken > 0 && seqs + n > cfg.max_batch {
+        if taken == 0 && n > free {
+            // Oversized head: only an empty batch may clamp-admit it;
+            // otherwise keep its slot claim and let the batch drain.
+            if free == cfg.max_batch {
+                return (1, free);
+            }
+            return (0, 0);
+        }
+        if seqs + n > free {
             break;
         }
         seqs += n;
         taken += 1;
-        if seqs >= cfg.max_batch {
+        if seqs == free {
             break;
         }
     }
-    (taken, seqs.min(cfg.max_batch))
+    (taken, seqs)
 }
 
-/// Should the worker run now or keep waiting for co-batchable requests?
-pub fn should_flush(queue: &[Pending], cfg: &BatcherConfig,
-                    now: Instant) -> bool {
+/// Should the coordinator admit now, or keep the free slots open a little
+/// longer for co-batchable arrivals? Admit when the queue can already fill
+/// every free slot, or once the head request has waited out the window.
+pub fn should_flush(queue: &[Pending], free_slots: usize,
+                    cfg: &BatcherConfig, now: Instant) -> bool {
+    if free_slots == 0 {
+        return false;
+    }
     match queue.first() {
         None => false,
         Some(head) => {
             let seqs: usize = queue.iter().map(|p| p.n_seqs.max(1)).sum();
-            seqs >= cfg.max_batch
+            seqs >= free_slots.min(cfg.max_batch)
                 || now.duration_since(head.enqueued) >= cfg.window
         }
     }
@@ -82,26 +103,57 @@ mod tests {
     fn admits_while_budget_holds() {
         let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
         let q = vec![pend(1, 2), pend(2, 4), pend(3, 4)];
-        let (taken, seqs) = plan_batch(&q, &cfg);
+        let (taken, seqs) = plan_batch(&q, 8, &cfg);
         assert_eq!(taken, 2);
         assert_eq!(seqs, 6);
     }
 
     #[test]
-    fn head_always_admitted_even_if_oversized() {
-        let cfg = BatcherConfig { max_batch: 4, ..Default::default() };
-        let (taken, seqs) = plan_batch(&[pend(1, 9)], &cfg);
+    fn plans_against_free_slots_not_the_cap() {
+        // Batch half-full (3 of 8 slots free): only what fits is taken.
+        let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
+        let q = vec![pend(1, 2), pend(2, 2), pend(3, 1)];
+        let (taken, seqs) = plan_batch(&q, 3, &cfg);
         assert_eq!(taken, 1);
-        assert_eq!(seqs, 4); // clamped to cap
+        assert_eq!(seqs, 2);
+        // A later request never jumps an earlier one that doesn't fit.
+        let q2 = vec![pend(1, 3), pend(2, 1)];
+        let (taken, seqs) = plan_batch(&q2, 2, &cfg);
+        assert_eq!((taken, seqs), (0, 0));
+    }
+
+    #[test]
+    fn partial_batch_plus_queued_fanout_fills_exactly() {
+        let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
+        let q = vec![pend(1, 2), pend(2, 2), pend(3, 2)];
+        let (taken, seqs) = plan_batch(&q, 4, &cfg);
+        assert_eq!(taken, 2);
+        assert_eq!(seqs, 4);
+    }
+
+    #[test]
+    fn head_clamped_only_into_an_empty_batch() {
+        let cfg = BatcherConfig { max_batch: 4, ..Default::default() };
+        // Empty batch: oversized head admits clamped to the cap.
+        assert_eq!(plan_batch(&[pend(1, 9)], 4, &cfg), (1, 4));
+        // Partially full batch: the oversized head waits for a full drain.
+        assert_eq!(plan_batch(&[pend(1, 9)], 3, &cfg), (0, 0));
+        assert_eq!(plan_batch(&[pend(1, 9), pend(2, 1)], 3, &cfg), (0, 0));
     }
 
     #[test]
     fn exact_fill_stops() {
         let cfg = BatcherConfig { max_batch: 4, ..Default::default() };
         let q = vec![pend(1, 2), pend(2, 2), pend(3, 1)];
-        let (taken, seqs) = plan_batch(&q, &cfg);
+        let (taken, seqs) = plan_batch(&q, 4, &cfg);
         assert_eq!(taken, 2);
         assert_eq!(seqs, 4);
+    }
+
+    #[test]
+    fn no_free_slots_admits_nothing() {
+        let cfg = BatcherConfig { max_batch: 4, ..Default::default() };
+        assert_eq!(plan_batch(&[pend(1, 1)], 0, &cfg), (0, 0));
     }
 
     #[test]
@@ -111,19 +163,33 @@ mod tests {
             window: Duration::from_millis(10),
         };
         let now = Instant::now();
-        assert!(!should_flush(&[], &cfg, now));
+        assert!(!should_flush(&[], 4, &cfg, now));
         let young = vec![pend(1, 1)];
-        assert!(!should_flush(&young, &cfg, now));
-        assert!(should_flush(&young, &cfg,
+        assert!(!should_flush(&young, 4, &cfg, now));
+        assert!(should_flush(&young, 4, &cfg,
                              now + Duration::from_millis(11)));
         let full = vec![pend(1, 2), pend(2, 2)];
-        assert!(should_flush(&full, &cfg, now));
+        assert!(should_flush(&full, 4, &cfg, now));
+    }
+
+    #[test]
+    fn flush_considers_free_slots() {
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            window: Duration::from_millis(10),
+        };
+        let now = Instant::now();
+        // Two queued seqs fill the two free slots: admit immediately.
+        assert!(should_flush(&[pend(1, 2)], 2, &cfg, now));
+        // Same queue against a fully-busy batch: nothing to do.
+        assert!(!should_flush(&[pend(1, 2)], 0, &cfg,
+                              now + Duration::from_millis(11)));
     }
 
     #[test]
     fn zero_fanout_counts_as_one() {
         let cfg = BatcherConfig::default();
-        let (taken, seqs) = plan_batch(&[pend(1, 0)], &cfg);
+        let (taken, seqs) = plan_batch(&[pend(1, 0)], 16, &cfg);
         assert_eq!((taken, seqs), (1, 1));
     }
 }

@@ -1,23 +1,42 @@
-//! Layer-3 serving coordinator: request queue → dynamic batcher → the
-//! speculative engine on a dedicated worker thread → responses.
+//! Layer-3 serving coordinator: request queue → free-slot batcher → a
+//! **continuously batched** speculative engine on a dedicated worker
+//! thread → responses.
 //!
-//! The engine (PJRT handles) is **not** `Send`, so it is constructed inside
-//! the worker thread and owns the device for the process lifetime — the
-//! same single-engine-loop architecture vLLM's scheduler uses. Requests and
-//! responses cross threads over mpsc channels; the TCP front-end
-//! ([`server`]) is just a thin line-protocol adapter.
+//! The worker owns one long-lived [`SpecBatch`] and drives it step by
+//! step. At every step boundary it (a) admits queued requests into free
+//! batch slots ([`batcher::plan_batch`] plans against *free slots*, not an
+//! empty batch) and (b) retires sequences the moment they finish,
+//! answering each request as soon as *its* sequences are done — no
+//! head-of-line blocking behind co-batched long requests. In SPLIT
+//! execution mode admission happens mid-flight into a running batch; in
+//! PAD mode the fused cache cannot take a new row mid-run, so admission
+//! waits for the batch to drain (legacy batch-to-completion behavior).
+//!
+//! The engine (PJRT handles) is **not** `Send`, so it is constructed
+//! inside the worker thread and owns the device for the process lifetime —
+//! the same single-engine-loop architecture vLLM's scheduler uses.
+//! Requests and responses cross threads over mpsc channels; the TCP
+//! front-end ([`server`]) is just a thin line-protocol adapter that can
+//! also relay per-step [`StepEvent`]s as a streaming response.
+//!
+//! Sampling parameters (temperature / top-p) are a property of the server's
+//! [`SpecConfig`]: sequences from many requests share fused device calls,
+//! so per-request overrides are no longer honored (per-request
+//! `max_new_tokens` still is — limits are enforced per slot).
 
 pub mod batcher;
 pub mod server;
 
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::kv::FinishReason;
 use crate::runtime::Engine;
-use crate::spec::{SpecConfig, SpecEngine};
+use crate::spec::{SeqId, SpecBatch, SpecConfig};
 use batcher::{plan_batch, should_flush, BatcherConfig, Pending};
 
 /// One generation request.
@@ -27,8 +46,20 @@ pub struct Request {
     /// Fan-out: number of sequences to sample for this prompt.
     pub n_seqs: usize,
     pub max_new_tokens: Option<usize>,
+    /// Accepted for wire compatibility; sampling params are server-level
+    /// under continuous batching (see module docs).
     pub temperature: Option<f32>,
     pub top_p: Option<f32>,
+    /// Per-request RNG seed. When set, each fan-out sequence's RNG
+    /// stream is pinned to its fan-out index, so {prompt, seed}
+    /// reproduces the same output regardless of server traffic history —
+    /// provided the per-step draft lengths match, i.e. the server runs
+    /// `Policy::Fixed` (under the adaptive heuristic, k is batch-global
+    /// Algorithm-1 state fed by co-batched traffic). Defaults to the
+    /// server's spec seed with traffic-dependent streams.
+    pub seed: Option<u64>,
+    /// Relay per-step [`StepEvent`]s before the final response.
+    pub stream: bool,
 }
 
 /// One generated sequence.
@@ -44,16 +75,37 @@ pub struct GenSeq {
 #[derive(Debug)]
 pub struct Response {
     pub seqs: Vec<GenSeq>,
-    /// Engine wall seconds spent on the batch this request rode in.
+    /// Wall seconds from this request's admission into the engine batch
+    /// to its last sequence retiring.
     pub batch_secs: f64,
-    /// Sequences in that engine batch (yours + co-batched).
+    /// Most sequences that shared the engine batch with this request at
+    /// any step (yours + co-batched).
     pub batch_size: usize,
-    /// Queue wait before the batch started.
+    /// Queue wait before admission (not before the whole batch finished).
     pub queue_secs: f64,
 }
 
+/// One per-step progress notification for a streaming request.
+#[derive(Debug, Clone)]
+pub struct StepEvent {
+    /// Index of the sequence within the request's fan-out.
+    pub seq: usize,
+    /// Text decoded from the bytes this sequence emitted this step.
+    pub text_delta: String,
+    /// This sequence finished on this step.
+    pub done: bool,
+}
+
+/// What a submitted request's receiver yields: zero or more step events
+/// (streaming requests only), then exactly one `Done`.
+#[derive(Debug)]
+pub enum Reply {
+    Step(StepEvent),
+    Done(Result<Response>),
+}
+
 enum Msg {
-    Job(Request, Sender<Result<Response>>),
+    Job(Request, Sender<Reply>),
     Shutdown,
 }
 
@@ -95,9 +147,10 @@ impl Coordinator {
         Ok(Coordinator { tx, handle: Some(handle) })
     }
 
-    /// Submit a request; the receiver yields the response when its batch
-    /// completes.
-    pub fn submit(&self, req: Request) -> Receiver<Result<Response>> {
+    /// Submit a request; the receiver yields step events (if requested)
+    /// and then `Reply::Done` as soon as *this* request's sequences
+    /// retire — co-batched requests keep running.
+    pub fn submit(&self, req: Request) -> Receiver<Reply> {
         let (tx, rx) = channel();
         // A send error means the worker is gone; the receiver will report
         // a disconnect to the caller.
@@ -105,11 +158,21 @@ impl Coordinator {
         rx
     }
 
+    /// Drain a submission's receiver to its final response, discarding
+    /// any step events.
+    pub fn wait(rx: Receiver<Reply>) -> Result<Response> {
+        loop {
+            match rx.recv() {
+                Ok(Reply::Step(_)) => continue,
+                Ok(Reply::Done(r)) => return r,
+                Err(_) => return Err(anyhow!("engine thread terminated")),
+            }
+        }
+    }
+
     /// Convenience: submit and block for the response.
     pub fn generate(&self, req: Request) -> Result<Response> {
-        self.submit(req)
-            .recv()
-            .map_err(|_| anyhow!("engine thread terminated"))?
+        Self::wait(self.submit(req))
     }
 
     pub fn shutdown(mut self) {
@@ -130,9 +193,41 @@ impl Drop for Coordinator {
 }
 
 struct QueuedJob {
+    id: u64,
     req: Request,
-    reply: Sender<Result<Response>>,
+    reply: Sender<Reply>,
     pending: Pending,
+}
+
+/// A request whose sequences are (partly) in the engine batch.
+struct InFlight {
+    reply: Sender<Reply>,
+    stream: bool,
+    /// seq id -> index within this request's fan-out.
+    seq_index: HashMap<SeqId, usize>,
+    done: Vec<Option<GenSeq>>,
+    remaining: usize,
+    admitted: Instant,
+    queue_secs: f64,
+    /// Max co-resident sequences observed while this request was in the
+    /// batch (reported as `Response::batch_size`).
+    batch_size: usize,
+}
+
+impl InFlight {
+    fn finish(self) {
+        let seqs = self
+            .done
+            .into_iter()
+            .map(|s| s.expect("all sequences retired"))
+            .collect();
+        let _ = self.reply.send(Reply::Done(Ok(Response {
+            seqs,
+            batch_secs: self.admitted.elapsed().as_secs_f64(),
+            batch_size: self.batch_size,
+            queue_secs: self.queue_secs,
+        })));
+    }
 }
 
 fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
@@ -157,15 +252,30 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             }
         }
     }
+    let capacity = cfg.batcher.max_batch.max(1);
+    let mut batch = match SpecBatch::new(&engine, cfg.spec.clone(), capacity)
+    {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
     let _ = ready.send(Ok(()));
+
     let mut queue: Vec<QueuedJob> = Vec::new();
+    let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+    // seq id -> owning request id (live sequences only).
+    let mut seq_owner: HashMap<SeqId, u64> = HashMap::new();
     let mut next_id = 0u64;
     let mut open = true;
 
-    while open || !queue.is_empty() {
-        // Pull messages; block only when the queue is empty.
+    while open || !queue.is_empty() || !inflight.is_empty() {
+        // -- pull messages; block only when fully idle ---------------------
         loop {
-            let msg = if queue.is_empty() && open {
+            let idle =
+                queue.is_empty() && inflight.is_empty() && open;
+            let msg = if idle {
                 match rx.recv() {
                     Ok(m) => m,
                     Err(_) => {
@@ -195,85 +305,188 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                         n_seqs: req.n_seqs.max(1),
                         enqueued: Instant::now(),
                     };
-                    queue.push(QueuedJob { req, reply, pending });
+                    queue.push(QueuedJob { id: next_id, req, reply,
+                                           pending });
                 }
             }
         }
-        if queue.is_empty() {
-            continue;
-        }
-        let pendings: Vec<Pending> =
-            queue.iter().map(|j| j.pending.clone()).collect();
-        if open && !should_flush(&pendings, &cfg.batcher, Instant::now()) {
-            std::thread::sleep(std::time::Duration::from_micros(200));
-            continue;
-        }
-        let (n_take, _) = plan_batch(&pendings, &cfg.batcher);
-        let jobs: Vec<QueuedJob> = queue.drain(..n_take).collect();
-        run_batch(&engine, &cfg, jobs);
-    }
-}
 
-fn run_batch(engine: &Engine, cfg: &CoordinatorConfig,
-             jobs: Vec<QueuedJob>) {
-    // Expand fan-outs into a flat prompt batch.
-    let mut prompts: Vec<Vec<u8>> = Vec::new();
-    let mut slices: Vec<(usize, usize)> = Vec::new();
-    let cap = cfg.batcher.max_batch;
-    for j in &jobs {
-        let n = j.req.n_seqs.max(1).min(cap - prompts.len().min(cap - 1));
-        let start = prompts.len();
-        for _ in 0..n {
-            prompts.push(j.req.prompt.clone());
-        }
-        slices.push((start, n));
-    }
+        // -- admission at the step boundary --------------------------------
+        admit_jobs(&mut batch, &mut queue, &mut inflight, &mut seq_owner,
+                   &cfg.batcher);
 
-    // Per-batch overrides come from the first request (co-batched requests
-    // share sampling params; the server groups compatible requests).
-    let mut spec = cfg.spec.clone();
-    if let Some(t) = jobs[0].req.temperature {
-        spec.temperature = t;
-    }
-    if let Some(p) = jobs[0].req.top_p {
-        spec.top_p = p;
-    }
-    if let Some(m) = jobs[0].req.max_new_tokens {
-        spec.max_new_tokens = m;
-    }
-
-    let t0 = Instant::now();
-    let result = SpecEngine::new(engine, spec).generate(&prompts);
-    let batch_secs = t0.elapsed().as_secs_f64();
-
-    match result {
-        Ok(res) => {
-            for (j, (start, n)) in jobs.into_iter().zip(slices) {
-                let seqs = res.seqs[start..start + n]
-                    .iter()
-                    .map(|s| GenSeq {
-                        text: crate::tokenizer::decode(&s.generated),
-                        finished: s.finish
-                            != crate::kv::FinishReason::Running,
-                        mean_logp: s.mean_logp(),
-                        n_tokens: s.tokens_generated(),
+        // Per-request time budget (Fig-5 semantics): a request whose age
+        // since *its own admission* exceeds the budget is answered as-is,
+        // possibly unfinished. Measured per request, not per busy period,
+        // so late joiners of a long-running SPLIT batch get a full budget.
+        if let Some(budget) = cfg.spec.time_budget_secs {
+            let expired: Vec<SeqId> = seq_owner
+                .iter()
+                .filter(|(_, owner)| {
+                    inflight.get(owner).is_some_and(|j| {
+                        j.admitted.elapsed().as_secs_f64() >= budget
                     })
-                    .collect();
-                let queue_secs =
-                    t0.duration_since(j.pending.enqueued).as_secs_f64();
-                let _ = j.reply.send(Ok(Response {
-                    seqs,
-                    batch_secs,
-                    batch_size: prompts.len(),
-                    queue_secs,
+                })
+                .map(|(&id, _)| id)
+                .collect();
+            for id in expired {
+                retire_seq(&mut batch, id, &mut inflight, &mut seq_owner);
+            }
+        }
+
+        if !batch.has_active() {
+            if batch.occupied() > 0 {
+                // Defensive: sequences stalled in any other way are
+                // returned rather than wedging their requests forever.
+                let ids: Vec<SeqId> = seq_owner.keys().copied().collect();
+                for id in ids {
+                    retire_seq(&mut batch, id, &mut inflight,
+                               &mut seq_owner);
+                }
+            } else if !queue.is_empty() {
+                // Waiting out the co-batching window.
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            continue;
+        }
+
+        // -- one speculative step ------------------------------------------
+        let occupied = batch.occupied();
+        for job in inflight.values_mut() {
+            job.batch_size = job.batch_size.max(occupied);
+        }
+        let report = match batch.step() {
+            Ok(r) => r,
+            Err(e) => {
+                // The device state is suspect: fail everything in flight
+                // and start over with a fresh batch.
+                let msg = format!("{e:#}");
+                for (_, job) in inflight.drain() {
+                    let _ = job.reply
+                        .send(Reply::Done(Err(anyhow!("{msg}"))));
+                }
+                seq_owner.clear();
+                match SpecBatch::new(&engine, cfg.spec.clone(), capacity) {
+                    Ok(b) => batch = b,
+                    Err(e2) => {
+                        for j in queue.drain(..) {
+                            let _ = j.reply
+                                .send(Reply::Done(Err(anyhow!("{e2:#}"))));
+                        }
+                        return;
+                    }
+                }
+                continue;
+            }
+        };
+
+        // -- relay streaming events ----------------------------------------
+        for ev in &report.events {
+            let Some(&owner) = seq_owner.get(&ev.id) else { continue };
+            let Some(job) = inflight.get(&owner) else { continue };
+            if job.stream && (!ev.new_bytes.is_empty() || ev.done) {
+                let _ = job.reply.send(Reply::Step(StepEvent {
+                    seq: job.seq_index[&ev.id],
+                    text_delta: crate::tokenizer::decode(&ev.new_bytes),
+                    done: ev.done,
                 }));
             }
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for j in jobs {
-                let _ = j.reply.send(Err(anyhow!("{msg}")));
-            }
+
+        // -- retire finished sequences immediately -------------------------
+        for id in report.finished {
+            retire_seq(&mut batch, id, &mut inflight, &mut seq_owner);
         }
+    }
+}
+
+/// Admit queued requests into free slots (SPLIT: mid-flight; PAD: once
+/// the batch has drained), respecting the co-batching window.
+fn admit_jobs(batch: &mut SpecBatch, queue: &mut Vec<QueuedJob>,
+              inflight: &mut HashMap<u64, InFlight>,
+              seq_owner: &mut HashMap<SeqId, u64>, bcfg: &BatcherConfig) {
+    let default_seed = batch.config().seed;
+    while batch.can_admit() && !queue.is_empty() {
+        let free = batch.free_slots();
+        let pendings: Vec<Pending> =
+            queue.iter().map(|j| j.pending.clone()).collect();
+        if !should_flush(&pendings, free, bcfg, Instant::now()) {
+            return;
+        }
+        let (n_take, _) = plan_batch(&pendings, free, bcfg);
+        if n_take == 0 {
+            return;
+        }
+        for job in queue.drain(..n_take) {
+            let n = job.pending.n_seqs.max(1).min(batch.free_slots().max(1));
+            let admitted = Instant::now();
+            let queue_secs =
+                admitted.duration_since(job.pending.enqueued).as_secs_f64();
+            let seed = job.req.seed.unwrap_or(default_seed);
+            let mut fl = InFlight {
+                reply: job.reply,
+                stream: job.req.stream,
+                seq_index: HashMap::new(),
+                done: (0..n).map(|_| None).collect(),
+                remaining: n,
+                admitted,
+                queue_secs,
+                batch_size: n,
+            };
+            let mut failed = None;
+            for i in 0..n {
+                // A pinned per-request seed also pins the RNG stream to
+                // the fan-out index, so {prompt, seed} reproduces the
+                // same output regardless of prior traffic (exact under
+                // Policy::Fixed; see Request::seed).
+                let stream = job.req.seed.map(|_| i as u64);
+                match batch.admit_opts(&job.req.prompt, seed,
+                                       job.req.max_new_tokens, stream) {
+                    Ok(id) => {
+                        fl.seq_index.insert(id, i);
+                        seq_owner.insert(id, job.id);
+                    }
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = failed {
+                // Roll back this job's partial admissions and fail it.
+                for &id in fl.seq_index.keys() {
+                    let _ = batch.retire(id);
+                    seq_owner.remove(&id);
+                }
+                let _ = fl.reply.send(Reply::Done(Err(e)));
+                continue;
+            }
+            inflight.insert(job.id, fl);
+        }
+    }
+}
+
+/// Move one finished (or budget-stalled) sequence out of the batch and
+/// into its request's response; answer the request when it was the last.
+fn retire_seq(batch: &mut SpecBatch, id: SeqId,
+              inflight: &mut HashMap<u64, InFlight>,
+              seq_owner: &mut HashMap<SeqId, u64>) {
+    let Some(owner) = seq_owner.remove(&id) else { return };
+    let state = match batch.retire(id) {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let Some(job) = inflight.get_mut(&owner) else { return };
+    let idx = job.seq_index[&id];
+    job.done[idx] = Some(GenSeq {
+        text: crate::tokenizer::decode(&state.generated),
+        finished: state.finish != FinishReason::Running,
+        mean_logp: state.mean_logp(),
+        n_tokens: state.tokens_generated(),
+    });
+    job.remaining -= 1;
+    if job.remaining == 0 {
+        let job = inflight.remove(&owner).expect("job present");
+        job.finish();
     }
 }

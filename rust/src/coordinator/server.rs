@@ -1,6 +1,6 @@
 //! TCP line-protocol front-end over the [`Coordinator`].
 //!
-//! One JSON object per line in, one per line out:
+//! One JSON object per line in, one (or more) per line out:
 //!
 //! ```text
 //! -> {"prompt": "def add_7(x):\n    return", "n": 4, "max_new_tokens": 32}
@@ -8,9 +8,21 @@
 //!     "batch_size": 4, "batch_ms": 120.5, "queue_ms": 0.8}
 //! ```
 //!
-//! A thread per connection forwards requests to the engine worker; the
-//! dynamic batcher co-batches concurrent connections into single
-//! speculative batches.
+//! With `"stream": true` the server relays one event line per speculative
+//! step a sequence advanced, before the final `"ok"` line:
+//!
+//! ```text
+//! -> {"prompt": "def add_7(x):\n    return", "stream": true}
+//! <- {"event": "step", "seq": 0, "delta": " x", "done": false}
+//! <- {"event": "step", "seq": 0, "delta": " + 7", "done": true}
+//! <- {"ok": true, "seqs": [...], ...}
+//! ```
+//!
+//! A thread per connection forwards requests to the engine worker. The
+//! coordinator admits concurrent connections into the running speculative
+//! batch at step boundaries (continuous batching) and answers each request
+//! the moment its own sequences finish. Sampling parameters (temperature /
+//! top-p) are server-level; per-request values are accepted but ignored.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -18,7 +30,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{Coordinator, Request};
+use super::{Coordinator, Reply, Request, StepEvent};
 use crate::runtime::json::Json;
 
 /// Serve until the listener errors (bind to port 0 for an ephemeral port;
@@ -40,6 +52,13 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str,
     Ok(())
 }
 
+fn write_line(w: &mut impl Write, j: &Json) -> Result<()> {
+    w.write_all(j.to_string_pretty().replace('\n', " ").as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    Ok(())
+}
+
 fn handle_conn(coord: &Coordinator, stream: TcpStream) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -48,17 +67,36 @@ fn handle_conn(coord: &Coordinator, stream: TcpStream) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse_request(&line) {
-            Ok(req) => match coord.generate(req) {
-                Ok(resp) => response_json(&resp),
-                Err(e) => error_json(&format!("{e:#}")),
-            },
-            Err(e) => error_json(&format!("bad request: {e:#}")),
-        };
-        writer.write_all(reply.to_string_pretty().replace('\n', " ")
-            .as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        match parse_request(&line) {
+            Ok(req) => {
+                let rx = coord.submit(req);
+                loop {
+                    match rx.recv() {
+                        Ok(Reply::Step(ev)) => {
+                            write_line(&mut writer, &event_json(&ev))?;
+                        }
+                        Ok(Reply::Done(Ok(resp))) => {
+                            write_line(&mut writer, &response_json(&resp))?;
+                            break;
+                        }
+                        Ok(Reply::Done(Err(e))) => {
+                            write_line(&mut writer,
+                                       &error_json(&format!("{e:#}")))?;
+                            break;
+                        }
+                        Err(_) => {
+                            write_line(&mut writer, &error_json(
+                                "engine thread terminated"))?;
+                            break;
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                write_line(&mut writer,
+                           &error_json(&format!("bad request: {e:#}")))?;
+            }
+        }
     }
     Ok(())
 }
@@ -80,7 +118,24 @@ pub fn parse_request(line: &str) -> Result<Request> {
             .opt("top_p")
             .map(|v| v.as_f64().map(|x| x as f32))
             .transpose()?,
+        seed: j
+            .opt("seed")
+            .map(|v| v.as_usize().map(|x| x as u64))
+            .transpose()?,
+        stream: j
+            .opt("stream")
+            .map(|v| v == &Json::Bool(true))
+            .unwrap_or(false),
     })
+}
+
+pub fn event_json(ev: &StepEvent) -> Json {
+    Json::obj(vec![
+        ("event", "step".into()),
+        ("seq", ev.seq.into()),
+        ("delta", ev.text_delta.as_str().into()),
+        ("done", ev.done.into()),
+    ])
 }
 
 pub fn response_json(resp: &super::Response) -> Json {
@@ -112,11 +167,14 @@ mod tests {
     fn parse_full_request() {
         let r = parse_request(
             r#"{"prompt": "hi", "n": 4, "max_new_tokens": 8,
-               "temperature": 0.7, "top_p": 0.9}"#).unwrap();
+               "temperature": 0.7, "top_p": 0.9, "seed": 3,
+               "stream": true}"#).unwrap();
         assert_eq!(r.prompt, b"hi");
         assert_eq!(r.n_seqs, 4);
         assert_eq!(r.max_new_tokens, Some(8));
         assert!((r.temperature.unwrap() - 0.7).abs() < 1e-6);
+        assert_eq!(r.seed, Some(3));
+        assert!(r.stream);
     }
 
     #[test]
@@ -124,11 +182,25 @@ mod tests {
         let r = parse_request(r#"{"prompt": "x"}"#).unwrap();
         assert_eq!(r.n_seqs, 1);
         assert_eq!(r.max_new_tokens, None);
+        assert_eq!(r.seed, None);
+        assert!(!r.stream);
     }
 
     #[test]
     fn parse_rejects_missing_prompt() {
         assert!(parse_request(r#"{"n": 2}"#).is_err());
         assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn event_line_shape() {
+        let j = event_json(&StepEvent {
+            seq: 1,
+            text_delta: "ab".into(),
+            done: true,
+        });
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "step");
+        assert_eq!(j.get("seq").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("done").unwrap(), &Json::Bool(true));
     }
 }

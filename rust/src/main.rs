@@ -4,7 +4,9 @@
 //! * `selftest`  — load artifacts, run a tiny generation on every path.
 //! * `generate`  — one batched generation from a prompt (`--prompt`,
 //!   `--n`, `--mode pad|split`, `--precision f32|int8`, ...).
-//! * `serve`     — TCP line-protocol server over the coordinator.
+//! * `serve`     — TCP line-protocol server over the continuously-batched
+//!   coordinator (`--mode split` enables mid-flight admission; requests
+//!   may set `"stream": true` for per-step event lines).
 //! * `eval`      — run a task (`--task code|summ`) and report accuracy.
 //! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
 //! * `info`      — print the manifest summary.
@@ -48,7 +50,7 @@ fn spec_config_from(args: &Args) -> Result<SpecConfig> {
             "split" => ExecMode::Split,
             m => bail!("unknown mode '{m}'"),
         },
-        seed: args.usize_flag("seed", 0)? as u64,
+        seed: args.u64_flag("seed", 0)?,
         time_budget_secs: args
             .flag("time-budget")
             .map(|v| v.parse::<f64>())

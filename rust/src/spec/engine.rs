@@ -1,20 +1,43 @@
-//! The BASS speculative decoding loop (paper §3): batched drafting,
-//! batched ragged verification, per-sequence acceptance, draft-length
-//! control and PAD/SPLIT execution.
+//! The BASS speculative decoding loop (paper §3), decomposed into a
+//! **resumable step API** so a serving layer can do continuous batching.
 //!
-//! One step, for a batch where every sequence `i` has its own cache length:
+//! [`SpecBatch`] owns the device caches and per-slot sequence state and
+//! exposes three operations the coordinator drives at step boundaries:
 //!
-//! ```text
-//!   k  = bucket(policy.current())
-//!   draft : d_1..d_k per sequence  (one fused draft artifact call)
-//!   verify: main decode over [pending, d_1..d_k]  (Q = k+1)
-//!   per sequence: stochastic accept/reject (sampling.rs) -> a_i accepted,
-//!     corrected/bonus next token; cache lengths advance by 1 + a_i
-//!     (raggedly!), draft rolls back to its accepted prefix
-//!   policy.observe(a_1..a_b)   (Algorithm 1)
-//! ```
+//! * [`SpecBatch::admit`] — place a prompt into a free slot (SPLIT mode:
+//!   any time; PAD mode: only while the batch has not started, because the
+//!   fused PAD cache has no per-row prefill artifact).
+//! * [`SpecBatch::step`] — one draft + verify + accept round over the
+//!   currently-active slots:
 //!
-//! BASS-PAD runs one batched artifact padded to the bucket size; BASS-SPLIT
+//!   ```text
+//!     k  = bucket(policy.current())
+//!     draft : d_1..d_k per sequence  (one fused draft artifact call)
+//!     verify: main decode over [pending, d_1..d_k]  (Q = k+1)
+//!     per sequence: stochastic accept/reject (sampling.rs) -> a_i accepted,
+//!       corrected/bonus next token; cache lengths advance by 1 + a_i
+//!       (raggedly!), draft rolls back to its accepted prefix
+//!     policy.observe(a_1..a_b)   (Algorithm 1)
+//!   ```
+//!
+//! * [`SpecBatch::retire`] — take a sequence's final state out of the
+//!   batch, freeing its slot. In SPLIT mode the slot's caches are dropped
+//!   and the slot is immediately reusable by the next `admit`; in PAD mode
+//!   the row stays as a frozen placeholder until the whole batch drains
+//!   (then the batch auto-resets and accepts admissions again).
+//!
+//! Each admitted sequence gets its own pair of PCG32 streams keyed by a
+//! monotonically increasing admission counter, so given the same per-step
+//! draft lengths a sequence's output is a function of (prompt, seed,
+//! admission index) only — *not* of what else is or was in the batch.
+//! Draft lengths are exactly reproducible under [`Policy::Fixed`]; under
+//! the adaptive heuristic they are batch-global Algorithm-1 state fed by
+//! every co-batched sequence (by design). That is what makes stepwise
+//! driving with mid-flight admission reproduce one-shot
+//! [`SpecEngine::generate`] byte-for-byte
+//! (`rust/tests/step_equivalence.rs`).
+//!
+//! BASS-PAD runs one batched artifact padded to the batch bucket; BASS-SPLIT
 //! runs per-sequence B=1 artifacts, skipping finished sequences entirely —
 //! the same compute/launch trade the paper's Figure 4 kernels make.
 
@@ -24,9 +47,9 @@ use anyhow::{bail, Result};
 use xla::PjRtBuffer;
 
 use crate::flops::FlopCounter;
-use crate::kv::SeqState;
+use crate::kv::{FinishReason, SeqState};
 use crate::metrics::BatchMetrics;
-use crate::runtime::{Attn, Engine, Precision};
+use crate::runtime::{Attn, Engine, ModelInfo, Precision};
 use crate::sampling::{logp_of, spec_accept, warp_top_p, Pcg32};
 use crate::spec::draft_len::{DraftLenPolicy, Fixed, Heuristic};
 
@@ -105,278 +128,596 @@ pub struct SpecResult {
     pub step_log: Vec<(usize, Vec<usize>)>,
 }
 
-/// Device cache handles, PAD (one set) or SPLIT (one set per sequence).
+/// Identity of one admitted sequence (the admission counter; unique for
+/// the lifetime of a [`SpecBatch`], never reused across slot turnover).
+pub type SeqId = u64;
+
+/// What happened to one live sequence during a [`SpecBatch::step`].
+#[derive(Debug, Clone)]
+pub struct SeqEvent {
+    pub id: SeqId,
+    /// Draft tokens accepted this step (0..=k).
+    pub accepted: usize,
+    /// Bytes appended to the sequence this step, post-EOS truncation.
+    pub new_bytes: Vec<u8>,
+    /// Sequence finished this step (EOS / length / capacity).
+    pub done: bool,
+    pub finish: FinishReason,
+}
+
+/// Outcome of one [`SpecBatch::step`].
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    /// 0-based index of the step just executed.
+    pub step: usize,
+    /// Draft length used (bucketized).
+    pub k: usize,
+    /// Per-sequence events, in slot order (live sequences only).
+    pub events: Vec<SeqEvent>,
+    /// Sequences that finished on this step (retire them to free slots).
+    pub finished: Vec<SeqId>,
+    /// Real sequences still generating after this step.
+    pub active: usize,
+    /// Real sequences occupying slots (active + finished-but-unretired).
+    pub occupied: usize,
+}
+
+/// Device cache handles, PAD (one fused set) or SPLIT (one set per slot;
+/// empty vectors mark free slots).
 enum CacheStore {
     Pad { main: Vec<PjRtBuffer>, draft: Vec<PjRtBuffer> },
     Split { main: Vec<Vec<PjRtBuffer>>, draft: Vec<Vec<PjRtBuffer>> },
 }
 
-pub struct SpecEngine<'a> {
-    pub engine: &'a Engine,
-    pub cfg: SpecConfig,
+/// One occupied slot: sequence state plus its private RNG streams.
+struct Slot {
+    id: SeqId,
+    state: SeqState,
+    rng_draft: Pcg32,
+    rng_accept: Pcg32,
+    max_new_tokens: usize,
 }
 
-impl<'a> SpecEngine<'a> {
-    pub fn new(engine: &'a Engine, cfg: SpecConfig) -> SpecEngine<'a> {
-        SpecEngine { engine, cfg }
+/// A batch row. `Shadow` rows are PAD padding (they advance like real
+/// sequences, matching the padded artifact rows, but are never reported);
+/// `Husk` rows are retired PAD sequences — frozen state that keeps feeding
+/// the fused artifact valid lengths until the batch drains.
+enum Row {
+    Free,
+    Seq(Slot),
+    Shadow(Slot),
+    Husk(SeqState),
+}
+
+impl Row {
+    fn state(&self) -> Option<&SeqState> {
+        match self {
+            Row::Free => None,
+            Row::Seq(s) | Row::Shadow(s) => Some(&s.state),
+            Row::Husk(st) => Some(st),
+        }
     }
 
-    /// Generate completions for a batch of prompts (1 ≤ n ≤ largest batch
-    /// bucket). Prompts longer than the prefill capacity keep their tail.
-    pub fn generate(&self, prompts: &[Vec<u8>]) -> Result<SpecResult> {
+    fn is_free(&self) -> bool {
+        matches!(self, Row::Free)
+    }
+}
+
+/// A resumable speculative batch over up to `capacity` concurrent
+/// sequences. See the module docs for the admit / step / retire contract.
+pub struct SpecBatch<'a> {
+    engine: &'a Engine,
+    cfg: SpecConfig,
+    capacity: usize,
+    rows: Vec<Row>,
+    store: Option<CacheStore>,
+    policy: Box<dyn DraftLenPolicy>,
+    /// Admission counter; doubles as the SeqId and the PCG32 stream index.
+    next_stream: u64,
+    t0: Option<Instant>,
+    main_info: ModelInfo,
+    draft_info: ModelInfo,
+    s_max: i32,
+    // -- aggregates across the batch lifetime ------------------------------
+    pub steps: usize,
+    pub drafted: usize,
+    pub accepted: usize,
+    pub prefill_secs: f64,
+    pub draft_secs: f64,
+    pub verify_secs: f64,
+    pub flops: FlopCounter,
+    pub step_log: Vec<(usize, Vec<usize>)>,
+}
+
+impl<'a> SpecBatch<'a> {
+    /// Create an empty batch with room for `capacity` concurrent
+    /// sequences. In PAD mode the actual device batch is the smallest
+    /// exported bucket covering the admitted count at start time.
+    pub fn new(engine: &'a Engine, cfg: SpecConfig, capacity: usize)
+               -> Result<SpecBatch<'a>> {
+        if capacity == 0 {
+            bail!("batch capacity must be >= 1");
+        }
+        let main_info = engine.manifest.model(&cfg.main_model)?.clone();
+        let draft_info = engine.manifest.model(&cfg.draft_model)?.clone();
+        let s_max = main_info.s_max as i32;
+        let policy = fresh_policy(&cfg);
+        let store = match cfg.mode {
+            ExecMode::Pad => None, // fused prefill happens at first step
+            ExecMode::Split => Some(CacheStore::Split {
+                main: (0..capacity).map(|_| Vec::new()).collect(),
+                draft: (0..capacity).map(|_| Vec::new()).collect(),
+            }),
+        };
+        Ok(SpecBatch {
+            engine,
+            cfg,
+            capacity,
+            rows: (0..capacity).map(|_| Row::Free).collect(),
+            store,
+            policy,
+            next_stream: 0,
+            t0: None,
+            main_info,
+            draft_info,
+            s_max,
+            steps: 0,
+            drafted: 0,
+            accepted: 0,
+            prefill_secs: 0.0,
+            draft_secs: 0.0,
+            verify_secs: 0.0,
+            flops: FlopCounter::default(),
+            step_log: Vec::new(),
+        })
+    }
+
+    // -- introspection ----------------------------------------------------
+
+    /// The batch-wide speculative configuration (sampling params, mode).
+    pub fn config(&self) -> &SpecConfig {
+        &self.cfg
+    }
+
+    /// Slots a new sequence could occupy right now.
+    pub fn free_slots(&self) -> usize {
+        if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
+            return 0; // PAD admits only into a not-yet-started batch
+        }
+        self.rows.iter().filter(|r| r.is_free()).count()
+    }
+
+    /// True when `admit` would succeed for a 1-sequence request.
+    pub fn can_admit(&self) -> bool {
+        self.free_slots() > 0
+    }
+
+    /// Real sequences occupying slots (active or finished-but-unretired).
+    pub fn occupied(&self) -> usize {
+        self.rows.iter().filter(|r| matches!(r, Row::Seq(_))).count()
+    }
+
+    /// Real sequences still generating.
+    pub fn active(&self) -> usize {
+        self.rows
+            .iter()
+            .filter(|r| matches!(r, Row::Seq(s) if s.state.active()))
+            .count()
+    }
+
+    pub fn has_active(&self) -> bool {
+        self.active() > 0
+    }
+
+    /// Seconds since the first step began (0 before the batch starts);
+    /// the clock `SeqState::finish_secs` and time budgets are measured on.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    // -- admit ------------------------------------------------------------
+
+    /// Admit a prompt into a free slot and return its [`SeqId`]. `seed` is
+    /// the RNG seed for this sequence; its PCG32 streams derive from the
+    /// batch-lifetime admission counter, so re-admitting the same
+    /// prompt+seed into a reused slot still gets fresh randomness. SPLIT
+    /// mode prefills the slot's caches immediately; PAD mode defers to the
+    /// fused prefill at first step and rejects admissions once the batch
+    /// has started.
+    pub fn admit(&mut self, prompt: &[u8], seed: u64) -> Result<SeqId> {
+        self.admit_opts(prompt, seed, None, None)
+    }
+
+    /// [`SpecBatch::admit`] with a per-sequence `max_new_tokens` override
+    /// and an optional pinned `stream` index. Pinning the stream makes the
+    /// randomness a pure function of (seed, stream) — independent of how
+    /// many admissions preceded it — which is what per-request seeds need
+    /// for reproducibility under serving traffic (exact for the full
+    /// output only when per-step draft lengths also match, i.e.
+    /// [`Policy::Fixed`]). Callers pinning streams own the (seed, stream)
+    /// uniqueness trade-off; the unpinned default (the admission counter)
+    /// never collides within a batch lifetime.
+    pub fn admit_opts(&mut self, prompt: &[u8], seed: u64,
+                      max_new_tokens: Option<usize>, stream: Option<u64>)
+                      -> Result<SeqId> {
+        if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
+            bail!("PAD batch already started; admission needs a drained \
+                   batch (use SPLIT mode for mid-flight admission)");
+        }
+        let Some(row) = self.rows.iter().position(Row::is_free) else {
+            bail!("no free slot (capacity {})", self.capacity);
+        };
+        let p_cap = self.engine.manifest.prefill_p;
+        let tail: &[u8] = if prompt.len() > p_cap {
+            &prompt[prompt.len() - p_cap..]
+        } else {
+            prompt
+        };
+        if tail.is_empty() {
+            bail!("empty prompt");
+        }
+        let id = self.next_stream;
+        self.next_stream += 1;
+        let stream = stream.unwrap_or(id);
+        let state = SeqState::new(tail.to_vec(), *tail.last().unwrap(),
+                                  tail.len() as i32);
+        let slot = Slot {
+            id,
+            state,
+            rng_draft: Pcg32::new(seed, 2 * stream),
+            rng_accept: Pcg32::new(seed, 2 * stream + 1),
+            max_new_tokens: max_new_tokens
+                .unwrap_or(self.cfg.max_new_tokens),
+        };
+        if self.cfg.mode == ExecMode::Split {
+            self.prefill_split_slot(row, &slot.state)?;
+        }
+        self.rows[row] = Row::Seq(slot);
+        Ok(id)
+    }
+
+    /// Prefill one SPLIT slot (B=1 artifacts for both models).
+    fn prefill_split_slot(&mut self, row: usize, state: &SeqState)
+                          -> Result<()> {
         let cfg = &self.cfg;
         let eng = self.engine;
-        let man = &eng.manifest;
-        let b_real = prompts.len();
-        if b_real == 0 {
-            bail!("empty prompt batch");
+        let p = eng.manifest.prefill_p;
+        let mut tokens = vec![0i32; p];
+        for (j, &byte) in state.prompt.iter().enumerate() {
+            tokens[j] = byte as i32;
         }
-        let b = match cfg.mode {
-            ExecMode::Pad => man.bucket_batch(b_real)?,
-            ExecMode::Split => b_real,
-        };
-        let p_cap = man.prefill_p;
-        let main_info = man.model(&cfg.main_model)?.clone();
-        let draft_info = man.model(&cfg.draft_model)?.clone();
-        let s_max = main_info.s_max as i32;
-        let vocab = man.vocab;
-
-        // ---- prompt prep (pad rows replicate row 0) ------------------------
-        let mut tokens = vec![0i32; b * p_cap];
-        let mut plens = vec![0i32; b];
-        let mut states: Vec<SeqState> = Vec::with_capacity(b);
-        for i in 0..b {
-            let src = &prompts[i.min(b_real - 1)];
-            let tail: &[u8] = if src.len() > p_cap {
-                &src[src.len() - p_cap..]
-            } else {
-                src
-            };
-            if tail.is_empty() {
-                bail!("empty prompt");
-            }
-            for (j, &byte) in tail.iter().enumerate() {
-                tokens[i * p_cap + j] = byte as i32;
-            }
-            plens[i] = tail.len() as i32;
-            states.push(SeqState::new(tail.to_vec(), *tail.last().unwrap(),
-                                      tail.len() as i32));
-        }
-
-        // ---- prefill --------------------------------------------------------
-        let t_prefill = Instant::now();
-        let mut flops = FlopCounter::default();
-        let mut store = self.prefill_all(b, &tokens, &plens, &mut flops,
-                                         &main_info, &draft_info)?;
-        let prefill_secs = t_prefill.elapsed().as_secs_f64();
-
-        // ---- the speculative loop -------------------------------------------
-        let mut policy: Box<dyn DraftLenPolicy> = match cfg.policy {
-            Policy::Heuristic => Box::new(Heuristic::testbed()),
-            Policy::Fixed(k) => Box::new(Fixed(k)),
-        };
-        let mut rng_draft: Vec<Pcg32> = (0..b)
-            .map(|i| Pcg32::new(cfg.seed, 2 * i as u64))
-            .collect();
-        let mut rng_accept: Vec<Pcg32> = (0..b)
-            .map(|i| Pcg32::new(cfg.seed, 2 * i as u64 + 1))
-            .collect();
-
+        let plens = [state.prompt.len() as i32];
         let t0 = Instant::now();
-        let now = |t: Instant| t.elapsed().as_secs_f64();
-        let mut drafted = 0usize;
-        let mut accepted_total = 0usize;
-        let mut steps = 0usize;
-        let mut draft_secs = 0.0f64;
-        let mut verify_secs = 0.0f64;
-        let mut step_log = Vec::new();
-
-        while states[..b_real].iter().any(|s| s.active()) {
-            if let Some(budget) = cfg.time_budget_secs {
-                if now(t0) >= budget {
-                    break;
-                }
+        let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn, 1,
+                            &tokens, &plens)?;
+        let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn, 1,
+                            &tokens, &plens)?;
+        self.prefill_secs += t0.elapsed().as_secs_f64();
+        self.flops.add_prefill(&self.main_info, 1, p);
+        self.flops.add_prefill(&self.draft_info, 1, p);
+        match self.store.as_mut() {
+            Some(CacheStore::Split { main, draft }) => {
+                main[row] = m.caches;
+                draft[row] = d.caches;
+                Ok(())
             }
-            let k = man.bucket_k(&cfg.draft_model, policy.current());
+            _ => bail!("SPLIT store missing"),
+        }
+    }
 
-            // -- draft ---------------------------------------------------------
-            let mut tokens_in = vec![0i32; b * 2];
-            let mut n_in = vec![1i32; b];
-            let mut dlens = vec![0i32; b];
-            let mut uniforms = vec![0f32; b * k];
-            for i in 0..b {
-                let s = &states[i];
+    /// PAD lazy start: bucketize the admitted count, pad the row vector
+    /// with shadow sequences replicating the last real prompt (exactly the
+    /// padded rows the fused artifact computes anyway) and run the fused
+    /// prefill for both models.
+    fn start_pad(&mut self) -> Result<()> {
+        let cfg = self.cfg.clone();
+        let eng = self.engine;
+        let p = eng.manifest.prefill_p;
+        // Compact real slots to the front (pre-start retires leave holes).
+        let mut real: Vec<Row> = Vec::new();
+        for r in std::mem::take(&mut self.rows) {
+            if !r.is_free() {
+                real.push(r);
+            }
+        }
+        let n_real = real.len();
+        if n_real == 0 {
+            bail!("cannot start an empty PAD batch");
+        }
+        let b = eng.manifest.bucket_batch(n_real)?;
+        let last_prompt = real
+            .last()
+            .and_then(|r| r.state())
+            .map(|s| s.prompt.clone())
+            .expect("real rows have state");
+        self.rows = real;
+        for i in n_real..b {
+            let state = SeqState::new(last_prompt.clone(),
+                                      *last_prompt.last().unwrap(),
+                                      last_prompt.len() as i32);
+            self.rows.push(Row::Shadow(Slot {
+                id: u64::MAX, // never reported
+                state,
+                rng_draft: Pcg32::new(cfg.seed, 2 * i as u64),
+                rng_accept: Pcg32::new(cfg.seed, 2 * i as u64 + 1),
+                max_new_tokens: cfg.max_new_tokens,
+            }));
+        }
+        let mut tokens = vec![0i32; b * p];
+        let mut plens = vec![0i32; b];
+        for (i, row) in self.rows.iter().enumerate() {
+            let st = row.state().expect("all PAD rows live at start");
+            for (j, &byte) in st.prompt.iter().enumerate() {
+                tokens[i * p + j] = byte as i32;
+            }
+            plens[i] = st.prompt.len() as i32;
+        }
+        let t0 = Instant::now();
+        let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn, b,
+                            &tokens, &plens)?;
+        let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn, b,
+                            &tokens, &plens)?;
+        self.prefill_secs += t0.elapsed().as_secs_f64();
+        self.flops.add_prefill(&self.main_info, b, p);
+        self.flops.add_prefill(&self.draft_info, b, p);
+        self.store = Some(CacheStore::Pad { main: m.caches, draft: d.caches });
+        Ok(())
+    }
+
+    // -- step --------------------------------------------------------------
+
+    /// Run one draft + verify + accept round over the active sequences.
+    /// A batch with nothing active is a no-op returning an empty report.
+    pub fn step(&mut self) -> Result<StepReport> {
+        if !self.has_active() {
+            return Ok(StepReport {
+                step: self.steps,
+                occupied: self.occupied(),
+                ..StepReport::default()
+            });
+        }
+        if self.store.is_none() {
+            self.start_pad()?;
+        }
+        if self.t0.is_none() {
+            self.t0 = Some(Instant::now());
+        }
+        let mut store = self.store.take().expect("store present");
+        let res = self.step_inner(&mut store);
+        self.store = Some(store);
+        res
+    }
+
+    fn step_inner(&mut self, store: &mut CacheStore) -> Result<StepReport> {
+        let cfg = self.cfg.clone();
+        let eng = self.engine;
+        let man = &eng.manifest;
+        let vocab = man.vocab;
+        let b = self.rows.len();
+        let t0 = self.t0.expect("clock started");
+        let now = |t: Instant| t.elapsed().as_secs_f64();
+        let k = man.bucket_k(&cfg.draft_model, self.policy.current());
+
+        // -- draft ---------------------------------------------------------
+        let mut tokens_in = vec![0i32; b * 2];
+        let mut n_in = vec![1i32; b];
+        let mut dlens = vec![0i32; b];
+        let mut uniforms = vec![0f32; b * k];
+        for (i, row) in self.rows.iter_mut().enumerate() {
+            if let Some(s) = row.state() {
                 tokens_in[i * 2] = s.pending_draft[0] as i32;
                 tokens_in[i * 2 + 1] = s.pending_draft[1] as i32;
                 n_in[i] = s.n_pending_draft;
                 dlens[i] = s.draft_len;
+            }
+            // Every slot-holding row consumes its draft stream each step
+            // (finished-but-unretired included), so a sequence's randomness
+            // depends only on its own step count — never on co-batch
+            // composition.
+            if let Row::Seq(slot) | Row::Shadow(slot) = row {
                 for j in 0..k {
-                    uniforms[i * k + j] = rng_draft[i].next_f32();
+                    uniforms[i * k + j] = slot.rng_draft.next_f32();
                 }
             }
-            let td = Instant::now();
-            let (draft_tokens, qdists) = self.draft_all(
-                &mut store, b, k, &tokens_in, &n_in, &dlens, &uniforms,
-                &states)?;
-            draft_secs += now(td);
-            let ctx_d = states.iter().map(|s| s.draft_len as usize)
-                .sum::<usize>() / b;
-            flops.add_step(&draft_info, self.active_count(&states, b),
-                           k + 1, ctx_d);
+        }
+        let stepping: Vec<bool> = self
+            .rows
+            .iter()
+            .map(|r| {
+                matches!(r, Row::Seq(s) | Row::Shadow(s) if s.state.active())
+            })
+            .collect();
+        let td = Instant::now();
+        let (draft_tokens, qdists) = self.draft_all(
+            store, b, k, &tokens_in, &n_in, &dlens, &uniforms, &stepping)?;
+        self.draft_secs += now(td);
+        let live: Vec<&SeqState> =
+            self.rows.iter().filter_map(Row::state).collect();
+        let ctx_d = live.iter().map(|s| s.draft_len as usize).sum::<usize>()
+            / live.len().max(1);
+        let n_compute = match cfg.mode {
+            // PAD computes every row, active or not.
+            ExecMode::Pad => b,
+            ExecMode::Split => stepping.iter().filter(|&&a| a).count(),
+        };
+        self.flops.add_step(&self.draft_info, n_compute, k + 1, ctx_d);
 
-            // -- verify ----------------------------------------------------------
-            let q = k + 1;
-            let mut vtokens = vec![0i32; b * q];
-            let mut mlens = vec![0i32; b];
-            for i in 0..b {
-                vtokens[i * q] = states[i].pending_main as i32;
+        // -- verify --------------------------------------------------------
+        let q = k + 1;
+        let mut vtokens = vec![0i32; b * q];
+        let mut mlens = vec![0i32; b];
+        for (i, row) in self.rows.iter().enumerate() {
+            if let Some(s) = row.state() {
+                vtokens[i * q] = s.pending_main as i32;
                 for j in 0..k {
                     vtokens[i * q + 1 + j] = draft_tokens[i * k + j];
                 }
-                mlens[i] = states[i].main_len;
+                mlens[i] = s.main_len;
             }
-            let tv = Instant::now();
-            let logits = self.verify_all(&mut store, b, q, &vtokens, &mlens,
-                                         &states)?;
-            verify_secs += now(tv);
-            let ctx_m = states.iter().map(|s| s.main_len as usize)
-                .sum::<usize>() / b;
-            flops.add_step(&main_info, self.active_count(&states, b), q,
-                           ctx_m);
-
-            // -- accept/reject per sequence (host) --------------------------------
-            let mut accepted_counts = Vec::new();
-            for i in 0..b {
-                if !states[i].active() {
-                    continue;
-                }
-                // Warp main distributions for positions 0..=k.
-                let warped: Vec<Vec<f32>> = (0..q)
-                    .map(|j| {
-                        let row = &logits[(i * q + j) * vocab
-                                          ..(i * q + j + 1) * vocab];
-                        warp_top_p(row, cfg.temperature, cfg.top_p)
-                    })
-                    .collect();
-                let p_refs: Vec<&[f32]> =
-                    warped.iter().map(|w| w.as_slice()).collect();
-                let d_tokens: Vec<usize> = (0..k)
-                    .map(|j| draft_tokens[i * k + j] as usize)
-                    .collect();
-                let q_refs: Vec<&[f32]> = (0..k)
-                    .map(|j| &qdists[(i * k + j) * vocab
-                                     ..(i * k + j + 1) * vocab])
-                    .collect();
-                let out = spec_accept(&p_refs, &d_tokens, &q_refs,
-                                      &mut rng_accept[i]);
-
-                let acc_bytes: Vec<u8> = d_tokens[..out.accepted]
-                    .iter()
-                    .map(|&t| t as u8)
-                    .collect();
-                let mut logp = logp_of(&warped[out.accepted],
-                                       out.next_token) as f64;
-                for (j, &d) in d_tokens[..out.accepted].iter().enumerate() {
-                    logp += logp_of(&warped[j], d) as f64;
-                }
-                let n_in_used = states[i].n_pending_draft;
-                let emitted = states[i].apply_step(
-                    &acc_bytes, out.next_token as u8, out.bonus, k,
-                    n_in_used, logp);
-                if i < b_real {
-                    drafted += k;
-                    accepted_total += out.accepted;
-                    accepted_counts.push(out.accepted);
-                }
-                let t_now = now(t0);
-                states[i].check_eos(man.eos, emitted, t_now);
-                states[i].check_limits(cfg.max_new_tokens, s_max,
-                                       (k + 2) as i32, t_now);
-                debug_assert!(states[i].check_invariants(s_max).is_ok());
-            }
-            steps += 1;
-            step_log.push((k, accepted_counts.clone()));
-            policy.observe(&accepted_counts);
         }
+        let tv = Instant::now();
+        let logits =
+            self.verify_all(store, b, q, &vtokens, &mlens, &stepping)?;
+        self.verify_secs += now(tv);
+        let live: Vec<&SeqState> =
+            self.rows.iter().filter_map(Row::state).collect();
+        let ctx_m = live.iter().map(|s| s.main_len as usize).sum::<usize>()
+            / live.len().max(1);
+        self.flops.add_step(&self.main_info, n_compute, q, ctx_m);
 
-        // ---- wrap up -----------------------------------------------------------
-        let wall = now(t0);
-        states.truncate(b_real);
-        let mut metrics = BatchMetrics::from_seqs(&states, wall);
-        metrics.steps = steps;
-        metrics.acceptance_rate = if drafted > 0 {
-            accepted_total as f64 / drafted as f64
-        } else {
-            0.0
-        };
-        metrics.tokens_per_step = if steps > 0 {
-            metrics.total_tokens as f64 / steps as f64
-        } else {
-            0.0
-        };
-        Ok(SpecResult {
-            seqs: states,
-            metrics,
-            drafted,
-            accepted: accepted_total,
-            steps,
-            prefill_secs,
-            draft_secs,
-            verify_secs,
-            flops,
-            step_log,
+        // -- accept/reject per sequence (host) -----------------------------
+        let mut events = Vec::new();
+        let mut finished = Vec::new();
+        let mut accepted_counts = Vec::new();
+        let s_max = self.s_max;
+        let mut drafted_add = 0usize;
+        let mut accepted_add = 0usize;
+        for (i, row) in self.rows.iter_mut().enumerate() {
+            let (slot, real) = match row {
+                Row::Seq(s) => (s, true),
+                Row::Shadow(s) => (s, false),
+                _ => continue,
+            };
+            if !slot.state.active() {
+                continue;
+            }
+            // Warp main distributions for positions 0..=k.
+            let warped: Vec<Vec<f32>> = (0..q)
+                .map(|j| {
+                    let r = &logits[(i * q + j) * vocab
+                                    ..(i * q + j + 1) * vocab];
+                    warp_top_p(r, cfg.temperature, cfg.top_p)
+                })
+                .collect();
+            let p_refs: Vec<&[f32]> =
+                warped.iter().map(|w| w.as_slice()).collect();
+            let d_tokens: Vec<usize> = (0..k)
+                .map(|j| draft_tokens[i * k + j] as usize)
+                .collect();
+            let q_refs: Vec<&[f32]> = (0..k)
+                .map(|j| &qdists[(i * k + j) * vocab
+                                 ..(i * k + j + 1) * vocab])
+                .collect();
+            let out = spec_accept(&p_refs, &d_tokens, &q_refs,
+                                  &mut slot.rng_accept);
+
+            let acc_bytes: Vec<u8> = d_tokens[..out.accepted]
+                .iter()
+                .map(|&t| t as u8)
+                .collect();
+            let mut logp =
+                logp_of(&warped[out.accepted], out.next_token) as f64;
+            for (j, &d) in d_tokens[..out.accepted].iter().enumerate() {
+                logp += logp_of(&warped[j], d) as f64;
+            }
+            let n_in_used = slot.state.n_pending_draft;
+            let gen_before = slot.state.generated.len();
+            let emitted = slot.state.apply_step(
+                &acc_bytes, out.next_token as u8, out.bonus, k, n_in_used,
+                logp);
+            if real {
+                drafted_add += k;
+                accepted_add += out.accepted;
+                accepted_counts.push(out.accepted);
+            }
+            let t_now = now(t0);
+            slot.state.check_eos(man.eos, emitted, t_now);
+            slot.state.check_limits(slot.max_new_tokens, s_max,
+                                    (k + 2) as i32, t_now);
+            debug_assert!(slot.state.check_invariants(s_max).is_ok());
+            if real {
+                let done = !slot.state.active();
+                if done {
+                    finished.push(slot.id);
+                }
+                let cut = gen_before.min(slot.state.generated.len());
+                events.push(SeqEvent {
+                    id: slot.id,
+                    accepted: out.accepted,
+                    new_bytes: slot.state.generated[cut..].to_vec(),
+                    done,
+                    finish: slot.state.finish,
+                });
+            }
+        }
+        let step = self.steps;
+        self.steps += 1;
+        self.drafted += drafted_add;
+        self.accepted += accepted_add;
+        self.step_log.push((k, accepted_counts.clone()));
+        self.policy.observe(&accepted_counts);
+        Ok(StepReport {
+            step,
+            k,
+            events,
+            finished,
+            active: self.active(),
+            occupied: self.occupied(),
         })
     }
 
-    fn active_count(&self, states: &[SeqState], b: usize) -> usize {
-        match self.cfg.mode {
-            // PAD computes every row, active or not.
-            ExecMode::Pad => b,
-            ExecMode::Split => states.iter().filter(|s| s.active()).count(),
+    // -- retire ------------------------------------------------------------
+
+    /// Take a sequence out of the batch, returning its final state. The
+    /// slot becomes reusable immediately (SPLIT: caches dropped, row
+    /// freed) or once the whole PAD batch drains (the row freezes into a
+    /// placeholder; the batch auto-resets when the last real sequence
+    /// leaves). Retiring a still-active sequence abandons it (cancel).
+    pub fn retire(&mut self, id: SeqId) -> Result<SeqState> {
+        let Some(idx) = self.rows.iter().position(
+            |r| matches!(r, Row::Seq(s) if s.id == id))
+        else {
+            bail!("no live sequence {id} in batch");
+        };
+        let pad_running = self.cfg.mode == ExecMode::Pad
+            && self.store.is_some();
+        let replacement = if pad_running {
+            // The fused artifact keeps computing this row; leave a frozen
+            // state so dlens/mlens inputs stay valid.
+            match &self.rows[idx] {
+                Row::Seq(s) => Row::Husk(s.state.clone()),
+                _ => unreachable!(),
+            }
+        } else {
+            Row::Free
+        };
+        let Row::Seq(slot) = std::mem::replace(&mut self.rows[idx],
+                                               replacement)
+        else {
+            unreachable!();
+        };
+        if let Some(CacheStore::Split { main, draft }) = self.store.as_mut()
+        {
+            main[idx] = Vec::new();
+            draft[idx] = Vec::new();
         }
+        if pad_running && self.occupied() == 0 {
+            self.reset_pad();
+        } else if self.occupied() == 0 {
+            // Batch drained: the next busy period gets a fresh clock and
+            // a fresh draft-length policy, same as a PAD reset — so a
+            // request hitting an idle server behaves identically in both
+            // modes regardless of earlier traffic.
+            self.t0 = None;
+            self.policy = fresh_policy(&self.cfg);
+        }
+        Ok(slot.state)
     }
 
-    // -- mode-dispatched model calls ---------------------------------------------
-
-    fn prefill_all(&self, b: usize, tokens: &[i32], plens: &[i32],
-                   flops: &mut FlopCounter,
-                   main_info: &crate::runtime::ModelInfo,
-                   draft_info: &crate::runtime::ModelInfo)
-                   -> Result<CacheStore> {
-        let cfg = &self.cfg;
-        let eng = self.engine;
-        let p = eng.manifest.prefill_p;
-        flops.add_prefill(main_info, b, p);
-        flops.add_prefill(draft_info, b, p);
-        match cfg.mode {
-            ExecMode::Pad => {
-                let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn,
-                                    b, tokens, plens)?;
-                let d = eng.prefill(&cfg.draft_model, cfg.precision,
-                                    cfg.attn, b, tokens, plens)?;
-                Ok(CacheStore::Pad { main: m.caches, draft: d.caches })
-            }
-            ExecMode::Split => {
-                let mut main = Vec::with_capacity(b);
-                let mut draft = Vec::with_capacity(b);
-                for i in 0..b {
-                    let row = &tokens[i * p..(i + 1) * p];
-                    let m = eng.prefill(&cfg.main_model, cfg.precision,
-                                        cfg.attn, 1, row, &plens[i..=i])?;
-                    let d = eng.prefill(&cfg.draft_model, cfg.precision,
-                                        cfg.attn, 1, row, &plens[i..=i])?;
-                    main.push(m.caches);
-                    draft.push(d.caches);
-                }
-                Ok(CacheStore::Split { main, draft })
-            }
-        }
+    /// Drop the drained PAD batch so new admissions start a fresh bucket.
+    fn reset_pad(&mut self) {
+        self.store = None;
+        self.rows = (0..self.capacity).map(|_| Row::Free).collect();
+        self.t0 = None;
+        self.policy = fresh_policy(&self.cfg);
     }
+
+    // -- mode-dispatched model calls ---------------------------------------
 
     #[allow(clippy::too_many_arguments)]
     fn draft_all(&self, store: &mut CacheStore, b: usize, k: usize,
                  tokens_in: &[i32], n_in: &[i32], dlens: &[i32],
-                 uniforms: &[f32], states: &[SeqState])
+                 uniforms: &[f32], stepping: &[bool])
                  -> Result<(Vec<i32>, Vec<f32>)> {
         let cfg = &self.cfg;
         let eng = self.engine;
@@ -395,8 +736,8 @@ impl<'a> SpecEngine<'a> {
                 let mut toks = vec![0i32; b * k];
                 let mut qd = vec![0f32; b * k * vocab];
                 for i in 0..b {
-                    if !states[i].active() {
-                        continue; // SPLIT skips finished sequences
+                    if !stepping[i] {
+                        continue; // SPLIT skips finished/free slots
                     }
                     let caches = std::mem::take(&mut draft[i]);
                     let out = eng.draft(
@@ -415,7 +756,7 @@ impl<'a> SpecEngine<'a> {
     }
 
     fn verify_all(&self, store: &mut CacheStore, b: usize, q: usize,
-                  vtokens: &[i32], mlens: &[i32], states: &[SeqState])
+                  vtokens: &[i32], mlens: &[i32], stepping: &[bool])
                   -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         let eng = self.engine;
@@ -432,7 +773,7 @@ impl<'a> SpecEngine<'a> {
             CacheStore::Split { main, .. } => {
                 let mut logits = vec![0f32; b * q * vocab];
                 for i in 0..b {
-                    if !states[i].active() {
+                    if !stepping[i] {
                         continue;
                     }
                     let caches = std::mem::take(&mut main[i]);
@@ -450,6 +791,79 @@ impl<'a> SpecEngine<'a> {
     }
 }
 
+fn fresh_policy(cfg: &SpecConfig) -> Box<dyn DraftLenPolicy> {
+    match cfg.policy {
+        Policy::Heuristic => Box::new(Heuristic::testbed()),
+        Policy::Fixed(k) => Box::new(Fixed(k)),
+    }
+}
+
+pub struct SpecEngine<'a> {
+    pub engine: &'a Engine,
+    pub cfg: SpecConfig,
+}
+
+impl<'a> SpecEngine<'a> {
+    pub fn new(engine: &'a Engine, cfg: SpecConfig) -> SpecEngine<'a> {
+        SpecEngine { engine, cfg }
+    }
+
+    /// Generate completions for a batch of prompts (1 ≤ n ≤ largest batch
+    /// bucket). Prompts longer than the prefill capacity keep their tail.
+    /// This is a thin one-shot loop over the resumable [`SpecBatch`] API:
+    /// admit everything, step until done (or the time budget expires),
+    /// retire everything.
+    pub fn generate(&self, prompts: &[Vec<u8>]) -> Result<SpecResult> {
+        let cfg = &self.cfg;
+        if prompts.is_empty() {
+            bail!("empty prompt batch");
+        }
+        let mut batch =
+            SpecBatch::new(self.engine, cfg.clone(), prompts.len())?;
+        let mut ids = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            ids.push(batch.admit(p, cfg.seed)?);
+        }
+        while batch.has_active() {
+            if let Some(budget) = cfg.time_budget_secs {
+                if batch.elapsed_secs() >= budget {
+                    break;
+                }
+            }
+            batch.step()?;
+        }
+        let wall = batch.elapsed_secs();
+        let seqs: Vec<SeqState> = ids
+            .into_iter()
+            .map(|id| batch.retire(id))
+            .collect::<Result<_>>()?;
+        let mut metrics = BatchMetrics::from_seqs(&seqs, wall);
+        metrics.steps = batch.steps;
+        metrics.acceptance_rate = if batch.drafted > 0 {
+            batch.accepted as f64 / batch.drafted as f64
+        } else {
+            0.0
+        };
+        metrics.tokens_per_step = if batch.steps > 0 {
+            metrics.total_tokens as f64 / batch.steps as f64
+        } else {
+            0.0
+        };
+        Ok(SpecResult {
+            seqs,
+            metrics,
+            drafted: batch.drafted,
+            accepted: batch.accepted,
+            steps: batch.steps,
+            prefill_secs: batch.prefill_secs,
+            draft_secs: batch.draft_secs,
+            verify_secs: batch.verify_secs,
+            flops: batch.flops.clone(),
+            step_log: batch.step_log.clone(),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,5 +874,12 @@ mod tests {
         assert_eq!(c.main_model, "main");
         assert_eq!(c.mode, ExecMode::Pad);
         assert!(matches!(c.policy, Policy::Heuristic));
+    }
+
+    #[test]
+    fn step_report_default_is_idle() {
+        let r = StepReport::default();
+        assert_eq!(r.active, 0);
+        assert!(r.events.is_empty() && r.finished.is_empty());
     }
 }

@@ -1,10 +1,14 @@
 //! The paper's contribution: batched speculative sampling (§3).
 //!
 //! * [`draft_len`] — Algorithm 1 and fixed-length baselines.
-//! * [`engine`] — the BASS decode loop with PAD/SPLIT execution.
+//! * [`engine`] — the BASS decode loop, exposed both as the resumable
+//!   [`SpecBatch`] step API (admit / step / retire — what the coordinator's
+//!   continuous batching drives) and as the one-shot [`SpecEngine`]
+//!   convenience wrapper.
 
 pub mod draft_len;
 mod engine;
 
 pub use draft_len::{DraftLenPolicy, Fixed, Heuristic};
-pub use engine::{ExecMode, Policy, SpecConfig, SpecEngine, SpecResult};
+pub use engine::{ExecMode, Policy, SeqEvent, SeqId, SpecBatch, SpecConfig,
+                 SpecEngine, SpecResult, StepReport};

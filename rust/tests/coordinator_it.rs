@@ -1,5 +1,6 @@
-//! Coordinator + TCP server integration tests: request queueing, dynamic
-//! co-batching, fan-out slicing and the line protocol, over real artifacts.
+//! Coordinator + TCP server integration tests: continuous batching
+//! (mid-flight admission, immediate retirement), queueing, fan-out
+//! slicing, streaming and the line protocol, over real artifacts.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -8,9 +9,10 @@ use std::time::Duration;
 
 use bass::bench_util::{artifacts_available, artifacts_root};
 use bass::coordinator::batcher::BatcherConfig;
-use bass::coordinator::{server, Coordinator, CoordinatorConfig, Request};
+use bass::coordinator::{server, Coordinator, CoordinatorConfig, Reply,
+                        Request};
 use bass::runtime::json::Json;
-use bass::spec::SpecConfig;
+use bass::spec::{ExecMode, SpecConfig};
 use bass::tokenizer;
 
 macro_rules! require_artifacts {
@@ -22,10 +24,11 @@ macro_rules! require_artifacts {
     };
 }
 
-fn coordinator(max_batch: usize, window_ms: u64) -> Coordinator {
+fn coordinator_with(spec: SpecConfig, max_batch: usize, window_ms: u64)
+                    -> Coordinator {
     Coordinator::start(CoordinatorConfig {
         artifacts_root: artifacts_root(),
-        spec: SpecConfig { max_new_tokens: 12, ..SpecConfig::default() },
+        spec,
         batcher: BatcherConfig {
             max_batch,
             window: Duration::from_millis(window_ms),
@@ -35,15 +38,27 @@ fn coordinator(max_batch: usize, window_ms: u64) -> Coordinator {
     .expect("coordinator start")
 }
 
-fn code_request(n: usize) -> Request {
+fn coordinator(max_batch: usize, window_ms: u64) -> Coordinator {
+    coordinator_with(
+        SpecConfig { max_new_tokens: 12, ..SpecConfig::default() },
+        max_batch, window_ms)
+}
+
+fn request(prompt: &str, n: usize, max_new: usize, stream: bool)
+           -> Request {
     Request {
-        prompt: tokenizer::encode(
-            "def add_7(x):\n    # adds 7 to x\n    return"),
+        prompt: tokenizer::encode(prompt),
         n_seqs: n,
-        max_new_tokens: Some(12),
+        max_new_tokens: Some(max_new),
         temperature: None,
         top_p: None,
+        seed: None,
+        stream,
     }
+}
+
+fn code_request(n: usize) -> Request {
+    request("def add_7(x):\n    # adds 7 to x\n    return", n, 12, false)
 }
 
 #[test]
@@ -64,11 +79,11 @@ fn concurrent_requests_are_cobatched() {
     let _ = coord.generate(code_request(1));
     let rx1 = coord.submit(code_request(2));
     let rx2 = coord.submit(code_request(2));
-    let r1 = rx1.recv().unwrap().unwrap();
-    let r2 = rx2.recv().unwrap().unwrap();
+    let r1 = Coordinator::wait(rx1).unwrap();
+    let r2 = Coordinator::wait(rx2).unwrap();
     assert_eq!(r1.seqs.len(), 2);
     assert_eq!(r2.seqs.len(), 2);
-    // Both rode the same engine batch (2 + 2 sequences).
+    // Both rode the same engine batch (2 + 2 sequences co-resident).
     assert_eq!(r1.batch_size, 4);
     assert_eq!(r2.batch_size, 4);
 }
@@ -79,6 +94,127 @@ fn fanout_clamped_to_max_batch() {
     let coord = coordinator(4, 1);
     let resp = coord.generate(code_request(9)).unwrap();
     assert_eq!(resp.seqs.len(), 4);
+}
+
+/// The continuous-batching acceptance test: a short request submitted
+/// after a long one has *started* must be admitted into the running
+/// batch (SPLIT mode), finish first, and report a queue wait that is the
+/// admission wait — not the long request's full runtime.
+#[test]
+fn midflight_admission_into_running_batch() {
+    require_artifacts!();
+    let coord = Arc::new(coordinator_with(
+        SpecConfig {
+            max_new_tokens: 96,
+            mode: ExecMode::Split,
+            temperature: 2.0, // keep the long request rambling (no EOS)
+            ..SpecConfig::default()
+        },
+        4, 1));
+    // Warm up so step timing is not dominated by lazy compiles.
+    let _ = coord.generate(request("def f(x):\n    return", 1, 4, false));
+
+    // Long request, streaming so we *know* when its batch has started.
+    let rx_long = coord.submit(
+        request("def add_7(x):\n    # adds 7 to x\n    return", 1, 96,
+                true));
+    match rx_long.recv().expect("long request alive") {
+        Reply::Step(_) => {} // first step done => batch started
+        Reply::Done(r) => panic!("long request finished instantly: {r:?}"),
+    }
+
+    // Short request arrives mid-flight.
+    let t_submit = std::time::Instant::now();
+    let short = coord
+        .generate(request("def mul_3(x):\n    return", 1, 2, false))
+        .unwrap();
+    let short_wall = t_submit.elapsed().as_secs_f64();
+
+    // Admitted into the running batch: co-resident with the long seq,
+    // even though it arrived after that batch started.
+    assert!(short.batch_size > short.seqs.len(),
+            "batch_size {} not > own seqs {} — no mid-flight admission",
+            short.batch_size, short.seqs.len());
+    assert_eq!(short.seqs.len(), 1);
+    assert!(short.seqs[0].n_tokens > 0);
+
+    // The long request must still be running when the short one answered.
+    let mut long_done_early = false;
+    loop {
+        match rx_long.try_recv() {
+            Ok(Reply::Step(_)) => continue,
+            Ok(Reply::Done(_)) => {
+                long_done_early = true;
+                break;
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => break,
+            Err(e) => panic!("long request channel died: {e}"),
+        }
+    }
+    assert!(!long_done_early,
+            "short request did not overtake the long one");
+
+    let long = Coordinator::wait(rx_long).unwrap();
+    assert!(long.seqs[0].n_tokens >= short.seqs[0].n_tokens);
+    // queue_secs is the admission wait, not the long batch's runtime.
+    assert!(short.queue_secs <= short_wall,
+            "queue {:.3}s exceeds the request's own wall {:.3}s",
+            short.queue_secs, short_wall);
+    assert!(short.queue_secs < long.batch_secs * 0.5,
+            "queue {:.3}s looks like full-batch wait ({:.3}s batch)",
+            short.queue_secs, long.batch_secs);
+}
+
+/// PAD mode cannot grow a fused cache mid-run: a request arriving after
+/// the batch started waits for the drain and runs in its own batch.
+#[test]
+fn pad_admission_waits_for_drain() {
+    require_artifacts!();
+    let coord = Arc::new(coordinator_with(
+        SpecConfig {
+            max_new_tokens: 48,
+            mode: ExecMode::Pad,
+            temperature: 2.0,
+            ..SpecConfig::default()
+        },
+        4, 1));
+    let _ = coord.generate(request("def f(x):\n    return", 1, 4, false));
+    let rx_long = coord.submit(
+        request("def add_7(x):\n    return", 1, 48, true));
+    match rx_long.recv().expect("long request alive") {
+        Reply::Step(_) => {}
+        Reply::Done(r) => panic!("long request finished instantly: {r:?}"),
+    }
+    let short = coord
+        .generate(request("def mul_3(x):\n    return", 1, 2, false))
+        .unwrap();
+    // No co-residency: the short request ran alone after the drain.
+    assert_eq!(short.batch_size, 1);
+    let _ = Coordinator::wait(rx_long).unwrap();
+}
+
+#[test]
+fn streaming_deltas_reassemble_final_text() {
+    require_artifacts!();
+    let coord = coordinator(4, 1);
+    let rx = coord.submit(
+        request("def add_7(x):\n    # adds 7 to x\n    return", 1, 12,
+                true));
+    let mut assembled = String::new();
+    let mut events = 0usize;
+    let resp = loop {
+        match rx.recv().expect("worker alive") {
+            Reply::Step(ev) => {
+                assert_eq!(ev.seq, 0);
+                assembled.push_str(&ev.text_delta);
+                events += 1;
+            }
+            Reply::Done(r) => break r.unwrap(),
+        }
+    };
+    assert!(events > 0, "streaming request produced no step events");
+    assert_eq!(assembled, resp.seqs[0].text,
+               "streamed deltas disagree with the final text");
 }
 
 #[test]
@@ -113,4 +249,30 @@ fn tcp_server_line_protocol() {
     reader.read_line(&mut line2).unwrap();
     let j2 = Json::parse(&line2).unwrap();
     assert_eq!(j2.get("ok").unwrap(), &Json::Bool(false));
+
+    // Streaming: event lines first, then the final ok line; the deltas
+    // reassemble the final text.
+    stream
+        .write_all(
+            b"{\"prompt\": \"def mul_3(x):\\n    return\", \
+              \"max_new_tokens\": 6, \"stream\": true}\n")
+        .unwrap();
+    let mut assembled = String::new();
+    let mut saw_event = false;
+    loop {
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        let j = Json::parse(&l).unwrap();
+        if j.opt("event").is_some() {
+            saw_event = true;
+            assembled.push_str(j.get("delta").unwrap().as_str().unwrap());
+            continue;
+        }
+        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+        let text = j.get("seqs").unwrap().as_arr().unwrap()[0]
+            .get("text").unwrap().as_str().unwrap().to_string();
+        assert_eq!(assembled, text);
+        break;
+    }
+    assert!(saw_event, "no event lines before the final response");
 }

@@ -1,0 +1,187 @@
+//! The archetype invariant behind continuous batching: driving the
+//! resumable `SpecBatch` API step by step must reproduce the one-shot
+//! `SpecEngine::generate` **byte for byte** (and logP for logP) — in both
+//! PAD and SPLIT execution modes. If this holds, the coordinator may
+//! interleave admission/retirement at any step boundary without changing
+//! any sequence's output, because each sequence's randomness and cache
+//! state are functions of (prompt, seed, admission index) alone.
+
+use bass::bench_util::{artifacts_available, artifacts_root};
+use bass::kv::FinishReason;
+use bass::runtime::Engine;
+use bass::spec::{ExecMode, Policy, SpecBatch, SpecConfig, SpecEngine};
+use bass::tokenizer;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn engine() -> Engine {
+    Engine::load(&artifacts_root()).expect("engine load")
+}
+
+fn prompts() -> Vec<Vec<u8>> {
+    vec![
+        tokenizer::encode("def add_7(x):\n    # adds 7 to x\n    return"),
+        tokenizer::encode("def mul_3(x):\n    return"),
+        tokenizer::encode("article: alice went to the market. summary:"),
+    ]
+}
+
+fn cfg(mode: ExecMode) -> SpecConfig {
+    SpecConfig {
+        max_new_tokens: 20,
+        policy: Policy::Fixed(4),
+        mode,
+        seed: 42,
+        ..SpecConfig::default()
+    }
+}
+
+/// Drive a SpecBatch manually to completion and return the final states
+/// in admission order.
+fn run_stepwise(e: &Engine, cfg: &SpecConfig, prompts: &[Vec<u8>])
+                -> Vec<bass::kv::SeqState> {
+    let mut batch = SpecBatch::new(e, cfg.clone(), prompts.len()).unwrap();
+    let mut ids = Vec::new();
+    for p in prompts {
+        ids.push(batch.admit(p, cfg.seed).unwrap());
+    }
+    let mut guard = 0;
+    while batch.has_active() {
+        let report = batch.step().unwrap();
+        assert_eq!(report.k, 4, "Fixed(4) must hold every step");
+        // Events cover exactly the sequences that were active.
+        assert!(!report.events.is_empty());
+        guard += 1;
+        assert!(guard < 1000, "runaway stepwise loop");
+    }
+    ids.into_iter().map(|id| batch.retire(id).unwrap()).collect()
+}
+
+fn assert_equivalent(mode: ExecMode) {
+    let e = engine();
+    let cfg = cfg(mode);
+    let prompts = prompts();
+
+    let oneshot = SpecEngine::new(&e, cfg.clone())
+        .generate(&prompts)
+        .unwrap();
+    let stepwise = run_stepwise(&e, &cfg, &prompts);
+
+    assert_eq!(oneshot.seqs.len(), stepwise.len());
+    for (i, (a, b)) in oneshot.seqs.iter().zip(&stepwise).enumerate() {
+        assert_eq!(a.generated, b.generated,
+                   "{mode:?} seq {i}: stepwise bytes diverge from one-shot");
+        assert_eq!(a.finish, b.finish, "{mode:?} seq {i}: finish reason");
+        assert!((a.mean_logp() - b.mean_logp()).abs() < 1e-12,
+                "{mode:?} seq {i}: mean_logp {} vs {}", a.mean_logp(),
+                b.mean_logp());
+        assert_ne!(a.finish, FinishReason::Running);
+    }
+}
+
+#[test]
+fn stepwise_equals_oneshot_pad() {
+    require_artifacts!();
+    assert_equivalent(ExecMode::Pad);
+}
+
+#[test]
+fn stepwise_equals_oneshot_split() {
+    require_artifacts!();
+    assert_equivalent(ExecMode::Split);
+}
+
+#[test]
+fn stepwise_equals_oneshot_heuristic_policy() {
+    require_artifacts!();
+    // The adaptive policy observes per-step accept counts; stepwise
+    // driving must feed it identically.
+    let e = engine();
+    let cfg = SpecConfig {
+        max_new_tokens: 24,
+        seed: 7,
+        ..SpecConfig::default()
+    };
+    let prompts = prompts();
+    let oneshot = SpecEngine::new(&e, cfg.clone())
+        .generate(&prompts)
+        .unwrap();
+    let stepwise = run_stepwise_lenient(&e, &cfg, &prompts);
+    for (a, b) in oneshot.seqs.iter().zip(&stepwise) {
+        assert_eq!(a.generated, b.generated);
+    }
+}
+
+/// Like `run_stepwise` but without Fixed(4)-specific assertions.
+fn run_stepwise_lenient(e: &Engine, cfg: &SpecConfig, prompts: &[Vec<u8>])
+                        -> Vec<bass::kv::SeqState> {
+    let mut batch = SpecBatch::new(e, cfg.clone(), prompts.len()).unwrap();
+    let mut ids = Vec::new();
+    for p in prompts {
+        ids.push(batch.admit(p, cfg.seed).unwrap());
+    }
+    while batch.has_active() {
+        batch.step().unwrap();
+    }
+    ids.into_iter().map(|id| batch.retire(id).unwrap()).collect()
+}
+
+#[test]
+fn split_slot_reuse_is_isolated() {
+    require_artifacts!();
+    // A sequence's output must be a function of (prompt, seed, admission
+    // index) only. Reference: p_long and p_new co-resident from step 0
+    // (admission indices 0 and 1). Continuous run: p_long alone, retired,
+    // then p_new admitted into the *reused* slot (still admission index
+    // 1). The bytes must match exactly — the slot's previous occupant and
+    // the changed batch composition must not leak into p_new.
+    let e = engine();
+    let cfg = SpecConfig {
+        max_new_tokens: 12,
+        policy: Policy::Fixed(4), // stateless policy: k identical in both
+        mode: ExecMode::Split,
+        seed: 5,
+        ..SpecConfig::default()
+    };
+    let p_long = tokenizer::encode(
+        "def add_7(x):\n    # adds 7 to x\n    return");
+    let p_new = tokenizer::encode("def mul_3(x):\n    return");
+
+    // Reference: both sequences from step 0 in a 2-slot batch.
+    let mut refb = SpecBatch::new(&e, cfg.clone(), 2).unwrap();
+    refb.admit(&p_long, cfg.seed).unwrap();
+    let ref_new = refb.admit(&p_new, 99).unwrap();
+    while refb.has_active() {
+        refb.step().unwrap();
+    }
+    let ref_state = refb.retire(ref_new).unwrap();
+
+    // Continuous: single slot, serial occupancy.
+    let mut batch = SpecBatch::new(&e, cfg.clone(), 1).unwrap();
+    let long_id = batch.admit(&p_long, cfg.seed).unwrap();
+    while batch.has_active() {
+        batch.step().unwrap();
+    }
+    batch.retire(long_id).unwrap();
+    assert!(batch.can_admit(), "retire must free the SPLIT slot");
+    let new_id = batch.admit(&p_new, 99).unwrap();
+    assert_ne!(new_id, long_id, "SeqIds are never reused");
+    while batch.has_active() {
+        batch.step().unwrap();
+    }
+    let new_state = batch.retire(new_id).unwrap();
+
+    assert_eq!(ref_state.generated, new_state.generated,
+               "slot reuse leaked state into the new sequence");
+    assert!((ref_state.mean_logp() - new_state.mean_logp()).abs() < 1e-12);
+    assert_ne!(new_state.finish, FinishReason::Running);
+    let s_max = e.manifest.model("main").unwrap().s_max as i32;
+    new_state.check_invariants(s_max).unwrap();
+}
