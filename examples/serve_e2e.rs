@@ -120,10 +120,16 @@ fn main() -> anyhow::Result<()> {
                 resp.texts[0].split('\n').next().unwrap_or("").trim();
             stats.rouge.push(rouge2_f1(summary, &task.reference));
         }
-        println!("round {round}: code {:.0} ms ({} seqs), summ {:.0}/{:.0} \
-                  ms, queue p50 {:.1} ms",
-                 code_resp.e2e_ms, code_resp.texts.len(), s1_resp.e2e_ms,
-                 s2_resp.e2e_ms, stats.queue_ms.percentile(0.5));
+        println!("round {round}: code {:.0} ms ({}/{} seqs), summ \
+                  {:.0}/{:.0} ms, queue p50 {:.1} ms",
+                 code_resp.e2e_ms, code_resp.texts.len(),
+                 code_resp.n_requested, s1_resp.e2e_ms, s2_resp.e2e_ms,
+                 stats.queue_ms.percentile(0.5));
+        if code_resp.texts.len() < code_resp.n_requested {
+            println!("  note: fan-out clamped to engine capacity \
+                      ({} of {} requested)",
+                     code_resp.texts.len(), code_resp.n_requested);
+        }
     }
 
     // Streaming demo: per-step event lines before the final response.
@@ -203,6 +209,8 @@ struct RespStats {
     e2e_ms: f64,
     queue_ms: f64,
     tokens: usize,
+    /// Fan-out asked for; fewer returned texts means the engine clamped.
+    n_requested: usize,
     texts: Vec<String>,
 }
 
@@ -225,6 +233,7 @@ fn request(addr: std::net::SocketAddr, prompt: &str, n: usize,
     Ok(RespStats {
         e2e_ms: t0.elapsed().as_secs_f64() * 1e3,
         queue_ms: j.get("queue_ms")?.as_f64()?,
+        n_requested: j.get("n_requested")?.as_usize()?,
         tokens: seqs.iter()
             .map(|s| s.get("n_tokens").and_then(|v| v.as_usize())
                  .unwrap_or(0))

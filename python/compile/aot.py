@@ -145,11 +145,15 @@ def lower_artifact(cfg: ModelConfig, params, phase, batch, q, attn):
                 p, tokens_in, n_in, seq_lens, caches, uniforms, temp, top_p,
                 cfg, attn)
             return (toks, qdists, *caches)
+        # temp/top_p are [B] per-row vectors: co-batched sequences from
+        # different requests keep their own sampling params (the Rust
+        # engine fills one entry per slot).
         args = (wspecs, jax.ShapeDtypeStruct((batch, 2), i32),
                 jax.ShapeDtypeStruct((batch,), i32),
                 jax.ShapeDtypeStruct((batch,), i32),
                 jax.ShapeDtypeStruct((batch, q), f32),
-                jax.ShapeDtypeStruct((), f32), jax.ShapeDtypeStruct((), f32),
+                jax.ShapeDtypeStruct((batch,), f32),
+                jax.ShapeDtypeStruct((batch,), f32),
                 _cache_specs(cfg, batch))
         jitted = jax.jit(fn, donate_argnums=(7,))
     else:
@@ -286,7 +290,9 @@ def main():
 
     # ---- manifest -----------------------------------------------------------
     manifest = {
-        "version": 1,
+        # v2: draft artifacts take [B] per-row temperature/top_p vectors
+        # (must match rust/src/runtime/manifest.rs::MANIFEST_VERSION).
+        "version": 2,
         "vocab": 256,
         "eos": 0,
         "prefill_p": PREFILL_P,

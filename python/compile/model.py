@@ -254,7 +254,9 @@ def sample_top_p(logits, u, temperature, top_p):
 
     Args:
       logits: f32[B, V]; u: f32[B] uniforms in [0,1);
-      temperature, top_p: f32 scalars.
+      temperature, top_p: f32[B] **per-row** sampling params (scalars are
+        broadcast) — co-batched sequences from different serving requests
+        keep their own knobs inside one fused draft call.
 
     Returns (tokens i32[B], warped f32[B, V]) where ``warped`` is the
     renormalized post-top-p distribution — the q(x) the speculative
@@ -268,7 +270,9 @@ def sample_top_p(logits, u, temperature, top_p):
     negligible. The top-1 token is always kept.
     """
     b, v = logits.shape
-    probs = jax.nn.softmax(logits / jnp.maximum(temperature, 1e-4), axis=-1)
+    t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
+    tp = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+    probs = jax.nn.softmax(logits / jnp.maximum(t, 1e-4)[:, None], axis=-1)
     # mass_before[b, i] = sum of probs strictly greater than probs[b, i].
     # Deliberately O(V²): at V = 256 the vectorized compare+sum beats a
     # sort-based O(V log V) cutoff on CPU XLA by ~12% per draft step
@@ -277,7 +281,7 @@ def sample_top_p(logits, u, temperature, top_p):
     # XLA 0.5.1 text parser.
     gt = probs[:, None, :] > probs[:, :, None]                    # [B, i, j]
     mass_before = jnp.sum(jnp.where(gt, probs[:, None, :], 0.0), axis=-1)
-    keep = mass_before < top_p
+    keep = mass_before < tp[:, None]
     filt = jnp.where(keep, probs, 0.0)
     warped = filt / jnp.sum(filt, -1, keepdims=True)
     cdf = jnp.cumsum(warped, axis=-1)
@@ -307,6 +311,9 @@ def draft_loop(params, tokens_in, n_in, seq_lens, caches, uniforms,
       n_in: i32[B] in {1, 2}.
       seq_lens: i32[B] — valid draft-cache lengths (ragged).
       uniforms: f32[B, K] — one uniform per drafted token.
+      temperature, top_p: f32[B] — per-row sampling params (one pair per
+        co-batched sequence; the serving layer fills each row from its
+        request's overrides).
 
     Returns (draft_tokens i32[B, K], qdists f32[B, K, V], new_caches).
     qdists[b, j] is the warped draft distribution d_{j} was sampled from.

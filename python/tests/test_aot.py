@@ -70,6 +70,17 @@ def test_draft_artifact_avoids_topk():
     assert _parses_as_hlo(text), "draft artifact uses parser-hostile ops"
 
 
+def test_draft_artifact_takes_per_row_sampling_params():
+    """The draft ABI carries temperature/top_p as [B] vectors (per-request
+    sampling params), not scalars: at B=2 the entry computation must take
+    f32[2] parameters alongside the f32[2,3] uniforms."""
+    text = lower_artifact(CFG, PARAMS, "draft", 2, 3, "dense")
+    assert _parses_as_hlo(text)
+    entry = text.splitlines()[0]
+    assert "f32[2]" in entry, "temp/top_p are not [B]-shaped in the ABI"
+    assert "f32[]" not in entry, "scalar sampling param survived in the ABI"
+
+
 def test_int8_artifact_has_s8_params():
     qp = quantize_params(PARAMS)
     text = lower_artifact(CFG, qp, "decode", 1, 1, "dense")

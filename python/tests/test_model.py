@@ -157,6 +157,20 @@ def test_sample_top_p_valid_distribution(seed, temp, top_p):
         assert w[b, int(tok[b])] > 0
 
 
+def test_sample_top_p_per_row_params():
+    """Per-row [B] temperature/top_p vectors: a near-greedy row and a hot
+    row warp independently inside one call (the per-request sampling
+    contract of the serving layer)."""
+    logits = jnp.array([[0.0, 3.0, 1.0, -2.0]] * 2)
+    u = jnp.array([0.7, 0.7])
+    tok, w = sample_top_p(logits, u, jnp.array([0.01, 2.0], jnp.float32),
+                          jnp.array([0.9, 1.0], jnp.float32))
+    w = np.asarray(w)
+    assert int(tok[0]) == 1 and w[0, 1] > 0.999   # greedy row collapses
+    assert (w[1] > 0.01).all()                     # hot row keeps everything
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+
+
 def test_sample_top_p_greedy_limit():
     logits = jnp.array([[0.0, 3.0, 1.0, -2.0]])
     tok, w = sample_top_p(logits, jnp.array([0.7]), jnp.float32(0.01),

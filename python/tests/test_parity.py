@@ -56,6 +56,27 @@ def test_warp_directed_case():
     assert w[0] == 0.0 and w[3] == 0.0
 
 
+def test_per_row_params_directed():
+    """Per-row (temperature, top_p) vectors over one logits row: row 0 is
+    the shared pinned case at (1.0, 0.8); row 1 the same logits at
+    (0.5, 1.0), i.e. softmax(0, 2, 4, -2) with nothing filtered. Pinned in
+    rust/src/sampling.rs::warp_per_row_params_matches_python — the Rust
+    verify-side warp runs per row with each slot's own params, so both
+    sides must agree row-wise."""
+    logits = jnp.array([[0.0, 1.0, 2.0, -1.0]] * 2)
+    _, w = sample_top_p(logits, jnp.array([0.5, 0.5]),
+                        jnp.array([1.0, 0.5], jnp.float32),
+                        jnp.array([0.8, 1.0], jnp.float32))
+    w = np.asarray(w)
+    np.testing.assert_allclose(w[0, 2], 0.6439 / 0.8808, atol=2e-3)
+    np.testing.assert_allclose(w[0, 1], 0.2369 / 0.8808, atol=2e-3)
+    assert w[0, 0] == 0.0 and w[0, 3] == 0.0
+    np.testing.assert_allclose(w[1, 2], 0.86495, atol=2e-3)
+    np.testing.assert_allclose(w[1, 1], 0.11706, atol=2e-3)
+    np.testing.assert_allclose(w[1, 0], 0.01584, atol=2e-3)
+    assert w[1, 3] > 0.0  # top_p = 1 keeps everything
+
+
 def test_cdf_inversion_directed():
     """Token selection = first index with cdf > u, in index order."""
     logits = jnp.log(jnp.array([[0.25, 0.25, 0.25, 0.25]]))

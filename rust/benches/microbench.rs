@@ -77,14 +77,16 @@ fn main() -> anyhow::Result<()> {
         let n_in = vec![1i32; b];
         let uni = vec![0.5f32; b * k];
         let mut seq = 20i32;
+        let temps = vec![0.2f32; b];
+        let tps = vec![0.95f32; b];
         let out = engine.draft("draft_a", Precision::F32, Attn::Dense, b, k,
-                               &tokens_in, &n_in, &vec![seq; b], &uni, 0.2,
-                               0.95, caches.take().unwrap())?;
+                               &tokens_in, &n_in, &vec![seq; b], &uni,
+                               &temps, &tps, caches.take().unwrap())?;
         caches = Some(out.caches);
         let s = measure(2, reps, || {
             let out = engine.draft("draft_a", Precision::F32, Attn::Dense,
                                    b, k, &tokens_in, &n_in, &vec![seq; b],
-                                   &uni, 0.2, 0.95,
+                                   &uni, &temps, &tps,
                                    caches.take().unwrap())?;
             caches = Some(out.caches);
             seq = (seq + 1).min(150);

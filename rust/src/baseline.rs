@@ -229,7 +229,8 @@ impl<'a> DraftOnlyDecoder<'a> {
             }
             let out = eng.draft(&cfg.model, cfg.precision, cfg.attn, b, k,
                                 &tokens_in, &n_in, &lens, &uniforms,
-                                cfg.temperature, cfg.top_p, caches)?;
+                                &vec![cfg.temperature; b],
+                                &vec![cfg.top_p; b], caches)?;
             caches = out.caches;
             let ctx = states.iter().map(|s| s.draft_len as usize)
                 .sum::<usize>() / b;

@@ -75,20 +75,23 @@ pub fn plan_batch(queue: &[Pending], free_slots: usize,
 
 /// Should the coordinator admit now, or keep the free slots open a little
 /// longer for co-batchable arrivals? Admit when the queue can already fill
-/// every free slot, or once the head request has waited out the window.
+/// every free slot, or once the head request has waited out the window —
+/// but never when [`plan_batch`] would take nothing anyway (no free
+/// slots, or a head whose fan-out doesn't fit until more of the batch
+/// drains): flushing then would only make the coordinator rebuild the
+/// pending list and re-plan uselessly at every step boundary. Gated on
+/// `plan_batch` itself so the two policies cannot drift.
 pub fn should_flush(queue: &[Pending], free_slots: usize,
                     cfg: &BatcherConfig, now: Instant) -> bool {
-    if free_slots == 0 {
+    let Some(head) = queue.first() else {
+        return false;
+    };
+    if plan_batch(queue, free_slots, cfg).0 == 0 {
         return false;
     }
-    match queue.first() {
-        None => false,
-        Some(head) => {
-            let seqs: usize = queue.iter().map(|p| p.n_seqs.max(1)).sum();
-            seqs >= free_slots.min(cfg.max_batch)
-                || now.duration_since(head.enqueued) >= cfg.window
-        }
-    }
+    let free = free_slots.min(cfg.max_batch);
+    let seqs: usize = queue.iter().map(|p| p.n_seqs.max(1)).sum();
+    seqs >= free || now.duration_since(head.enqueued) >= cfg.window
 }
 
 #[cfg(test)]
@@ -184,6 +187,43 @@ mod tests {
         // Same queue against a fully-busy batch: nothing to do.
         assert!(!should_flush(&[pend(1, 2)], 0, &cfg,
                               now + Duration::from_millis(11)));
+    }
+
+    #[test]
+    fn oversized_head_never_flushes_a_partial_batch() {
+        // Head fan-out exceeds the free slots of a *partially full* batch:
+        // plan_batch takes nothing until the batch drains, so should_flush
+        // must agree — even long after the window expired — instead of
+        // making the coordinator re-plan uselessly at every step boundary.
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            window: Duration::from_millis(10),
+        };
+        let now = Instant::now();
+        let late = now + Duration::from_millis(500);
+        let q = vec![pend(1, 9)];
+        assert_eq!(plan_batch(&q, 3, &cfg), (0, 0));
+        assert!(!should_flush(&q, 3, &cfg, now));
+        assert!(!should_flush(&q, 3, &cfg, late));
+        // Queued followers don't change the verdict: the head still blocks.
+        let q2 = vec![pend(1, 9), pend(2, 1)];
+        assert_eq!(plan_batch(&q2, 3, &cfg), (0, 0));
+        assert!(!should_flush(&q2, 3, &cfg, late));
+    }
+
+    #[test]
+    fn oversized_head_flushes_once_the_batch_is_empty() {
+        // The flip side: against an *empty* batch the head clamp-admits,
+        // so should_flush fires (here immediately — 9 queued seqs already
+        // cover the 4 free slots).
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            window: Duration::from_millis(10),
+        };
+        let now = Instant::now();
+        let q = vec![pend(1, 9)];
+        assert!(should_flush(&q, 4, &cfg, now));
+        assert_eq!(plan_batch(&q, 4, &cfg), (1, 4));
     }
 
     #[test]

@@ -19,10 +19,13 @@
 //! front-end ([`server`]) is just a thin line-protocol adapter that can
 //! also relay per-step [`StepEvent`]s as a streaming response.
 //!
-//! Sampling parameters (temperature / top-p) are a property of the server's
-//! [`SpecConfig`]: sequences from many requests share fused device calls,
-//! so per-request overrides are no longer honored (per-request
-//! `max_new_tokens` still is — limits are enforced per slot).
+//! Sampling parameters (temperature / top-p) are **per request**, like
+//! `max_new_tokens` and `seed`: sequences from many requests share fused
+//! device calls, but the draft artifact takes `[B]` per-row param vectors
+//! and the verify-side warp is per-slot host code, so each admitted
+//! sequence keeps its own request's knobs ([`crate::spec::AdmitOpts`]).
+//! The server's [`SpecConfig`] values are only the defaults for requests
+//! that leave them unset.
 
 pub mod batcher;
 pub mod server;
@@ -36,7 +39,7 @@ use anyhow::{anyhow, Result};
 
 use crate::kv::FinishReason;
 use crate::runtime::Engine;
-use crate::spec::{SeqId, SpecBatch, SpecConfig};
+use crate::spec::{AdmitOpts, SeqId, SpecBatch, SpecConfig};
 use batcher::{plan_batch, should_flush, BatcherConfig, Pending};
 
 /// One generation request.
@@ -46,9 +49,11 @@ pub struct Request {
     /// Fan-out: number of sequences to sample for this prompt.
     pub n_seqs: usize,
     pub max_new_tokens: Option<usize>,
-    /// Accepted for wire compatibility; sampling params are server-level
-    /// under continuous batching (see module docs).
+    /// Per-request sampling temperature; every sequence of this request's
+    /// fan-out uses it in the fused draft call and the verify-side warp.
+    /// Defaults to the server's [`SpecConfig::temperature`].
     pub temperature: Option<f32>,
+    /// Per-request nucleus threshold (same scope as `temperature`).
     pub top_p: Option<f32>,
     /// Per-request RNG seed. When set, each fan-out sequence's RNG
     /// stream is pinned to its fan-out index, so {prompt, seed}
@@ -75,6 +80,11 @@ pub struct GenSeq {
 #[derive(Debug)]
 pub struct Response {
     pub seqs: Vec<GenSeq>,
+    /// Fan-out the request asked for. `seqs.len() < n_requested` means the
+    /// engine clamped the fan-out to its batch capacity — previously a
+    /// silent truncation the client could not distinguish from a typo'd
+    /// `n`.
+    pub n_requested: usize,
     /// Wall seconds from this request's admission into the engine batch
     /// to its last sequence retiring.
     pub batch_secs: f64,
@@ -207,6 +217,8 @@ struct InFlight {
     seq_index: HashMap<SeqId, usize>,
     done: Vec<Option<GenSeq>>,
     remaining: usize,
+    /// Fan-out asked for (before any capacity clamp).
+    n_requested: usize,
     admitted: Instant,
     queue_secs: f64,
     /// Max co-resident sequences observed while this request was in the
@@ -223,6 +235,7 @@ impl InFlight {
             .collect();
         let _ = self.reply.send(Reply::Done(Ok(Response {
             seqs,
+            n_requested: self.n_requested,
             batch_secs: self.admitted.elapsed().as_secs_f64(),
             batch_size: self.batch_size,
             queue_secs: self.queue_secs,
@@ -418,7 +431,8 @@ fn admit_jobs(batch: &mut SpecBatch, queue: &mut Vec<QueuedJob>,
             return;
         }
         for job in queue.drain(..n_take) {
-            let n = job.pending.n_seqs.max(1).min(batch.free_slots().max(1));
+            let n_requested = job.pending.n_seqs.max(1);
+            let n = n_requested.min(batch.free_slots().max(1));
             let admitted = Instant::now();
             let queue_secs =
                 admitted.duration_since(job.pending.enqueued).as_secs_f64();
@@ -429,6 +443,7 @@ fn admit_jobs(batch: &mut SpecBatch, queue: &mut Vec<QueuedJob>,
                 seq_index: HashMap::new(),
                 done: (0..n).map(|_| None).collect(),
                 remaining: n,
+                n_requested,
                 admitted,
                 queue_secs,
                 batch_size: n,
@@ -440,8 +455,12 @@ fn admit_jobs(batch: &mut SpecBatch, queue: &mut Vec<QueuedJob>,
                 // same output regardless of prior traffic (exact under
                 // Policy::Fixed; see Request::seed).
                 let stream = job.req.seed.map(|_| i as u64);
-                match batch.admit_opts(&job.req.prompt, seed,
-                                       job.req.max_new_tokens, stream) {
+                match batch.admit_opts(&job.req.prompt, seed, AdmitOpts {
+                    max_new_tokens: job.req.max_new_tokens,
+                    stream,
+                    temperature: job.req.temperature,
+                    top_p: job.req.top_p,
+                }) {
                     Ok(id) => {
                         fl.seq_index.insert(id, i);
                         seq_owner.insert(id, job.id);

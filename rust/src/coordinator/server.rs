@@ -3,9 +3,11 @@
 //! One JSON object per line in, one (or more) per line out:
 //!
 //! ```text
-//! -> {"prompt": "def add_7(x):\n    return", "n": 4, "max_new_tokens": 32}
+//! -> {"prompt": "def add_7(x):\n    return", "n": 4, "max_new_tokens": 32,
+//!     "temperature": 0.7, "top_p": 0.9}
 //! <- {"ok": true, "seqs": [{"text": " x + 7", "finished": true, ...}],
-//!     "batch_size": 4, "batch_ms": 120.5, "queue_ms": 0.8}
+//!     "n_requested": 4, "batch_size": 4, "batch_ms": 120.5,
+//!     "queue_ms": 0.8}
 //! ```
 //!
 //! With `"stream": true` the server relays one event line per speculative
@@ -22,7 +24,14 @@
 //! coordinator admits concurrent connections into the running speculative
 //! batch at step boundaries (continuous batching) and answers each request
 //! the moment its own sequences finish. Sampling parameters (temperature /
-//! top-p) are server-level; per-request values are accepted but ignored.
+//! top-p) are honored **per request** even across co-batched traffic — the
+//! engine threads them per-row through the fused draft call and the
+//! verify-side warp; the server's `SpecConfig` only supplies defaults. A
+//! fan-out `"n"` larger than the engine's batch capacity is clamped; the
+//! response's `"n_requested"` echoes the asked-for value so clients can
+//! detect the clamp (`seqs.len() < n_requested`). Out-of-range sampling
+//! params (`top_p` outside (0, 1], non-finite or negative temperature)
+//! fail that request with `{"ok": false, ...}` at admission.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -141,6 +150,7 @@ pub fn event_json(ev: &StepEvent) -> Json {
 pub fn response_json(resp: &super::Response) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
+        ("n_requested", resp.n_requested.into()),
         ("batch_size", resp.batch_size.into()),
         ("batch_ms", (resp.batch_secs * 1e3).into()),
         ("queue_ms", (resp.queue_secs * 1e3).into()),
@@ -190,6 +200,22 @@ mod tests {
     fn parse_rejects_missing_prompt() {
         assert!(parse_request(r#"{"n": 2}"#).is_err());
         assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn response_json_reports_requested_fanout() {
+        let resp = crate::coordinator::Response {
+            seqs: vec![],
+            n_requested: 9,
+            batch_secs: 0.1,
+            batch_size: 4,
+            queue_secs: 0.0,
+        };
+        let j = response_json(&resp);
+        // A client compares n_requested to seqs.len() to detect the
+        // engine's fan-out clamp.
+        assert_eq!(j.get("n_requested").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
     }
 
     #[test]

@@ -251,13 +251,18 @@ impl Engine {
 
     /// One fused draft call: ingest 1–2 catch-up tokens per sequence, then
     /// draft `k` tokens with in-graph nucleus sampling. `uniforms` `[B, K]`
-    /// supplies the randomness (host-controlled, reproducible).
+    /// supplies the randomness (host-controlled, reproducible);
+    /// `temperature` / `top_p` are `[B]` per-row sampling params — each
+    /// co-batched sequence keeps its own request's knobs inside the fused
+    /// call.
     #[allow(clippy::too_many_arguments)]
     pub fn draft(&self, model: &str, precision: Precision, attn: Attn,
                  batch: usize, k: usize, tokens_in: &[i32], n_in: &[i32],
-                 seq_lens: &[i32], uniforms: &[f32], temperature: f32,
-                 top_p: f32, caches: Vec<PjRtBuffer>) -> Result<DraftOut> {
-        if tokens_in.len() != batch * 2 || uniforms.len() != batch * k {
+                 seq_lens: &[i32], uniforms: &[f32], temperature: &[f32],
+                 top_p: &[f32], caches: Vec<PjRtBuffer>) -> Result<DraftOut> {
+        if tokens_in.len() != batch * 2 || uniforms.len() != batch * k
+            || temperature.len() != batch || top_p.len() != batch
+        {
             bail!("draft shape mismatch");
         }
         let key = ArtifactKey {
@@ -269,8 +274,8 @@ impl Engine {
         let n = self.upload_i32(n_in, &[batch])?;
         let l = self.upload_i32(seq_lens, &[batch])?;
         let u = self.upload_f32(uniforms, &[batch, k])?;
-        let temp = self.upload_f32(&[temperature], &[])?;
-        let tp = self.upload_f32(&[top_p], &[])?;
+        let temp = self.upload_f32(temperature, &[batch])?;
+        let tp = self.upload_f32(top_p, &[batch])?;
         let mut inputs: Vec<&PjRtBuffer> = w.iter().collect();
         inputs.extend([&t, &n, &l, &u, &temp, &tp]);
         inputs.extend(caches.iter());

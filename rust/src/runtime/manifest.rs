@@ -15,6 +15,12 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::json::Json;
 
+/// Manifest (= artifact ABI) version this runtime speaks. v2: the draft
+/// artifact takes `[B]` per-row temperature/top_p vectors instead of
+/// scalars. Checked at load so an artifact/binary mismatch fails with a
+/// "rebuild" message instead of an opaque device shape error mid-request.
+pub const MANIFEST_VERSION: usize = 2;
+
 /// Numeric precision of a model's weights (paper Tables 1–3 axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
@@ -154,6 +160,13 @@ impl Manifest {
 
     pub fn parse(root: &Path, text: &str) -> Result<Manifest> {
         let j = Json::parse(text)?;
+        let version = j.get("version")?.as_usize()?;
+        if version != MANIFEST_VERSION {
+            bail!("artifact manifest is version {version}, this runtime \
+                   needs {MANIFEST_VERSION} (v2 changed the draft ABI to \
+                   per-row temperature/top_p vectors) — rebuild with \
+                   `make artifacts`");
+        }
         let usize_arr = |v: &Json| -> Result<Vec<usize>> {
             v.as_arr()?.iter().map(|x| x.as_usize()).collect()
         };
@@ -263,7 +276,7 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "version": 1, "vocab": 256, "eos": 0, "prefill_p": 64,
+      "version": 2, "vocab": 256, "eos": 0, "prefill_p": 64,
       "batches": [1, 2, 4], "draft_k_buckets": [1, 2, 4, 8],
       "small_k_buckets": [2, 4],
       "models": {"main": {"n_layer": 4, "n_head": 8, "d_model": 256,
@@ -293,6 +306,17 @@ mod tests {
         };
         assert!(m.artifact_path(&key).is_ok());
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn stale_manifest_version_is_rejected_with_rebuild_hint() {
+        // Pre-v2 artifacts export scalar draft temp/top_p: loading them
+        // with this runtime must fail up front, not at execute time.
+        let old = SAMPLE.replace("\"version\": 2", "\"version\": 1");
+        let err = Manifest::parse(Path::new("/tmp/x"), &old)
+            .expect_err("v1 manifest must be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
     }
 
     #[test]

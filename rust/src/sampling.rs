@@ -64,23 +64,38 @@ pub fn softmax(x: &mut [f32]) {
 /// all kept; top-1 always kept).
 pub fn warp_top_p(logits: &[f32], temperature: f32, top_p: f32) -> Vec<f32> {
     let t = temperature.max(1e-4);
-    let mut probs: Vec<f32> = logits.iter().map(|&l| l / t).collect();
+    // A non-finite logit (one poisoned artifact output) is treated as
+    // -inf: it gets zero mass instead of panicking the engine worker
+    // thread (NaN) or poisoning softmax into an all-NaN row that would
+    // silently auto-accept every draft token (+inf, since NaN p makes
+    // `(p / q).min(1.0)` evaluate to 1.0). An all-poisoned row degrades
+    // to uniform so downstream CDF inversion stays well-defined.
+    let mut probs: Vec<f32> = logits
+        .iter()
+        .map(|&l| if l.is_finite() { l / t } else { f32::NEG_INFINITY })
+        .collect();
+    if !probs.is_empty() && probs.iter().all(|&v| v == f32::NEG_INFINITY) {
+        let n = probs.len();
+        return vec![1.0 / n as f32; n];
+    }
     softmax(&mut probs);
-    // Sort descending once, then mass_before(p) = prefix mass of strictly
-    // greater values (O(V log V), equivalent to the in-graph O(V²) rule).
+    // Sort descending once; prefix[j] = mass of the j largest values,
+    // accumulated in descending order. mass_before(p) is then the prefix
+    // at the count of strictly-greater values (binary search): O(V log V)
+    // total where the old per-token scan of the sorted prefix was O(V²) —
+    // and this runs on the verify hot path, B×(k+1) times per step.
+    // Summation order matches the old scan exactly, so results are
+    // bit-identical (`warp_prefix_sum_matches_reference_scan`).
     let mut sorted: Vec<f32> = probs.clone();
-    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sorted.sort_by(|a, b| b.total_cmp(a));
+    let mut prefix = vec![0.0f32; sorted.len() + 1];
+    for (j, &s) in sorted.iter().enumerate() {
+        prefix[j + 1] = prefix[j] + s;
+    }
     let mut keep = vec![false; probs.len()];
     for (i, &p) in probs.iter().enumerate() {
-        let mut mass_before = 0.0f32;
-        for &s in &sorted {
-            if s > p {
-                mass_before += s;
-            } else {
-                break;
-            }
-        }
-        keep[i] = mass_before < top_p;
+        let n_greater = sorted.partition_point(|&s| s > p);
+        keep[i] = prefix[n_greater] < top_p;
     }
     let mass: f32 = probs
         .iter()
@@ -148,13 +163,12 @@ pub fn spec_accept(
         let d = draft_tokens[j];
         let p = p_main[j][d];
         let q = q_draft[j][d];
+        // One uniform is consumed per draft position unconditionally, so
+        // the stream position is a function of j alone.
         let r = rng.next_f32();
-        let accept = q <= 0.0 || r < (p / q).min(1.0);
-        if q <= 0.0 {
-            // d was sampled from q, so q(d) > 0 in exact arithmetic; treat
-            // an fp-zero as a reject to stay conservative.
-        }
-        if accept && q > 0.0 {
+        // d was sampled from q, so q(d) > 0 in exact arithmetic; treat an
+        // fp-zero as a reject to stay conservative.
+        if q > 0.0 && r < (p / q).min(1.0) {
             continue;
         }
         // Reject: sample from the residual distribution.
@@ -234,6 +248,106 @@ mod tests {
         assert_close(w[1], 0.2369 / 0.8808, 2e-3);
         assert_eq!(w[0], 0.0);
         assert_eq!(w[3], 0.0);
+    }
+
+    /// The pre-optimization warp: per-token scan of the sorted prefix
+    /// (O(V²)). Kept as the reference the prefix-sum rewrite must match
+    /// bit-for-bit (same descending summation order).
+    fn warp_reference_scan(logits: &[f32], temperature: f32, top_p: f32)
+                           -> Vec<f32> {
+        let t = temperature.max(1e-4);
+        let mut probs: Vec<f32> = logits.iter().map(|&l| l / t).collect();
+        softmax(&mut probs);
+        let mut sorted: Vec<f32> = probs.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut keep = vec![false; probs.len()];
+        for (i, &p) in probs.iter().enumerate() {
+            let mut mass_before = 0.0f32;
+            for &s in &sorted {
+                if s > p {
+                    mass_before += s;
+                } else {
+                    break;
+                }
+            }
+            keep[i] = mass_before < top_p;
+        }
+        let mass: f32 = probs
+            .iter()
+            .zip(&keep)
+            .map(|(&p, &k)| if k { p } else { 0.0 })
+            .sum();
+        let inv = 1.0 / mass;
+        probs
+            .iter()
+            .zip(&keep)
+            .map(|(&p, &k)| if k { p * inv } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn warp_prefix_sum_matches_reference_scan() {
+        // Random logits over a spread of (T, top_p), including ties from
+        // repeated values: the fast path must be bit-identical.
+        let mut rng = Pcg32::new(2024, 17);
+        for case in 0usize..40 {
+            let v = 2 + (case % 63);
+            let mut logits: Vec<f32> =
+                (0..v).map(|_| (rng.next_f32() - 0.5) * 12.0).collect();
+            if case % 3 == 0 {
+                logits[v / 2] = logits[0]; // force a tie
+            }
+            let t = 0.05 + rng.next_f32() * 2.0;
+            let p = 0.05 + rng.next_f32() * 0.95;
+            let fast = warp_top_p(&logits, t, p);
+            let slow = warp_reference_scan(&logits, t, p);
+            assert_eq!(fast, slow, "case {case}: T={t} top_p={p}");
+        }
+    }
+
+    #[test]
+    fn warp_nonfinite_logit_is_neg_inf_not_a_panic() {
+        // One poisoned artifact output must not panic the worker thread
+        // (NaN) or NaN-poison the whole row (+inf): non-finite values get
+        // zero mass, everything else warps as if they were -inf.
+        let with_ninf =
+            warp_top_p(&[1.0, f32::NEG_INFINITY, 0.5, -0.3], 1.0, 0.9);
+        for poison in [f32::NAN, f32::INFINITY] {
+            let w = warp_top_p(&[1.0, poison, 0.5, -0.3], 1.0, 0.9);
+            assert_eq!(w, with_ninf, "poison {poison}");
+            assert_eq!(w[1], 0.0);
+            assert!(w.iter().all(|v| v.is_finite()));
+            assert_close(w.iter().sum::<f32>(), 1.0, 1e-6);
+        }
+    }
+
+    #[test]
+    fn warp_all_poisoned_degrades_to_uniform() {
+        for row in [[f32::NAN; 4], [f32::INFINITY; 4],
+                    [f32::NEG_INFINITY; 4]] {
+            let w = warp_top_p(&row, 0.7, 0.9);
+            assert_eq!(w, vec![0.25; 4]);
+            // CDF inversion over the degraded row still returns a token.
+            assert_eq!(sample_cdf(&w, 0.9), 3);
+        }
+    }
+
+    #[test]
+    fn warp_per_row_params_matches_python() {
+        // Pinned per-row case shared with python/tests/test_parity.py::
+        // test_per_row_params_directed: one logits row warped under two
+        // different (T, top_p) pairs — the per-slot verify-side warp.
+        let logits = [0.0f32, 1.0, 2.0, -1.0];
+        let row0 = warp_top_p(&logits, 1.0, 0.8);
+        assert_close(row0[2], 0.6439 / 0.8808, 2e-3);
+        assert_close(row0[1], 0.2369 / 0.8808, 2e-3);
+        assert_eq!(row0[0], 0.0);
+        assert_eq!(row0[3], 0.0);
+        let row1 = warp_top_p(&logits, 0.5, 1.0);
+        assert_close(row1[2], 0.86495, 2e-3);
+        assert_close(row1[1], 0.11706, 2e-3);
+        assert_close(row1[0], 0.01584, 2e-3);
+        assert!(row1[3] > 0.0, "top_p = 1 keeps everything");
     }
 
     #[test]

@@ -6,7 +6,12 @@
 //!
 //! * [`SpecBatch::admit`] — place a prompt into a free slot (SPLIT mode:
 //!   any time; PAD mode: only while the batch has not started, because the
-//!   fused PAD cache has no per-row prefill artifact).
+//!   fused PAD cache has no per-row prefill artifact). [`AdmitOpts`]
+//!   carries per-sequence overrides — `max_new_tokens`, a pinned RNG
+//!   stream, and **per-sequence sampling params**: `temperature` / `top_p`
+//!   live in the slot and flow as `[B]` rows into the fused draft
+//!   artifact and into the host-side verify warp, so co-batched requests
+//!   never have to agree on sampling knobs.
 //! * [`SpecBatch::step`] — one draft + verify + accept round over the
 //!   currently-active slots:
 //!
@@ -78,7 +83,10 @@ pub struct SpecConfig {
     pub draft_model: String,
     pub precision: Precision,
     pub attn: Attn,
+    /// Default sampling temperature; sequences admitted with an
+    /// [`AdmitOpts`] override keep their own (per-row everywhere).
     pub temperature: f32,
+    /// Default nucleus threshold (same override scope as `temperature`).
     pub top_p: f32,
     pub max_new_tokens: usize,
     pub policy: Policy,
@@ -169,13 +177,56 @@ enum CacheStore {
     Split { main: Vec<Vec<PjRtBuffer>>, draft: Vec<Vec<PjRtBuffer>> },
 }
 
-/// One occupied slot: sequence state plus its private RNG streams.
+/// Per-admission overrides for [`SpecBatch::admit_opts`]. Every `None`
+/// falls back to the batch-wide [`SpecConfig`] value, so
+/// `AdmitOpts::default()` reproduces plain [`SpecBatch::admit`].
+#[derive(Debug, Clone, Default)]
+pub struct AdmitOpts {
+    /// Per-sequence generation limit.
+    pub max_new_tokens: Option<usize>,
+    /// Pinned PCG32 stream index (see [`SpecBatch::admit_opts`]).
+    pub stream: Option<u64>,
+    /// Per-sequence sampling temperature — drives both this row of the
+    /// fused draft artifact and the verify-side warp.
+    pub temperature: Option<f32>,
+    /// Per-sequence nucleus threshold (same scope as `temperature`).
+    pub top_p: Option<f32>,
+}
+
+impl AdmitOpts {
+    /// Range-check the sampling overrides; the `Err` names the offending
+    /// field. [`SpecBatch::admit_opts`] runs this before consuming a slot,
+    /// so a bad wire value (`top_p: 0`, NaN, …) fails that one request
+    /// up front instead of warping its rows into all-zero/NaN
+    /// distributions mid-generation.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(t) = self.temperature {
+            if !t.is_finite() || t < 0.0 {
+                bail!("temperature must be finite and >= 0 (got {t})");
+            }
+        }
+        if let Some(p) = self.top_p {
+            if !p.is_finite() || p <= 0.0 || p > 1.0 {
+                bail!("top_p must be in (0, 1] (got {p})");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One occupied slot: sequence state plus its private RNG streams and
+/// sampling params.
 struct Slot {
     id: SeqId,
     state: SeqState,
     rng_draft: Pcg32,
     rng_accept: Pcg32,
     max_new_tokens: usize,
+    /// Per-sequence sampling params (seeded from [`SpecConfig`], overridden
+    /// per admission): used for this row of the fused draft call and the
+    /// host-side verify warp.
+    temperature: f32,
+    top_p: f32,
 }
 
 /// A batch row. `Shadow` rows are PAD padding (they advance like real
@@ -274,7 +325,8 @@ impl<'a> SpecBatch<'a> {
 
     // -- introspection ----------------------------------------------------
 
-    /// The batch-wide speculative configuration (sampling params, mode).
+    /// The batch-wide speculative configuration (mode, policy, sampling
+    /// defaults — individual sequences may carry [`AdmitOpts`] overrides).
     pub fn config(&self) -> &SpecConfig {
         &self.cfg
     }
@@ -325,21 +377,24 @@ impl<'a> SpecBatch<'a> {
     /// fused prefill at first step and rejects admissions once the batch
     /// has started.
     pub fn admit(&mut self, prompt: &[u8], seed: u64) -> Result<SeqId> {
-        self.admit_opts(prompt, seed, None, None)
+        self.admit_opts(prompt, seed, AdmitOpts::default())
     }
 
-    /// [`SpecBatch::admit`] with a per-sequence `max_new_tokens` override
-    /// and an optional pinned `stream` index. Pinning the stream makes the
-    /// randomness a pure function of (seed, stream) — independent of how
-    /// many admissions preceded it — which is what per-request seeds need
-    /// for reproducibility under serving traffic (exact for the full
-    /// output only when per-step draft lengths also match, i.e.
+    /// [`SpecBatch::admit`] with per-sequence overrides ([`AdmitOpts`]):
+    /// a `max_new_tokens` limit, sampling params (`temperature` /
+    /// `top_p` — per-row through the draft artifact and the verify-side
+    /// warp, so co-batched requests keep their own knobs), and an optional
+    /// pinned `stream` index. Pinning the stream makes the randomness a
+    /// pure function of (seed, stream) — independent of how many
+    /// admissions preceded it — which is what per-request seeds need for
+    /// reproducibility under serving traffic (exact for the full output
+    /// only when per-step draft lengths also match, i.e.
     /// [`Policy::Fixed`]). Callers pinning streams own the (seed, stream)
     /// uniqueness trade-off; the unpinned default (the admission counter)
     /// never collides within a batch lifetime.
-    pub fn admit_opts(&mut self, prompt: &[u8], seed: u64,
-                      max_new_tokens: Option<usize>, stream: Option<u64>)
+    pub fn admit_opts(&mut self, prompt: &[u8], seed: u64, opts: AdmitOpts)
                       -> Result<SeqId> {
+        opts.validate()?;
         if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
             bail!("PAD batch already started; admission needs a drained \
                    batch (use SPLIT mode for mid-flight admission)");
@@ -358,7 +413,7 @@ impl<'a> SpecBatch<'a> {
         }
         let id = self.next_stream;
         self.next_stream += 1;
-        let stream = stream.unwrap_or(id);
+        let stream = opts.stream.unwrap_or(id);
         let state = SeqState::new(tail.to_vec(), *tail.last().unwrap(),
                                   tail.len() as i32);
         let slot = Slot {
@@ -366,8 +421,11 @@ impl<'a> SpecBatch<'a> {
             state,
             rng_draft: Pcg32::new(seed, 2 * stream),
             rng_accept: Pcg32::new(seed, 2 * stream + 1),
-            max_new_tokens: max_new_tokens
+            max_new_tokens: opts
+                .max_new_tokens
                 .unwrap_or(self.cfg.max_new_tokens),
+            temperature: opts.temperature.unwrap_or(self.cfg.temperature),
+            top_p: opts.top_p.unwrap_or(self.cfg.top_p),
         };
         if self.cfg.mode == ExecMode::Split {
             self.prefill_split_slot(row, &slot.state)?;
@@ -441,6 +499,8 @@ impl<'a> SpecBatch<'a> {
                 rng_draft: Pcg32::new(cfg.seed, 2 * i as u64),
                 rng_accept: Pcg32::new(cfg.seed, 2 * i as u64 + 1),
                 max_new_tokens: cfg.max_new_tokens,
+                temperature: cfg.temperature,
+                top_p: cfg.top_p,
             }));
         }
         let mut tokens = vec![0i32; b * p];
@@ -503,6 +563,11 @@ impl<'a> SpecBatch<'a> {
         let mut n_in = vec![1i32; b];
         let mut dlens = vec![0i32; b];
         let mut uniforms = vec![0f32; b * k];
+        // Per-row sampling params for the fused draft call. Free and Husk
+        // rows carry the batch defaults — their outputs are never read, the
+        // artifact just needs a valid value per row.
+        let mut temps = vec![cfg.temperature; b];
+        let mut tps = vec![cfg.top_p; b];
         for (i, row) in self.rows.iter_mut().enumerate() {
             if let Some(s) = row.state() {
                 tokens_in[i * 2] = s.pending_draft[0] as i32;
@@ -518,6 +583,8 @@ impl<'a> SpecBatch<'a> {
                 for j in 0..k {
                     uniforms[i * k + j] = slot.rng_draft.next_f32();
                 }
+                temps[i] = slot.temperature;
+                tps[i] = slot.top_p;
             }
         }
         let stepping: Vec<bool> = self
@@ -529,7 +596,8 @@ impl<'a> SpecBatch<'a> {
             .collect();
         let td = Instant::now();
         let (draft_tokens, qdists) = self.draft_all(
-            store, b, k, &tokens_in, &n_in, &dlens, &uniforms, &stepping)?;
+            store, b, k, &tokens_in, &n_in, &dlens, &uniforms, &temps,
+            &tps, &stepping)?;
         self.draft_secs += now(td);
         let live: Vec<&SeqState> =
             self.rows.iter().filter_map(Row::state).collect();
@@ -581,12 +649,13 @@ impl<'a> SpecBatch<'a> {
             if !slot.state.active() {
                 continue;
             }
-            // Warp main distributions for positions 0..=k.
+            // Warp main distributions for positions 0..=k with this
+            // slot's own sampling params (per-request, not batch-wide).
             let warped: Vec<Vec<f32>> = (0..q)
                 .map(|j| {
                     let r = &logits[(i * q + j) * vocab
                                     ..(i * q + j + 1) * vocab];
-                    warp_top_p(r, cfg.temperature, cfg.top_p)
+                    warp_top_p(r, slot.temperature, slot.top_p)
                 })
                 .collect();
             let p_refs: Vec<&[f32]> =
@@ -717,7 +786,8 @@ impl<'a> SpecBatch<'a> {
     #[allow(clippy::too_many_arguments)]
     fn draft_all(&self, store: &mut CacheStore, b: usize, k: usize,
                  tokens_in: &[i32], n_in: &[i32], dlens: &[i32],
-                 uniforms: &[f32], stepping: &[bool])
+                 uniforms: &[f32], temps: &[f32], tps: &[f32],
+                 stepping: &[bool])
                  -> Result<(Vec<i32>, Vec<f32>)> {
         let cfg = &self.cfg;
         let eng = self.engine;
@@ -727,8 +797,7 @@ impl<'a> SpecBatch<'a> {
                 let caches = std::mem::take(draft);
                 let out = eng.draft(&cfg.draft_model, cfg.precision,
                                     cfg.attn, b, k, tokens_in, n_in, dlens,
-                                    uniforms, cfg.temperature, cfg.top_p,
-                                    caches)?;
+                                    uniforms, temps, tps, caches)?;
                 *draft = out.caches;
                 Ok((out.tokens, out.qdists))
             }
@@ -744,7 +813,7 @@ impl<'a> SpecBatch<'a> {
                         &cfg.draft_model, cfg.precision, cfg.attn, 1, k,
                         &tokens_in[i * 2..i * 2 + 2], &n_in[i..=i],
                         &dlens[i..=i], &uniforms[i * k..(i + 1) * k],
-                        cfg.temperature, cfg.top_p, caches)?;
+                        &temps[i..=i], &tps[i..=i], caches)?;
                     draft[i] = out.caches;
                     toks[i * k..(i + 1) * k].copy_from_slice(&out.tokens);
                     qd[i * k * vocab..(i + 1) * k * vocab]
@@ -881,5 +950,30 @@ mod tests {
         let r = StepReport::default();
         assert_eq!(r.active, 0);
         assert!(r.events.is_empty() && r.finished.is_empty());
+    }
+
+    #[test]
+    fn admit_opts_sampling_overrides_are_range_checked() {
+        let ok = |o: AdmitOpts| o.validate().is_ok();
+        assert!(ok(AdmitOpts::default()));
+        assert!(ok(AdmitOpts { temperature: Some(0.0),
+                               ..AdmitOpts::default() })); // warp clamps
+        assert!(ok(AdmitOpts { temperature: Some(2.5),
+                               top_p: Some(1.0),
+                               ..AdmitOpts::default() }));
+        for bad in [
+            AdmitOpts { top_p: Some(0.0), ..AdmitOpts::default() },
+            AdmitOpts { top_p: Some(-0.5), ..AdmitOpts::default() },
+            AdmitOpts { top_p: Some(1.5), ..AdmitOpts::default() },
+            AdmitOpts { top_p: Some(f32::NAN), ..AdmitOpts::default() },
+            AdmitOpts { temperature: Some(-1.0),
+                        ..AdmitOpts::default() },
+            AdmitOpts { temperature: Some(f32::INFINITY),
+                        ..AdmitOpts::default() },
+            AdmitOpts { temperature: Some(f32::NAN),
+                        ..AdmitOpts::default() },
+        ] {
+            assert!(bad.validate().is_err(), "accepted: {bad:?}");
+        }
     }
 }

@@ -10,5 +10,5 @@ pub mod draft_len;
 mod engine;
 
 pub use draft_len::{DraftLenPolicy, Fixed, Heuristic};
-pub use engine::{ExecMode, Policy, SeqEvent, SeqId, SpecBatch, SpecConfig,
-                 SpecEngine, SpecResult, StepReport};
+pub use engine::{AdmitOpts, ExecMode, Policy, SeqEvent, SeqId, SpecBatch,
+                 SpecConfig, SpecEngine, SpecResult, StepReport};

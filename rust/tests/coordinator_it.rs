@@ -12,7 +12,8 @@ use bass::coordinator::batcher::BatcherConfig;
 use bass::coordinator::{server, Coordinator, CoordinatorConfig, Reply,
                         Request};
 use bass::runtime::json::Json;
-use bass::spec::{ExecMode, SpecConfig};
+use bass::runtime::Engine;
+use bass::spec::{ExecMode, Policy, SpecConfig, SpecEngine};
 use bass::tokenizer;
 
 macro_rules! require_artifacts {
@@ -94,6 +95,83 @@ fn fanout_clamped_to_max_batch() {
     let coord = coordinator(4, 1);
     let resp = coord.generate(code_request(9)).unwrap();
     assert_eq!(resp.seqs.len(), 4);
+    // The clamp is no longer silent: the response reports the asked-for
+    // fan-out so the client can see 4 < 9.
+    assert_eq!(resp.n_requested, 9);
+}
+
+#[test]
+fn unclamped_fanout_reports_requested_n() {
+    require_artifacts!();
+    let coord = coordinator(4, 1);
+    let resp = coord.generate(code_request(2)).unwrap();
+    assert_eq!(resp.seqs.len(), 2);
+    assert_eq!(resp.n_requested, 2);
+}
+
+/// The per-request sampling acceptance test: a request carrying its own
+/// temperature/top_p (and a pinned seed) must reproduce a solo
+/// `SpecEngine::generate` run with those params byte-for-byte — even
+/// while co-batched with traffic running the server's (very different)
+/// defaults. `Policy::Fixed` pins per-step draft lengths; the pinned seed
+/// pins the RNG streams. Covers both PAD and SPLIT execution.
+#[test]
+fn per_request_sampling_params_match_solo_engine_run() {
+    require_artifacts!();
+    let prompt = "def add_7(x):\n    # adds 7 to x\n    return";
+    let (temp, top_p, seed) = (0.3f32, 0.9f32, 7u64);
+    for mode in [ExecMode::Pad, ExecMode::Split] {
+        let server_cfg = SpecConfig {
+            max_new_tokens: 12,
+            policy: Policy::Fixed(4),
+            mode,
+            seed: 0,
+            temperature: 2.0, // server defaults far from the request's
+            top_p: 1.0,
+            ..SpecConfig::default()
+        };
+
+        // Solo reference (engine dropped before the coordinator spawns
+        // its own PJRT client).
+        let want = {
+            let engine = Engine::load(&artifacts_root()).unwrap();
+            let solo_cfg = SpecConfig {
+                temperature: temp,
+                top_p,
+                seed,
+                ..server_cfg.clone()
+            };
+            let solo = SpecEngine::new(&engine, solo_cfg)
+                .generate(&[tokenizer::encode(prompt)])
+                .unwrap();
+            tokenizer::decode(&solo.seqs[0].generated)
+        };
+        assert!(!want.is_empty());
+
+        let coord = Arc::new(coordinator_with(server_cfg, 4, 30));
+        // Default-params traffic to co-batch with.
+        let rx_hot = coord.submit(code_request(2));
+        let rx_target = coord.submit(Request {
+            prompt: tokenizer::encode(prompt),
+            n_seqs: 1,
+            max_new_tokens: Some(12),
+            temperature: Some(temp),
+            top_p: Some(top_p),
+            seed: Some(seed),
+            stream: false,
+        });
+        let target = Coordinator::wait(rx_target).unwrap();
+        let hot = Coordinator::wait(rx_hot).unwrap();
+        assert!(target.batch_size > 1,
+                "{mode:?}: request was not co-batched (batch_size {})",
+                target.batch_size);
+        assert_eq!(target.seqs[0].text, want,
+                   "{mode:?}: per-request params did not reproduce the \
+                    solo run");
+        // The co-batched default-params traffic really ran hotter config:
+        // it must not have inherited the target's overrides.
+        assert_eq!(hot.seqs.len(), 2);
+    }
 }
 
 /// The continuous-batching acceptance test: a short request submitted

@@ -9,7 +9,8 @@
 use bass::bench_util::{artifacts_available, artifacts_root};
 use bass::kv::FinishReason;
 use bass::runtime::Engine;
-use bass::spec::{ExecMode, Policy, SpecBatch, SpecConfig, SpecEngine};
+use bass::spec::{AdmitOpts, ExecMode, Policy, SpecBatch, SpecConfig,
+                 SpecEngine};
 use bass::tokenizer;
 
 macro_rules! require_artifacts {
@@ -131,6 +132,84 @@ fn run_stepwise_lenient(e: &Engine, cfg: &SpecConfig, prompts: &[Vec<u8>])
         batch.step().unwrap();
     }
     ids.into_iter().map(|id| batch.retire(id).unwrap()).collect()
+}
+
+/// Per-request sampling params: each request run SOLO with its own
+/// (temperature, top_p, seed) must byte-match the same request co-batched
+/// with differently-parameterized traffic. Streams are pinned to 0 — the
+/// admission index each solo `generate` run uses — so the randomness is a
+/// pure function of the request's seed, and `Policy::Fixed` keeps draft
+/// lengths batch-independent. This is the invariant that lets the
+/// coordinator thread `Request::temperature`/`top_p` through `admit_opts`
+/// without changing any co-batched request's output.
+fn assert_mixed_params_equivalent(mode: ExecMode) {
+    let e = engine();
+    let base = cfg(mode);
+    let prompts = prompts();
+    let params = [(0.8f32, 0.9f32), (0.2, 0.95), (1.5, 1.0)];
+    let seeds = [11u64, 42, 99];
+
+    // Solo reference runs: one request per engine batch, its own params.
+    let mut solo = Vec::new();
+    for i in 0..prompts.len() {
+        let cfg_i = SpecConfig {
+            temperature: params[i].0,
+            top_p: params[i].1,
+            seed: seeds[i],
+            ..base.clone()
+        };
+        let r = SpecEngine::new(&e, cfg_i)
+            .generate(&[prompts[i].clone()])
+            .unwrap();
+        solo.push(r.seqs.into_iter().next().unwrap());
+    }
+
+    // Co-batched run: all three requests share one batch, each admitted
+    // with its own per-sequence sampling overrides.
+    let mut batch =
+        SpecBatch::new(&e, base.clone(), prompts.len()).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..prompts.len() {
+        let id = batch
+            .admit_opts(&prompts[i], seeds[i], AdmitOpts {
+                stream: Some(0),
+                temperature: Some(params[i].0),
+                top_p: Some(params[i].1),
+                ..AdmitOpts::default()
+            })
+            .unwrap();
+        ids.push(id);
+    }
+    let mut guard = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        guard += 1;
+        assert!(guard < 1000, "runaway mixed-params loop");
+    }
+    for (i, id) in ids.into_iter().enumerate() {
+        let st = batch.retire(id).unwrap();
+        assert_eq!(solo[i].generated, st.generated,
+                   "{mode:?} req {i}: co-batched bytes diverge from the \
+                    solo run with its own sampling params");
+        assert_eq!(solo[i].finish, st.finish,
+                   "{mode:?} req {i}: finish reason");
+        assert!((solo[i].mean_logp() - st.mean_logp()).abs() < 1e-12,
+                "{mode:?} req {i}: mean_logp {} vs {}",
+                solo[i].mean_logp(), st.mean_logp());
+        assert_ne!(st.finish, FinishReason::Running);
+    }
+}
+
+#[test]
+fn mixed_params_cobatch_equals_solo_pad() {
+    require_artifacts!();
+    assert_mixed_params_equivalent(ExecMode::Pad);
+}
+
+#[test]
+fn mixed_params_cobatch_equals_solo_split() {
+    require_artifacts!();
+    assert_mixed_params_equivalent(ExecMode::Split);
 }
 
 #[test]
