@@ -29,7 +29,8 @@ from jax._src.lib import xla_client as xc
 
 from compile import bwt
 from compile.corpus import build_corpus, write_tasks
-from compile.model import (CONFIGS, ModelConfig, decode, draft_loop, prefill)
+from compile.model import (CONFIGS, ModelConfig, decode, draft_loop, prefill,
+                           prefill_scatter)
 from compile.quant import quantize_params
 from compile.train import TrainConfig, held_out_loss, train_model
 
@@ -66,14 +67,25 @@ def grid(quick: bool = False):
     else:
         draft_k, small_k, drafts = DRAFT_K_BUCKETS, SMALL_K_BUCKETS, DRAFTS
     for b in batches:
+        # Per-row prefill-scatter: PAD mid-flight admission re-primes one
+        # row of a running fused batch. Bucket 1 is skipped — a one-row
+        # batch auto-resets the moment its only sequence retires, so no
+        # reusable (husk/shadow) row ever exists to scatter into.
+        scatter = b > 1
         for prec in PRECISIONS[MAIN]:
             yield (MAIN, prec, "prefill", b, PREFILL_P, "dense")
+            if scatter:
+                yield (MAIN, prec, "prefill_scatter", b, PREFILL_P,
+                       "dense")
             for q in main_q:
                 yield (MAIN, prec, "decode", b, q, "dense")
         for d in drafts:
             ks = draft_k if d == "draft_a" else small_k
             for prec in PRECISIONS[d]:
                 yield (d, prec, "prefill", b, PREFILL_P, "dense")
+                if scatter:
+                    yield (d, prec, "prefill_scatter", b, PREFILL_P,
+                           "dense")
                 for k in ks:
                     yield (d, prec, "draft", b, k, "dense")
     if not quick:
@@ -129,6 +141,20 @@ def lower_artifact(cfg: ModelConfig, params, phase, batch, q, attn):
         args = (wspecs, jax.ShapeDtypeStruct((batch, q), i32),
                 jax.ShapeDtypeStruct((batch,), i32))
         jitted = jax.jit(fn)
+    elif phase == "prefill_scatter":
+        def fn(flat_w, tokens, prompt_lens, row, caches):
+            p = jax.tree_util.tree_unflatten(treedef, flat_w)
+            last, new_caches = prefill_scatter(p, tokens, prompt_lens, row,
+                                               caches, cfg, attn)
+            return (last, *new_caches)
+        # One [1, P] prompt scattered into row `row` of a running fused
+        # cache: the donated caches are (batch,)-shaped, everything else
+        # is B=1 (the new sequence alone).
+        args = (wspecs, jax.ShapeDtypeStruct((1, q), i32),
+                jax.ShapeDtypeStruct((1,), i32),
+                jax.ShapeDtypeStruct((1,), i32),
+                _cache_specs(cfg, batch))
+        jitted = jax.jit(fn, donate_argnums=(4,))
     elif phase == "decode":
         def fn(flat_w, tokens, seq_lens, caches):
             p = jax.tree_util.tree_unflatten(treedef, flat_w)
@@ -290,9 +316,10 @@ def main():
 
     # ---- manifest -----------------------------------------------------------
     manifest = {
-        # v2: draft artifacts take [B] per-row temperature/top_p vectors
-        # (must match rust/src/runtime/manifest.rs::MANIFEST_VERSION).
-        "version": 2,
+        # v3: adds per-row prefill_scatter artifacts (PAD mid-flight
+        # admission); v2 made draft temperature/top_p [B] per-row vectors.
+        # Must match rust/src/runtime/manifest.rs::MANIFEST_VERSION.
+        "version": 3,
         "vocab": 256,
         "eos": 0,
         "prefill_p": PREFILL_P,

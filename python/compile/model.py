@@ -245,6 +245,37 @@ def prefill(params, tokens, prompt_lens, cfg: ModelConfig,
     return last, caches
 
 
+def prefill_scatter(params, tokens, prompt_lens, row, caches,
+                    cfg: ModelConfig, attn_impl: str = "pallas"):
+    """Prefill ONE sequence and scatter its KV into row ``row`` of an
+    existing fused cache, leaving every other row untouched.
+
+    This is the per-row prefill that lets BASS-PAD admit a request
+    mid-flight: a retired (husk) or padding (shadow) row of a *running*
+    fused batch is re-primed with a fresh prompt without draining the
+    batch — the continuous-batching move SPLIT mode always had via its
+    per-slot B=1 prefill.
+
+    Args:
+      tokens: int32[1, P] right-padded prompt; prompt_lens: int32[1].
+      row: int32[1] — the batch row of ``caches`` to overwrite.
+      caches: fused cache list ``[k_0, v_0, ...]`` of f32[B, H, S, Dh]
+        (donated in the exported artifact, like ``decode``).
+
+    Returns (last_logits f32[1, V], new_caches). The entire [H, S, Dh]
+    row is replaced — fresh KV through the prompt, zeros beyond — so no
+    stale entries from the row's previous occupant survive; all other
+    rows are element-identical to their inputs. The row's first decode
+    step then rewrites the final prompt token's KV in place, identically,
+    per the ``prefill`` pending-token convention.
+    """
+    last, fresh = prefill(params, tokens, prompt_lens, cfg, attn_impl)
+    r = row[0]
+    new_caches = [jax.lax.dynamic_update_slice(c, f, (r, 0, 0, 0))
+                  for c, f in zip(caches, fresh)]
+    return last, new_caches
+
+
 # ---------------------------------------------------------------------------
 # In-graph nucleus sampling + the fused draft loop
 # ---------------------------------------------------------------------------

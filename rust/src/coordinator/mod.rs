@@ -7,10 +7,14 @@
 //! batch slots ([`batcher::plan_batch`] plans against *free slots*, not an
 //! empty batch) and (b) retires sequences the moment they finish,
 //! answering each request as soon as *its* sequences are done — no
-//! head-of-line blocking behind co-batched long requests. In SPLIT
-//! execution mode admission happens mid-flight into a running batch; in
-//! PAD mode the fused cache cannot take a new row mid-run, so admission
-//! waits for the batch to drain (legacy batch-to-completion behavior).
+//! head-of-line blocking behind co-batched long requests. **Both
+//! execution modes admit mid-flight**: SPLIT prefills a per-slot B=1
+//! cache; PAD scatter-prefills the new sequence into a freed row of the
+//! running fused cache (the per-row `prefill_scatter` artifact), so the
+//! paper's primary mode keeps its batch continuously utilized under load
+//! instead of waiting for a drain. A running PAD batch's *bucket* still
+//! cannot grow — free slots there are retired/padding rows — so a burst
+//! larger than the current bucket waits for the drain-and-re-bucket.
 //!
 //! The engine (PJRT handles) is **not** `Send`, so it is constructed
 //! inside the worker thread and owns the device for the process lifetime —
@@ -413,8 +417,9 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
     }
 }
 
-/// Admit queued requests into free slots (SPLIT: mid-flight; PAD: once
-/// the batch has drained), respecting the co-batching window.
+/// Admit queued requests into free slots — mid-flight in both modes
+/// (SPLIT: per-slot prefill; PAD: scatter-prefill into freed rows of the
+/// running bucket) — respecting the co-batching window.
 fn admit_jobs(batch: &mut SpecBatch, queue: &mut Vec<QueuedJob>,
               inflight: &mut HashMap<u64, InFlight>,
               seq_owner: &mut HashMap<SeqId, u64>, bcfg: &BatcherConfig) {

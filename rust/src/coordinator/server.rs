@@ -23,7 +23,13 @@
 //! A thread per connection forwards requests to the engine worker. The
 //! coordinator admits concurrent connections into the running speculative
 //! batch at step boundaries (continuous batching) and answers each request
-//! the moment its own sequences finish. Sampling parameters (temperature /
+//! the moment its own sequences finish — in **both** execution modes: PAD
+//! (the default, the paper's fused-batch headline path) scatter-prefills
+//! late arrivals into freed rows of the running fused cache, SPLIT
+//! prefills per-slot caches; neither waits for a drain. Note PAD admission
+//! needs v3 artifacts (the per-row `prefill_scatter` programs — rebuild
+//! with `make artifacts` if the manifest version check rejects yours).
+//! Sampling parameters (temperature /
 //! top-p) are honored **per request** even across co-batched traffic — the
 //! engine threads them per-row through the fused draft call and the
 //! verify-side warp; the server's `SpecConfig` only supplies defaults. A

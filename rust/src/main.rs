@@ -5,8 +5,9 @@
 //! * `generate`  — one batched generation from a prompt (`--prompt`,
 //!   `--n`, `--mode pad|split`, `--precision f32|int8`, ...).
 //! * `serve`     — TCP line-protocol server over the continuously-batched
-//!   coordinator (`--mode split` enables mid-flight admission; requests
-//!   may set `"stream": true` for per-step event lines).
+//!   coordinator (mid-flight admission in both `--mode pad` and
+//!   `--mode split`; requests may set `"stream": true` for per-step
+//!   event lines).
 //! * `eval`      — run a task (`--task code|summ`) and report accuracy.
 //! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
 //! * `info`      — print the manifest summary.

@@ -217,6 +217,80 @@ impl Engine {
         Ok(StepOut { logits, caches })
     }
 
+    /// Prefill ONE sequence and scatter its KV into row `row` of an
+    /// existing fused cache of batch `batch`, leaving every other row
+    /// untouched — the per-row prefill PAD-mode continuous batching
+    /// needs: a freed (retired or padding) row of a *running* fused
+    /// batch is re-primed with a new prompt, no drain required. `tokens`
+    /// is the new prompt alone, `[P]` right-padded
+    /// (P = `manifest.prefill_p`). `caches` are the fused batch's cache
+    /// buffers, replaced in place with the successor buffers on success.
+    ///
+    /// Unlike `decode`/`draft` (which own a whole step and may treat any
+    /// failure as step-fatal), this runs *inside* a live batch another
+    /// request depends on, so `caches` is `&mut` and is consumed only at
+    /// the execute itself: a failure before then (weight upload, host
+    /// tensor upload, lazy compile) leaves the fused caches untouched
+    /// and only rejects this admission. An execute failure donates the
+    /// buffers and leaves `caches` empty — batch-fatal; the next step
+    /// errors and the serving layer rebuilds. Returns the new
+    /// sequence's last-token logits `[V]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_into_slot(&self, model: &str, precision: Precision,
+                             attn: Attn, batch: usize, row: usize,
+                             tokens: &[i32], prompt_len: i32,
+                             caches: &mut Vec<PjRtBuffer>)
+                             -> Result<Vec<f32>> {
+        let p = self.manifest.prefill_p;
+        if tokens.len() != p {
+            bail!("prefill_into_slot shape mismatch: {} tokens, P={p}",
+                  tokens.len());
+        }
+        if row >= batch {
+            bail!("prefill_into_slot: row {row} out of range for batch \
+                   {batch}");
+        }
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::PrefillScatter,
+            batch, q: p, attn,
+        };
+        let n_cache = self.manifest.model(model)?.n_cache_bufs();
+        if caches.len() != n_cache {
+            bail!("prefill_into_slot: {} cache buffers, expected \
+                   {n_cache}", caches.len());
+        }
+        let w = self.weights(model, precision)?;
+        let t = self.upload_i32(tokens, &[1, p])?;
+        let l = self.upload_i32(&[prompt_len], &[1])?;
+        let r = self.upload_i32(&[row as i32], &[1])?;
+        let owned = std::mem::take(caches);
+        let mut inputs: Vec<&PjRtBuffer> = w.iter().collect();
+        inputs.extend([&t, &l, &r]);
+        inputs.extend(owned.iter());
+        let run_res = self.run(&key, &inputs, "prefill_scatter");
+        drop(owned); // donated: handles must not be reused
+        let mut outs = run_res?;
+        if outs.len() != 1 + n_cache {
+            bail!("prefill_scatter: expected {} outputs, got {}",
+                  1 + n_cache, outs.len());
+        }
+        *caches = outs.split_off(1);
+        self.download_f32(&outs[0])
+    }
+
+    /// Resolve and compile the prefill-scatter executable for a bucket
+    /// without touching any cache buffer. Callers use this to fail fast
+    /// (stale artifact set, unknown bucket) *before* donating a running
+    /// batch's fused caches to [`Engine::prefill_into_slot`].
+    pub fn ensure_prefill_scatter(&self, model: &str, precision: Precision,
+                                  attn: Attn, batch: usize) -> Result<()> {
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::PrefillScatter,
+            batch, q: self.manifest.prefill_p, attn,
+        };
+        self.executable(&key).map(|_| ())
+    }
+
     /// Ragged decode/verify step. `tokens` `[B, Q]`, `seq_lens` `[B]`;
     /// consumes `caches` (donated) and returns logits `[B, Q, V]` plus the
     /// successor cache buffers.

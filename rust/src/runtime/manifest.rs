@@ -15,11 +15,14 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::json::Json;
 
-/// Manifest (= artifact ABI) version this runtime speaks. v2: the draft
-/// artifact takes `[B]` per-row temperature/top_p vectors instead of
-/// scalars. Checked at load so an artifact/binary mismatch fails with a
-/// "rebuild" message instead of an opaque device shape error mid-request.
-pub const MANIFEST_VERSION: usize = 2;
+/// Manifest (= artifact ABI) version this runtime speaks. v3: the grid
+/// exports a per-row `prefill_scatter` artifact per batch bucket (PAD
+/// mid-flight admission scatter-prefills a new sequence into a freed row
+/// of the running fused cache); v2 made the draft artifact take `[B]`
+/// per-row temperature/top_p vectors instead of scalars. Checked at load
+/// so an artifact/binary mismatch fails with a "rebuild" message instead
+/// of an opaque device shape error mid-request.
+pub const MANIFEST_VERSION: usize = 3;
 
 /// Numeric precision of a model's weights (paper Tables 1–3 axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -56,6 +59,10 @@ impl fmt::Display for Precision {
 pub enum Phase {
     /// Context encoding of the prompt batch; `q` = padded prompt capacity.
     Prefill,
+    /// Context-encode ONE prompt and scatter its KV into a given row of
+    /// an existing fused cache (PAD mid-flight admission); `q` = padded
+    /// prompt capacity, `batch` = the fused cache's bucket.
+    PrefillScatter,
     /// Ragged verification step of the main model; `q` = tokens per seq.
     Decode,
     /// Fused draft loop (resync + K auto-regressive steps); `q` = K.
@@ -66,6 +73,7 @@ impl Phase {
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "prefill" => Phase::Prefill,
+            "prefill_scatter" => Phase::PrefillScatter,
             "decode" => Phase::Decode,
             "draft" => Phase::Draft,
             _ => bail!("unknown phase '{s}'"),
@@ -163,8 +171,10 @@ impl Manifest {
         let version = j.get("version")?.as_usize()?;
         if version != MANIFEST_VERSION {
             bail!("artifact manifest is version {version}, this runtime \
-                   needs {MANIFEST_VERSION} (v2 changed the draft ABI to \
-                   per-row temperature/top_p vectors) — rebuild with \
+                   needs {MANIFEST_VERSION} (v3 added the per-row \
+                   prefill_scatter artifacts PAD mid-flight admission \
+                   uses; v2 changed the draft ABI to per-row \
+                   temperature/top_p vectors) — rebuild with \
                    `make artifacts`");
         }
         let usize_arr = |v: &Json| -> Result<Vec<usize>> {
@@ -276,7 +286,7 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "version": 2, "vocab": 256, "eos": 0, "prefill_p": 64,
+      "version": 3, "vocab": 256, "eos": 0, "prefill_p": 64,
       "batches": [1, 2, 4], "draft_k_buckets": [1, 2, 4, 8],
       "small_k_buckets": [2, 4],
       "models": {"main": {"n_layer": 4, "n_head": 8, "d_model": 256,
@@ -284,7 +294,10 @@ mod tests {
         "weights": {"f32": "weights/main_f32.bwt"}}},
       "artifacts": [{"file": "hlo/main_f32_decode1_b1.hlo.txt",
         "model": "main", "precision": "f32", "phase": "decode",
-        "batch": 1, "q": 1, "attn": "dense"}],
+        "batch": 1, "q": 1, "attn": "dense"},
+        {"file": "hlo/main_f32_prefill_scatter64_b4.hlo.txt",
+        "model": "main", "precision": "f32", "phase": "prefill_scatter",
+        "batch": 4, "q": 64, "attn": "dense"}],
       "calib": {"file": "hlo/gemm_calib.hlo.txt", "n": 768,
         "flops": 905969664}
     }"#;
@@ -306,17 +319,31 @@ mod tests {
         };
         assert!(m.artifact_path(&key).is_ok());
         assert!(m.model("nope").is_err());
+        // The per-row scatter phase round-trips through the manifest.
+        let scatter = ArtifactKey {
+            model: "main".into(),
+            precision: Precision::F32,
+            phase: Phase::PrefillScatter,
+            batch: 4,
+            q: 64,
+            attn: Attn::Dense,
+        };
+        assert!(m.artifact_path(&scatter).is_ok());
     }
 
     #[test]
     fn stale_manifest_version_is_rejected_with_rebuild_hint() {
-        // Pre-v2 artifacts export scalar draft temp/top_p: loading them
-        // with this runtime must fail up front, not at execute time.
-        let old = SAMPLE.replace("\"version\": 2", "\"version\": 1");
-        let err = Manifest::parse(Path::new("/tmp/x"), &old)
-            .expect_err("v1 manifest must be rejected");
-        let msg = format!("{err:#}");
-        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+        // Pre-v3 artifacts lack the per-row prefill_scatter programs (and
+        // pre-v2 ones export scalar draft temp/top_p): loading them with
+        // this runtime must fail up front, not at execute time.
+        for stale in ["\"version\": 1", "\"version\": 2"] {
+            let old = SAMPLE.replace("\"version\": 3", stale);
+            let err = Manifest::parse(Path::new("/tmp/x"), &old)
+                .expect_err("stale manifest must be rejected");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("make artifacts"),
+                    "unhelpful error: {msg}");
+        }
     }
 
     #[test]

@@ -4,14 +4,17 @@
 //! [`SpecBatch`] owns the device caches and per-slot sequence state and
 //! exposes three operations the coordinator drives at step boundaries:
 //!
-//! * [`SpecBatch::admit`] — place a prompt into a free slot (SPLIT mode:
-//!   any time; PAD mode: only while the batch has not started, because the
-//!   fused PAD cache has no per-row prefill artifact). [`AdmitOpts`]
-//!   carries per-sequence overrides — `max_new_tokens`, a pinned RNG
-//!   stream, and **per-sequence sampling params**: `temperature` / `top_p`
-//!   live in the slot and flow as `[B]` rows into the fused draft
-//!   artifact and into the host-side verify warp, so co-batched requests
-//!   never have to agree on sampling knobs.
+//! * [`SpecBatch::admit`] — place a prompt into a free slot, **in either
+//!   mode at any step boundary**. SPLIT prefills the slot's own B=1
+//!   caches; PAD admission into a running batch scatter-prefills the new
+//!   sequence into a freed row (a retired Husk or padding Shadow) of the
+//!   fused cache via the per-row `prefill_scatter` artifact
+//!   ([`Engine::prefill_into_slot`]), so the batch never has to drain.
+//!   [`AdmitOpts`] carries per-sequence overrides — `max_new_tokens`, a
+//!   pinned RNG stream, and **per-sequence sampling params**:
+//!   `temperature` / `top_p` live in the slot and flow as `[B]` rows into
+//!   the fused draft artifact and into the host-side verify warp, so
+//!   co-batched requests never have to agree on sampling knobs.
 //! * [`SpecBatch::step`] — one draft + verify + accept round over the
 //!   currently-active slots:
 //!
@@ -28,8 +31,9 @@
 //! * [`SpecBatch::retire`] — take a sequence's final state out of the
 //!   batch, freeing its slot. In SPLIT mode the slot's caches are dropped
 //!   and the slot is immediately reusable by the next `admit`; in PAD mode
-//!   the row stays as a frozen placeholder until the whole batch drains
-//!   (then the batch auto-resets and accepts admissions again).
+//!   the row freezes into a Husk placeholder that the next admission
+//!   scatter-prefills over (the batch still auto-resets to full capacity
+//!   when the last real sequence leaves, so an idle engine re-buckets).
 //!
 //! Each admitted sequence gets its own pair of PCG32 streams keyed by a
 //! monotonically increasing admission counter, so given the same per-step
@@ -38,9 +42,10 @@
 //! Draft lengths are exactly reproducible under [`Policy::Fixed`]; under
 //! the adaptive heuristic they are batch-global Algorithm-1 state fed by
 //! every co-batched sequence (by design). That is what makes stepwise
-//! driving with mid-flight admission reproduce one-shot
+//! driving with mid-flight admission — in both modes — reproduce one-shot
 //! [`SpecEngine::generate`] byte-for-byte
-//! (`rust/tests/step_equivalence.rs`).
+//! (`rust/tests/step_equivalence.rs`, and under randomized
+//! admit/step/retire schedules, `rust/tests/admission_interleaving.rs`).
 //!
 //! BASS-PAD runs one batched artifact padded to the batch bucket; BASS-SPLIT
 //! runs per-sequence B=1 artifacts, skipping finished sequences entirely —
@@ -48,7 +53,7 @@
 
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use xla::PjRtBuffer;
 
 use crate::flops::FlopCounter;
@@ -232,7 +237,9 @@ struct Slot {
 /// A batch row. `Shadow` rows are PAD padding (they advance like real
 /// sequences, matching the padded artifact rows, but are never reported);
 /// `Husk` rows are retired PAD sequences — frozen state that keeps feeding
-/// the fused artifact valid lengths until the batch drains.
+/// the fused artifact valid lengths. Both are mid-flight admission
+/// targets: a new sequence scatter-prefills over the row and turns it
+/// back into `Seq`.
 enum Row {
     Free,
     Seq(Slot),
@@ -331,10 +338,18 @@ impl<'a> SpecBatch<'a> {
         &self.cfg
     }
 
-    /// Slots a new sequence could occupy right now.
+    /// Slots a new sequence could occupy right now. In a *running* PAD
+    /// batch these are the reusable rows of the fused bucket — retired
+    /// (Husk) and padding (Shadow) rows that mid-flight admission
+    /// scatter-prefills over; the bucket itself cannot grow until the
+    /// batch drains and re-buckets.
     pub fn free_slots(&self) -> usize {
         if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
-            return 0; // PAD admits only into a not-yet-started batch
+            return self
+                .rows
+                .iter()
+                .filter(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+                .count();
         }
         self.rows.iter().filter(|r| r.is_free()).count()
     }
@@ -374,8 +389,8 @@ impl<'a> SpecBatch<'a> {
     /// batch-lifetime admission counter, so re-admitting the same
     /// prompt+seed into a reused slot still gets fresh randomness. SPLIT
     /// mode prefills the slot's caches immediately; PAD mode defers to the
-    /// fused prefill at first step and rejects admissions once the batch
-    /// has started.
+    /// fused prefill at first step for a not-yet-started batch and
+    /// scatter-prefills into a freed row (Husk/Shadow) of a running one.
     pub fn admit(&mut self, prompt: &[u8], seed: u64) -> Result<SeqId> {
         self.admit_opts(prompt, seed, AdmitOpts::default())
     }
@@ -395,13 +410,6 @@ impl<'a> SpecBatch<'a> {
     pub fn admit_opts(&mut self, prompt: &[u8], seed: u64, opts: AdmitOpts)
                       -> Result<SeqId> {
         opts.validate()?;
-        if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
-            bail!("PAD batch already started; admission needs a drained \
-                   batch (use SPLIT mode for mid-flight admission)");
-        }
-        let Some(row) = self.rows.iter().position(Row::is_free) else {
-            bail!("no free slot (capacity {})", self.capacity);
-        };
         let p_cap = self.engine.manifest.prefill_p;
         let tail: &[u8] = if prompt.len() > p_cap {
             &prompt[prompt.len() - p_cap..]
@@ -411,12 +419,31 @@ impl<'a> SpecBatch<'a> {
         if tail.is_empty() {
             bail!("empty prompt");
         }
+        if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
+            return self.admit_pad_midflight(tail, seed, opts);
+        }
+        let Some(row) = self.rows.iter().position(Row::is_free) else {
+            bail!("no free slot (capacity {})", self.capacity);
+        };
+        let slot = self.make_slot(tail, seed, opts);
+        if self.cfg.mode == ExecMode::Split {
+            self.prefill_split_slot(row, &slot.state)?;
+        }
+        let id = slot.id;
+        self.rows[row] = Row::Seq(slot);
+        Ok(id)
+    }
+
+    /// Build an occupied-slot record, consuming the next admission index
+    /// (the [`SeqId`] and, unless pinned, the PCG32 stream index).
+    fn make_slot(&mut self, tail: &[u8], seed: u64, opts: AdmitOpts)
+                 -> Slot {
         let id = self.next_stream;
         self.next_stream += 1;
         let stream = opts.stream.unwrap_or(id);
         let state = SeqState::new(tail.to_vec(), *tail.last().unwrap(),
                                   tail.len() as i32);
-        let slot = Slot {
+        Slot {
             id,
             state,
             rng_draft: Pcg32::new(seed, 2 * stream),
@@ -426,12 +453,79 @@ impl<'a> SpecBatch<'a> {
                 .unwrap_or(self.cfg.max_new_tokens),
             temperature: opts.temperature.unwrap_or(self.cfg.temperature),
             top_p: opts.top_p.unwrap_or(self.cfg.top_p),
-        };
-        if self.cfg.mode == ExecMode::Split {
-            self.prefill_split_slot(row, &slot.state)?;
         }
+    }
+
+    /// Mid-flight PAD admission: scatter-prefill the new sequence into a
+    /// reusable row (retired Husk or padding Shadow) of the running fused
+    /// batch. The row's whole KV slice is replaced, its slot gets fresh
+    /// per-sequence state — sampling params, PCG32 streams, ragged
+    /// lengths at `prompt_len - 1` — so the previous occupant cannot leak
+    /// into the new sequence, and no other row is touched.
+    fn admit_pad_midflight(&mut self, tail: &[u8], seed: u64,
+                           opts: AdmitOpts) -> Result<SeqId> {
+        let Some(row) = self
+            .rows
+            .iter()
+            .position(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+        else {
+            bail!("no reusable PAD row (bucket of {} fully live; wait for \
+                   a retirement or the drain)", self.rows.len());
+        };
+        // Resolve + compile both scatter executables up front: the
+        // likely failures (stale pre-v3 artifact set, bucket not
+        // exported) reject only this admission and leave the running
+        // batch intact — as do upload failures inside
+        // `prefill_into_slot`, which consumes the fused caches only at
+        // the execute itself. Only an execute failure (post-donation) is
+        // batch-fatal: the next `step` errors and the serving layer's
+        // recovery path fails the in-flight requests and rebuilds a
+        // fresh batch (see `coordinator::worker`).
+        let b = self.rows.len();
+        let cfg = self.cfg.clone();
+        self.engine.ensure_prefill_scatter(&cfg.main_model, cfg.precision,
+                                           cfg.attn, b)?;
+        self.engine.ensure_prefill_scatter(&cfg.draft_model, cfg.precision,
+                                           cfg.attn, b)?;
+        let slot = self.make_slot(tail, seed, opts);
+        self.prefill_pad_row(row, &slot.state)?;
+        let id = slot.id;
         self.rows[row] = Row::Seq(slot);
         Ok(id)
+    }
+
+    /// Scatter-prefill one sequence into row `row` of the running PAD
+    /// batch's fused caches (both models). Pre-execute failures leave
+    /// the caches untouched (see [`Engine::prefill_into_slot`]); an
+    /// execute failure leaves that model's cache vector empty — the
+    /// batch is poisoned and the next `step` fails, which the
+    /// coordinator turns into a full-batch error + rebuild.
+    fn prefill_pad_row(&mut self, row: usize, state: &SeqState)
+                       -> Result<()> {
+        let cfg = self.cfg.clone();
+        let eng = self.engine;
+        let b = self.rows.len();
+        let p = eng.manifest.prefill_p;
+        let mut tokens = vec![0i32; p];
+        for (j, &byte) in state.prompt.iter().enumerate() {
+            tokens[j] = byte as i32;
+        }
+        let plen = state.prompt.len() as i32;
+        let t0 = Instant::now();
+        let Some(CacheStore::Pad { main, draft }) = self.store.as_mut()
+        else {
+            bail!("PAD store missing");
+        };
+        eng.prefill_into_slot(&cfg.main_model, cfg.precision, cfg.attn, b,
+                              row, &tokens, plen, main)
+            .context("PAD scatter prefill (main model)")?;
+        eng.prefill_into_slot(&cfg.draft_model, cfg.precision, cfg.attn, b,
+                              row, &tokens, plen, draft)
+            .context("PAD scatter prefill (draft model)")?;
+        self.prefill_secs += t0.elapsed().as_secs_f64();
+        self.flops.add_prefill(&self.main_info, 1, p);
+        self.flops.add_prefill(&self.draft_info, 1, p);
+        Ok(())
     }
 
     /// Prefill one SPLIT slot (B=1 artifacts for both models).
@@ -599,15 +693,14 @@ impl<'a> SpecBatch<'a> {
             store, b, k, &tokens_in, &n_in, &dlens, &uniforms, &temps,
             &tps, &stepping)?;
         self.draft_secs += now(td);
-        let live: Vec<&SeqState> =
-            self.rows.iter().filter_map(Row::state).collect();
+        // FLOP/throughput accounting charges *live* rows only. The fused
+        // PAD artifact still computes Husk (retired) and Shadow (padding)
+        // rows, but that is overhead, not served work — counting it
+        // inflated PAD throughput/utilization numbers.
+        let live = live_row_states(&self.rows);
+        let n_compute = live.len();
         let ctx_d = live.iter().map(|s| s.draft_len as usize).sum::<usize>()
             / live.len().max(1);
-        let n_compute = match cfg.mode {
-            // PAD computes every row, active or not.
-            ExecMode::Pad => b,
-            ExecMode::Split => stepping.iter().filter(|&&a| a).count(),
-        };
         self.flops.add_step(&self.draft_info, n_compute, k + 1, ctx_d);
 
         // -- verify --------------------------------------------------------
@@ -627,8 +720,6 @@ impl<'a> SpecBatch<'a> {
         let logits =
             self.verify_all(store, b, q, &vtokens, &mlens, &stepping)?;
         self.verify_secs += now(tv);
-        let live: Vec<&SeqState> =
-            self.rows.iter().filter_map(Row::state).collect();
         let ctx_m = live.iter().map(|s| s.main_len as usize).sum::<usize>()
             / live.len().max(1);
         self.flops.add_step(&self.main_info, n_compute, q, ctx_m);
@@ -728,10 +819,13 @@ impl<'a> SpecBatch<'a> {
     // -- retire ------------------------------------------------------------
 
     /// Take a sequence out of the batch, returning its final state. The
-    /// slot becomes reusable immediately (SPLIT: caches dropped, row
-    /// freed) or once the whole PAD batch drains (the row freezes into a
-    /// placeholder; the batch auto-resets when the last real sequence
-    /// leaves). Retiring a still-active sequence abandons it (cancel).
+    /// slot becomes reusable immediately: SPLIT drops the slot's caches
+    /// and frees the row; a running PAD batch freezes the row into a
+    /// Husk placeholder that the next mid-flight admission
+    /// scatter-prefills over (the batch still auto-resets to full
+    /// capacity when the last real sequence leaves, so an idle engine
+    /// re-buckets). Retiring a still-active sequence abandons it
+    /// (cancel).
     pub fn retire(&mut self, id: SeqId) -> Result<SeqState> {
         let Some(idx) = self.rows.iter().position(
             |r| matches!(r, Row::Seq(s) if s.id == id))
@@ -860,6 +954,19 @@ impl<'a> SpecBatch<'a> {
     }
 }
 
+/// States of the rows whose compute is *served work* this step: live real
+/// sequences only. Husk (retired) and Shadow (padding) rows still ride
+/// the fused PAD artifact, but they serve no request — FLOP and token
+/// accounting must not charge them (`flops_count_live_rows_only`).
+fn live_row_states(rows: &[Row]) -> Vec<&SeqState> {
+    rows.iter()
+        .filter_map(|r| match r {
+            Row::Seq(s) if s.state.active() => Some(&s.state),
+            _ => None,
+        })
+        .collect()
+}
+
 fn fresh_policy(cfg: &SpecConfig) -> Box<dyn DraftLenPolicy> {
     match cfg.policy {
         Policy::Heuristic => Box::new(Heuristic::testbed()),
@@ -950,6 +1057,51 @@ mod tests {
         let r = StepReport::default();
         assert_eq!(r.active, 0);
         assert!(r.events.is_empty() && r.finished.is_empty());
+    }
+
+    fn slot(id: SeqId, prompt: Vec<u8>) -> Slot {
+        let last = *prompt.last().unwrap();
+        let len = prompt.len() as i32;
+        Slot {
+            id,
+            state: SeqState::new(prompt, last, len),
+            rng_draft: Pcg32::new(0, 2 * id),
+            rng_accept: Pcg32::new(0, 2 * id + 1),
+            max_new_tokens: 8,
+            temperature: 1.0,
+            top_p: 1.0,
+        }
+    }
+
+    #[test]
+    fn flops_count_live_rows_only() {
+        // Regression for the PAD metrics skew: Husk (retired) and Shadow
+        // (padding) rows used to accrue draft/verify FLOPs — the fused
+        // artifact does compute them, but they serve no request, so
+        // charging them inflated PAD throughput/utilization.
+        let mut finished = slot(2, vec![4, 5]);
+        finished.state.finish_at(FinishReason::Eos, 1.0);
+        let rows = vec![
+            Row::Seq(slot(0, vec![1, 2, 3])), // live: the only countable
+            Row::Husk(SeqState::new(vec![9, 9], 9, 2)), // retired
+            Row::Shadow(slot(1, vec![7, 8])),           // padding
+            Row::Seq(finished), // finished-but-unretired: not served work
+            Row::Free,
+        ];
+        let live = live_row_states(&rows);
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].prompt, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn all_padding_batch_counts_zero_live_rows() {
+        // A drained-but-unreset PAD bucket (husks + still-running shadows)
+        // must charge nothing.
+        let rows = vec![
+            Row::Husk(SeqState::new(vec![1], 1, 1)),
+            Row::Shadow(slot(0, vec![2, 3])),
+        ];
+        assert!(live_row_states(&rows).is_empty());
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! The pin behind PAD mid-flight admission: under **randomized**
+//! admit/step/retire schedules — mixed fan-out, per-sequence sampling
+//! params and generation budgets, delayed retirement, slot/row reuse —
+//! every sequence must be **byte-identical** (and logP-identical) to its
+//! solo one-shot run, in both PAD and SPLIT execution modes.
+//!
+//! `step_equivalence.rs` pins a handful of hand-picked interleavings;
+//! this harness replays hundreds of seeded PCG32-driven schedules so the
+//! row-lifecycle edges (scatter-prefill into Husk vs Shadow rows, drain
+//! auto-reset, delayed retirement, fan-out streams) are all crossed many
+//! times. `Policy::Fixed` keeps per-step draft lengths batch-independent
+//! and each admission pins its RNG stream, so a sequence's output is a
+//! pure function of (prompt, seed, stream, sampling params, budget) —
+//! the invariant that makes continuous batching invisible to clients.
+
+use std::collections::HashMap;
+
+use bass::bench_util::{artifacts_available, artifacts_root};
+use bass::kv::{FinishReason, SeqState};
+use bass::runtime::Engine;
+use bass::sampling::Pcg32;
+use bass::spec::{AdmitOpts, ExecMode, Policy, SeqId, SpecBatch, SpecConfig};
+use bass::tokenizer;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+const PROMPTS: [&str; 3] = [
+    "def add_7(x):\n    # adds 7 to x\n    return",
+    "def mul_3(x):\n    return",
+    "article: alice went to the market. summary:",
+];
+const PARAMS: [(f32, f32); 3] = [(0.2, 0.95), (0.8, 0.9), (1.5, 1.0)];
+const BUDGETS: [usize; 4] = [4, 6, 9, 12];
+const SEEDS: [u64; 4] = [3, 11, 42, 99];
+const K: usize = 4;
+const CAPACITY: usize = 4;
+const SCHEDULES: u64 = 200;
+
+/// Identity of one admission, drawn from small pools so solo reference
+/// runs can be cached across schedules. `stream` is the pinned fan-out
+/// index (requests with fan-out admit one plan per stream).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct Plan {
+    prompt: usize,
+    params: usize,
+    budget: usize,
+    seed_idx: usize,
+    stream: u64,
+}
+
+fn base_cfg(mode: ExecMode) -> SpecConfig {
+    SpecConfig {
+        max_new_tokens: 8,
+        policy: Policy::Fixed(K),
+        mode,
+        seed: 0,
+        // Batch defaults deliberately unlike any plan's overrides, so an
+        // override that fails to stick shows up as a byte divergence.
+        temperature: 0.7,
+        top_p: 0.85,
+        ..SpecConfig::default()
+    }
+}
+
+fn plan_inputs(p: Plan) -> (Vec<u8>, u64, AdmitOpts) {
+    let (temperature, top_p) = PARAMS[p.params];
+    (
+        tokenizer::encode(PROMPTS[p.prompt]),
+        SEEDS[p.seed_idx],
+        AdmitOpts {
+            max_new_tokens: Some(BUDGETS[p.budget]),
+            stream: Some(p.stream),
+            temperature: Some(temperature),
+            top_p: Some(top_p),
+        },
+    )
+}
+
+/// The reference: the same admission alone in a one-slot batch, stepped
+/// to completion with nothing else ever co-resident.
+fn solo_run(e: &Engine, mode: ExecMode, p: Plan) -> SeqState {
+    let (prompt, seed, opts) = plan_inputs(p);
+    let mut batch = SpecBatch::new(e, base_cfg(mode), 1).unwrap();
+    let id = batch.admit_opts(&prompt, seed, opts).unwrap();
+    let mut guard = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        guard += 1;
+        assert!(guard < 500, "runaway solo run");
+    }
+    batch.retire(id).unwrap()
+}
+
+/// Replay one random schedule; returns (sequences completed, PAD/SPLIT
+/// admissions that happened into a *running* batch).
+fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
+                solo: &mut HashMap<Plan, SeqState>) -> (usize, usize) {
+    let mut rng = Pcg32::new(0xBA55_0000 + schedule, 1);
+    let mut batch = SpecBatch::new(e, base_cfg(mode), CAPACITY).unwrap();
+
+    // Draw the admission list: 3..=6 requests, fan-out 1..=2 each.
+    let mut pending: Vec<Plan> = Vec::new();
+    let n_requests = 3 + (rng.next_u32() % 4) as usize;
+    for _ in 0..n_requests {
+        let prompt = (rng.next_u32() as usize) % PROMPTS.len();
+        let params = (rng.next_u32() as usize) % PARAMS.len();
+        let budget = (rng.next_u32() as usize) % BUDGETS.len();
+        let seed_idx = (rng.next_u32() as usize) % SEEDS.len();
+        let fanout = 1 + (rng.next_u32() % 2) as u64;
+        for stream in 0..fanout {
+            pending.push(Plan { prompt, params, budget, seed_idx, stream });
+        }
+    }
+
+    let mut owners: HashMap<SeqId, Plan> = HashMap::new();
+    let mut unretired: Vec<SeqId> = Vec::new();
+    let mut done: Vec<(Plan, SeqState)> = Vec::new();
+    let mut midflight = 0usize;
+    let mut stepped_since_empty = false;
+    let mut guard = 0;
+    loop {
+        guard += 1;
+        assert!(guard < 2000, "schedule {schedule} did not converge");
+
+        // Delayed retirement: each finished sequence leaves with p=0.7
+        // per boundary, so Husk rows and finished-but-unretired slots
+        // both occur.
+        let mut still = Vec::new();
+        for id in unretired.drain(..) {
+            if rng.next_f32() < 0.7 {
+                let st = batch.retire(id).unwrap();
+                done.push((owners.remove(&id).unwrap(), st));
+            } else {
+                still.push(id);
+            }
+        }
+        unretired = still;
+        if batch.occupied() == 0 {
+            stepped_since_empty = false; // drained (PAD auto-reset point)
+        }
+
+        // Random admission into whatever slots/rows are free right now.
+        while !pending.is_empty() && batch.can_admit()
+            && rng.next_f32() < 0.6
+        {
+            let p = pending.pop().unwrap();
+            if stepped_since_empty && batch.occupied() > 0 {
+                midflight += 1; // landed in a running batch (no drain)
+            }
+            let (prompt, seed, opts) = plan_inputs(p);
+            let id = batch.admit_opts(&prompt, seed, opts).unwrap();
+            owners.insert(id, p);
+        }
+
+        if batch.has_active() {
+            let report = batch.step().unwrap();
+            assert_eq!(report.k, K, "Fixed({K}) must hold every step");
+            stepped_since_empty = true;
+            unretired.extend(report.finished);
+        } else if pending.is_empty() && unretired.is_empty()
+            && owners.is_empty()
+        {
+            break;
+        }
+    }
+
+    // Every completed sequence must reproduce its solo one-shot run.
+    let n = done.len();
+    for (plan, st) in done {
+        let want = solo
+            .entry(plan)
+            .or_insert_with(|| solo_run(e, mode, plan));
+        assert_ne!(st.finish, FinishReason::Running);
+        assert_eq!(st.generated, want.generated,
+                   "{mode:?} schedule {schedule}: interleaved bytes \
+                    diverge from the solo run");
+        assert_eq!(st.finish, want.finish,
+                   "{mode:?} schedule {schedule}: finish reason");
+        assert!((st.mean_logp() - want.mean_logp()).abs() < 1e-12,
+                "{mode:?} schedule {schedule}: mean_logp {} vs {}",
+                st.mean_logp(), want.mean_logp());
+    }
+    (n, midflight)
+}
+
+fn run_mode(mode: ExecMode) {
+    let e = Engine::load(&artifacts_root()).expect("engine load");
+    let mut solo: HashMap<Plan, SeqState> = HashMap::new();
+    let mut checked = 0usize;
+    let mut midflight = 0usize;
+    for schedule in 0..SCHEDULES {
+        let (n, m) = run_schedule(&e, mode, schedule, &mut solo);
+        checked += n;
+        midflight += m;
+    }
+    assert!(checked >= 600,
+            "{mode:?}: only {checked} sequences checked — schedules \
+             degenerate");
+    // The whole point: a healthy share of admissions landed in a batch
+    // that had already started (no drain in between). Busy periods that
+    // bucketed at 1 can never take one, so the floor is well below the
+    // admission count, but it must stay far from zero.
+    assert!(midflight >= 30,
+            "{mode:?}: only {midflight} mid-flight admissions across \
+             {SCHEDULES} schedules — the harness is not exercising \
+             running-batch admission");
+}
+
+#[test]
+fn interleaved_admission_matches_solo_pad() {
+    require_artifacts!();
+    run_mode(ExecMode::Pad);
+}
+
+#[test]
+fn interleaved_admission_matches_solo_split() {
+    require_artifacts!();
+    run_mode(ExecMode::Split);
+}

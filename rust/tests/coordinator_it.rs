@@ -243,32 +243,68 @@ fn midflight_admission_into_running_batch() {
             short.queue_secs, long.batch_secs);
 }
 
-/// PAD mode cannot grow a fused cache mid-run: a request arriving after
-/// the batch started waits for the drain and runs in its own batch.
+/// PAD mid-flight admission (the tentpole of the prefill-scatter
+/// artifact): a request arriving after a PAD batch *started* is
+/// scatter-prefilled into a freed row of the running fused cache — no
+/// drain — and answered independently while the co-resident long request
+/// keeps running. The freed row comes from a short co-batched request
+/// retiring early (a Husk row).
 #[test]
-fn pad_admission_waits_for_drain() {
+fn pad_midflight_admission_into_running_batch() {
     require_artifacts!();
     let coord = Arc::new(coordinator_with(
         SpecConfig {
-            max_new_tokens: 48,
+            max_new_tokens: 96,
             mode: ExecMode::Pad,
-            temperature: 2.0,
+            temperature: 2.0, // keep the long request rambling (no EOS)
             ..SpecConfig::default()
         },
-        4, 1));
+        4, 30));
+    // Warm up so step timing is not dominated by lazy compiles.
     let _ = coord.generate(request("def f(x):\n    return", 1, 4, false));
+
+    // A long and a short request ride one fused bucket (the 30ms window
+    // co-batches them). The short one retires early, husking its row.
     let rx_long = coord.submit(
-        request("def add_7(x):\n    return", 1, 48, true));
-    match rx_long.recv().expect("long request alive") {
-        Reply::Step(_) => {}
-        Reply::Done(r) => panic!("long request finished instantly: {r:?}"),
-    }
-    let short = coord
+        request("def add_7(x):\n    # adds 7 to x\n    return", 1, 96,
+                true));
+    let rx_short = coord.submit(request("def mul_3(x):\n    return", 1, 2,
+                                        false));
+    let early = Coordinator::wait(rx_short).unwrap();
+    assert!(early.batch_size >= 2,
+            "setup failed: short request was not co-batched (batch_size \
+             {})", early.batch_size);
+
+    // Late arrival, after the batch started: must be admitted into the
+    // running fused batch via scatter-prefill, not wait for the drain.
+    let late = coord
         .generate(request("def mul_3(x):\n    return", 1, 2, false))
         .unwrap();
-    // No co-residency: the short request ran alone after the drain.
-    assert_eq!(short.batch_size, 1);
-    let _ = Coordinator::wait(rx_long).unwrap();
+    assert!(late.batch_size > late.seqs.len(),
+            "batch_size {} not > own seqs {} — no PAD mid-flight \
+             admission", late.batch_size, late.seqs.len());
+    assert_eq!(late.seqs.len(), 1);
+    assert!(late.seqs[0].n_tokens > 0);
+
+    // The long request must still be running when the late one answered
+    // (i.e. the batch never drained).
+    let mut long_done_early = false;
+    loop {
+        match rx_long.try_recv() {
+            Ok(Reply::Step(_)) => continue,
+            Ok(Reply::Done(_)) => {
+                long_done_early = true;
+                break;
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => break,
+            Err(e) => panic!("long request channel died: {e}"),
+        }
+    }
+    assert!(!long_done_early,
+            "late request did not overtake the long one — PAD admission \
+             waited for the drain");
+    let long = Coordinator::wait(rx_long).unwrap();
+    assert!(long.seqs[0].n_tokens >= late.seqs[0].n_tokens);
 }
 
 #[test]
