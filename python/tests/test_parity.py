@@ -10,7 +10,15 @@ on it).
 Prefill-scatter: the per-row `prefill_scatter` artifact (PAD mid-flight
 admission, `rust/src/runtime/engine.rs::prefill_into_slot`) must equal a
 full fused prefill row-for-row — elementwise-exact, across batch buckets —
-and must leave non-target rows untouched."""
+and must leave non-target rows untouched.
+
+Recompute-resume: preemption (`SpecBatch::suspend`/`resume`) rebuilds a
+suspended sequence's KV row by prefilling `prompt ‖ generated` instead of
+snapshotting device memory. That is only sound if a prefill-recomputed row
+is **bitwise identical** to one built incrementally by decode calls of
+assorted Q shapes (with speculative-rollback stale tails in between) —
+the property `test_resume_recompute_*` pins here, on the real model graph,
+for both attention impls, eager and jitted."""
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +29,9 @@ try:
 except ModuleNotFoundError:  # minimal images; CI installs hypothesis
     given = None
 
-from compile.model import (ModelConfig, init_params, prefill,
+import pytest
+
+from compile.model import (ModelConfig, decode, init_params, prefill,
                            prefill_scatter, sample_top_p)
 
 jax.config.update("jax_platform_name", "cpu")
@@ -168,6 +178,113 @@ def test_scatter_prefill_leaves_other_rows_untouched():
                 np.testing.assert_array_equal(
                     np.asarray(a[r]), np.asarray(b[r]),
                     err_msg=f"buffer {i}: row {r} changed")
+
+
+# ---------------------------------------------------------------------------
+# Recompute-resume vs incremental KV (preemption's suspend/resume)
+# ---------------------------------------------------------------------------
+
+_RESUME_P = 24
+
+
+def _incremental_session(attn, use_jit, seed=0):
+    """Mirror the Rust engine's incremental flow: prefill a prompt (valid
+    length = plen - 1, last token pending), then a few speculative-shaped
+    decode rounds — Q = k+1 with partial accepts, so rejected drafts leave
+    stale tail KV exactly like rejection rollback. Returns the verified
+    byte stream, its caches and the valid length."""
+    pf = jax.jit(prefill, static_argnums=(3, 4)) if use_jit else prefill
+    dc = jax.jit(decode, static_argnums=(4, 5)) if use_jit else decode
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    rng = np.random.default_rng(seed)
+
+    prompt = rng.integers(1, 256, size=(7,)).astype(np.int32).tolist()
+    toks = np.zeros((1, _RESUME_P), np.int32)
+    toks[0, : len(prompt)] = prompt
+    _, caches = pf(params, jnp.asarray(toks),
+                   jnp.asarray([len(prompt)], np.int32), cfg, attn)
+    seq_len = len(prompt) - 1
+    stream = list(prompt)
+
+    # (k, accepted): full accept, partial, zero-accept, and a Q=2 round —
+    # the draft resync shape — so several distinct decode programs write
+    # the KV this session later recomputes with one prefill program.
+    for k, acc in [(4, 4), (2, 1), (1, 0), (3, 2)]:
+        pending = stream[seq_len]
+        drafts = rng.integers(1, 256, size=(k,)).astype(np.int32).tolist()
+        q_toks = jnp.asarray([[pending] + drafts], jnp.int32)
+        _, caches = dc(params, q_toks, jnp.asarray([seq_len], np.int32),
+                       caches, cfg, attn)
+        corrected = int(rng.integers(1, 256))
+        stream = stream[: seq_len + 1] + drafts[:acc] + [corrected]
+        seq_len += 1 + acc
+    assert seq_len == len(stream) - 1 and len(stream) <= _RESUME_P
+    return pf, dc, stream, caches, seq_len
+
+
+@pytest.mark.parametrize("attn", ["dense", "pallas"])
+@pytest.mark.parametrize("use_jit", [False, True])
+def test_resume_recompute_is_bitwise_identical(attn, use_jit):
+    """prefill(prompt ‖ generated) must reproduce the incrementally built
+    KV **bit for bit** over the valid region (positions 0..L-2; position
+    L-1 is the pending byte both runs re-ingest next step), and the next
+    decode from either cache must emit bitwise-equal logits. This is the
+    whole soundness argument for suspend/resume-by-recompute: per-query
+    masking is exact-zero outside the valid prefix, KV at position i is a
+    pure function of tokens 0..i, and the reduction order per output
+    element does not depend on the program's Q shape. Tolerance-based
+    closeness would NOT be enough — the Rust identity harness compares
+    generated bytes, which ride on these values bit-for-bit."""
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    pf, dc, stream, caches, seq_len = _incremental_session(attn, use_jit)
+    L = len(stream)
+
+    toks = np.zeros((1, _RESUME_P), np.int32)
+    toks[0, :L] = stream
+    _, recomputed = pf(params, jnp.asarray(toks),
+                       jnp.asarray([L], np.int32), cfg, attn)
+
+    for i, (ci, cr) in enumerate(zip(caches, recomputed)):
+        np.testing.assert_array_equal(
+            np.asarray(ci)[0, :, : L - 1], np.asarray(cr)[0, :, : L - 1],
+            err_msg=f"cache buffer {i}: recompute != incremental "
+                    f"(attn={attn}, jit={use_jit})")
+
+    nxt = jnp.asarray([[stream[-1], 17, 42]], jnp.int32)
+    lens = jnp.asarray([seq_len], np.int32)
+    l_inc, _ = dc(params, nxt, lens, [jnp.array(c) for c in caches], cfg,
+                  attn)
+    l_rec, _ = dc(params, nxt, lens, [jnp.array(c) for c in recomputed],
+                  cfg, attn)
+    np.testing.assert_array_equal(
+        np.asarray(l_inc), np.asarray(l_rec),
+        err_msg=f"next-step logits differ (attn={attn}, jit={use_jit})")
+
+
+def test_resume_recompute_scatter_into_running_batch():
+    """The PAD mid-flight resume path: scattering the recomputed context
+    into a husk row of a running fused cache equals the incremental row
+    bitwise, and leaves the co-resident rows untouched."""
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    _, _, stream, caches, _ = _incremental_session("dense", False)
+    L = len(stream)
+
+    # A running bucket of 3: garbage occupants, the target row is 1.
+    fused = _garbage_cache(cfg, 3)
+    toks = np.zeros((1, _RESUME_P), np.int32)
+    toks[0, :L] = stream
+    _, fused = prefill_scatter(params, jnp.asarray(toks),
+                               jnp.asarray([L], np.int32),
+                               jnp.asarray([1], jnp.int32), fused, cfg,
+                               "dense")
+    for i, (ci, cf) in enumerate(zip(caches, fused)):
+        np.testing.assert_array_equal(
+            np.asarray(ci)[0, :, : L - 1], np.asarray(cf)[1, :, : L - 1],
+            err_msg=f"buffer {i}: scatter-resume row != incremental")
+        for row in (0, 2):
+            np.testing.assert_array_equal(
+                np.asarray(cf)[row], 7.5 * np.ones_like(np.asarray(cf)[row]),
+                err_msg=f"buffer {i}: co-resident row {row} touched")
 
 
 def test_scatter_prefill_artifact_lowers_with_batch_correct_specs():

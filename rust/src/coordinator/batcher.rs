@@ -1,12 +1,20 @@
-//! Dynamic batching policy: decide which queued requests to admit into
-//! the speculative batch's **free slots** at each step boundary — the
-//! continuous-batching generalization of the paper's serving scenario
-//! (§1, footnote 5), where multiple recommendations for one prompt *and*
-//! unrelated prompts ride the same engine batch.
+//! Dynamic batching **policy**: how many rank-ordered queued requests fit
+//! the speculative batch's free slots, and whether to admit now or hold
+//! the head for co-batchable arrivals — the continuous-batching
+//! generalization of the paper's serving scenario (§1, footnote 5), where
+//! multiple recommendations for one prompt *and* unrelated prompts ride
+//! the same engine batch.
 //!
-//! Unlike a flush-the-queue batcher, `plan_batch` plans against however
-//! many slots the running batch has free right now; the coordinator calls
-//! it again at the next step boundary as sequences retire.
+//! Since the preemptive scheduler landed, this module is a pure policy
+//! the [`super::scheduler`] consults — it no longer *owns* admission.
+//! The scheduler ranks the queue (priority, deadline, FIFO), decides
+//! preemptions/resumes, and then calls [`plan_batch`] / [`should_flush`]
+//! over the rank-ordered queue with a single `now` per round, so the
+//! fan-out-atomicity, oversized-head clamp and co-batch window semantics
+//! pinned here apply unchanged — and the window check cannot drift
+//! between call sites. `plan_batch` still plans against however many
+//! slots are free right now (which, with `--pad-headroom`, includes the
+//! PAD bucket's grow-room padding rows).
 
 use std::time::{Duration, Instant};
 
@@ -75,15 +83,23 @@ pub fn plan_batch(queue: &[Pending], free_slots: usize,
 
 /// Should the coordinator admit now, or keep the free slots open a little
 /// longer for co-batchable arrivals? Admit when the queue can already fill
-/// every free slot, or once the head request has waited out the window —
-/// but never when [`plan_batch`] would take nothing anyway (no free
-/// slots, or a head whose fan-out doesn't fit until more of the batch
-/// drains): flushing then would only make the coordinator rebuild the
-/// pending list and re-plan uselessly at every step boundary. Gated on
-/// `plan_batch` itself so the two policies cannot drift.
+/// every free slot, or once the **oldest** queued request has waited out
+/// the window — but never when [`plan_batch`] would take nothing anyway
+/// (no free slots, or a head whose fan-out doesn't fit until more of the
+/// batch drains): flushing then would only make the coordinator rebuild
+/// the pending list and re-plan uselessly at every step boundary. Gated
+/// on `plan_batch` itself so the two policies cannot drift.
+///
+/// The age check deliberately uses the oldest waiter, not the queue
+/// head: the scheduler hands this function a **rank-ordered** queue, so
+/// a fresh higher-priority arrival becomes the head — measuring the
+/// window from it would re-arm the clock on every urgent arrival and
+/// starve older lower-priority work behind a sub-window trickle. (Under
+/// plain FIFO order the head *is* the oldest, so this is exactly the
+/// pre-scheduler semantics.)
 pub fn should_flush(queue: &[Pending], free_slots: usize,
                     cfg: &BatcherConfig, now: Instant) -> bool {
-    let Some(head) = queue.first() else {
+    let Some(oldest) = queue.iter().map(|p| p.enqueued).min() else {
         return false;
     };
     if plan_batch(queue, free_slots, cfg).0 == 0 {
@@ -91,7 +107,7 @@ pub fn should_flush(queue: &[Pending], free_slots: usize,
     }
     let free = free_slots.min(cfg.max_batch);
     let seqs: usize = queue.iter().map(|p| p.n_seqs.max(1)).sum();
-    seqs >= free || now.duration_since(head.enqueued) >= cfg.window
+    seqs >= free || now.duration_since(oldest) >= cfg.window
 }
 
 #[cfg(test)]
@@ -224,6 +240,53 @@ mod tests {
         let q = vec![pend(1, 9)];
         assert!(should_flush(&q, 4, &cfg, now));
         assert_eq!(plan_batch(&q, 4, &cfg), (1, 4));
+    }
+
+    #[test]
+    fn window_measured_from_oldest_not_the_ranked_head() {
+        // The scheduler passes a rank-ordered queue: a fresh
+        // higher-priority arrival sits at the head. The co-batch window
+        // must still expire on the OLDEST waiter's clock — anchoring it
+        // to the head would let a trickle of urgent arrivals re-arm the
+        // window forever and starve the old request behind them.
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            window: Duration::from_millis(50),
+        };
+        let t0 = Instant::now();
+        let old = Pending { request_id: 1, n_seqs: 1, enqueued: t0 };
+        let fresh_head = Pending {
+            request_id: 2,
+            n_seqs: 1,
+            enqueued: t0 + Duration::from_millis(49),
+        };
+        let q = vec![fresh_head, old]; // rank order: newcomer first
+        assert!(!should_flush(&q, 8, &cfg, t0 + Duration::from_millis(40)));
+        assert!(should_flush(&q, 8, &cfg, t0 + Duration::from_millis(51)),
+                "oldest waiter's window expired; the fresh head must not \
+                 re-arm it");
+    }
+
+    #[test]
+    fn pad_headroom_rows_plan_like_free_slots() {
+        // The --pad-headroom knob rounds a PAD bucket up past the
+        // admitted count; the extra Shadow rows surface through
+        // `SpecBatch::free_slots` exactly like retired rows. The policy
+        // must admit a late arrival into that grow-room immediately
+        // (queue covers the free slots -> no window wait, no drain).
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            window: Duration::from_millis(50),
+        };
+        let now = Instant::now();
+        // Bucket of 4 running 2 real sequences: 2 headroom rows free.
+        let q = vec![pend(1, 2)];
+        assert!(should_flush(&q, 2, &cfg, now), "headroom admits now");
+        assert_eq!(plan_batch(&q, 2, &cfg), (1, 2));
+        // Without headroom the same running bucket has 0 free rows and
+        // the arrival would have waited for a retirement or the drain.
+        assert!(!should_flush(&q, 0, &cfg, now));
+        assert_eq!(plan_batch(&q, 0, &cfg), (0, 0));
     }
 
     #[test]

@@ -1,50 +1,70 @@
-//! Layer-3 serving coordinator: request queue → free-slot batcher → a
-//! **continuously batched** speculative engine on a dedicated worker
-//! thread → responses.
+//! Layer-3 serving coordinator: request queue → **preemptive priority
+//! scheduler** → a continuously batched speculative engine on a dedicated
+//! worker thread → responses.
 //!
 //! The worker owns one long-lived [`SpecBatch`] and drives it step by
-//! step. At every step boundary it (a) admits queued requests into free
-//! batch slots ([`batcher::plan_batch`] plans against *free slots*, not an
-//! empty batch) and (b) retires sequences the moment they finish,
-//! answering each request as soon as *its* sequences are done — no
-//! head-of-line blocking behind co-batched long requests. **Both
-//! execution modes admit mid-flight**: SPLIT prefills a per-slot B=1
-//! cache; PAD scatter-prefills the new sequence into a freed row of the
-//! running fused cache (the per-row `prefill_scatter` artifact), so the
-//! paper's primary mode keeps its batch continuously utilized under load
-//! instead of waiting for a drain. A running PAD batch's *bucket* still
-//! cannot grow — free slots there are retired/padding rows — so a burst
-//! larger than the current bucket waits for the drain-and-re-bucket.
+//! step. At every step boundary it asks the [`scheduler`] for a plan over
+//! {queued, running, suspended} work and executes it:
 //!
-//! The engine (PJRT handles) is **not** `Send`, so it is constructed
-//! inside the worker thread and owns the device for the process lifetime —
-//! the same single-engine-loop architecture vLLM's scheduler uses.
-//! Requests and responses cross threads over mpsc channels; the TCP
-//! front-end ([`server`]) is just a thin line-protocol adapter that can
-//! also relay per-step [`StepEvent`]s as a streaming response.
+//! * **Preempt** — a strictly-higher-priority arrival may suspend a
+//!   low-priority running sequence ([`SpecBatch::suspend`]): the
+//!   sequence's host-side identity (bytes, RNG streams, params, budget)
+//!   is parked in the scheduler, its device KV dropped, its slot freed.
+//!   Weakest victims go first; equal priority never preempts; sequences
+//!   whose context outgrew the prefill capacity are pinned (see
+//!   [`SpecBatch::can_suspend`]).
+//! * **Resume** — parked sequences re-enter free slots by **recompute**
+//!   ([`SpecBatch::resume`]): one prefill over `prompt ‖ generated`
+//!   (SPLIT per-slot, PAD scatter into a reusable row of the running
+//!   bucket) rebuilds the KV row bitwise with the existing artifacts, so
+//!   a preempted request's output is byte-identical to an uninterrupted
+//!   run under `Policy::Fixed`. The cost model: suspension holds a few
+//!   hundred host bytes; resumption costs one prompt-length prefill.
+//!   Because the suspended set lives on the host, admitted work may
+//!   exceed the engine's device slots — `max_batch` bounds *running*
+//!   work only.
+//! * **Admit** — queued requests enter through the rank-ordered FIFO
+//!   policy ([`batcher::plan_batch`] / [`batcher::should_flush`], now
+//!   consulted solely by the scheduler with a single wall-clock read per
+//!   round). **Both execution modes admit mid-flight**: SPLIT prefills a
+//!   per-slot B=1 cache; PAD scatter-prefills into a freed row of the
+//!   running fused cache. A running PAD bucket still cannot *grow*, but
+//!   `--pad-headroom` starts the bucket above the admitted count so
+//!   grow-room rows exist without a drain-and-re-bucket.
+//!
+//! Sequences retire the moment they finish and each request is answered
+//! as soon as *its* sequences are done — no head-of-line blocking behind
+//! co-batched long requests. The engine (PJRT handles) is **not** `Send`,
+//! so it is constructed inside the worker thread and owns the device for
+//! the process lifetime — the same single-engine-loop architecture vLLM's
+//! scheduler uses. Requests and responses cross threads over mpsc
+//! channels; the TCP front-end ([`server`]) is a thin line-protocol
+//! adapter that can also relay per-step [`StepEvent`]s.
 //!
 //! Sampling parameters (temperature / top-p) are **per request**, like
-//! `max_new_tokens` and `seed`: sequences from many requests share fused
-//! device calls, but the draft artifact takes `[B]` per-row param vectors
-//! and the verify-side warp is per-slot host code, so each admitted
-//! sequence keeps its own request's knobs ([`crate::spec::AdmitOpts`]).
-//! The server's [`SpecConfig`] values are only the defaults for requests
-//! that leave them unset.
+//! `max_new_tokens`, `seed`, `priority` and `deadline_ms`: sequences from
+//! many requests share fused device calls, but the draft artifact takes
+//! `[B]` per-row param vectors and the verify-side warp is per-slot host
+//! code ([`crate::spec::AdmitOpts`]). The server's [`SpecConfig`] values
+//! are only the defaults for requests that leave them unset.
 
 pub mod batcher;
+pub mod scheduler;
 pub mod server;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::kv::FinishReason;
 use crate::runtime::Engine;
 use crate::spec::{AdmitOpts, SeqId, SpecBatch, SpecConfig};
-use batcher::{plan_batch, should_flush, BatcherConfig, Pending};
+use batcher::BatcherConfig;
+use scheduler::{ParkedSeq, RunningSeq, Scheduler, SchedulerConfig,
+                Urgency};
 
 /// One generation request.
 #[derive(Debug)]
@@ -64,9 +84,20 @@ pub struct Request {
     /// reproduces the same output regardless of server traffic history —
     /// provided the per-step draft lengths match, i.e. the server runs
     /// `Policy::Fixed` (under the adaptive heuristic, k is batch-global
-    /// Algorithm-1 state fed by co-batched traffic). Defaults to the
-    /// server's spec seed with traffic-dependent streams.
+    /// Algorithm-1 state fed by co-batched traffic). Preemption does not
+    /// break this: a suspended sequence resumes with its exact RNG
+    /// stream positions. Defaults to the server's spec seed with
+    /// traffic-dependent streams.
     pub seed: Option<u64>,
+    /// Scheduling priority: higher runs first and may **preempt**
+    /// strictly-lower-priority running work (suspend-to-host +
+    /// recompute-resume). Equal priorities never preempt each other.
+    /// Default 0.
+    pub priority: Option<i32>,
+    /// Soft deadline, milliseconds from submission: orders work *within*
+    /// a priority class (earliest first; deadlined before undeadlined).
+    /// An ordering hint, not a guarantee — priority always dominates.
+    pub deadline_ms: Option<u64>,
     /// Relay per-step [`StepEvent`]s before the final response.
     pub stream: bool,
 }
@@ -90,13 +121,22 @@ pub struct Response {
     /// `n`.
     pub n_requested: usize,
     /// Wall seconds from this request's admission into the engine batch
-    /// to its last sequence retiring.
+    /// to its last sequence retiring (time spent suspended counts — the
+    /// request was admitted and preemption is a serving decision the
+    /// client should be able to see in its latency).
     pub batch_secs: f64,
     /// Most sequences that shared the engine batch with this request at
-    /// any step (yours + co-batched).
+    /// any step while it had live sequences (yours + co-batched).
     pub batch_size: usize,
-    /// Queue wait before admission (not before the whole batch finished).
+    /// Queue wait before first admission (not before the whole batch
+    /// finished).
     pub queue_secs: f64,
+    /// Times this request's sequences were preempted (suspended to host
+    /// for higher-priority work and later resumed by recompute).
+    pub preempted: usize,
+    /// Requests still waiting in the scheduler queue when this response
+    /// was finalized — a server-load signal for clients.
+    pub queue_depth: usize,
 }
 
 /// One per-step progress notification for a streaming request.
@@ -135,6 +175,11 @@ pub struct CoordinatorConfig {
     pub artifacts_root: std::path::PathBuf,
     pub spec: SpecConfig,
     pub batcher: BatcherConfig,
+    /// Allow the scheduler to suspend running sequences for
+    /// strictly-higher-priority arrivals (`--no-preempt` clears it).
+    /// Off, priorities still order the queue but running work always
+    /// drains naturally.
+    pub preempt: bool,
     /// Compile all needed executables at startup (slower start, no
     /// lazy-compile spikes on the request path). Default true.
     pub prewarm: bool,
@@ -143,7 +188,13 @@ pub struct CoordinatorConfig {
 impl CoordinatorConfig {
     pub fn new(artifacts_root: std::path::PathBuf, spec: SpecConfig,
                batcher: BatcherConfig) -> Self {
-        CoordinatorConfig { artifacts_root, spec, batcher, prewarm: true }
+        CoordinatorConfig {
+            artifacts_root,
+            spec,
+            batcher,
+            preempt: true,
+            prewarm: true,
+        }
     }
 }
 
@@ -206,18 +257,20 @@ impl Drop for Coordinator {
     }
 }
 
-struct QueuedJob {
-    id: u64,
+/// A queued request's payload while the scheduler owns its ordering.
+struct PendingJob {
     req: Request,
     reply: Sender<Reply>,
-    pending: Pending,
+    enqueued: Instant,
+    urgency: Urgency,
 }
 
-/// A request whose sequences are (partly) in the engine batch.
+/// A request whose sequences are in the engine batch and/or parked.
 struct InFlight {
     reply: Sender<Reply>,
     stream: bool,
-    /// seq id -> index within this request's fan-out.
+    /// live seq id -> index within this request's fan-out (suspended
+    /// sequences are keyed by fanout index inside their `ParkedSeq`).
     seq_index: HashMap<SeqId, usize>,
     done: Vec<Option<GenSeq>>,
     remaining: usize,
@@ -225,13 +278,17 @@ struct InFlight {
     n_requested: usize,
     admitted: Instant,
     queue_secs: f64,
-    /// Max co-resident sequences observed while this request was in the
-    /// batch (reported as `Response::batch_size`).
+    /// Max co-resident sequences observed while this request had live
+    /// sequences in the batch (reported as `Response::batch_size`).
     batch_size: usize,
+    urgency: Urgency,
+    enqueued: Instant,
+    /// Preemption events suffered (reported as `Response::preempted`).
+    preempted: usize,
 }
 
 impl InFlight {
-    fn finish(self) {
+    fn finish(self, queue_depth: usize) {
         let seqs = self
             .done
             .into_iter()
@@ -243,6 +300,8 @@ impl InFlight {
             batch_secs: self.admitted.elapsed().as_secs_f64(),
             batch_size: self.batch_size,
             queue_secs: self.queue_secs,
+            preempted: self.preempted,
+            queue_depth,
         })));
     }
 }
@@ -280,18 +339,23 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
     };
     let _ = ready.send(Ok(()));
 
-    let mut queue: Vec<QueuedJob> = Vec::new();
+    let mut sched = Scheduler::new(SchedulerConfig {
+        batcher: cfg.batcher.clone(),
+        preempt: cfg.preempt,
+    });
+    // Queued payloads (the scheduler owns their ordering) and admitted
+    // requests.
+    let mut jobs: HashMap<u64, PendingJob> = HashMap::new();
     let mut inflight: HashMap<u64, InFlight> = HashMap::new();
-    // seq id -> owning request id (live sequences only).
+    // live seq id -> owning request id.
     let mut seq_owner: HashMap<SeqId, u64> = HashMap::new();
     let mut next_id = 0u64;
     let mut open = true;
 
-    while open || !queue.is_empty() || !inflight.is_empty() {
+    while open || !jobs.is_empty() || !inflight.is_empty() {
         // -- pull messages; block only when fully idle ---------------------
         loop {
-            let idle =
-                queue.is_empty() && inflight.is_empty() && open;
+            let idle = jobs.is_empty() && inflight.is_empty() && open;
             let msg = if idle {
                 match rx.recv() {
                     Ok(m) => m,
@@ -317,37 +381,126 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 }
                 Msg::Job(req, reply) => {
                     next_id += 1;
-                    let pending = Pending {
-                        request_id: next_id,
-                        n_seqs: req.n_seqs.max(1),
-                        enqueued: Instant::now(),
+                    let enqueued = Instant::now();
+                    let urgency = Urgency {
+                        priority: req.priority.unwrap_or(0),
+                        deadline: req.deadline_ms.map(|ms| {
+                            enqueued + Duration::from_millis(ms)
+                        }),
                     };
-                    queue.push(QueuedJob { id: next_id, req, reply,
-                                           pending });
+                    sched.submit(next_id, req.n_seqs.max(1), urgency,
+                                 enqueued);
+                    jobs.insert(next_id, PendingJob {
+                        req,
+                        reply,
+                        enqueued,
+                        urgency,
+                    });
                 }
             }
         }
 
-        // -- admission at the step boundary --------------------------------
-        admit_jobs(&mut batch, &mut queue, &mut inflight, &mut seq_owner,
-                   &cfg.batcher);
+        // -- scheduling at the step boundary -------------------------------
+        //
+        // One wall-clock read drives the whole round: the scheduler's
+        // window checks, queue waits and admission timestamps all see the
+        // same `now` (the old admit loop re-read the clock per iteration,
+        // letting the flush window drift from the plan it gated).
+        let now = Instant::now();
+        let view: Vec<RunningSeq> = seq_owner
+            .iter()
+            .map(|(&id, owner)| RunningSeq {
+                id,
+                priority: inflight
+                    .get(owner)
+                    .map_or(0, |j| j.urgency.priority),
+                preemptible: batch.can_suspend(id),
+            })
+            .collect();
+        let plan = sched.plan(batch.free_slots(), &view, now);
+
+        for id in plan.preempt {
+            let Some(&owner) = seq_owner.get(&id) else { continue };
+            let snap = match batch.suspend(id) {
+                Ok(s) => s,
+                // can_suspend was checked when the view was built and no
+                // step ran since; defensively leave the sequence running.
+                Err(_) => continue,
+            };
+            seq_owner.remove(&id);
+            let Some(job) = inflight.get_mut(&owner) else { continue };
+            job.preempted += 1;
+            let fanout_index = job.seq_index.remove(&id).unwrap_or(0);
+            sched.park(ParkedSeq {
+                snapshot: snap,
+                owner,
+                fanout_index,
+                urgency: job.urgency,
+                enqueued: job.enqueued,
+            });
+        }
+
+        for parked in plan.resume {
+            let owner = parked.owner;
+            // A resume failure earlier in this round may have failed the
+            // owner already; its remaining snapshots are dead — dropping
+            // them here prevents orphan sequences from occupying device
+            // slots with nobody waiting on their output.
+            if !inflight.contains_key(&owner) {
+                continue;
+            }
+            let fanout_index = parked.fanout_index;
+            match batch.resume(parked.snapshot) {
+                Ok(id) => {
+                    sched.stats.resumes += 1;
+                    seq_owner.insert(id, owner);
+                    if let Some(job) = inflight.get_mut(&owner) {
+                        job.seq_index.insert(id, fanout_index);
+                    }
+                }
+                Err(e) => {
+                    // The snapshot is consumed; the request cannot be
+                    // made whole — fail it loudly (and abandon its other
+                    // sequences) rather than silently dropping output.
+                    fail_request(&mut batch, owner, &e, &mut inflight,
+                                 &mut seq_owner, &mut sched);
+                }
+            }
+        }
+
+        for rid in plan.admit {
+            let Some(job) = jobs.remove(&rid) else { continue };
+            admit_request(&mut batch, rid, job, &mut inflight,
+                          &mut seq_owner, now);
+        }
 
         // Per-request time budget (Fig-5 semantics): a request whose age
         // since *its own admission* exceeds the budget is answered as-is,
-        // possibly unfinished. Measured per request, not per busy period,
-        // so late joiners of a long-running SPLIT batch get a full budget.
+        // possibly unfinished — including any sequences currently parked
+        // (their snapshots are reported without resuming; suspended time
+        // counts against the budget, matching `Response::batch_secs`).
         if let Some(budget) = cfg.spec.time_budget_secs {
-            let expired: Vec<SeqId> = seq_owner
+            let expired: Vec<u64> = inflight
                 .iter()
-                .filter(|(_, owner)| {
-                    inflight.get(owner).is_some_and(|j| {
-                        j.admitted.elapsed().as_secs_f64() >= budget
-                    })
+                .filter(|(_, j)| {
+                    j.admitted.elapsed().as_secs_f64() >= budget
                 })
                 .map(|(&id, _)| id)
                 .collect();
-            for id in expired {
-                retire_seq(&mut batch, id, &mut inflight, &mut seq_owner);
+            for owner in expired {
+                let queue_depth = sched.queue_depth();
+                let ids: Vec<SeqId> = seq_owner
+                    .iter()
+                    .filter(|(_, &o)| o == owner)
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in ids {
+                    retire_seq(&mut batch, id, &mut inflight,
+                               &mut seq_owner, queue_depth);
+                }
+                for parked in sched.take_parked_of(owner) {
+                    deliver_parked(parked, &mut inflight, queue_depth);
+                }
             }
         }
 
@@ -355,13 +508,15 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             if batch.occupied() > 0 {
                 // Defensive: sequences stalled in any other way are
                 // returned rather than wedging their requests forever.
+                let queue_depth = sched.queue_depth();
                 let ids: Vec<SeqId> = seq_owner.keys().copied().collect();
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
-                               &mut seq_owner);
+                               &mut seq_owner, queue_depth);
                 }
-            } else if !queue.is_empty() {
-                // Waiting out the co-batching window.
+            } else if sched.has_queued() || sched.parked_count() > 0 {
+                // Waiting out the co-batching window (or a transiently
+                // unplaceable parked set).
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
             continue;
@@ -369,26 +524,35 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
 
         // -- one speculative step ------------------------------------------
         let occupied = batch.occupied();
-        for job in inflight.values_mut() {
-            job.batch_size = job.batch_size.max(occupied);
+        let live_owners: HashSet<u64> = seq_owner.values().copied().collect();
+        for (id, job) in inflight.iter_mut() {
+            // Only requests with live sequences observe the co-residency;
+            // a fully parked request is not sharing the batch right now.
+            if live_owners.contains(id) {
+                job.batch_size = job.batch_size.max(occupied);
+            }
         }
         let report = match batch.step() {
             Ok(r) => r,
             Err(e) => {
                 // The device state is suspect: fail everything in flight
-                // and start over with a fresh batch.
+                // (parked snapshots included — their owners are gone) and
+                // start over with a fresh batch.
                 let msg = format!("{e:#}");
                 for (_, job) in inflight.drain() {
                     let _ = job.reply
                         .send(Reply::Done(Err(anyhow!("{msg}"))));
                 }
                 seq_owner.clear();
+                sched.clear_parked();
                 match SpecBatch::new(&engine, cfg.spec.clone(), capacity) {
                     Ok(b) => batch = b,
                     Err(e2) => {
-                        for j in queue.drain(..) {
-                            let _ = j.reply
-                                .send(Reply::Done(Err(anyhow!("{e2:#}"))));
+                        for rid in sched.drain_queued() {
+                            if let Some(j) = jobs.remove(&rid) {
+                                let _ = j.reply.send(
+                                    Reply::Done(Err(anyhow!("{e2:#}"))));
+                            }
                         }
                         return;
                     }
@@ -411,90 +575,100 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
         }
 
         // -- retire finished sequences immediately -------------------------
+        let queue_depth = sched.queue_depth();
         for id in report.finished {
-            retire_seq(&mut batch, id, &mut inflight, &mut seq_owner);
+            retire_seq(&mut batch, id, &mut inflight, &mut seq_owner,
+                       queue_depth);
         }
+    }
+
+    // Serving-period scheduler summary (the [`crate::metrics::SchedStats`]
+    // counters): one stderr line at worker exit, next to the server's
+    // other diagnostics — preemption/resume volume and per-priority queue
+    // waits are fleet-tuning signals (window, max_batch, pad_headroom).
+    let st = &sched.stats;
+    if st.preemptions > 0 || st.resumes > 0 || st.max_queue_depth > 0 {
+        let waits: Vec<String> = st
+            .queue_wait
+            .iter()
+            .map(|(p, w)| {
+                format!("p{p}:{:.1}ms×{}",
+                        st.mean_wait_secs(*p) * 1e3, w.requests)
+            })
+            .collect();
+        eprintln!("[bass-engine] scheduler: preemptions={} resumes={} \
+                   max_queue_depth={} queue_wait[{}]",
+                  st.preemptions, st.resumes, st.max_queue_depth,
+                  waits.join(" "));
     }
 }
 
-/// Admit queued requests into free slots — mid-flight in both modes
-/// (SPLIT: per-slot prefill; PAD: scatter-prefill into freed rows of the
-/// running bucket) — respecting the co-batching window.
-fn admit_jobs(batch: &mut SpecBatch, queue: &mut Vec<QueuedJob>,
-              inflight: &mut HashMap<u64, InFlight>,
-              seq_owner: &mut HashMap<SeqId, u64>, bcfg: &BatcherConfig) {
+/// Admit one planned request: fan-out into free slots (clamped to the
+/// batch capacity), per-sequence overrides threaded through
+/// [`AdmitOpts`]. A partial admission failure rolls the request back and
+/// fails it.
+fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
+                 inflight: &mut HashMap<u64, InFlight>,
+                 seq_owner: &mut HashMap<SeqId, u64>, now: Instant) {
     let default_seed = batch.config().seed;
-    while batch.can_admit() && !queue.is_empty() {
-        let free = batch.free_slots();
-        let pendings: Vec<Pending> =
-            queue.iter().map(|j| j.pending.clone()).collect();
-        if !should_flush(&pendings, free, bcfg, Instant::now()) {
-            return;
-        }
-        let (n_take, _) = plan_batch(&pendings, free, bcfg);
-        if n_take == 0 {
-            return;
-        }
-        for job in queue.drain(..n_take) {
-            let n_requested = job.pending.n_seqs.max(1);
-            let n = n_requested.min(batch.free_slots().max(1));
-            let admitted = Instant::now();
-            let queue_secs =
-                admitted.duration_since(job.pending.enqueued).as_secs_f64();
-            let seed = job.req.seed.unwrap_or(default_seed);
-            let mut fl = InFlight {
-                reply: job.reply,
-                stream: job.req.stream,
-                seq_index: HashMap::new(),
-                done: (0..n).map(|_| None).collect(),
-                remaining: n,
-                n_requested,
-                admitted,
-                queue_secs,
-                batch_size: n,
-            };
-            let mut failed = None;
-            for i in 0..n {
-                // A pinned per-request seed also pins the RNG stream to
-                // the fan-out index, so {prompt, seed} reproduces the
-                // same output regardless of prior traffic (exact under
-                // Policy::Fixed; see Request::seed).
-                let stream = job.req.seed.map(|_| i as u64);
-                match batch.admit_opts(&job.req.prompt, seed, AdmitOpts {
-                    max_new_tokens: job.req.max_new_tokens,
-                    stream,
-                    temperature: job.req.temperature,
-                    top_p: job.req.top_p,
-                }) {
-                    Ok(id) => {
-                        fl.seq_index.insert(id, i);
-                        seq_owner.insert(id, job.id);
-                    }
-                    Err(e) => {
-                        failed = Some(e);
-                        break;
-                    }
-                }
+    let n_requested = job.req.n_seqs.max(1);
+    let n = n_requested.min(batch.free_slots().max(1));
+    let queue_secs = now.duration_since(job.enqueued).as_secs_f64();
+    let seed = job.req.seed.unwrap_or(default_seed);
+    let mut fl = InFlight {
+        reply: job.reply,
+        stream: job.req.stream,
+        seq_index: HashMap::new(),
+        done: (0..n).map(|_| None).collect(),
+        remaining: n,
+        n_requested,
+        admitted: now,
+        queue_secs,
+        batch_size: n,
+        urgency: job.urgency,
+        enqueued: job.enqueued,
+        preempted: 0,
+    };
+    let mut failed = None;
+    for i in 0..n {
+        // A pinned per-request seed also pins the RNG stream to the
+        // fan-out index, so {prompt, seed} reproduces the same output
+        // regardless of prior traffic (exact under Policy::Fixed; see
+        // Request::seed).
+        let stream = job.req.seed.map(|_| i as u64);
+        match batch.admit_opts(&job.req.prompt, seed, AdmitOpts {
+            max_new_tokens: job.req.max_new_tokens,
+            stream,
+            temperature: job.req.temperature,
+            top_p: job.req.top_p,
+        }) {
+            Ok(id) => {
+                fl.seq_index.insert(id, i);
+                seq_owner.insert(id, rid);
             }
-            if let Some(e) = failed {
-                // Roll back this job's partial admissions and fail it.
-                for &id in fl.seq_index.keys() {
-                    let _ = batch.retire(id);
-                    seq_owner.remove(&id);
-                }
-                let _ = fl.reply.send(Reply::Done(Err(e)));
-                continue;
+            Err(e) => {
+                failed = Some(e);
+                break;
             }
-            inflight.insert(job.id, fl);
         }
     }
+    if let Some(e) = failed {
+        // Roll back this job's partial admissions and fail it.
+        for &id in fl.seq_index.keys() {
+            let _ = batch.retire(id);
+            seq_owner.remove(&id);
+        }
+        let _ = fl.reply.send(Reply::Done(Err(e)));
+        return;
+    }
+    inflight.insert(rid, fl);
 }
 
 /// Move one finished (or budget-stalled) sequence out of the batch and
 /// into its request's response; answer the request when it was the last.
 fn retire_seq(batch: &mut SpecBatch, id: SeqId,
               inflight: &mut HashMap<u64, InFlight>,
-              seq_owner: &mut HashMap<SeqId, u64>) {
+              seq_owner: &mut HashMap<SeqId, u64>, queue_depth: usize) {
     let Some(owner) = seq_owner.remove(&id) else { return };
     let state = match batch.retire(id) {
         Ok(s) => s,
@@ -511,6 +685,43 @@ fn retire_seq(batch: &mut SpecBatch, id: SeqId,
     job.remaining -= 1;
     if job.remaining == 0 {
         let job = inflight.remove(&owner).expect("job present");
-        job.finish();
+        job.finish(queue_depth);
     }
+}
+
+/// Answer one parked (still suspended) sequence as-is from its snapshot —
+/// the time-budget path for preempted work that never got to resume.
+fn deliver_parked(parked: ParkedSeq,
+                  inflight: &mut HashMap<u64, InFlight>,
+                  queue_depth: usize) {
+    let owner = parked.owner;
+    let Some(job) = inflight.get_mut(&owner) else { return };
+    let state = parked.snapshot.into_state();
+    job.done[parked.fanout_index] = Some(GenSeq {
+        text: crate::tokenizer::decode(&state.generated),
+        finished: false, // suspended mid-generation by definition
+        mean_logp: state.mean_logp(),
+        n_tokens: state.tokens_generated(),
+    });
+    job.remaining -= 1;
+    if job.remaining == 0 {
+        let job = inflight.remove(&owner).expect("job present");
+        job.finish(queue_depth);
+    }
+}
+
+/// Fail one in-flight request outright: abandon its live sequences, drop
+/// its parked snapshots, send the error.
+fn fail_request(batch: &mut SpecBatch, owner: u64, err: &anyhow::Error,
+                inflight: &mut HashMap<u64, InFlight>,
+                seq_owner: &mut HashMap<SeqId, u64>,
+                sched: &mut Scheduler) {
+    let Some(job) = inflight.remove(&owner) else { return };
+    let ids: Vec<SeqId> = job.seq_index.keys().copied().collect();
+    for id in ids {
+        let _ = batch.retire(id);
+        seq_owner.remove(&id);
+    }
+    let _ = sched.take_parked_of(owner);
+    let _ = job.reply.send(Reply::Done(Err(anyhow!("{err:#}"))));
 }

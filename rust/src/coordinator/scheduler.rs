@@ -1,0 +1,619 @@
+//! Preemptive priority scheduler — the coordinator's admission brain.
+//!
+//! The FIFO free-slot batcher ([`super::batcher`]) decided *how many*
+//! queued requests fit; under load that let a long-running batch starve a
+//! latency-sensitive arrival until something retired ("The Synergy of
+//! Speculative Decoding and Batching", arXiv:2310.18813, shows the
+//! speculative-batching sweet spot shifts with load — batch composition
+//! must be the server's decision; MagicDec, arXiv:2408.11049, frames the
+//! per-request latency/throughput tradeoff that motivates priorities).
+//! This module ranks **all** waiting work — queued requests *and*
+//! suspended sequences — and may **preempt** running work to serve it:
+//!
+//! * Every request carries an [`Urgency`]: a wire `priority` (higher
+//!   runs first; default 0) and an optional `deadline` that orders work
+//!   *within* a priority class (earliest first; no-deadline work sorts
+//!   after deadlined work of the same class). Ties fall back to FIFO by
+//!   enqueue time, which also makes a resumed sequence naturally outrank
+//!   later arrivals of its own class.
+//! * At each step boundary the coordinator calls [`Scheduler::plan`]
+//!   with the batch's free slots and a view of the running sequences.
+//!   The plan may (a) **preempt** running sequences — only for
+//!   *strictly* higher-priority waiting work, lowest-priority victims
+//!   first, and only victims `SpecBatch::can_suspend` accepts — then
+//!   (b) **resume** parked sequences, and (c) **admit** queued requests.
+//!   Preemption is progressive: when the top waiting item needs more
+//!   slots than eligible victims can free, the freed slots are held for
+//!   it (head-of-line in rank order) and the batch drains toward it.
+//! * The FIFO batcher survives as the *policy the scheduler consults*
+//!   for (c): [`plan_batch`] keeps the atomic-fan-out and
+//!   oversized-head clamp semantics over the **rank-ordered** queue, and
+//!   [`should_flush`] keeps the co-batching window — evaluated exactly
+//!   once per round against a single `now`, so the window check cannot
+//!   drift between call sites. A round that already preempted or
+//!   resumed skips the window (work is flowing; holding the head back
+//!   would buy no batching).
+//!
+//! Suspended sequences live on the **host** (a [`SuspendedSeq`] is a few
+//! hundred bytes; resume recomputes the KV row), so the scheduler may
+//! hold arbitrarily more admitted work than the engine has device slots
+//! — the `capacity = max_batch` bound applies to *running* work only.
+//!
+//! Starvation: a preempted sequence resumes as soon as rank order allows
+//! (its original enqueue time keeps its FIFO position within its class);
+//! under sustained strictly-higher-priority load it waits indefinitely —
+//! there is deliberately no aging in this version. Running work is never
+//! preempted by *equal*-priority arrivals, so default-priority traffic
+//! cannot thrash.
+
+use std::time::Instant;
+
+use crate::metrics::SchedStats;
+use crate::spec::{SeqId, SuspendedSeq};
+
+use super::batcher::{plan_batch, should_flush, BatcherConfig, Pending};
+
+/// Scheduling class of one request: wire `priority` (higher runs first)
+/// plus an optional soft deadline ordering work within the class.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Urgency {
+    pub priority: i32,
+    pub deadline: Option<Instant>,
+}
+
+/// Rank order: priority descending, then deadline ascending (deadlined
+/// work before undeadlined within a class), then FIFO by enqueue time.
+/// `Less` means "runs first".
+fn rank(a: (&Urgency, Instant), b: (&Urgency, Instant))
+        -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    b.0.priority
+        .cmp(&a.0.priority)
+        .then_with(|| match (a.0.deadline, b.0.deadline) {
+            (Some(x), Some(y)) => x.cmp(&y),
+            (Some(_), None) => Ordering::Less,
+            (None, Some(_)) => Ordering::Greater,
+            (None, None) => Ordering::Equal,
+        })
+        .then_with(|| a.1.cmp(&b.1))
+}
+
+/// One queued (not yet admitted) request.
+#[derive(Debug)]
+struct QueuedReq {
+    id: u64,
+    n_seqs: usize,
+    urgency: Urgency,
+    enqueued: Instant,
+}
+
+/// A preempted sequence parked host-side, with everything the
+/// coordinator needs to re-wire it on resume.
+#[derive(Debug)]
+pub struct ParkedSeq {
+    /// The engine snapshot `SpecBatch::resume` consumes.
+    pub snapshot: SuspendedSeq,
+    /// Owning request id.
+    pub owner: u64,
+    /// Index within the owner's fan-out (step events / response slot).
+    pub fanout_index: usize,
+    pub urgency: Urgency,
+    /// The owner's original enqueue time — the FIFO tie-break that makes
+    /// resumed work outrank later arrivals of the same class.
+    pub enqueued: Instant,
+}
+
+/// The scheduler's read-only view of one running sequence.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningSeq {
+    pub id: SeqId,
+    /// The owning request's priority.
+    pub priority: i32,
+    /// `SpecBatch::can_suspend(id)` — live, generating, and exactly
+    /// resumable (context still fits the prefill capacity).
+    pub preemptible: bool,
+}
+
+/// One admission/preemption decision round, in execution order.
+#[derive(Debug, Default)]
+pub struct SchedPlan {
+    /// Running sequences to `SpecBatch::suspend`, weakest victims first.
+    pub preempt: Vec<SeqId>,
+    /// Parked sequences to `SpecBatch::resume`, rank order.
+    pub resume: Vec<ParkedSeq>,
+    /// Queued request ids to admit, rank order.
+    pub admit: Vec<u64>,
+}
+
+impl SchedPlan {
+    pub fn is_empty(&self) -> bool {
+        self.preempt.is_empty() && self.resume.is_empty()
+            && self.admit.is_empty()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// The FIFO batching policy the scheduler consults for queued
+    /// admissions (atomic fan-out, oversized-head clamp, co-batch
+    /// window).
+    pub batcher: BatcherConfig,
+    /// Allow suspending running sequences for strictly-higher-priority
+    /// arrivals. Off, the scheduler still ranks the queue but running
+    /// work always drains naturally.
+    pub preempt: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { batcher: BatcherConfig::default(), preempt: true }
+    }
+}
+
+/// The scheduler: owns the waiting sets (queued requests, parked
+/// sequences) and the serving counters; the coordinator owns request
+/// payloads and executes the plans.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    queue: Vec<QueuedReq>,
+    parked: Vec<ParkedSeq>,
+    pub stats: SchedStats,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            cfg,
+            queue: Vec::new(),
+            parked: Vec::new(),
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Enqueue a request (the coordinator keeps its payload).
+    pub fn submit(&mut self, id: u64, n_seqs: usize, urgency: Urgency,
+                  enqueued: Instant) {
+        self.queue.push(QueuedReq {
+            id,
+            n_seqs: n_seqs.max(1),
+            urgency,
+            enqueued,
+        });
+        let depth = self.queue.len();
+        self.stats.note_depth(depth);
+    }
+
+    /// Park a suspended sequence (after a successful
+    /// `SpecBatch::suspend`).
+    pub fn park(&mut self, seq: ParkedSeq) {
+        self.stats.preemptions += 1;
+        self.parked.push(seq);
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn has_queued(&self) -> bool {
+        !self.queue.is_empty()
+    }
+
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Remove and return every parked sequence of one request (budget
+    /// expiry or request failure: the owner is answered/failed as-is).
+    pub fn take_parked_of(&mut self, owner: u64) -> Vec<ParkedSeq> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.parked.len() {
+            if self.parked[i].owner == owner {
+                out.push(self.parked.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Drop every parked sequence (batch-fatal error recovery: their
+    /// owners have already been failed).
+    pub fn clear_parked(&mut self) {
+        self.parked.clear();
+    }
+
+    /// Drain the queue, returning the ids (shutdown-with-error path).
+    pub fn drain_queued(&mut self) -> Vec<u64> {
+        let ids = self.queue.iter().map(|q| q.id).collect();
+        self.queue.clear();
+        self.stats.note_depth(0);
+        ids
+    }
+
+    fn sort(&mut self) {
+        self.queue.sort_by(
+            |a, b| rank((&a.urgency, a.enqueued), (&b.urgency, b.enqueued)));
+        self.parked.sort_by(
+            |a, b| rank((&a.urgency, a.enqueued), (&b.urgency, b.enqueued)));
+    }
+
+    /// Merged (priority, slots-needed) of all waiting work, best rank
+    /// first — the preemption planner's view of demand.
+    fn waiting_in_rank_order(&self) -> Vec<(i32, usize)> {
+        let mut items: Vec<(Urgency, Instant, usize)> = self
+            .parked
+            .iter()
+            .map(|p| (p.urgency, p.enqueued, 1))
+            .chain(self.queue.iter().map(|q| (q.urgency, q.enqueued,
+                                              q.n_seqs)))
+            .collect();
+        items.sort_by(|a, b| rank((&a.0, a.1), (&b.0, b.1)));
+        items.into_iter().map(|(u, _, n)| (u.priority, n)).collect()
+    }
+
+    /// One decision round at a step boundary. `free` is the batch's free
+    /// slots, `running` the live sequences. `now` is read **once** by
+    /// the caller and threaded through every window check, so the
+    /// head-of-line co-batching window cannot be re-evaluated against a
+    /// drifting wall clock within one round (it used to be read in two
+    /// places per admission loop).
+    pub fn plan(&mut self, free: usize, running: &[RunningSeq],
+                now: Instant) -> SchedPlan {
+        self.sort();
+        let mut plan = SchedPlan::default();
+        let max_batch = self.cfg.batcher.max_batch.max(1);
+        let mut avail = free;
+
+        // -- preemption: free slots for strictly-higher-priority work ------
+        if self.cfg.preempt
+            && !(self.queue.is_empty() && self.parked.is_empty())
+        {
+            let mut victims: Vec<(SeqId, i32)> = running
+                .iter()
+                .filter(|r| r.preemptible)
+                .map(|r| (r.id, r.priority))
+                .collect();
+            victims.sort_by_key(|&(_, p)| p); // weakest first
+            let mut vi = 0;
+            let mut ahead = avail;
+            for (pri, need) in self.waiting_in_rank_order() {
+                let need = need.min(max_batch);
+                while ahead < need
+                    && vi < victims.len()
+                    && victims[vi].1 < pri
+                {
+                    plan.preempt.push(victims[vi].0);
+                    vi += 1;
+                    ahead += 1;
+                }
+                if ahead >= need {
+                    ahead -= need;
+                } else {
+                    break; // head-of-line in rank order: hold freed slots
+                }
+            }
+            avail += plan.preempt.len();
+        }
+
+        // -- resume parked work, unless the queue head outranks it ---------
+        while avail > 0 {
+            let Some(p) = self.parked.first() else { break };
+            if let Some(q) = self.queue.first() {
+                if rank((&q.urgency, q.enqueued), (&p.urgency, p.enqueued))
+                    .is_lt()
+                {
+                    break; // a queued request runs first; re-rank next round
+                }
+            }
+            let p = self.parked.remove(0);
+            // `stats.resumes` is NOT bumped here: the executor counts a
+            // resume only after `SpecBatch::resume` succeeds (mirroring
+            // `park`, which counts after a successful suspend), so the
+            // counters never drift from what actually ran.
+            plan.resume.push(p);
+            avail -= 1;
+        }
+
+        // -- queued admission through the batcher policy -------------------
+        let pendings: Vec<Pending> = self
+            .queue
+            .iter()
+            .map(|q| Pending {
+                request_id: q.id,
+                n_seqs: q.n_seqs,
+                enqueued: q.enqueued,
+            })
+            .collect();
+        let flush = !plan.preempt.is_empty() || !plan.resume.is_empty()
+            || should_flush(&pendings, avail, &self.cfg.batcher, now);
+        if flush {
+            let (n_take, _) = plan_batch(&pendings, avail, &self.cfg.batcher);
+            for q in self.queue.drain(..n_take) {
+                self.stats.observe_wait(
+                    q.urgency.priority,
+                    now.duration_since(q.enqueued).as_secs_f64());
+                plan.admit.push(q.id);
+            }
+        }
+        let depth = self.queue.len();
+        self.stats.note_depth(depth);
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use crate::spec::{AdmitOpts, SpecConfig};
+
+    fn sched(max_batch: usize, window_ms: u64, preempt: bool) -> Scheduler {
+        Scheduler::new(SchedulerConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                window: Duration::from_millis(window_ms),
+            },
+            preempt,
+        })
+    }
+
+    fn urgency(priority: i32) -> Urgency {
+        Urgency { priority, deadline: None }
+    }
+
+    fn parked(owner: u64, priority: i32, enqueued: Instant) -> ParkedSeq {
+        ParkedSeq {
+            snapshot: SuspendedSeq::fresh(b"xy", 0, &AdmitOpts::default(),
+                                          &SpecConfig::default()),
+            owner,
+            fanout_index: 0,
+            urgency: urgency(priority),
+            enqueued,
+        }
+    }
+
+    fn running(id: SeqId, priority: i32) -> RunningSeq {
+        RunningSeq { id, priority, preemptible: true }
+    }
+
+    /// A `now` far past the co-batch window for `enqueued` at `t0`.
+    fn late(t0: Instant) -> Instant {
+        t0 + Duration::from_secs(1)
+    }
+
+    #[test]
+    fn fifo_within_a_priority_class() {
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.submit(1, 1, urgency(0), t0);
+        s.submit(2, 1, urgency(0), t0 + Duration::from_millis(1));
+        let plan = s.plan(4, &[], late(t0));
+        assert_eq!(plan.admit, vec![1, 2]);
+        assert!(plan.preempt.is_empty() && plan.resume.is_empty());
+    }
+
+    #[test]
+    fn higher_priority_jumps_the_queue() {
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.submit(1, 2, urgency(0), t0);
+        s.submit(2, 1, urgency(5), t0 + Duration::from_millis(1));
+        // One free slot: only the high-priority request fits — and it
+        // must be taken first despite arriving later (retiring FIFO-only
+        // admission).
+        let plan = s.plan(1, &[], late(t0));
+        assert_eq!(plan.admit, vec![2]);
+        assert_eq!(s.queue_depth(), 1);
+    }
+
+    #[test]
+    fn deadline_orders_within_a_class() {
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        let d_near = Some(t0 + Duration::from_millis(50));
+        let d_far = Some(t0 + Duration::from_millis(500));
+        s.submit(1, 1, Urgency { priority: 0, deadline: None }, t0);
+        s.submit(2, 1, Urgency { priority: 0, deadline: d_far },
+                 t0 + Duration::from_millis(1));
+        s.submit(3, 1, Urgency { priority: 0, deadline: d_near },
+                 t0 + Duration::from_millis(2));
+        let plan = s.plan(4, &[], late(t0));
+        // Deadlined work first (earliest first), then undeadlined FIFO —
+        // but priority still dominates deadline across classes.
+        assert_eq!(plan.admit, vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn preempts_weakest_victim_for_strictly_higher_priority() {
+        let t0 = Instant::now();
+        let mut s = sched(2, 1, true);
+        s.submit(9, 1, urgency(5), t0);
+        // Batch full: two running seqs at priorities 0 and 3.
+        let run = [running(10, 3), running(11, 0)];
+        let plan = s.plan(0, &run, late(t0));
+        assert_eq!(plan.preempt, vec![11], "weakest victim first");
+        assert_eq!(plan.admit, vec![9]);
+    }
+
+    #[test]
+    fn equal_priority_never_preempts() {
+        let t0 = Instant::now();
+        let mut s = sched(1, 1, true);
+        s.submit(9, 1, urgency(0), t0);
+        let plan = s.plan(0, &[running(10, 0)], late(t0));
+        assert!(plan.preempt.is_empty(), "no equal-priority thrash");
+        assert!(plan.admit.is_empty());
+    }
+
+    #[test]
+    fn preemption_respects_non_preemptible_victims() {
+        // A sequence `can_suspend` rejects (e.g. context past the prefill
+        // capacity) is pinned; the scheduler must pick another victim or
+        // none at all.
+        let t0 = Instant::now();
+        let mut s = sched(2, 1, true);
+        s.submit(9, 1, urgency(5), t0);
+        let run = [
+            RunningSeq { id: 10, priority: 0, preemptible: false },
+            running(11, 1),
+        ];
+        let plan = s.plan(0, &run, late(t0));
+        assert_eq!(plan.preempt, vec![11]);
+    }
+
+    #[test]
+    fn preempt_disabled_ranks_but_never_suspends() {
+        let t0 = Instant::now();
+        let mut s = sched(1, 1, false);
+        s.submit(9, 1, urgency(9), t0);
+        let plan = s.plan(0, &[running(10, 0)], late(t0));
+        assert!(plan.preempt.is_empty());
+        assert!(plan.admit.is_empty());
+        // Once the slot frees naturally, the ranked head admits.
+        let plan = s.plan(1, &[], late(t0));
+        assert_eq!(plan.admit, vec![9]);
+    }
+
+    #[test]
+    fn progressive_preemption_holds_freed_slots_for_the_head() {
+        // The top waiting item needs 3 slots; only two lower-priority
+        // victims exist. Both are preempted (draining toward the
+        // reservation) but nothing lower-ranked may take the freed slots.
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.submit(9, 3, urgency(5), t0);
+        s.submit(8, 1, urgency(0), t0);
+        let run = [running(10, 0), running(11, 1),
+                   RunningSeq { id: 12, priority: 0, preemptible: false }];
+        let plan = s.plan(0, &run, late(t0));
+        assert_eq!(plan.preempt, vec![10, 11]);
+        assert!(plan.admit.is_empty(),
+                "freed slots are reserved for the oversized head");
+        assert_eq!(s.queue_depth(), 2);
+    }
+
+    #[test]
+    fn resumes_park_order_and_beats_later_arrivals_of_its_class() {
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.park(parked(1, 0, t0));
+        s.submit(2, 1, urgency(0), t0 + Duration::from_millis(2));
+        let plan = s.plan(1, &[], late(t0));
+        // One slot: the parked sequence (earlier enqueue, same class)
+        // resumes; the queued request waits.
+        assert_eq!(plan.resume.len(), 1);
+        assert_eq!(plan.resume[0].owner, 1);
+        assert!(plan.admit.is_empty());
+        // Counted by the executor on a successful `SpecBatch::resume`,
+        // never at plan time (a planned resume can still be dropped).
+        assert_eq!(s.stats.resumes, 0);
+    }
+
+    #[test]
+    fn queued_higher_priority_outranks_parked_lower() {
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.park(parked(1, 0, t0));
+        s.submit(2, 1, urgency(5), t0 + Duration::from_millis(2));
+        let plan = s.plan(1, &[], late(t0));
+        assert_eq!(plan.admit, vec![2]);
+        assert!(plan.resume.is_empty());
+        assert_eq!(s.parked_count(), 1);
+    }
+
+    #[test]
+    fn parked_high_priority_preempts_running_low() {
+        // Parked work participates in preemption demand: a high-priority
+        // suspended sequence evicts low-priority work that was admitted
+        // while it was parked.
+        let t0 = Instant::now();
+        let mut s = sched(1, 1, true);
+        s.park(parked(1, 5, t0));
+        let plan = s.plan(0, &[running(10, 0)], late(t0));
+        assert_eq!(plan.preempt, vec![10]);
+        assert_eq!(plan.resume.len(), 1);
+        assert_eq!(plan.resume[0].owner, 1);
+    }
+
+    #[test]
+    fn preemption_skips_the_cobatch_window() {
+        // A round that preempted admits immediately — holding the head
+        // for the window after evicting a victim would be pure waste.
+        let t0 = Instant::now();
+        let mut s = sched(2, 50, true);
+        s.submit(9, 1, urgency(5), t0);
+        let plan = s.plan(0, &[running(10, 0)], t0); // window NOT expired
+        assert_eq!(plan.preempt, vec![10]);
+        assert_eq!(plan.admit, vec![9]);
+    }
+
+    #[test]
+    fn window_still_gates_plain_admission() {
+        // No preemption, no resume: the batcher's co-batch window governs
+        // exactly as before (both sides, same single `now`).
+        let t0 = Instant::now();
+        let mut s = sched(4, 50, true);
+        s.submit(1, 1, urgency(0), t0);
+        let plan = s.plan(4, &[], t0 + Duration::from_millis(1));
+        assert!(plan.is_empty(), "young head must wait out the window");
+        let plan = s.plan(4, &[], t0 + Duration::from_millis(60));
+        assert_eq!(plan.admit, vec![1]);
+    }
+
+    #[test]
+    fn fresh_high_priority_head_does_not_rearm_the_window() {
+        // Rank order puts a fresh urgent arrival at the head; the
+        // co-batch window must still expire on the OLDEST waiter's
+        // clock, or a sub-window trickle of urgent arrivals would
+        // starve older lower-priority work indefinitely.
+        let t0 = Instant::now();
+        let mut s = sched(8, 50, true);
+        s.submit(1, 1, urgency(0), t0);
+        s.submit(2, 1, urgency(5), t0 + Duration::from_millis(49));
+        let plan = s.plan(8, &[], t0 + Duration::from_millis(51));
+        assert_eq!(plan.admit, vec![2, 1],
+                   "oldest waiter's window expired: admit in rank order");
+    }
+
+    #[test]
+    fn oversized_head_clamp_survives_the_scheduler() {
+        // plan_batch's empty-batch clamp-admit is consulted unchanged:
+        // fan-out 9 > max_batch 4 admits (clamped by the coordinator)
+        // only against a fully-free batch.
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.submit(1, 9, urgency(0), t0);
+        let plan = s.plan(3, &[running(10, 0)], late(t0));
+        assert!(plan.admit.is_empty(), "partial batch: head waits");
+        let plan = s.plan(4, &[], late(t0));
+        assert_eq!(plan.admit, vec![1]);
+    }
+
+    #[test]
+    fn budget_sweep_takes_a_requests_parked_seqs() {
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.park(parked(1, 0, t0));
+        s.park(parked(2, 0, t0));
+        s.park(parked(1, 0, t0));
+        let taken = s.take_parked_of(1);
+        assert_eq!(taken.len(), 2);
+        assert_eq!(s.parked_count(), 1);
+    }
+
+    #[test]
+    fn stats_observe_admission_waits_per_class() {
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.submit(1, 1, urgency(0), t0);
+        s.submit(2, 1, urgency(7), t0);
+        assert_eq!(s.stats.max_queue_depth, 2);
+        let plan = s.plan(4, &[], t0 + Duration::from_millis(100));
+        assert_eq!(plan.admit.len(), 2);
+        assert_eq!(s.stats.queue_depth, 0);
+        assert!(s.stats.mean_wait_secs(0) >= 0.1);
+        assert!(s.stats.mean_wait_secs(7) >= 0.1);
+    }
+}

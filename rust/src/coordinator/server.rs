@@ -4,10 +4,11 @@
 //!
 //! ```text
 //! -> {"prompt": "def add_7(x):\n    return", "n": 4, "max_new_tokens": 32,
-//!     "temperature": 0.7, "top_p": 0.9}
+//!     "temperature": 0.7, "top_p": 0.9, "priority": 5,
+//!     "deadline_ms": 250}
 //! <- {"ok": true, "seqs": [{"text": " x + 7", "finished": true, ...}],
 //!     "n_requested": 4, "batch_size": 4, "batch_ms": 120.5,
-//!     "queue_ms": 0.8}
+//!     "queue_ms": 0.8, "preempted": 0, "queue_depth": 3}
 //! ```
 //!
 //! With `"stream": true` the server relays one event line per speculative
@@ -21,29 +22,44 @@
 //! ```
 //!
 //! A thread per connection forwards requests to the engine worker. The
-//! coordinator admits concurrent connections into the running speculative
-//! batch at step boundaries (continuous batching) and answers each request
-//! the moment its own sequences finish — in **both** execution modes: PAD
-//! (the default, the paper's fused-batch headline path) scatter-prefills
-//! late arrivals into freed rows of the running fused cache, SPLIT
-//! prefills per-slot caches; neither waits for a drain. Note PAD admission
-//! needs v3 artifacts (the per-row `prefill_scatter` programs — rebuild
-//! with `make artifacts` if the manifest version check rejects yours).
-//! Sampling parameters (temperature /
-//! top-p) are honored **per request** even across co-batched traffic — the
-//! engine threads them per-row through the fused draft call and the
-//! verify-side warp; the server's `SpecConfig` only supplies defaults. A
-//! fan-out `"n"` larger than the engine's batch capacity is clamped; the
-//! response's `"n_requested"` echoes the asked-for value so clients can
-//! detect the clamp (`seqs.len() < n_requested`). Out-of-range sampling
-//! params (`top_p` outside (0, 1], non-finite or negative temperature)
-//! fail that request with `{"ok": false, ...}` at admission.
+//! coordinator schedules concurrent connections **preemptively**: work is
+//! ranked by the wire `"priority"` (higher first; default 0), ordered
+//! within a class by `"deadline_ms"` (a soft hint, milliseconds from
+//! submission; earliest first), FIFO on ties. A strictly-higher-priority
+//! arrival may *suspend* a running lower-priority sequence: its device KV
+//! row is dropped and later rebuilt bitwise by re-prefilling
+//! `prompt ‖ generated` (recompute-resume), so the preempted request
+//! still returns exactly the output it would have produced uninterrupted
+//! (byte-exact under `--fixed-draft`); it just returns later, and its
+//! `"preempted"` count says so. The cost model: a suspension holds a few
+//! hundred host bytes; each resume costs one prompt-length prefill —
+//! cheap next to the latency a blocked high-priority request would eat.
+//! Equal priorities never preempt each other, so default-priority
+//! traffic behaves exactly like the old FIFO server. `"queue_depth"` in
+//! the response is the scheduler's queue when the reply was finalized —
+//! a load signal.
+//!
+//! Admission stays continuous in **both** execution modes: PAD (the
+//! default, the paper's fused-batch headline path) scatter-prefills late
+//! arrivals into freed rows of the running fused cache, SPLIT prefills
+//! per-slot caches; neither waits for a drain (PAD needs v3 artifacts —
+//! rebuild with `make artifacts` if the manifest version check rejects
+//! yours; `--pad-headroom` starts PAD buckets with grow-room rows).
+//! Sampling parameters (temperature / top-p) are honored **per request**
+//! even across co-batched traffic — the engine threads them per-row
+//! through the fused draft call and the verify-side warp; the server's
+//! `SpecConfig` only supplies defaults. A fan-out `"n"` larger than the
+//! engine's batch capacity is clamped; the response's `"n_requested"`
+//! echoes the asked-for value so clients can detect the clamp
+//! (`seqs.len() < n_requested`). Out-of-range sampling params (`top_p`
+//! outside (0, 1], non-finite or negative temperature) fail that request
+//! with `{"ok": false, ...}` at admission.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::{Coordinator, Reply, Request, StepEvent};
 use crate::runtime::json::Json;
@@ -137,6 +153,23 @@ pub fn parse_request(line: &str) -> Result<Request> {
             .opt("seed")
             .map(|v| v.as_usize().map(|x| x as u64))
             .transpose()?,
+        priority: j
+            .opt("priority")
+            .map(|v| {
+                // Range-checked like the sampling params (PR 2): a
+                // wrapped `as i32` would silently turn a huge priority
+                // into a *negative* one — a preemption victim instead of
+                // a preemptor.
+                let p = v.as_i64()?;
+                i32::try_from(p).map_err(|_| {
+                    anyhow!("priority {p} out of range (i32)")
+                })
+            })
+            .transpose()?,
+        deadline_ms: j
+            .opt("deadline_ms")
+            .map(|v| v.as_usize().map(|x| x as u64))
+            .transpose()?,
         stream: j
             .opt("stream")
             .map(|v| v == &Json::Bool(true))
@@ -160,6 +193,8 @@ pub fn response_json(resp: &super::Response) -> Json {
         ("batch_size", resp.batch_size.into()),
         ("batch_ms", (resp.batch_secs * 1e3).into()),
         ("queue_ms", (resp.queue_secs * 1e3).into()),
+        ("preempted", resp.preempted.into()),
+        ("queue_depth", resp.queue_depth.into()),
         ("seqs", Json::Arr(resp.seqs.iter().map(|s| {
             Json::obj(vec![
                 ("text", s.text.as_str().into()),
@@ -184,12 +219,17 @@ mod tests {
         let r = parse_request(
             r#"{"prompt": "hi", "n": 4, "max_new_tokens": 8,
                "temperature": 0.7, "top_p": 0.9, "seed": 3,
+               "priority": -2, "deadline_ms": 250,
                "stream": true}"#).unwrap();
         assert_eq!(r.prompt, b"hi");
         assert_eq!(r.n_seqs, 4);
         assert_eq!(r.max_new_tokens, Some(8));
         assert!((r.temperature.unwrap() - 0.7).abs() < 1e-6);
         assert_eq!(r.seed, Some(3));
+        // Priorities are signed: background work may rank *below* the
+        // default class.
+        assert_eq!(r.priority, Some(-2));
+        assert_eq!(r.deadline_ms, Some(250));
         assert!(r.stream);
     }
 
@@ -199,6 +239,8 @@ mod tests {
         assert_eq!(r.n_seqs, 1);
         assert_eq!(r.max_new_tokens, None);
         assert_eq!(r.seed, None);
+        assert_eq!(r.priority, None);
+        assert_eq!(r.deadline_ms, None);
         assert!(!r.stream);
     }
 
@@ -209,6 +251,20 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_out_of_range_priority() {
+        // 2^32 - 1 would wrap to -1 under `as i32` — from "run me first"
+        // to "preempt me first". Out-of-range priorities must fail the
+        // request at parse time instead.
+        assert!(parse_request(
+            r#"{"prompt": "x", "priority": 4294967295}"#).is_err());
+        assert!(parse_request(
+            r#"{"prompt": "x", "priority": -3000000000}"#).is_err());
+        let r = parse_request(
+            r#"{"prompt": "x", "priority": -5}"#).unwrap();
+        assert_eq!(r.priority, Some(-5));
+    }
+
+    #[test]
     fn response_json_reports_requested_fanout() {
         let resp = crate::coordinator::Response {
             seqs: vec![],
@@ -216,12 +272,18 @@ mod tests {
             batch_secs: 0.1,
             batch_size: 4,
             queue_secs: 0.0,
+            preempted: 2,
+            queue_depth: 3,
         };
         let j = response_json(&resp);
         // A client compares n_requested to seqs.len() to detect the
         // engine's fan-out clamp.
         assert_eq!(j.get("n_requested").unwrap().as_usize().unwrap(), 9);
         assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+        // Scheduler echoes: how often this request was preempted, and the
+        // queue depth when it was answered.
+        assert_eq!(j.get("preempted").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

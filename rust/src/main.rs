@@ -4,9 +4,12 @@
 //! * `selftest`  — load artifacts, run a tiny generation on every path.
 //! * `generate`  — one batched generation from a prompt (`--prompt`,
 //!   `--n`, `--mode pad|split`, `--precision f32|int8`, ...).
-//! * `serve`     — TCP line-protocol server over the continuously-batched
-//!   coordinator (mid-flight admission in both `--mode pad` and
-//!   `--mode split`; requests may set `"stream": true` for per-step
+//! * `serve`     — TCP line-protocol server over the continuously-batched,
+//!   **preemptively scheduled** coordinator (mid-flight admission in both
+//!   `--mode pad` and `--mode split`; wire `"priority"`/`"deadline_ms"`
+//!   rank requests and may suspend/resume running work — disable with
+//!   `--no-preempt`; `--pad-headroom N` starts PAD buckets with N
+//!   grow-room rows; requests may set `"stream": true` for per-step
 //!   event lines).
 //! * `eval`      — run a task (`--task code|summ`) and report accuracy.
 //! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
@@ -56,6 +59,7 @@ fn spec_config_from(args: &Args) -> Result<SpecConfig> {
             .flag("time-budget")
             .map(|v| v.parse::<f64>())
             .transpose()?,
+        pad_headroom: args.usize_flag("pad-headroom", 0)?,
     })
 }
 
@@ -230,7 +234,7 @@ fn eval_task(args: &Args) -> Result<()> {
 }
 
 fn serve_cmd(args: &Args) -> Result<()> {
-    let cfg = CoordinatorConfig::new(
+    let mut cfg = CoordinatorConfig::new(
         artifacts_root(),
         spec_config_from(args)?,
         bass::coordinator::batcher::BatcherConfig {
@@ -239,6 +243,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
                 args.usize_flag("window-ms", 5)? as u64),
         },
     );
+    // Priority preemption (suspend/resume-by-recompute) is on by default;
+    // --no-preempt keeps the ranked queue but never suspends running work.
+    cfg.preempt = !args.switch("no-preempt");
     let addr = format!("127.0.0.1:{}", args.usize_flag("port", 4781)?);
     let coord = Arc::new(Coordinator::start(cfg)?);
     println!("[serve] engine ready");

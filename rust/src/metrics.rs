@@ -1,7 +1,11 @@
 //! Latency/throughput metrics matching the paper's reporting (§4.1):
 //! per-token latency (PTL) of the **first** finished sequence, the
 //! **last**, and the **mean** across the batch — latency is *not* divided
-//! by batch size (footnote 6).
+//! by batch size (footnote 6) — plus the serving-side scheduler counters
+//! ([`SchedStats`]: preemptions, resumes, queue depth, per-priority
+//! queue wait) the coordinator's preemptive scheduler maintains.
+
+use std::collections::BTreeMap;
 
 use crate::kv::SeqState;
 
@@ -69,6 +73,60 @@ impl BatchMetrics {
                 0.0
             },
             ..Default::default()
+        }
+    }
+}
+
+/// Counters for the coordinator's preemptive scheduler: how often running
+/// work was suspended/resumed and what the queue looked like, per
+/// priority class. Preemptions and resumes are counted on **successful
+/// execution** (after `SpecBatch::suspend` parked a snapshot / after
+/// `SpecBatch::resume` re-entered the batch), never at plan time — a
+/// planned action can still fail or be dropped, and the counters must
+/// not drift from what actually ran.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    /// Running sequences suspended to host memory to make room for
+    /// higher-priority work (recompute-resume preemptions).
+    pub preemptions: u64,
+    /// Suspended sequences re-admitted by recompute.
+    pub resumes: u64,
+    /// Requests waiting in the scheduler queue right now (gauge,
+    /// refreshed at every planning boundary).
+    pub queue_depth: usize,
+    /// High-water mark of `queue_depth`.
+    pub max_queue_depth: usize,
+    /// priority -> aggregated admission waits (queue time before the
+    /// request first entered the engine batch).
+    pub queue_wait: BTreeMap<i32, QueueWait>,
+}
+
+/// Aggregated queue-wait observations of one priority class.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueueWait {
+    pub requests: u64,
+    pub total_secs: f64,
+}
+
+impl SchedStats {
+    /// Refresh the queue-depth gauge (and its high-water mark).
+    pub fn note_depth(&mut self, depth: usize) {
+        self.queue_depth = depth;
+        self.max_queue_depth = self.max_queue_depth.max(depth);
+    }
+
+    /// Record one request's admission wait under its priority class.
+    pub fn observe_wait(&mut self, priority: i32, secs: f64) {
+        let w = self.queue_wait.entry(priority).or_default();
+        w.requests += 1;
+        w.total_secs += secs;
+    }
+
+    /// Mean queue wait of a priority class, seconds (0 when unobserved).
+    pub fn mean_wait_secs(&self, priority: i32) -> f64 {
+        match self.queue_wait.get(&priority) {
+            Some(w) if w.requests > 0 => w.total_secs / w.requests as f64,
+            _ => 0.0,
         }
     }
 }
@@ -150,6 +208,41 @@ mod tests {
         let seqs = vec![seq_with(0, 1.0), seq_with(10, 1.0)];
         let m = BatchMetrics::from_seqs(&seqs, 1.0);
         assert_eq!(m.ptl.len(), 1);
+    }
+
+    #[test]
+    fn resumed_sequence_counts_tokens_once() {
+        // A preempted-then-resumed sequence carries its pre-suspend bytes
+        // in `generated` and its context in `prompt ‖ generated`; PTL and
+        // throughput must count each emitted token exactly once — the
+        // context re-encoded by the resume prefill is not served output.
+        let mut s = SeqState::resumed(vec![1, 2, 3], vec![7; 5], -1.0);
+        for _ in 0..5 {
+            s.generated.push(8); // post-resume output
+        }
+        s.finish_at(FinishReason::Eos, 2.0);
+        let m = BatchMetrics::from_seqs(&[s], 2.0);
+        assert_eq!(m.total_tokens, 10);
+        assert!((m.ptl_first - 0.2).abs() < 1e-9);
+        assert!((m.tokens_per_sec - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sched_stats_track_depth_waits_and_counts() {
+        let mut s = SchedStats::default();
+        s.note_depth(3);
+        s.note_depth(1);
+        assert_eq!(s.queue_depth, 1);
+        assert_eq!(s.max_queue_depth, 3);
+        s.observe_wait(0, 0.4);
+        s.observe_wait(0, 0.6);
+        s.observe_wait(5, 0.1);
+        assert!((s.mean_wait_secs(0) - 0.5).abs() < 1e-12);
+        assert!((s.mean_wait_secs(5) - 0.1).abs() < 1e-12);
+        assert_eq!(s.mean_wait_secs(-3), 0.0);
+        s.preemptions += 1;
+        s.resumes += 1;
+        assert_eq!((s.preemptions, s.resumes), (1, 1));
     }
 
     #[test]

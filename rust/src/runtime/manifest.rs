@@ -279,6 +279,21 @@ impl Manifest {
             .min()
             .ok_or_else(|| anyhow!("batch {n} exceeds largest bucket"))
     }
+
+    /// Smallest exported batch bucket covering `n` sequences **plus** up
+    /// to `headroom` grow-room rows, clamped to `cap` (the serving
+    /// capacity) and to the largest exported bucket. The headroom is
+    /// best-effort: it never raises an error plain `bucket_batch(n)`
+    /// would not, it only rounds the bucket up so a running PAD batch
+    /// starts with reusable padding rows for mid-flight admissions
+    /// instead of making a burst wait for the drain-and-re-bucket
+    /// (`SpecConfig::pad_headroom`).
+    pub fn bucket_batch_padded(&self, n: usize, headroom: usize,
+                               cap: usize) -> Result<usize> {
+        let largest = self.batches.iter().copied().max().unwrap_or(0);
+        let want = (n + headroom).min(cap).min(largest).max(n);
+        self.bucket_batch(want)
+    }
 }
 
 #[cfg(test)]
@@ -356,5 +371,24 @@ mod tests {
         assert_eq!(m.bucket_batch(3).unwrap(), 4);
         assert_eq!(m.bucket_batch(1).unwrap(), 1);
         assert!(m.bucket_batch(5).is_err());
+    }
+
+    #[test]
+    fn padded_bucket_rounds_up_for_headroom() {
+        // Buckets are [1, 2, 4] in SAMPLE.
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        // Zero headroom degrades to plain bucket_batch.
+        assert_eq!(m.bucket_batch_padded(1, 0, 8).unwrap(), 1);
+        assert_eq!(m.bucket_batch_padded(3, 0, 8).unwrap(), 4);
+        // Headroom rounds the bucket up past the admitted count...
+        assert_eq!(m.bucket_batch_padded(1, 1, 8).unwrap(), 2);
+        assert_eq!(m.bucket_batch_padded(2, 1, 8).unwrap(), 4);
+        // ...but is clamped to the serving capacity...
+        assert_eq!(m.bucket_batch_padded(2, 4, 2).unwrap(), 2);
+        // ...and to the largest exported bucket (best-effort, no error).
+        assert_eq!(m.bucket_batch_padded(1, 99, 16).unwrap(), 4);
+        // An unsatisfiable admitted count still errors exactly like
+        // bucket_batch, headroom or not.
+        assert!(m.bucket_batch_padded(5, 2, 16).is_err());
     }
 }

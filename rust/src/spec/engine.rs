@@ -34,6 +34,28 @@
 //!   the row freezes into a Husk placeholder that the next admission
 //!   scatter-prefills over (the batch still auto-resets to full capacity
 //!   when the last real sequence leaves, so an idle engine re-buckets).
+//! * [`SpecBatch::suspend`] / [`SpecBatch::resume`] — **preemption**.
+//!   Suspend lifts a still-running sequence out of the batch as a
+//!   host-side [`SuspendedSeq`] (verified bytes, PCG32 stream positions,
+//!   per-sequence sampling params and budget) and frees its slot exactly
+//!   like `retire`; the device KV is deliberately dropped. Resume rebuilds
+//!   the KV row by **recompute**: a fresh prefill over
+//!   `prompt ‖ generated` — per-slot (SPLIT) or scatter (running PAD) —
+//!   using the *existing* v3 artifacts, no new ABI. Because the ragged
+//!   attention masks per query position with exact-zero pad probability
+//!   and each position's KV is a pure function of its token prefix, the
+//!   recomputed row is **bitwise identical** to the incrementally built
+//!   one (pinned host-side by `test_parity.py::test_resume_recompute_*`
+//!   and end-to-end by `rust/tests/step_equivalence.rs` /
+//!   `admission_interleaving.rs`), so a preempted-then-resumed sequence
+//!   reproduces its uninterrupted run byte-for-byte under
+//!   [`Policy::Fixed`]. The suspended set lives on the host, so a serving
+//!   layer can hold more admitted work than there are device slots —
+//!   suspend-to-host is the recompute analog of paging KV out. The one
+//!   bound: `prompt ‖ generated` must still fit the prefill capacity
+//!   (`manifest.prefill_p`) or the resume could not be exact —
+//!   [`SpecBatch::can_suspend`] checks; longer sequences are pinned to
+//!   their slot and schedulers must pick another victim.
 //!
 //! Each admitted sequence gets its own pair of PCG32 streams keyed by a
 //! monotonically increasing admission counter, so given the same per-step
@@ -53,7 +75,7 @@
 
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use xla::PjRtBuffer;
 
 use crate::flops::FlopCounter;
@@ -100,6 +122,13 @@ pub struct SpecConfig {
     /// Wall-clock budget from generation start (Fig 5); sequences still
     /// running when it expires are left unfinished.
     pub time_budget_secs: Option<f64>,
+    /// PAD grow-room: pad the initial bucket up to this many rows above
+    /// the admitted count (clamped to the serving capacity and the
+    /// largest exported bucket), so a running fused batch keeps reusable
+    /// padding rows for mid-flight admissions instead of making a burst
+    /// wait for the drain-and-re-bucket. 0 (the default) reproduces the
+    /// tight bucket. SPLIT ignores it (slots are always per-sequence).
+    pub pad_headroom: usize,
 }
 
 impl Default for SpecConfig {
@@ -116,6 +145,7 @@ impl Default for SpecConfig {
             mode: ExecMode::Pad,
             seed: 0,
             time_budget_secs: None,
+            pad_headroom: 0,
         }
     }
 }
@@ -216,6 +246,72 @@ impl AdmitOpts {
             }
         }
         Ok(())
+    }
+}
+
+/// A sequence lifted out of the batch by [`SpecBatch::suspend`]: the
+/// complete host-side identity — prompt, verified output bytes, PCG32
+/// stream positions, per-sequence sampling params and generation budget.
+/// Device KV is deliberately **not** captured: [`SpecBatch::resume`]
+/// rebuilds it bitwise by recomputing a prefill over
+/// `prompt ‖ generated` with the existing artifacts, so a snapshot costs
+/// a few hundred host bytes and resuming costs one prefill — the
+/// recompute end of the preemption cost model (cheap to hold, one
+/// prompt-length compute to reinstate).
+#[derive(Debug, Clone)]
+pub struct SuspendedSeq {
+    prompt: Vec<u8>,
+    generated: Vec<u8>,
+    logp_sum: f64,
+    rng_draft: Pcg32,
+    rng_accept: Pcg32,
+    max_new_tokens: usize,
+    temperature: f32,
+    top_p: f32,
+}
+
+impl SuspendedSeq {
+    /// Build a snapshot "as if" freshly admitted with `admit_opts(prompt,
+    /// seed, opts)` and suspended before any step: zero progress, RNG
+    /// streams at their start. Lets a scheduler park work host-side
+    /// without ever occupying a device slot (and lets host-only tests
+    /// construct parked entries). An unpinned `opts.stream` defaults to
+    /// stream 0 — callers wanting the batch's admission-counter streams
+    /// should admit for real instead.
+    pub fn fresh(prompt: &[u8], seed: u64, opts: &AdmitOpts,
+                 cfg: &SpecConfig) -> SuspendedSeq {
+        let stream = opts.stream.unwrap_or(0);
+        SuspendedSeq {
+            prompt: prompt.to_vec(),
+            generated: Vec::new(),
+            logp_sum: 0.0,
+            rng_draft: Pcg32::new(seed, 2 * stream),
+            rng_accept: Pcg32::new(seed, 2 * stream + 1),
+            max_new_tokens: opts
+                .max_new_tokens
+                .unwrap_or(cfg.max_new_tokens),
+            temperature: opts.temperature.unwrap_or(cfg.temperature),
+            top_p: opts.top_p.unwrap_or(cfg.top_p),
+        }
+    }
+
+    /// Output bytes verified before the suspension.
+    pub fn tokens_generated(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// Length of the verified context (`prompt ‖ generated`) a resume
+    /// must recompute; must fit `manifest.prefill_p` to be resumable.
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    /// Collapse into a plain (still `Running`) sequence state — what a
+    /// serving layer reports when it must answer a request whose
+    /// sequence is parked (time-budget expiry, shutdown) without
+    /// resuming it.
+    pub fn into_state(self) -> SeqState {
+        SeqState::resumed(self.prompt, self.generated, self.logp_sum)
     }
 }
 
@@ -427,7 +523,7 @@ impl<'a> SpecBatch<'a> {
         };
         let slot = self.make_slot(tail, seed, opts);
         if self.cfg.mode == ExecMode::Split {
-            self.prefill_split_slot(row, &slot.state)?;
+            self.prefill_split_slot(row, &slot.state.prompt)?;
         }
         let id = slot.id;
         self.rows[row] = Row::Seq(slot);
@@ -464,53 +560,63 @@ impl<'a> SpecBatch<'a> {
     /// into the new sequence, and no other row is touched.
     fn admit_pad_midflight(&mut self, tail: &[u8], seed: u64,
                            opts: AdmitOpts) -> Result<SeqId> {
-        let Some(row) = self
-            .rows
-            .iter()
-            .position(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
-        else {
-            bail!("no reusable PAD row (bucket of {} fully live; wait for \
-                   a retirement or the drain)", self.rows.len());
-        };
-        // Resolve + compile both scatter executables up front: the
-        // likely failures (stale pre-v3 artifact set, bucket not
-        // exported) reject only this admission and leave the running
-        // batch intact — as do upload failures inside
-        // `prefill_into_slot`, which consumes the fused caches only at
-        // the execute itself. Only an execute failure (post-donation) is
-        // batch-fatal: the next `step` errors and the serving layer's
-        // recovery path fails the in-flight requests and rebuilds a
-        // fresh batch (see `coordinator::worker`).
-        let b = self.rows.len();
-        let cfg = self.cfg.clone();
-        self.engine.ensure_prefill_scatter(&cfg.main_model, cfg.precision,
-                                           cfg.attn, b)?;
-        self.engine.ensure_prefill_scatter(&cfg.draft_model, cfg.precision,
-                                           cfg.attn, b)?;
+        let row = self.reusable_pad_row()?;
+        self.ensure_scatter_ready()?;
         let slot = self.make_slot(tail, seed, opts);
-        self.prefill_pad_row(row, &slot.state)?;
+        self.prefill_pad_row(row, &slot.state.prompt)?;
         let id = slot.id;
         self.rows[row] = Row::Seq(slot);
         Ok(id)
     }
 
-    /// Scatter-prefill one sequence into row `row` of the running PAD
-    /// batch's fused caches (both models). Pre-execute failures leave
-    /// the caches untouched (see [`Engine::prefill_into_slot`]); an
-    /// execute failure leaves that model's cache vector empty — the
+    /// First reusable row of the running fused bucket — a retired Husk or
+    /// padding Shadow a mid-flight admission/resume may scatter over.
+    fn reusable_pad_row(&self) -> Result<usize> {
+        self.rows
+            .iter()
+            .position(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+            .ok_or_else(|| {
+                anyhow!("no reusable PAD row (bucket of {} fully live; \
+                         wait for a retirement or the drain)",
+                        self.rows.len())
+            })
+    }
+
+    /// Resolve + compile both models' scatter executables up front: the
+    /// likely failures (stale pre-v3 artifact set, bucket not exported)
+    /// reject only this admission/resume and leave the running batch
+    /// intact — as do upload failures inside `prefill_into_slot`, which
+    /// consumes the fused caches only at the execute itself. Only an
+    /// execute failure (post-donation) is batch-fatal: the next `step`
+    /// errors and the serving layer's recovery path fails the in-flight
+    /// requests and rebuilds a fresh batch (see `coordinator::worker`).
+    fn ensure_scatter_ready(&self) -> Result<()> {
+        let b = self.rows.len();
+        let cfg = &self.cfg;
+        self.engine.ensure_prefill_scatter(&cfg.main_model, cfg.precision,
+                                           cfg.attn, b)?;
+        self.engine.ensure_prefill_scatter(&cfg.draft_model, cfg.precision,
+                                           cfg.attn, b)?;
+        Ok(())
+    }
+
+    /// Scatter-prefill one context (`ctx` — a fresh admission's prompt,
+    /// or a resume's `prompt ‖ generated`) into row `row` of the running
+    /// PAD batch's fused caches (both models). Pre-execute failures
+    /// leave the caches untouched (see [`Engine::prefill_into_slot`]);
+    /// an execute failure leaves that model's cache vector empty — the
     /// batch is poisoned and the next `step` fails, which the
     /// coordinator turns into a full-batch error + rebuild.
-    fn prefill_pad_row(&mut self, row: usize, state: &SeqState)
-                       -> Result<()> {
+    fn prefill_pad_row(&mut self, row: usize, ctx: &[u8]) -> Result<()> {
         let cfg = self.cfg.clone();
         let eng = self.engine;
         let b = self.rows.len();
         let p = eng.manifest.prefill_p;
         let mut tokens = vec![0i32; p];
-        for (j, &byte) in state.prompt.iter().enumerate() {
+        for (j, &byte) in ctx.iter().enumerate() {
             tokens[j] = byte as i32;
         }
-        let plen = state.prompt.len() as i32;
+        let plen = ctx.len() as i32;
         let t0 = Instant::now();
         let Some(CacheStore::Pad { main, draft }) = self.store.as_mut()
         else {
@@ -528,17 +634,17 @@ impl<'a> SpecBatch<'a> {
         Ok(())
     }
 
-    /// Prefill one SPLIT slot (B=1 artifacts for both models).
-    fn prefill_split_slot(&mut self, row: usize, state: &SeqState)
-                          -> Result<()> {
+    /// Prefill one SPLIT slot (B=1 artifacts for both models) over `ctx`
+    /// — a fresh admission's prompt, or a resume's `prompt ‖ generated`.
+    fn prefill_split_slot(&mut self, row: usize, ctx: &[u8]) -> Result<()> {
         let cfg = &self.cfg;
         let eng = self.engine;
         let p = eng.manifest.prefill_p;
         let mut tokens = vec![0i32; p];
-        for (j, &byte) in state.prompt.iter().enumerate() {
+        for (j, &byte) in ctx.iter().enumerate() {
             tokens[j] = byte as i32;
         }
-        let plens = [state.prompt.len() as i32];
+        let plens = [ctx.len() as i32];
         let t0 = Instant::now();
         let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn, 1,
                             &tokens, &plens)?;
@@ -557,10 +663,14 @@ impl<'a> SpecBatch<'a> {
         }
     }
 
-    /// PAD lazy start: bucketize the admitted count, pad the row vector
-    /// with shadow sequences replicating the last real prompt (exactly the
-    /// padded rows the fused artifact computes anyway) and run the fused
-    /// prefill for both models.
+    /// PAD lazy start: bucketize the admitted count (rounded up by
+    /// [`SpecConfig::pad_headroom`] so the running bucket keeps reusable
+    /// grow-room rows), pad the row vector with shadow sequences
+    /// replicating the last real context (exactly the padded rows the
+    /// fused artifact computes anyway) and run the fused prefill for both
+    /// models. Rows are encoded from their full context
+    /// (`prompt ‖ generated`) so resumed sequences placed before the
+    /// start prefill their pre-suspend output too.
     fn start_pad(&mut self) -> Result<()> {
         let cfg = self.cfg.clone();
         let eng = self.engine;
@@ -576,17 +686,18 @@ impl<'a> SpecBatch<'a> {
         if n_real == 0 {
             bail!("cannot start an empty PAD batch");
         }
-        let b = eng.manifest.bucket_batch(n_real)?;
-        let last_prompt = real
+        let b = eng.manifest.bucket_batch_padded(n_real, cfg.pad_headroom,
+                                                 self.capacity)?;
+        let last_ctx = real
             .last()
             .and_then(|r| r.state())
-            .map(|s| s.prompt.clone())
+            .map(|s| s.context())
             .expect("real rows have state");
         self.rows = real;
         for i in n_real..b {
-            let state = SeqState::new(last_prompt.clone(),
-                                      *last_prompt.last().unwrap(),
-                                      last_prompt.len() as i32);
+            let state = SeqState::new(last_ctx.clone(),
+                                      *last_ctx.last().unwrap(),
+                                      last_ctx.len() as i32);
             self.rows.push(Row::Shadow(Slot {
                 id: u64::MAX, // never reported
                 state,
@@ -601,10 +712,11 @@ impl<'a> SpecBatch<'a> {
         let mut plens = vec![0i32; b];
         for (i, row) in self.rows.iter().enumerate() {
             let st = row.state().expect("all PAD rows live at start");
-            for (j, &byte) in st.prompt.iter().enumerate() {
+            let ctx = st.context();
+            for (j, &byte) in ctx.iter().enumerate() {
                 tokens[i * p + j] = byte as i32;
             }
-            plens[i] = st.prompt.len() as i32;
+            plens[i] = ctx.len() as i32;
         }
         let t0 = Instant::now();
         let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn, b,
@@ -832,6 +944,15 @@ impl<'a> SpecBatch<'a> {
         else {
             bail!("no live sequence {id} in batch");
         };
+        Ok(self.release_row(idx).state)
+    }
+
+    /// Free one occupied row (shared tail of `retire` and `suspend`):
+    /// SPLIT drops the slot's caches and frees the row; a running PAD
+    /// batch freezes the row into a Husk so the fused artifact keeps
+    /// valid dlens/mlens inputs. Draining the last real sequence resets
+    /// the batch (fresh clock, fresh policy; PAD drops its bucket).
+    fn release_row(&mut self, idx: usize) -> Slot {
         let pad_running = self.cfg.mode == ExecMode::Pad
             && self.store.is_some();
         let replacement = if pad_running {
@@ -864,7 +985,114 @@ impl<'a> SpecBatch<'a> {
             self.t0 = None;
             self.policy = fresh_policy(&self.cfg);
         }
-        Ok(slot.state)
+        slot
+    }
+
+    // -- suspend / resume (preemption) -------------------------------------
+
+    /// True when [`SpecBatch::suspend`] would succeed for `id`: the
+    /// sequence is live, still generating, and its verified context
+    /// (`prompt ‖ generated`) fits the prefill capacity so a resume can
+    /// recompute the KV row *exactly*. Sequences grown past
+    /// `manifest.prefill_p` are pinned to their slot — preempting them
+    /// would truncate context — so a scheduler must pick another victim.
+    pub fn can_suspend(&self, id: SeqId) -> bool {
+        let p_cap = self.engine.manifest.prefill_p;
+        self.rows.iter().any(|r| matches!(r, Row::Seq(s)
+            if s.id == id
+                && s.state.active()
+                && s.state.prompt.len() + s.state.generated.len() <= p_cap))
+    }
+
+    /// Preempt a still-running sequence: lift its complete host-side
+    /// identity out of the batch as a [`SuspendedSeq`] and free its slot
+    /// exactly like [`SpecBatch::retire`] (SPLIT frees the row; a running
+    /// PAD batch husks it; draining the last real sequence resets the
+    /// batch). The device KV is dropped — [`SpecBatch::resume`] rebuilds
+    /// it bitwise by recompute, so the pair is invisible to the
+    /// sequence's output under [`Policy::Fixed`].
+    pub fn suspend(&mut self, id: SeqId) -> Result<SuspendedSeq> {
+        let Some(idx) = self.rows.iter().position(
+            |r| matches!(r, Row::Seq(s) if s.id == id))
+        else {
+            bail!("no live sequence {id} in batch");
+        };
+        let Row::Seq(slot) = &self.rows[idx] else { unreachable!() };
+        if !slot.state.active() {
+            bail!("sequence {id} already finished; retire it instead");
+        }
+        let ctx = slot.state.prompt.len() + slot.state.generated.len();
+        let p_cap = self.engine.manifest.prefill_p;
+        if ctx > p_cap {
+            bail!("sequence {id} context ({ctx} bytes) exceeds the prefill \
+                   capacity ({p_cap}); a resume could not recompute it \
+                   exactly");
+        }
+        let slot = self.release_row(idx);
+        Ok(SuspendedSeq {
+            prompt: slot.state.prompt,
+            generated: slot.state.generated,
+            logp_sum: slot.state.logp_sum,
+            rng_draft: slot.rng_draft,
+            rng_accept: slot.rng_accept,
+            max_new_tokens: slot.max_new_tokens,
+            temperature: slot.temperature,
+            top_p: slot.top_p,
+        })
+    }
+
+    /// Re-admit a suspended sequence by **recompute**: prefill
+    /// `prompt ‖ generated` into a free slot (SPLIT / not-yet-started
+    /// PAD) or scatter it over a reusable row of the running fused
+    /// bucket (PAD) — the existing artifacts rebuild the KV row bitwise,
+    /// and the restored RNG streams, sampling params and budget make the
+    /// continuation byte-identical to never having been preempted (under
+    /// [`Policy::Fixed`]; see the module docs). Returns a **new**
+    /// [`SeqId`] — ids are never reused, so callers remap their handle.
+    /// Fails like `admit` when no slot/row is free. The snapshot is
+    /// consumed either way: a failed resume cannot be retried, so a
+    /// serving layer must fail the owning request loudly rather than
+    /// silently dropping its output (a *running* PAD batch still gets
+    /// the pre-donation safety of mid-flight admission — compile/upload
+    /// failures reject the resume without poisoning co-resident rows).
+    pub fn resume(&mut self, susp: SuspendedSeq) -> Result<SeqId> {
+        let p_cap = self.engine.manifest.prefill_p;
+        let ctx_len = susp.context_len();
+        if ctx_len == 0 {
+            bail!("suspended sequence has an empty context");
+        }
+        if ctx_len > p_cap {
+            bail!("suspended context ({ctx_len} bytes) exceeds the \
+                   prefill capacity ({p_cap})");
+        }
+        let id = self.next_stream;
+        self.next_stream += 1;
+        let slot = Slot {
+            id,
+            state: SeqState::resumed(susp.prompt, susp.generated,
+                                     susp.logp_sum),
+            rng_draft: susp.rng_draft,
+            rng_accept: susp.rng_accept,
+            max_new_tokens: susp.max_new_tokens,
+            temperature: susp.temperature,
+            top_p: susp.top_p,
+        };
+        let ctx = slot.state.context();
+        if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
+            let row = self.reusable_pad_row()?;
+            self.ensure_scatter_ready()?;
+            self.prefill_pad_row(row, &ctx)?;
+            self.rows[row] = Row::Seq(slot);
+            return Ok(id);
+        }
+        let Some(row) = self.rows.iter().position(Row::is_free) else {
+            bail!("no free slot (capacity {})", self.capacity);
+        };
+        if self.cfg.mode == ExecMode::Split {
+            self.prefill_split_slot(row, &ctx)?;
+        }
+        self.rows[row] = Row::Seq(slot);
+        Ok(id)
     }
 
     /// Drop the drained PAD batch so new admissions start a fresh bucket.
@@ -1091,6 +1319,47 @@ mod tests {
         let live = live_row_states(&rows);
         assert_eq!(live.len(), 1);
         assert_eq!(live[0].prompt, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn suspended_husk_rows_charge_nothing() {
+        // A PAD preemption husks the row with a *still-Running* state
+        // (unlike a retire husk, which is finished). It serves no request
+        // while suspended, so FLOP/token accounting must skip it — the
+        // preemption variant of the PAD metrics-skew regression.
+        let suspended_husk = SeqState::new(vec![3, 4, 5], 5, 3);
+        assert!(suspended_husk.active(), "suspend husks stay Running");
+        let rows = vec![
+            Row::Seq(slot(0, vec![1, 2])),
+            Row::Husk(suspended_husk),
+        ];
+        let live = live_row_states(&rows);
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].prompt, vec![1, 2]);
+    }
+
+    #[test]
+    fn fresh_suspended_seq_round_trips_into_state() {
+        // SuspendedSeq::fresh == "admitted then suspended before any
+        // step": zero progress, budget/params resolved against the
+        // config, and into_state() reconstructs a fresh-admit SeqState.
+        let cfg = SpecConfig::default();
+        let opts = AdmitOpts {
+            max_new_tokens: Some(7),
+            temperature: Some(1.5),
+            ..AdmitOpts::default()
+        };
+        let susp = SuspendedSeq::fresh(&[9, 8, 7], 42, &opts, &cfg);
+        assert_eq!(susp.tokens_generated(), 0);
+        assert_eq!(susp.context_len(), 3);
+        assert_eq!(susp.max_new_tokens, 7);
+        assert_eq!(susp.temperature, 1.5);
+        assert_eq!(susp.top_p, cfg.top_p); // unset -> config default
+        let st = susp.into_state();
+        let fresh = SeqState::new(vec![9, 8, 7], 7, 3);
+        assert_eq!(st.main_len, fresh.main_len);
+        assert_eq!(st.pending_main, fresh.pending_main);
+        assert!(st.active());
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //!
 //! * [`draft_len`] — Algorithm 1 and fixed-length baselines.
 //! * [`engine`] — the BASS decode loop, exposed both as the resumable
-//!   [`SpecBatch`] step API (admit / step / retire — what the coordinator's
-//!   continuous batching drives) and as the one-shot [`SpecEngine`]
+//!   [`SpecBatch`] step API (admit / step / retire, plus suspend / resume
+//!   by recompute — what the coordinator's continuous batching and
+//!   preemptive scheduling drive) and as the one-shot [`SpecEngine`]
 //!   convenience wrapper.
 
 pub mod draft_len;
@@ -11,4 +12,5 @@ mod engine;
 
 pub use draft_len::{DraftLenPolicy, Fixed, Heuristic};
 pub use engine::{AdmitOpts, ExecMode, Policy, SeqEvent, SeqId, SpecBatch,
-                 SpecConfig, SpecEngine, SpecResult, StepReport};
+                 SpecConfig, SpecEngine, SpecResult, StepReport,
+                 SuspendedSeq};

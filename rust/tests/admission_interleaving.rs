@@ -1,17 +1,21 @@
-//! The pin behind PAD mid-flight admission: under **randomized**
-//! admit/step/retire schedules — mixed fan-out, per-sequence sampling
-//! params and generation budgets, delayed retirement, slot/row reuse —
-//! every sequence must be **byte-identical** (and logP-identical) to its
-//! solo one-shot run, in both PAD and SPLIT execution modes.
+//! The pin behind PAD mid-flight admission **and preemption**: under
+//! randomized admit/step/**suspend/resume**/retire schedules — mixed
+//! fan-out, per-sequence sampling params and generation budgets, delayed
+//! retirement, slot/row reuse, random mid-generation preemptions with
+//! recompute-resume — every sequence must be **byte-identical** (and
+//! logP-identical) to its solo one-shot run, in both PAD and SPLIT
+//! execution modes.
 //!
 //! `step_equivalence.rs` pins a handful of hand-picked interleavings;
 //! this harness replays hundreds of seeded PCG32-driven schedules so the
 //! row-lifecycle edges (scatter-prefill into Husk vs Shadow rows, drain
-//! auto-reset, delayed retirement, fan-out streams) are all crossed many
-//! times. `Policy::Fixed` keeps per-step draft lengths batch-independent
-//! and each admission pins its RNG stream, so a sequence's output is a
-//! pure function of (prompt, seed, stream, sampling params, budget) —
-//! the invariant that makes continuous batching invisible to clients.
+//! auto-reset, delayed retirement, fan-out streams, suspension husks,
+//! resumes into running buckets *and* into fresh ones) are all crossed
+//! many times. `Policy::Fixed` keeps per-step draft lengths
+//! batch-independent and each admission pins its RNG stream, so a
+//! sequence's output is a pure function of (prompt, seed, stream,
+//! sampling params, budget) — the invariant that makes continuous
+//! batching *and preemptive scheduling* invisible to clients.
 
 use std::collections::HashMap;
 
@@ -98,10 +102,23 @@ fn solo_run(e: &Engine, mode: ExecMode, p: Plan) -> SeqState {
     batch.retire(id).unwrap()
 }
 
-/// Replay one random schedule; returns (sequences completed, PAD/SPLIT
-/// admissions that happened into a *running* batch).
+/// Per-schedule outcome counters (what the harness must exercise).
+#[derive(Default)]
+struct ScheduleOutcome {
+    /// Sequences completed and checked against their solo runs.
+    checked: usize,
+    /// Admissions that landed in a *running* batch (no drain between).
+    midflight: usize,
+    /// Mid-generation suspensions (preemptions).
+    suspensions: usize,
+    /// Resumes into a batch that was running at the time.
+    resumes_midflight: usize,
+}
+
+/// Replay one random schedule with random admissions, retirements AND
+/// preemptions (suspend/resume-by-recompute).
 fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
-                solo: &mut HashMap<Plan, SeqState>) -> (usize, usize) {
+                solo: &mut HashMap<Plan, SeqState>) -> ScheduleOutcome {
     let mut rng = Pcg32::new(0xBA55_0000 + schedule, 1);
     let mut batch = SpecBatch::new(e, base_cfg(mode), CAPACITY).unwrap();
 
@@ -121,13 +138,14 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
 
     let mut owners: HashMap<SeqId, Plan> = HashMap::new();
     let mut unretired: Vec<SeqId> = Vec::new();
+    let mut parked: Vec<(Plan, bass::spec::SuspendedSeq)> = Vec::new();
     let mut done: Vec<(Plan, SeqState)> = Vec::new();
-    let mut midflight = 0usize;
+    let mut out = ScheduleOutcome::default();
     let mut stepped_since_empty = false;
     let mut guard = 0;
     loop {
         guard += 1;
-        assert!(guard < 2000, "schedule {schedule} did not converge");
+        assert!(guard < 4000, "schedule {schedule} did not converge");
 
         // Delayed retirement: each finished sequence leaves with p=0.7
         // per boundary, so Husk rows and finished-but-unretired slots
@@ -142,8 +160,36 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
             }
         }
         unretired = still;
+
+        // Random preemption: any still-suspendable live sequence may be
+        // yanked to the host (p=0.15 per boundary). The snapshot parks
+        // in the harness and competes with fresh admissions for slots —
+        // exactly what the coordinator's scheduler does.
+        let live_ids: Vec<SeqId> = owners.keys().copied().collect();
+        for id in live_ids {
+            if batch.can_suspend(id) && rng.next_f32() < 0.15 {
+                let snap = batch.suspend(id).unwrap();
+                parked.push((owners.remove(&id).unwrap(), snap));
+                out.suspensions += 1;
+            }
+        }
         if batch.occupied() == 0 {
             stepped_since_empty = false; // drained (PAD auto-reset point)
+        }
+
+        // Random resume of parked sequences (p=0.5 each boundary, slots
+        // permitting): into a running bucket (scatter recompute) or a
+        // fresh one (fused-prefill recompute) — whichever the schedule
+        // happens to present.
+        while !parked.is_empty() && batch.can_admit()
+            && rng.next_f32() < 0.5
+        {
+            let (plan, snap) = parked.pop().unwrap();
+            if stepped_since_empty && batch.occupied() > 0 {
+                out.resumes_midflight += 1;
+            }
+            let id = batch.resume(snap).unwrap();
+            owners.insert(id, plan);
         }
 
         // Random admission into whatever slots/rows are free right now.
@@ -152,7 +198,7 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
         {
             let p = pending.pop().unwrap();
             if stepped_since_empty && batch.occupied() > 0 {
-                midflight += 1; // landed in a running batch (no drain)
+                out.midflight += 1; // landed in a running batch (no drain)
             }
             let (prompt, seed, opts) = plan_inputs(p);
             let id = batch.admit_opts(&prompt, seed, opts).unwrap();
@@ -165,14 +211,15 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
             stepped_since_empty = true;
             unretired.extend(report.finished);
         } else if pending.is_empty() && unretired.is_empty()
-            && owners.is_empty()
+            && owners.is_empty() && parked.is_empty()
         {
             break;
         }
     }
 
-    // Every completed sequence must reproduce its solo one-shot run.
-    let n = done.len();
+    // Every completed sequence must reproduce its solo one-shot run —
+    // however many times it was preempted and recomputed along the way.
+    out.checked = done.len();
     for (plan, st) in done {
         let want = solo
             .entry(plan)
@@ -187,30 +234,42 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
                 "{mode:?} schedule {schedule}: mean_logp {} vs {}",
                 st.mean_logp(), want.mean_logp());
     }
-    (n, midflight)
+    out
 }
 
 fn run_mode(mode: ExecMode) {
     let e = Engine::load(&artifacts_root()).expect("engine load");
     let mut solo: HashMap<Plan, SeqState> = HashMap::new();
-    let mut checked = 0usize;
-    let mut midflight = 0usize;
+    let mut total = ScheduleOutcome::default();
     for schedule in 0..SCHEDULES {
-        let (n, m) = run_schedule(&e, mode, schedule, &mut solo);
-        checked += n;
-        midflight += m;
+        let o = run_schedule(&e, mode, schedule, &mut solo);
+        total.checked += o.checked;
+        total.midflight += o.midflight;
+        total.suspensions += o.suspensions;
+        total.resumes_midflight += o.resumes_midflight;
     }
-    assert!(checked >= 600,
-            "{mode:?}: only {checked} sequences checked — schedules \
-             degenerate");
+    assert!(total.checked >= 600,
+            "{mode:?}: only {} sequences checked — schedules degenerate",
+            total.checked);
     // The whole point: a healthy share of admissions landed in a batch
     // that had already started (no drain in between). Busy periods that
     // bucketed at 1 can never take one, so the floor is well below the
     // admission count, but it must stay far from zero.
-    assert!(midflight >= 30,
-            "{mode:?}: only {midflight} mid-flight admissions across \
-             {SCHEDULES} schedules — the harness is not exercising \
-             running-batch admission");
+    assert!(total.midflight >= 30,
+            "{mode:?}: only {} mid-flight admissions across {SCHEDULES} \
+             schedules — the harness is not exercising running-batch \
+             admission", total.midflight);
+    // And the preemption edges must actually be crossed: plenty of
+    // mid-generation suspensions, including resumes into still-running
+    // batches (the scatter-recompute path in PAD; slot reuse in SPLIT).
+    assert!(total.suspensions >= 50,
+            "{mode:?}: only {} suspensions across {SCHEDULES} schedules \
+             — the harness is not exercising preemption",
+            total.suspensions);
+    assert!(total.resumes_midflight >= 10,
+            "{mode:?}: only {} mid-flight resumes across {SCHEDULES} \
+             schedules — resumes never hit a running batch",
+            total.resumes_midflight);
 }
 
 #[test]

@@ -1,6 +1,7 @@
 //! Coordinator + TCP server integration tests: continuous batching
-//! (mid-flight admission, immediate retirement), queueing, fan-out
-//! slicing, streaming and the line protocol, over real artifacts.
+//! (mid-flight admission, immediate retirement), preemptive priority
+//! scheduling (suspend/resume-by-recompute), queueing, fan-out slicing,
+//! streaming and the line protocol, over real artifacts.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -34,6 +35,7 @@ fn coordinator_with(spec: SpecConfig, max_batch: usize, window_ms: u64)
             max_batch,
             window: Duration::from_millis(window_ms),
         },
+        preempt: true,
         prewarm: false, // keep tests fast; lazy compiles are fine here
     })
     .expect("coordinator start")
@@ -54,6 +56,8 @@ fn request(prompt: &str, n: usize, max_new: usize, stream: bool)
         temperature: None,
         top_p: None,
         seed: None,
+        priority: None,
+        deadline_ms: None,
         stream,
     }
 }
@@ -158,6 +162,8 @@ fn per_request_sampling_params_match_solo_engine_run() {
             temperature: Some(temp),
             top_p: Some(top_p),
             seed: Some(seed),
+            priority: None,
+            deadline_ms: None,
             stream: false,
         });
         let target = Coordinator::wait(rx_target).unwrap();
@@ -305,6 +311,87 @@ fn pad_midflight_admission_into_running_batch() {
              waited for the drain");
     let long = Coordinator::wait(rx_long).unwrap();
     assert!(long.seqs[0].n_tokens >= late.seqs[0].n_tokens);
+}
+
+/// The preemptive-scheduler acceptance test: with a single engine slot, a
+/// high-priority late arrival can only run by **suspending** the running
+/// low-priority sequence. It must answer first; the preempted request
+/// must then resume by recompute and still deliver its complete output,
+/// reporting how often it was preempted. Covers both execution modes
+/// (SPLIT per-slot recompute; PAD husk-row + fresh-bucket recompute).
+#[test]
+fn high_priority_preempts_and_answers_first() {
+    require_artifacts!();
+    for mode in [ExecMode::Split, ExecMode::Pad] {
+        let coord = Arc::new(coordinator_with(
+            SpecConfig {
+                max_new_tokens: 96,
+                mode,
+                temperature: 2.0, // keep the low-pri request rambling
+                ..SpecConfig::default()
+            },
+            1, 1));
+        // Warm up so step timing is not dominated by lazy compiles.
+        let _ = coord.generate(
+            request("def f(x):\n    return", 1, 4, false));
+
+        // Low-priority long request; short prompt so its context stays
+        // under the prefill capacity (= suspendable) for many steps.
+        // Streaming tells us when its batch has started.
+        let rx_low = coord.submit(
+            request("def f(x):\n    return", 1, 96, true));
+        match rx_low.recv().expect("low-priority request alive") {
+            Reply::Step(_) => {} // first step done => batch started
+            Reply::Done(r) => {
+                panic!("{mode:?}: long request finished instantly: {r:?}")
+            }
+        }
+
+        // High-priority late arrival. Capacity is 1, so FIFO would have
+        // made it wait out all 96 tokens; preemption must run it now.
+        let hi = coord
+            .generate(Request {
+                priority: Some(5),
+                ..request("def mul_3(x):\n    return", 1, 3, false)
+            })
+            .unwrap();
+        assert_eq!(hi.seqs.len(), 1);
+        assert!(hi.seqs[0].n_tokens > 0);
+        assert_eq!(hi.preempted, 0,
+                   "{mode:?}: the high-priority request itself must not \
+                    be preempted");
+
+        // The low-priority request must still be running when the
+        // high-priority one answered (i.e. it really was overtaken).
+        let mut low_done_early = false;
+        loop {
+            match rx_low.try_recv() {
+                Ok(Reply::Step(_)) => continue,
+                Ok(Reply::Done(_)) => {
+                    low_done_early = true;
+                    break;
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(e) => panic!("low-priority channel died: {e}"),
+            }
+        }
+        assert!(!low_done_early,
+                "{mode:?}: high-priority request did not overtake");
+
+        // The preempted request completes — full budget, correct
+        // preemption count (suspended at least once; possibly more if
+        // other boundaries raced).
+        let low = Coordinator::wait(rx_low).unwrap();
+        assert_eq!(low.seqs.len(), 1);
+        assert!(low.preempted >= 1,
+                "{mode:?}: low-priority request was never preempted \
+                 (preempted = {})", low.preempted);
+        assert!(low.seqs[0].finished,
+                "{mode:?}: preempted request did not run to completion");
+        assert!(low.seqs[0].n_tokens >= hi.seqs[0].n_tokens,
+                "{mode:?}: preempted request lost output ({} tokens)",
+                low.seqs[0].n_tokens);
+    }
 }
 
 #[test]

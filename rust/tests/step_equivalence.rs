@@ -212,6 +212,171 @@ fn mixed_params_cobatch_equals_solo_split() {
     assert_mixed_params_equivalent(ExecMode::Split);
 }
 
+/// The preemption invariant (acceptance criterion of the scheduler PR):
+/// suspend → resume-by-recompute must be **invisible** to the sequence.
+/// The interrupted run goes through two full preemption cycles — suspend
+/// mid-generation, let an unrelated interloper run (and retire) in the
+/// freed slot, resume, generate one more step, suspend *again* (now from
+/// the n_pending=1 restart state), resume again — and must still produce
+/// bytes, finish reason and logP identical to the uninterrupted solo run.
+/// High temperature keeps the reference long enough to bisect twice. No
+/// artifact/manifest change is involved: resume recomputes the KV row
+/// with the existing prefill (SPLIT) / prefill_scatter (PAD) programs.
+fn assert_suspend_resume_identity(mode: ExecMode) {
+    let e = engine();
+    let cfg = SpecConfig {
+        temperature: 2.0, // ramble: no early EOS, reference hits Length
+        top_p: 1.0,
+        ..cfg(mode)
+    };
+    let prompt = &prompts()[0];
+
+    // Uninterrupted reference.
+    let mut refb = SpecBatch::new(&e, cfg.clone(), 1).unwrap();
+    let rid = refb.admit(prompt, cfg.seed).unwrap();
+    let mut guard = 0;
+    while refb.has_active() {
+        refb.step().unwrap();
+        guard += 1;
+        assert!(guard < 200, "runaway reference run");
+    }
+    let want = refb.retire(rid).unwrap();
+    // Two single-step preemption cycles emit at most 2 * (k + 1) = 10
+    // bytes; the reference must outlive them so every suspend really
+    // bisects a still-running sequence.
+    assert!(want.tokens_generated() >= 12,
+            "{mode:?}: reference too short ({} tokens) to bisect twice",
+            want.tokens_generated());
+
+    let mut batch = SpecBatch::new(&e, cfg.clone(), 1).unwrap();
+    let mut cur = batch.admit(prompt, cfg.seed).unwrap();
+    for cycle in 0..2u64 {
+        batch.step().unwrap();
+        assert!(batch.can_suspend(cur),
+                "{mode:?} cycle {cycle}: sequence not suspendable");
+        let snap = batch.suspend(cur).unwrap();
+        assert_eq!(batch.occupied(), 0,
+                   "{mode:?} cycle {cycle}: suspend must free the slot");
+        if cycle > 0 {
+            assert!(snap.tokens_generated() > 0, "progress carried over");
+        }
+        // Interloper: unrelated traffic occupies (and perturbs) the freed
+        // slot, then retires — the resumed KV row is rebuilt from scratch
+        // either way.
+        let other = batch.admit(&prompts()[1], 99 + cycle).unwrap();
+        let mut g = 0;
+        while batch.has_active() {
+            batch.step().unwrap();
+            g += 1;
+            assert!(g < 200, "runaway interloper");
+        }
+        batch.retire(other).unwrap();
+        let resumed = batch.resume(snap).unwrap();
+        assert_ne!(resumed, cur, "SeqIds are never reused across resume");
+        cur = resumed;
+    }
+    let mut g = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        g += 1;
+        assert!(g < 200, "runaway resumed run");
+    }
+    let got = batch.retire(cur).unwrap();
+
+    assert_eq!(want.generated, got.generated,
+               "{mode:?}: preempted run bytes diverge from the \
+                uninterrupted run");
+    assert_eq!(want.finish, got.finish, "{mode:?}: finish reason");
+    assert!((want.mean_logp() - got.mean_logp()).abs() < 1e-12,
+            "{mode:?}: mean_logp {} vs {}", want.mean_logp(),
+            got.mean_logp());
+    assert_ne!(got.finish, FinishReason::Running);
+    let s_max = e.manifest.model("main").unwrap().s_max as i32;
+    got.check_invariants(s_max).unwrap();
+}
+
+#[test]
+fn suspend_resume_is_invisible_pad() {
+    require_artifacts!();
+    assert_suspend_resume_identity(ExecMode::Pad);
+}
+
+#[test]
+fn suspend_resume_is_invisible_split() {
+    require_artifacts!();
+    assert_suspend_resume_identity(ExecMode::Split);
+}
+
+/// Resume must also be exact into a *running* PAD bucket: the suspended
+/// sequence scatter-prefills over the Husk row its own suspension left
+/// while a co-resident sequence keeps stepping — the mid-flight-resume
+/// edge the capacity-1 test above cannot reach.
+#[test]
+fn suspend_resume_into_running_pad_bucket() {
+    require_artifacts!();
+    let e = engine();
+    let cfg = SpecConfig {
+        temperature: 2.0,
+        top_p: 1.0,
+        max_new_tokens: 24,
+        ..cfg(ExecMode::Pad)
+    };
+    let prompt = &prompts()[0];
+
+    // Reference: the target co-resident with the long companion from
+    // step 0, never interrupted. Streams are pinned so identity is a
+    // function of (prompt, seed, stream) in both runs.
+    fn admit_pinned(batch: &mut SpecBatch, p: &[u8], seed: u64)
+                    -> bass::spec::SeqId {
+        batch.admit_opts(p, seed, AdmitOpts {
+            stream: Some(0),
+            ..AdmitOpts::default()
+        }).unwrap()
+    }
+    let mut refb = SpecBatch::new(&e, cfg.clone(), 2).unwrap();
+    let target_ref = admit_pinned(&mut refb, prompt, 7);
+    let _company = admit_pinned(&mut refb, &prompts()[2], 13);
+    let mut guard = 0;
+    while refb.has_active() {
+        refb.step().unwrap();
+        guard += 1;
+        assert!(guard < 200);
+    }
+    let want = refb.retire(target_ref).unwrap();
+    assert!(want.tokens_generated() >= 8, "reference too short");
+
+    // Interrupted: same pair, but the target is suspended after one step
+    // and resumed two steps later into the STILL-RUNNING bucket (the
+    // companion keeps it alive, so the resume goes through the
+    // prefill_scatter path, not a fresh fused prefill).
+    let mut batch = SpecBatch::new(&e, cfg.clone(), 2).unwrap();
+    let target = admit_pinned(&mut batch, prompt, 7);
+    let company = admit_pinned(&mut batch, &prompts()[2], 13);
+    batch.step().unwrap();
+    let snap = batch.suspend(target).unwrap();
+    assert_eq!(batch.occupied(), 1, "companion keeps the bucket running");
+    batch.step().unwrap();
+    batch.step().unwrap();
+    assert!(batch.has_active(),
+            "companion must still be running for a mid-flight resume \
+             (raise its budget if this fires)");
+    let resumed = batch.resume(snap).unwrap();
+    let mut guard = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        guard += 1;
+        assert!(guard < 200);
+    }
+    let got = batch.retire(resumed).unwrap();
+    let _ = batch.retire(company);
+
+    assert_eq!(want.generated, got.generated,
+               "mid-flight PAD resume diverged from the co-resident \
+                reference");
+    assert_eq!(want.finish, got.finish);
+    assert!((want.mean_logp() - got.mean_logp()).abs() < 1e-12);
+}
+
 #[test]
 fn split_slot_reuse_is_isolated() {
     require_artifacts!();
