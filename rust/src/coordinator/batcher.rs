@@ -13,8 +13,12 @@
 //! fan-out-atomicity, oversized-head clamp and co-batch window semantics
 //! pinned here apply unchanged — and the window check cannot drift
 //! between call sites. `plan_batch` still plans against however many
-//! slots are free right now (which, with `--pad-headroom`, includes the
-//! PAD bucket's grow-room padding rows).
+//! slots are free right now — which, with `--pad-headroom`, includes the
+//! PAD bucket's grow-room padding rows, and after a live re-bucket
+//! (`SpecBatch::rebucket`) includes the grown bucket's fresh rows: the
+//! scheduler plans the grow first, then consults this policy against
+//! the enlarged free count, so a burst larger than the old bucket
+//! admits in the same round.
 
 use std::time::{Duration, Instant};
 
@@ -121,7 +125,7 @@ mod tests {
     #[test]
     fn admits_while_budget_holds() {
         let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
-        let q = vec![pend(1, 2), pend(2, 4), pend(3, 4)];
+        let q = [pend(1, 2), pend(2, 4), pend(3, 4)];
         let (taken, seqs) = plan_batch(&q, 8, &cfg);
         assert_eq!(taken, 2);
         assert_eq!(seqs, 6);
@@ -131,12 +135,12 @@ mod tests {
     fn plans_against_free_slots_not_the_cap() {
         // Batch half-full (3 of 8 slots free): only what fits is taken.
         let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
-        let q = vec![pend(1, 2), pend(2, 2), pend(3, 1)];
+        let q = [pend(1, 2), pend(2, 2), pend(3, 1)];
         let (taken, seqs) = plan_batch(&q, 3, &cfg);
         assert_eq!(taken, 1);
         assert_eq!(seqs, 2);
         // A later request never jumps an earlier one that doesn't fit.
-        let q2 = vec![pend(1, 3), pend(2, 1)];
+        let q2 = [pend(1, 3), pend(2, 1)];
         let (taken, seqs) = plan_batch(&q2, 2, &cfg);
         assert_eq!((taken, seqs), (0, 0));
     }
@@ -144,7 +148,7 @@ mod tests {
     #[test]
     fn partial_batch_plus_queued_fanout_fills_exactly() {
         let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
-        let q = vec![pend(1, 2), pend(2, 2), pend(3, 2)];
+        let q = [pend(1, 2), pend(2, 2), pend(3, 2)];
         let (taken, seqs) = plan_batch(&q, 4, &cfg);
         assert_eq!(taken, 2);
         assert_eq!(seqs, 4);
@@ -163,7 +167,7 @@ mod tests {
     #[test]
     fn exact_fill_stops() {
         let cfg = BatcherConfig { max_batch: 4, ..Default::default() };
-        let q = vec![pend(1, 2), pend(2, 2), pend(3, 1)];
+        let q = [pend(1, 2), pend(2, 2), pend(3, 1)];
         let (taken, seqs) = plan_batch(&q, 4, &cfg);
         assert_eq!(taken, 2);
         assert_eq!(seqs, 4);
@@ -183,11 +187,11 @@ mod tests {
         };
         let now = Instant::now();
         assert!(!should_flush(&[], 4, &cfg, now));
-        let young = vec![pend(1, 1)];
+        let young = [pend(1, 1)];
         assert!(!should_flush(&young, 4, &cfg, now));
         assert!(should_flush(&young, 4, &cfg,
                              now + Duration::from_millis(11)));
-        let full = vec![pend(1, 2), pend(2, 2)];
+        let full = [pend(1, 2), pend(2, 2)];
         assert!(should_flush(&full, 4, &cfg, now));
     }
 
@@ -217,12 +221,12 @@ mod tests {
         };
         let now = Instant::now();
         let late = now + Duration::from_millis(500);
-        let q = vec![pend(1, 9)];
+        let q = [pend(1, 9)];
         assert_eq!(plan_batch(&q, 3, &cfg), (0, 0));
         assert!(!should_flush(&q, 3, &cfg, now));
         assert!(!should_flush(&q, 3, &cfg, late));
         // Queued followers don't change the verdict: the head still blocks.
-        let q2 = vec![pend(1, 9), pend(2, 1)];
+        let q2 = [pend(1, 9), pend(2, 1)];
         assert_eq!(plan_batch(&q2, 3, &cfg), (0, 0));
         assert!(!should_flush(&q2, 3, &cfg, late));
     }
@@ -237,7 +241,7 @@ mod tests {
             window: Duration::from_millis(10),
         };
         let now = Instant::now();
-        let q = vec![pend(1, 9)];
+        let q = [pend(1, 9)];
         assert!(should_flush(&q, 4, &cfg, now));
         assert_eq!(plan_batch(&q, 4, &cfg), (1, 4));
     }
@@ -260,7 +264,7 @@ mod tests {
             n_seqs: 1,
             enqueued: t0 + Duration::from_millis(49),
         };
-        let q = vec![fresh_head, old]; // rank order: newcomer first
+        let q = [fresh_head, old]; // rank order: newcomer first
         assert!(!should_flush(&q, 8, &cfg, t0 + Duration::from_millis(40)));
         assert!(should_flush(&q, 8, &cfg, t0 + Duration::from_millis(51)),
                 "oldest waiter's window expired; the fresh head must not \
@@ -280,13 +284,33 @@ mod tests {
         };
         let now = Instant::now();
         // Bucket of 4 running 2 real sequences: 2 headroom rows free.
-        let q = vec![pend(1, 2)];
+        let q = [pend(1, 2)];
         assert!(should_flush(&q, 2, &cfg, now), "headroom admits now");
         assert_eq!(plan_batch(&q, 2, &cfg), (1, 2));
         // Without headroom the same running bucket has 0 free rows and
         // the arrival would have waited for a retirement or the drain.
         assert!(!should_flush(&q, 0, &cfg, now));
         assert_eq!(plan_batch(&q, 0, &cfg), (0, 0));
+    }
+
+    #[test]
+    fn grown_bucket_rows_plan_like_free_slots() {
+        // After a live re-bucket (4 -> 8 rows, 4 live) the scheduler
+        // re-consults this policy with the enlarged free count: the
+        // burst that triggered the grow admits immediately — covering
+        // the free rows skips the window, exactly like headroom rows.
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            window: Duration::from_millis(50),
+        };
+        let now = Instant::now();
+        let q = [pend(1, 2), pend(2, 2)];
+        // Before the grow: the bucket is fully live, nothing fits.
+        assert_eq!(plan_batch(&q, 0, &cfg), (0, 0));
+        assert!(!should_flush(&q, 0, &cfg, now));
+        // After: 4 fresh rows — the whole burst admits, no window wait.
+        assert!(should_flush(&q, 4, &cfg, now));
+        assert_eq!(plan_batch(&q, 4, &cfg), (2, 4));
     }
 
     #[test]

@@ -28,9 +28,18 @@
 //!   consulted solely by the scheduler with a single wall-clock read per
 //!   round). **Both execution modes admit mid-flight**: SPLIT prefills a
 //!   per-slot B=1 cache; PAD scatter-prefills into a freed row of the
-//!   running fused cache. A running PAD bucket still cannot *grow*, but
-//!   `--pad-headroom` starts the bucket above the admitted count so
-//!   grow-room rows exist without a drain-and-re-bucket.
+//!   running fused cache.
+//! * **Re-bucket** — a running PAD bucket **grows live** when a burst
+//!   exceeds its reusable rows, and shrinks when it runs mostly empty
+//!   ([`SpecBatch::rebucket`], planned by the scheduler's cost model):
+//!   every carried sequence rides the same bitwise recompute primitive
+//!   as resume — one fused prefill at the new bucket — keeping its
+//!   SeqId, RNG streams, params and clock, so a late burst of `b + k`
+//!   sequences is served while the original `b` keep generating,
+//!   byte-identically, with no drain and no artifact rebuild.
+//!   `--pad-headroom` still pre-provisions grow-room rows (cheaper than
+//!   a re-prefill) and is re-applied on every re-bucket; free headroom
+//!   rows are always consumed before a grow is considered.
 //!
 //! Sequences retire the moment they finish and each request is answered
 //! as soon as *its* sequences are done — no head-of-line blocking behind
@@ -137,6 +146,11 @@ pub struct Response {
     /// Requests still waiting in the scheduler queue when this response
     /// was finalized — a server-load signal for clients.
     pub queue_depth: usize,
+    /// Live PAD re-buckets (grow + shrink) the serving engine had
+    /// executed when this response was finalized — like `queue_depth`,
+    /// a load/behavior signal: a rising count under bursty traffic
+    /// means the fused bucket is being re-shaped instead of draining.
+    pub rebuckets: u64,
 }
 
 /// One per-step progress notification for a streaming request.
@@ -288,7 +302,7 @@ struct InFlight {
 }
 
 impl InFlight {
-    fn finish(self, queue_depth: usize) {
+    fn finish(self, queue_depth: usize, rebuckets: u64) {
         let seqs = self
             .done
             .into_iter()
@@ -302,6 +316,7 @@ impl InFlight {
             queue_secs: self.queue_secs,
             preempted: self.preempted,
             queue_depth,
+            rebuckets,
         })));
     }
 }
@@ -342,6 +357,7 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
     let mut sched = Scheduler::new(SchedulerConfig {
         batcher: cfg.batcher.clone(),
         preempt: cfg.preempt,
+        ..SchedulerConfig::default()
     });
     // Queued payloads (the scheduler owns their ordering) and admitted
     // requests.
@@ -417,7 +433,16 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 preemptible: batch.can_suspend(id),
             })
             .collect();
-        let plan = sched.plan(batch.free_slots(), &view, now);
+        let plan = {
+            let probe = |desired: usize| batch.rebucket_target(desired);
+            let bview = scheduler::BatchView {
+                free: batch.free_slots(),
+                occupied: batch.occupied(),
+                bucket_rows: batch.bucket_rows(),
+                rebucket_target: Some(&probe),
+            };
+            sched.plan(&bview, &view, now)
+        };
 
         for id in plan.preempt {
             let Some(&owner) = seq_owner.get(&id) else { continue };
@@ -440,6 +465,28 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             });
         }
 
+        if let Some(target) = plan.rebucket {
+            // Grow for waiting demand / shrink to the occupancy —
+            // executed after preemptions (the victims' husk rows are
+            // dropped by the move) and before resumes/admissions, which
+            // land in the new bucket's fresh rows.
+            match batch.rebucket(target) {
+                Ok(Some(r)) => {
+                    sched.stats.note_rebucket(r.to > r.from, r.migrated);
+                }
+                Ok(None) => {} // raced to a no-op; work keeps waiting
+                Err(e) => {
+                    // The old bucket survives a failed re-prefill (the
+                    // caches are swapped only on success), so keep
+                    // serving from it; any resume/admission this round
+                    // truly had no row for fails its request loudly
+                    // below.
+                    eprintln!("[bass-engine] live re-bucket failed; \
+                               keeping the current bucket: {e:#}");
+                }
+            }
+        }
+
         for parked in plan.resume {
             let owner = parked.owner;
             // A resume failure earlier in this round may have failed the
@@ -447,6 +494,15 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             // them here prevents orphan sequences from occupying device
             // slots with nobody waiting on their output.
             if !inflight.contains_key(&owner) {
+                continue;
+            }
+            // Planned against rows that never materialized (the grow
+            // failed and the old bucket is still serving): the snapshot
+            // is intact — `SpecBatch::resume` never saw it — so re-park
+            // it to re-rank next round instead of consuming it against
+            // a guaranteed "no row" failure that would kill the request.
+            if !batch.can_admit() {
+                sched.repark(parked);
                 continue;
             }
             let fanout_index = parked.fanout_index;
@@ -469,9 +525,29 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
         }
 
         for rid in plan.admit {
+            // Same phantom-row guard as resumes: a request admitted
+            // against a grow that failed to execute goes back in the
+            // queue (its payload never left `jobs`) rather than
+            // hard-failing on "no reusable PAD row". Its queue wait is
+            // re-observed on the eventual admission — acceptable drift
+            // on a failure path.
+            if batch.free_slots() == 0 {
+                if let Some(job) = jobs.get(&rid) {
+                    sched.submit(rid, job.req.n_seqs.max(1), job.urgency,
+                                 job.enqueued);
+                }
+                continue;
+            }
             let Some(job) = jobs.remove(&rid) else { continue };
             admit_request(&mut batch, rid, job, &mut inflight,
                           &mut seq_owner, now);
+        }
+        // Bucket-occupancy gauge: live rows of the fused bucket only —
+        // SPLIT and an idle/not-started engine report (0, 0) as the
+        // SchedStats contract promises.
+        match batch.bucket_rows() {
+            Some(rows) => sched.stats.note_bucket(batch.active(), rows),
+            None => sched.stats.note_bucket(0, 0),
         }
 
         // Per-request time budget (Fig-5 semantics): a request whose age
@@ -489,6 +565,7 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 .collect();
             for owner in expired {
                 let queue_depth = sched.queue_depth();
+                let rebuckets = sched.stats.rebuckets();
                 let ids: Vec<SeqId> = seq_owner
                     .iter()
                     .filter(|(_, &o)| o == owner)
@@ -496,10 +573,11 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                     .collect();
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
-                               &mut seq_owner, queue_depth);
+                               &mut seq_owner, queue_depth, rebuckets);
                 }
                 for parked in sched.take_parked_of(owner) {
-                    deliver_parked(parked, &mut inflight, queue_depth);
+                    deliver_parked(parked, &mut inflight, queue_depth,
+                                   rebuckets);
                 }
             }
         }
@@ -509,10 +587,11 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 // Defensive: sequences stalled in any other way are
                 // returned rather than wedging their requests forever.
                 let queue_depth = sched.queue_depth();
+                let rebuckets = sched.stats.rebuckets();
                 let ids: Vec<SeqId> = seq_owner.keys().copied().collect();
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
-                               &mut seq_owner, queue_depth);
+                               &mut seq_owner, queue_depth, rebuckets);
                 }
             } else if sched.has_queued() || sched.parked_count() > 0 {
                 // Waiting out the co-batching window (or a transiently
@@ -576,9 +655,10 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
 
         // -- retire finished sequences immediately -------------------------
         let queue_depth = sched.queue_depth();
+        let rebuckets = sched.stats.rebuckets();
         for id in report.finished {
             retire_seq(&mut batch, id, &mut inflight, &mut seq_owner,
-                       queue_depth);
+                       queue_depth, rebuckets);
         }
     }
 
@@ -587,7 +667,9 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
     // other diagnostics — preemption/resume volume and per-priority queue
     // waits are fleet-tuning signals (window, max_batch, pad_headroom).
     let st = &sched.stats;
-    if st.preemptions > 0 || st.resumes > 0 || st.max_queue_depth > 0 {
+    if st.preemptions > 0 || st.resumes > 0 || st.max_queue_depth > 0
+        || st.rebuckets() > 0
+    {
         let waits: Vec<String> = st
             .queue_wait
             .iter()
@@ -597,9 +679,13 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             })
             .collect();
         eprintln!("[bass-engine] scheduler: preemptions={} resumes={} \
-                   max_queue_depth={} queue_wait[{}]",
-                  st.preemptions, st.resumes, st.max_queue_depth,
-                  waits.join(" "));
+                   rebuckets={} (grow {} / shrink {}, {} rows migrated) \
+                   bucket_occ≈{:.0}% max_queue_depth={} queue_wait[{}]",
+                  st.preemptions, st.resumes, st.rebuckets(),
+                  st.rebuckets_grow, st.rebuckets_shrink,
+                  st.rebucket_migrated,
+                  st.mean_bucket_occupancy() * 100.0,
+                  st.max_queue_depth, waits.join(" "));
     }
 }
 
@@ -668,7 +754,8 @@ fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
 /// into its request's response; answer the request when it was the last.
 fn retire_seq(batch: &mut SpecBatch, id: SeqId,
               inflight: &mut HashMap<u64, InFlight>,
-              seq_owner: &mut HashMap<SeqId, u64>, queue_depth: usize) {
+              seq_owner: &mut HashMap<SeqId, u64>, queue_depth: usize,
+              rebuckets: u64) {
     let Some(owner) = seq_owner.remove(&id) else { return };
     let state = match batch.retire(id) {
         Ok(s) => s,
@@ -685,7 +772,7 @@ fn retire_seq(batch: &mut SpecBatch, id: SeqId,
     job.remaining -= 1;
     if job.remaining == 0 {
         let job = inflight.remove(&owner).expect("job present");
-        job.finish(queue_depth);
+        job.finish(queue_depth, rebuckets);
     }
 }
 
@@ -693,7 +780,7 @@ fn retire_seq(batch: &mut SpecBatch, id: SeqId,
 /// the time-budget path for preempted work that never got to resume.
 fn deliver_parked(parked: ParkedSeq,
                   inflight: &mut HashMap<u64, InFlight>,
-                  queue_depth: usize) {
+                  queue_depth: usize, rebuckets: u64) {
     let owner = parked.owner;
     let Some(job) = inflight.get_mut(&owner) else { return };
     let state = parked.snapshot.into_state();
@@ -706,7 +793,7 @@ fn deliver_parked(parked: ParkedSeq,
     job.remaining -= 1;
     if job.remaining == 0 {
         let job = inflight.remove(&owner).expect("job present");
-        job.finish(queue_depth);
+        job.finish(queue_depth, rebuckets);
     }
 }
 

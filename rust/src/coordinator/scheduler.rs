@@ -39,6 +39,43 @@
 //! hold arbitrarily more admitted work than the engine has device slots
 //! — the `capacity = max_batch` bound applies to *running* work only.
 //!
+//! **Live re-bucketing** (PAD): the plan may also ask the engine to
+//! re-shape its running fused bucket ([`SchedPlan::rebucket`], executed
+//! via `SpecBatch::rebucket` before resumes/admissions). The decision is
+//! a cost model over one fused prefill at the new bucket `b'` (≈ `b'`
+//! row-prefills over the prompt capacity):
+//!
+//! * **Grow** when the **ranked head cannot be placed** in the free
+//!   rows — either none are left, or the head's atomic fan-out exceeds
+//!   them (it would otherwise hold the queue until the bucket drained).
+//!   The prefill buys rows *now*, versus queued work waiting unboundedly
+//!   for a retirement or the drain, and it beats preemption (same
+//!   recompute cost, nobody evicted). Free rows — `--pad-headroom`
+//!   grow-room, retired husks — are consumed first whenever they can
+//!   place the head: growing then would re-prefill the whole bucket for
+//!   nothing, so such a grow is rejected. (A grow that exists to serve
+//!   *parked* work pays extra: the fused prefill fills the new rows with
+//!   shadow padding and each resume then scatter-prefills over it —
+//!   folding the round's resume contexts into the re-bucket prefill
+//!   itself is an open micro-optimization, see ROADMAP.)
+//! * **Shrink** when the waiting sets have stayed empty for
+//!   [`SchedulerConfig::shrink_delay`] (hysteresis: a shrink destroys
+//!   reusable husk rows, so intermittent traffic must not thrash the
+//!   bucket with grow/shrink prefill pairs) and a smaller bucket
+//!   (headroom re-applied) covers the occupancy — the same one-prefill
+//!   cost removes `b - b'` dead rows from every subsequent fused step,
+//!   which pays for itself after roughly `prefill_p / (k+1)` steps of
+//!   the surviving sequences.
+//!
+//! A planned grow can still fail at execution (device prefill failure —
+//! the old bucket keeps serving). The coordinator then **re-queues** the
+//! admissions and **re-parks** the resumes planned against the phantom
+//! rows ([`Scheduler::repark`]) instead of hard-failing them.
+//!
+//! The engine's [`BatchView::rebucket_target`] probe is the single
+//! validation path (`SPLIT` and pinned-context rows simply probe to
+//! `None`), so the plan cannot drift from what the batch will execute.
+//!
 //! Starvation: a preempted sequence resumes as soon as rank order allows
 //! (its original enqueue time keeps its FIFO position within its class);
 //! under sustained strictly-higher-priority load it waits indefinitely —
@@ -114,11 +151,34 @@ pub struct RunningSeq {
     pub preemptible: bool,
 }
 
+/// The scheduler's read-only view of the engine batch at one step
+/// boundary (built by the coordinator from `SpecBatch` introspection).
+pub struct BatchView<'a> {
+    /// Rows an admission/resume could bind right now
+    /// (`SpecBatch::free_slots`).
+    pub free: usize,
+    /// Real sequences occupying slots (`SpecBatch::occupied`).
+    pub occupied: usize,
+    /// Rows of the live fused bucket (`SpecBatch::bucket_rows`) — `None`
+    /// for SPLIT or a batch that has not started.
+    pub bucket_rows: Option<usize>,
+    /// `SpecBatch::rebucket_target`: the bucket a live re-bucket toward
+    /// a desired total row count would land on (headroom re-applied),
+    /// `None` when impossible or a no-op. `None` here disables
+    /// re-bucket planning entirely.
+    pub rebucket_target: Option<&'a dyn Fn(usize) -> Option<usize>>,
+}
+
 /// One admission/preemption decision round, in execution order.
 #[derive(Debug, Default)]
 pub struct SchedPlan {
     /// Running sequences to `SpecBatch::suspend`, weakest victims first.
     pub preempt: Vec<SeqId>,
+    /// Desired total rows of a live PAD re-bucket
+    /// (`SpecBatch::rebucket`), executed after preemptions and before
+    /// resumes/admissions: grow when waiting work has no reusable row,
+    /// shrink when idle occupancy fits a smaller bucket.
+    pub rebucket: Option<usize>,
     /// Parked sequences to `SpecBatch::resume`, rank order.
     pub resume: Vec<ParkedSeq>,
     /// Queued request ids to admit, rank order.
@@ -127,8 +187,8 @@ pub struct SchedPlan {
 
 impl SchedPlan {
     pub fn is_empty(&self) -> bool {
-        self.preempt.is_empty() && self.resume.is_empty()
-            && self.admit.is_empty()
+        self.preempt.is_empty() && self.rebucket.is_none()
+            && self.resume.is_empty() && self.admit.is_empty()
     }
 }
 
@@ -142,11 +202,23 @@ pub struct SchedulerConfig {
     /// arrivals. Off, the scheduler still ranks the queue but running
     /// work always drains naturally.
     pub preempt: bool,
+    /// How long the waiting sets must stay empty before a **shrink** is
+    /// planned — hysteresis against bucket thrash: each grow/shrink
+    /// costs a whole-bucket re-prefill, and a shrink destroys reusable
+    /// husk rows an intermittent arrival could have scatter-admitted
+    /// into for one cheap row prefill. The default means "no arrival
+    /// for several co-batch windows". Grows are never delayed (waiting
+    /// work is the trigger).
+    pub shrink_delay: std::time::Duration,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { batcher: BatcherConfig::default(), preempt: true }
+        SchedulerConfig {
+            batcher: BatcherConfig::default(),
+            preempt: true,
+            shrink_delay: std::time::Duration::from_millis(50),
+        }
     }
 }
 
@@ -157,6 +229,9 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     queue: Vec<QueuedReq>,
     parked: Vec<ParkedSeq>,
+    /// Start of the current no-waiting-work stretch (None while
+    /// anything is queued or parked) — the shrink-hysteresis clock.
+    idle_since: Option<Instant>,
     pub stats: SchedStats,
 }
 
@@ -166,6 +241,7 @@ impl Scheduler {
             cfg,
             queue: Vec::new(),
             parked: Vec::new(),
+            idle_since: None,
             stats: SchedStats::default(),
         }
     }
@@ -187,6 +263,14 @@ impl Scheduler {
     /// `SpecBatch::suspend`).
     pub fn park(&mut self, seq: ParkedSeq) {
         self.stats.preemptions += 1;
+        self.parked.push(seq);
+    }
+
+    /// Put a **planned resume back** without counting a new preemption:
+    /// the executor found no row for it (a planned grow failed to
+    /// materialize), so the snapshot returns to the parked set — intact,
+    /// `SpecBatch::resume` never consumed it — and re-ranks next round.
+    pub fn repark(&mut self, seq: ParkedSeq) {
         self.parked.push(seq);
     }
 
@@ -252,18 +336,40 @@ impl Scheduler {
         items.into_iter().map(|(u, _, n)| (u.priority, n)).collect()
     }
 
-    /// One decision round at a step boundary. `free` is the batch's free
-    /// slots, `running` the live sequences. `now` is read **once** by
-    /// the caller and threaded through every window check, so the
-    /// head-of-line co-batching window cannot be re-evaluated against a
-    /// drifting wall clock within one round (it used to be read in two
-    /// places per admission loop).
-    pub fn plan(&mut self, free: usize, running: &[RunningSeq],
+    /// One decision round at a step boundary. `batch` is the engine
+    /// batch's introspection view, `running` the live sequences. `now`
+    /// is read **once** by the caller and threaded through every window
+    /// check, so the head-of-line co-batching window cannot be
+    /// re-evaluated against a drifting wall clock within one round (it
+    /// used to be read in two places per admission loop).
+    pub fn plan(&mut self, batch: &BatchView, running: &[RunningSeq],
                 now: Instant) -> SchedPlan {
         self.sort();
         let mut plan = SchedPlan::default();
         let max_batch = self.cfg.batcher.max_batch.max(1);
-        let mut avail = free;
+        let mut avail = batch.free;
+
+        // -- live PAD re-bucketing (see the module docs' cost model) -------
+        {
+            let demand: usize = self.parked.len()
+                + self
+                    .queue
+                    .iter()
+                    .map(|q| q.n_seqs.min(max_batch))
+                    .sum::<usize>();
+            // The shrink-hysteresis clock runs regardless of the probe,
+            // so a batch that becomes shrinkable later (e.g. a pinned
+            // row finishing) sees the full idle stretch.
+            if demand > 0 {
+                self.idle_since = None;
+            } else if self.idle_since.is_none() {
+                self.idle_since = Some(now);
+            }
+            if let Some(probe) = batch.rebucket_target {
+                self.plan_rebucket(batch, probe, demand, &mut avail,
+                                   &mut plan, now);
+            }
+        }
 
         // -- preemption: free slots for strictly-higher-priority work ------
         if self.cfg.preempt
@@ -325,7 +431,12 @@ impl Scheduler {
                 enqueued: q.enqueued,
             })
             .collect();
-        let flush = !plan.preempt.is_empty() || !plan.resume.is_empty()
+        // A round that preempted, re-bucketed or resumed skips the
+        // co-batch window: work is already flowing (and a grow was
+        // *caused* by the waiting work — holding it back after paying
+        // the re-prefill would be pure waste).
+        let flush = !plan.preempt.is_empty() || plan.rebucket.is_some()
+            || !plan.resume.is_empty()
             || should_flush(&pendings, avail, &self.cfg.batcher, now);
         if flush {
             let (n_take, _) = plan_batch(&pendings, avail, &self.cfg.batcher);
@@ -339,6 +450,63 @@ impl Scheduler {
         let depth = self.queue.len();
         self.stats.note_depth(depth);
         plan
+    }
+
+    /// The grow/shrink decision of one round (see the module docs' cost
+    /// model). Grow: waiting demand and no reusable row left — free
+    /// rows (headroom, husks) must be consumed first, so a grow while
+    /// rows are still free is rejected by construction. Shrink: the
+    /// waiting sets have been empty for at least
+    /// [`SchedulerConfig::shrink_delay`] (hysteresis — a shrink
+    /// destroys reusable husk rows and an immediate re-grow would pay
+    /// two whole-bucket prefills for one intermittent arrival) and a
+    /// smaller bucket covers the occupancy.
+    fn plan_rebucket(&self, batch: &BatchView,
+                     probe: &dyn Fn(usize) -> Option<usize>,
+                     demand: usize, avail: &mut usize,
+                     plan: &mut SchedPlan, now: Instant) {
+        let Some(cur) = batch.bucket_rows else { return };
+        let max_batch = self.cfg.batcher.max_batch.max(1);
+        if demand > 0 {
+            // Grow when the *ranked head* cannot be placed in the free
+            // rows. Free rows that can place the head are consumed
+            // first (no grow for demand the headroom absorbs); but a
+            // head whose atomic fan-out exceeds the remaining free rows
+            // must grow NOW — plan_batch would otherwise hold it (and
+            // everything behind it) until enough of the bucket drained,
+            // the exact wait this mechanism removes.
+            let head_need = self
+                .waiting_in_rank_order()
+                .first()
+                .map_or(0, |&(_, n)| n.min(max_batch));
+            if *avail < head_need {
+                let desired = (batch.occupied + demand).min(max_batch);
+                if let Some(to) = probe(desired) {
+                    if to > cur {
+                        plan.rebucket = Some(desired);
+                        // The grown bucket's fresh Shadow rows are
+                        // admissible this same round (the old husks are
+                        // dropped by the move, so free = to - occupied).
+                        *avail = to - batch.occupied;
+                    }
+                }
+            }
+        } else if batch.occupied > 0 {
+            let idle_long_enough = self
+                .idle_since
+                .is_some_and(|t| now.duration_since(t)
+                    >= self.cfg.shrink_delay);
+            if !idle_long_enough {
+                return;
+            }
+            // `to < cur` also rejects the degenerate "grow to restore
+            // headroom" a fuller probe could suggest.
+            if let Some(to) = probe(batch.occupied) {
+                if to < cur {
+                    plan.rebucket = Some(batch.occupied);
+                }
+            }
+        }
     }
 }
 
@@ -356,11 +524,49 @@ mod tests {
                 window: Duration::from_millis(window_ms),
             },
             preempt,
+            // Most tests exercise the shrink *decision*, not the
+            // hysteresis clock — zero delay shrinks on the first idle
+            // round. `shrink_waits_out_the_idle_hysteresis` covers the
+            // clock itself.
+            shrink_delay: Duration::ZERO,
         })
     }
 
     fn urgency(priority: i32) -> Urgency {
         Urgency { priority, deadline: None }
+    }
+
+    /// A batch view with `free` slots and no re-bucketing capability
+    /// (SPLIT-like) — what most scheduling tests need.
+    fn view(free: usize) -> BatchView<'static> {
+        BatchView {
+            free,
+            occupied: 0,
+            bucket_rows: None,
+            rebucket_target: None,
+        }
+    }
+
+    /// A running-PAD view: `occupied` live rows of a `bucket`-row fused
+    /// bucket, probing re-buckets against the given bucket ladder
+    /// (smallest ladder entry >= desired, headroom 0, like
+    /// `SpecBatch::rebucket_target` with the exported buckets).
+    fn pad_view(occupied: usize, bucket: usize,
+                probe: &dyn Fn(usize) -> Option<usize>) -> BatchView<'_> {
+        BatchView {
+            free: bucket - occupied,
+            occupied,
+            bucket_rows: Some(bucket),
+            rebucket_target: Some(probe),
+        }
+    }
+
+    /// Probe emulating a [1, 2, 4, 8] bucket ladder at `cur` rows.
+    fn ladder_probe(cur: usize) -> impl Fn(usize) -> Option<usize> {
+        move |want: usize| {
+            let b = [1usize, 2, 4, 8].into_iter().find(|&b| b >= want)?;
+            (b != cur).then_some(b)
+        }
     }
 
     fn parked(owner: u64, priority: i32, enqueued: Instant) -> ParkedSeq {
@@ -389,7 +595,7 @@ mod tests {
         let mut s = sched(4, 1, true);
         s.submit(1, 1, urgency(0), t0);
         s.submit(2, 1, urgency(0), t0 + Duration::from_millis(1));
-        let plan = s.plan(4, &[], late(t0));
+        let plan = s.plan(&view(4), &[], late(t0));
         assert_eq!(plan.admit, vec![1, 2]);
         assert!(plan.preempt.is_empty() && plan.resume.is_empty());
     }
@@ -403,7 +609,7 @@ mod tests {
         // One free slot: only the high-priority request fits — and it
         // must be taken first despite arriving later (retiring FIFO-only
         // admission).
-        let plan = s.plan(1, &[], late(t0));
+        let plan = s.plan(&view(1), &[], late(t0));
         assert_eq!(plan.admit, vec![2]);
         assert_eq!(s.queue_depth(), 1);
     }
@@ -419,7 +625,7 @@ mod tests {
                  t0 + Duration::from_millis(1));
         s.submit(3, 1, Urgency { priority: 0, deadline: d_near },
                  t0 + Duration::from_millis(2));
-        let plan = s.plan(4, &[], late(t0));
+        let plan = s.plan(&view(4), &[], late(t0));
         // Deadlined work first (earliest first), then undeadlined FIFO —
         // but priority still dominates deadline across classes.
         assert_eq!(plan.admit, vec![3, 2, 1]);
@@ -432,7 +638,7 @@ mod tests {
         s.submit(9, 1, urgency(5), t0);
         // Batch full: two running seqs at priorities 0 and 3.
         let run = [running(10, 3), running(11, 0)];
-        let plan = s.plan(0, &run, late(t0));
+        let plan = s.plan(&view(0), &run, late(t0));
         assert_eq!(plan.preempt, vec![11], "weakest victim first");
         assert_eq!(plan.admit, vec![9]);
     }
@@ -442,7 +648,7 @@ mod tests {
         let t0 = Instant::now();
         let mut s = sched(1, 1, true);
         s.submit(9, 1, urgency(0), t0);
-        let plan = s.plan(0, &[running(10, 0)], late(t0));
+        let plan = s.plan(&view(0), &[running(10, 0)], late(t0));
         assert!(plan.preempt.is_empty(), "no equal-priority thrash");
         assert!(plan.admit.is_empty());
     }
@@ -459,7 +665,7 @@ mod tests {
             RunningSeq { id: 10, priority: 0, preemptible: false },
             running(11, 1),
         ];
-        let plan = s.plan(0, &run, late(t0));
+        let plan = s.plan(&view(0), &run, late(t0));
         assert_eq!(plan.preempt, vec![11]);
     }
 
@@ -468,11 +674,11 @@ mod tests {
         let t0 = Instant::now();
         let mut s = sched(1, 1, false);
         s.submit(9, 1, urgency(9), t0);
-        let plan = s.plan(0, &[running(10, 0)], late(t0));
+        let plan = s.plan(&view(0), &[running(10, 0)], late(t0));
         assert!(plan.preempt.is_empty());
         assert!(plan.admit.is_empty());
         // Once the slot frees naturally, the ranked head admits.
-        let plan = s.plan(1, &[], late(t0));
+        let plan = s.plan(&view(1), &[], late(t0));
         assert_eq!(plan.admit, vec![9]);
     }
 
@@ -487,7 +693,7 @@ mod tests {
         s.submit(8, 1, urgency(0), t0);
         let run = [running(10, 0), running(11, 1),
                    RunningSeq { id: 12, priority: 0, preemptible: false }];
-        let plan = s.plan(0, &run, late(t0));
+        let plan = s.plan(&view(0), &run, late(t0));
         assert_eq!(plan.preempt, vec![10, 11]);
         assert!(plan.admit.is_empty(),
                 "freed slots are reserved for the oversized head");
@@ -500,7 +706,7 @@ mod tests {
         let mut s = sched(4, 1, true);
         s.park(parked(1, 0, t0));
         s.submit(2, 1, urgency(0), t0 + Duration::from_millis(2));
-        let plan = s.plan(1, &[], late(t0));
+        let plan = s.plan(&view(1), &[], late(t0));
         // One slot: the parked sequence (earlier enqueue, same class)
         // resumes; the queued request waits.
         assert_eq!(plan.resume.len(), 1);
@@ -517,7 +723,7 @@ mod tests {
         let mut s = sched(4, 1, true);
         s.park(parked(1, 0, t0));
         s.submit(2, 1, urgency(5), t0 + Duration::from_millis(2));
-        let plan = s.plan(1, &[], late(t0));
+        let plan = s.plan(&view(1), &[], late(t0));
         assert_eq!(plan.admit, vec![2]);
         assert!(plan.resume.is_empty());
         assert_eq!(s.parked_count(), 1);
@@ -531,7 +737,7 @@ mod tests {
         let t0 = Instant::now();
         let mut s = sched(1, 1, true);
         s.park(parked(1, 5, t0));
-        let plan = s.plan(0, &[running(10, 0)], late(t0));
+        let plan = s.plan(&view(0), &[running(10, 0)], late(t0));
         assert_eq!(plan.preempt, vec![10]);
         assert_eq!(plan.resume.len(), 1);
         assert_eq!(plan.resume[0].owner, 1);
@@ -544,7 +750,7 @@ mod tests {
         let t0 = Instant::now();
         let mut s = sched(2, 50, true);
         s.submit(9, 1, urgency(5), t0);
-        let plan = s.plan(0, &[running(10, 0)], t0); // window NOT expired
+        let plan = s.plan(&view(0), &[running(10, 0)], t0); // window NOT expired
         assert_eq!(plan.preempt, vec![10]);
         assert_eq!(plan.admit, vec![9]);
     }
@@ -556,9 +762,9 @@ mod tests {
         let t0 = Instant::now();
         let mut s = sched(4, 50, true);
         s.submit(1, 1, urgency(0), t0);
-        let plan = s.plan(4, &[], t0 + Duration::from_millis(1));
+        let plan = s.plan(&view(4), &[], t0 + Duration::from_millis(1));
         assert!(plan.is_empty(), "young head must wait out the window");
-        let plan = s.plan(4, &[], t0 + Duration::from_millis(60));
+        let plan = s.plan(&view(4), &[], t0 + Duration::from_millis(60));
         assert_eq!(plan.admit, vec![1]);
     }
 
@@ -572,7 +778,7 @@ mod tests {
         let mut s = sched(8, 50, true);
         s.submit(1, 1, urgency(0), t0);
         s.submit(2, 1, urgency(5), t0 + Duration::from_millis(49));
-        let plan = s.plan(8, &[], t0 + Duration::from_millis(51));
+        let plan = s.plan(&view(8), &[], t0 + Duration::from_millis(51));
         assert_eq!(plan.admit, vec![2, 1],
                    "oldest waiter's window expired: admit in rank order");
     }
@@ -585,10 +791,196 @@ mod tests {
         let t0 = Instant::now();
         let mut s = sched(4, 1, true);
         s.submit(1, 9, urgency(0), t0);
-        let plan = s.plan(3, &[running(10, 0)], late(t0));
+        let plan = s.plan(&view(3), &[running(10, 0)], late(t0));
         assert!(plan.admit.is_empty(), "partial batch: head waits");
-        let plan = s.plan(4, &[], late(t0));
+        let plan = s.plan(&view(4), &[], late(t0));
         assert_eq!(plan.admit, vec![1]);
+    }
+
+    #[test]
+    fn grow_proposed_when_rows_exhausted() {
+        // Bucket of 4 fully live, two queued singles: the plan grows the
+        // bucket (desired = occupied + demand = 6 -> ladder 8) and
+        // admits into the fresh rows in the same round — no window wait,
+        // no drain, no preemption.
+        let t0 = Instant::now();
+        let mut s = sched(8, 50, true);
+        s.submit(1, 1, urgency(0), t0);
+        s.submit(2, 1, urgency(0), t0 + Duration::from_millis(1));
+        let probe = ladder_probe(4);
+        let plan = s.plan(&pad_view(4, 4, &probe), &[], t0); // window young
+        assert_eq!(plan.rebucket, Some(6));
+        assert_eq!(plan.admit, vec![1, 2],
+                   "grown rows admit immediately (no window re-wait)");
+        assert!(plan.preempt.is_empty(),
+                "growing beats evicting equal-priority work");
+    }
+
+    #[test]
+    fn grow_rejected_while_headroom_rows_free() {
+        // The same demand against a bucket that still has reusable rows
+        // (--pad-headroom grow-room or husks): no grow — the free rows
+        // must be consumed first (they admit the head right now).
+        let t0 = Instant::now();
+        let mut s = sched(8, 1, true);
+        s.submit(1, 1, urgency(0), t0);
+        s.submit(2, 1, urgency(0), t0);
+        s.submit(3, 1, urgency(0), t0);
+        let probe = ladder_probe(4);
+        // 3 live of 4: one headroom row free, demand 3 > free 1.
+        let plan = s.plan(&pad_view(3, 4, &probe), &[], late(t0));
+        assert_eq!(plan.rebucket, None,
+                   "free headroom row must be consumed before growing");
+        assert_eq!(plan.admit, vec![1], "the free row still admits");
+        assert_eq!(s.queue_depth(), 2);
+    }
+
+    #[test]
+    fn grow_when_fanout_head_exceeds_free_rows() {
+        // One husk row free, but the ranked head is an atomic fan-out of
+        // 4: plan_batch would hold it (and everything behind it) until
+        // the bucket drained. The head's need, not bare row exhaustion,
+        // drives the grow — and the burst admits in the same round.
+        let t0 = Instant::now();
+        let mut s = sched(8, 1, true);
+        s.submit(1, 4, urgency(0), t0);
+        let probe = ladder_probe(4);
+        let plan = s.plan(&pad_view(3, 4, &probe), &[], late(t0));
+        assert_eq!(plan.rebucket, Some(7), "occupied 3 + demand 4");
+        assert_eq!(plan.admit, vec![1],
+                   "the fan-out head admits into the grown rows");
+        // The flip side: a head the free row CAN place never grows.
+        let mut s = sched(8, 1, true);
+        s.submit(1, 1, urgency(0), t0);
+        let plan = s.plan(&pad_view(3, 4, &probe), &[], late(t0));
+        assert_eq!(plan.rebucket, None);
+        assert_eq!(plan.admit, vec![1]);
+    }
+
+    #[test]
+    fn grow_capped_by_max_batch_and_ladder() {
+        // Demand far beyond the serving cap: desired clamps to
+        // max_batch; an unsatisfiable probe (ladder exhausted) plans no
+        // grow at all.
+        let t0 = Instant::now();
+        let mut s = sched(8, 1, true);
+        s.submit(1, 40, urgency(0), t0);
+        let probe = ladder_probe(4);
+        let plan = s.plan(&pad_view(4, 4, &probe), &[], late(t0));
+        assert_eq!(plan.rebucket, Some(8), "desired = occupied+demand cap");
+        // Already at the largest bucket: probe declines, nothing planned.
+        let probe8 = ladder_probe(8);
+        let mut s = sched(8, 1, true);
+        s.submit(1, 40, urgency(0), t0);
+        let plan = s.plan(&pad_view(8, 8, &probe8), &[], late(t0));
+        assert_eq!(plan.rebucket, None);
+    }
+
+    #[test]
+    fn shrink_when_idle_occupancy_fits_smaller_bucket() {
+        // Nothing waiting, one live row of an 8-row bucket: shrink to
+        // the occupancy (the engine maps it to a bucket, headroom
+        // re-applied). No admissions are planned — there is nothing to
+        // admit.
+        let t0 = Instant::now();
+        let mut s = sched(8, 1, true);
+        let probe = ladder_probe(8);
+        let plan = s.plan(&pad_view(1, 8, &probe), &[], late(t0));
+        assert_eq!(plan.rebucket, Some(1));
+        assert!(plan.admit.is_empty() && plan.resume.is_empty());
+    }
+
+    #[test]
+    fn no_shrink_with_waiting_or_full_occupancy() {
+        let t0 = Instant::now();
+        // Waiting work: the round is a grow/admission round, never a
+        // shrink (here the parked seq fits the free rows -> no rebucket
+        // at all).
+        let mut s = sched(8, 1, true);
+        s.park(parked(1, 0, t0));
+        let probe = ladder_probe(8);
+        let plan = s.plan(&pad_view(1, 8, &probe), &[], late(t0));
+        assert_eq!(plan.rebucket, None);
+        assert_eq!(plan.resume.len(), 1);
+        // Occupancy matching the bucket: probe returns the same bucket,
+        // nothing planned.
+        let mut s = sched(8, 1, true);
+        let probe4 = ladder_probe(4);
+        let plan = s.plan(&pad_view(4, 4, &probe4), &[], late(t0));
+        assert_eq!(plan.rebucket, None);
+    }
+
+    #[test]
+    fn shrink_waits_out_the_idle_hysteresis() {
+        // A shrink only fires after the waiting sets have been empty
+        // for `shrink_delay` — an intermittent arrival inside the
+        // window resets the clock, so bursty traffic cannot thrash the
+        // bucket with grow/shrink re-prefill pairs.
+        let t0 = Instant::now();
+        let mut s = Scheduler::new(SchedulerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                window: Duration::from_millis(1),
+            },
+            preempt: true,
+            shrink_delay: Duration::from_millis(100),
+        });
+        let probe = ladder_probe(8);
+        // First idle round arms the clock; no shrink yet.
+        let plan = s.plan(&pad_view(1, 8, &probe), &[], t0);
+        assert_eq!(plan.rebucket, None, "idle clock just armed");
+        // Still inside the window: no shrink.
+        let plan = s.plan(&pad_view(1, 8, &probe),
+                          &[], t0 + Duration::from_millis(50));
+        assert_eq!(plan.rebucket, None);
+        // An arrival resets the clock (and is admitted into free rows
+        // once its co-batch window expires).
+        s.submit(1, 1, urgency(0), t0 + Duration::from_millis(60));
+        let plan = s.plan(&pad_view(1, 8, &probe),
+                          &[], t0 + Duration::from_millis(62));
+        assert_eq!(plan.admit, vec![1]);
+        assert_eq!(plan.rebucket, None);
+        // The next idle round re-arms the clock at 70ms; 50ms later is
+        // still inside the window, 105ms later shrinks.
+        let plan = s.plan(&pad_view(2, 8, &probe),
+                          &[], t0 + Duration::from_millis(70));
+        assert_eq!(plan.rebucket, None, "clock re-armed, not expired");
+        let plan = s.plan(&pad_view(2, 8, &probe),
+                          &[], t0 + Duration::from_millis(120));
+        assert_eq!(plan.rebucket, None, "50ms since re-arm < 100ms");
+        let plan = s.plan(&pad_view(2, 8, &probe),
+                          &[], t0 + Duration::from_millis(175));
+        assert_eq!(plan.rebucket, Some(2));
+    }
+
+    #[test]
+    fn rebucket_never_planned_without_a_probe() {
+        // SPLIT (or a not-yet-started PAD batch) exposes no probe: the
+        // exhausted-batch round degrades to plain waiting exactly as
+        // before re-bucketing existed.
+        let t0 = Instant::now();
+        let mut s = sched(4, 1, true);
+        s.submit(1, 1, urgency(0), t0);
+        let plan = s.plan(&view(0), &[], late(t0));
+        assert!(plan.rebucket.is_none() && plan.admit.is_empty());
+    }
+
+    #[test]
+    fn grow_spares_equal_priority_running_work_from_preemption() {
+        // Preemption requires strictly-higher priority; a grow serves
+        // the high-priority arrival without evicting anyone when the
+        // ladder still has room — the freed rows cover the head, so the
+        // victim loop never fires.
+        let t0 = Instant::now();
+        let mut s = sched(8, 1, true);
+        s.submit(9, 1, urgency(5), t0);
+        let probe = ladder_probe(2);
+        let plan = s.plan(&pad_view(2, 2, &probe),
+                          &[running(10, 0), running(11, 0)], late(t0));
+        assert_eq!(plan.rebucket, Some(3));
+        assert_eq!(plan.admit, vec![9]);
+        assert!(plan.preempt.is_empty(),
+                "grown rows make the eviction unnecessary");
     }
 
     #[test]
@@ -610,7 +1002,7 @@ mod tests {
         s.submit(1, 1, urgency(0), t0);
         s.submit(2, 1, urgency(7), t0);
         assert_eq!(s.stats.max_queue_depth, 2);
-        let plan = s.plan(4, &[], t0 + Duration::from_millis(100));
+        let plan = s.plan(&view(4), &[], t0 + Duration::from_millis(100));
         assert_eq!(plan.admit.len(), 2);
         assert_eq!(s.stats.queue_depth, 0);
         assert!(s.stats.mean_wait_secs(0) >= 0.1);

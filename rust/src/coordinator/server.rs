@@ -44,7 +44,12 @@
 //! arrivals into freed rows of the running fused cache, SPLIT prefills
 //! per-slot caches; neither waits for a drain (PAD needs v3 artifacts —
 //! rebuild with `make artifacts` if the manifest version check rejects
-//! yours; `--pad-headroom` starts PAD buckets with grow-room rows).
+//! yours; `--pad-headroom` starts PAD buckets with grow-room rows). A
+//! burst larger than the running PAD bucket no longer waits either: the
+//! scheduler **re-buckets the live batch** — grows the fused bucket by
+//! recompute (and shrinks it when mostly empty) with no drain and no
+//! artifact rebuild; the response's `"rebuckets"` counter echoes how
+//! often the serving engine has done so.
 //! Sampling parameters (temperature / top-p) are honored **per request**
 //! even across co-batched traffic — the engine threads them per-row
 //! through the fused draft call and the verify-side warp; the server's
@@ -195,6 +200,7 @@ pub fn response_json(resp: &super::Response) -> Json {
         ("queue_ms", (resp.queue_secs * 1e3).into()),
         ("preempted", resp.preempted.into()),
         ("queue_depth", resp.queue_depth.into()),
+        ("rebuckets", (resp.rebuckets as usize).into()),
         ("seqs", Json::Arr(resp.seqs.iter().map(|s| {
             Json::obj(vec![
                 ("text", s.text.as_str().into()),
@@ -274,16 +280,19 @@ mod tests {
             queue_secs: 0.0,
             preempted: 2,
             queue_depth: 3,
+            rebuckets: 5,
         };
         let j = response_json(&resp);
         // A client compares n_requested to seqs.len() to detect the
         // engine's fan-out clamp.
         assert_eq!(j.get("n_requested").unwrap().as_usize().unwrap(), 9);
         assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
-        // Scheduler echoes: how often this request was preempted, and the
-        // queue depth when it was answered.
+        // Scheduler echoes: how often this request was preempted, the
+        // queue depth when it was answered, and the engine's live
+        // re-bucket count (grow/shrink of the running PAD bucket).
         assert_eq!(j.get("preempted").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("rebuckets").unwrap().as_usize().unwrap(), 5);
     }
 
     #[test]

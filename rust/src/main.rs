@@ -8,9 +8,10 @@
 //!   **preemptively scheduled** coordinator (mid-flight admission in both
 //!   `--mode pad` and `--mode split`; wire `"priority"`/`"deadline_ms"`
 //!   rank requests and may suspend/resume running work — disable with
-//!   `--no-preempt`; `--pad-headroom N` starts PAD buckets with N
-//!   grow-room rows; requests may set `"stream": true` for per-step
-//!   event lines).
+//!   `--no-preempt`; running PAD buckets **grow and shrink live** under
+//!   bursty load, no drain or artifact rebuild; `--pad-headroom N`
+//!   starts PAD buckets with N grow-room rows; requests may set
+//!   `"stream": true` for per-step event lines).
 //! * `eval`      — run a task (`--task code|summ`) and report accuracy.
 //! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
 //! * `info`      — print the manifest summary.

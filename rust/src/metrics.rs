@@ -91,11 +91,33 @@ pub struct SchedStats {
     pub preemptions: u64,
     /// Suspended sequences re-admitted by recompute.
     pub resumes: u64,
+    /// Live PAD re-buckets that **grew** the running fused bucket (a
+    /// burst larger than its reusable rows, served without a drain).
+    pub rebuckets_grow: u64,
+    /// Live PAD re-buckets that **shrank** the bucket (idle occupancy
+    /// covered by a smaller bucket; cuts dead rows from every fused
+    /// step).
+    pub rebuckets_shrink: u64,
+    /// Real rows re-encoded across all re-buckets; divide by
+    /// [`SchedStats::rebuckets`] for the per-re-bucket migrated-row
+    /// count.
+    pub rebucket_migrated: u64,
     /// Requests waiting in the scheduler queue right now (gauge,
     /// refreshed at every planning boundary).
     pub queue_depth: usize,
     /// High-water mark of `queue_depth`.
     pub max_queue_depth: usize,
+    /// Bucket-occupancy gauge: live real rows vs the fused bucket's
+    /// rows, refreshed at every planning boundary ((0, 0) for SPLIT or
+    /// an idle engine). Sustained low occupancy is the shrink signal;
+    /// occupancy pinned at 1.0 with queued work is the grow signal.
+    pub bucket_live: usize,
+    pub bucket_rows: usize,
+    /// Lifetime aggregate of the gauge over rounds where a fused bucket
+    /// was running — `mean_bucket_occupancy` in the worker-exit summary
+    /// is the `--pad-headroom` / `shrink_delay` tuning signal.
+    pub occupancy_sum: f64,
+    pub occupancy_rounds: u64,
     /// priority -> aggregated admission waits (queue time before the
     /// request first entered the engine batch).
     pub queue_wait: BTreeMap<i32, QueueWait>,
@@ -113,6 +135,53 @@ impl SchedStats {
     pub fn note_depth(&mut self, depth: usize) {
         self.queue_depth = depth;
         self.max_queue_depth = self.max_queue_depth.max(depth);
+    }
+
+    /// Count one **executed** live re-bucket (after `SpecBatch::rebucket`
+    /// returned an outcome — never at plan time, mirroring
+    /// preemption/resume counting).
+    pub fn note_rebucket(&mut self, grow: bool, migrated: usize) {
+        if grow {
+            self.rebuckets_grow += 1;
+        } else {
+            self.rebuckets_shrink += 1;
+        }
+        self.rebucket_migrated += migrated as u64;
+    }
+
+    /// Total live re-buckets (grow + shrink) — what the response JSON
+    /// echoes as `"rebuckets"`.
+    pub fn rebuckets(&self) -> u64 {
+        self.rebuckets_grow + self.rebuckets_shrink
+    }
+
+    /// Refresh the bucket-occupancy gauge (and, while a bucket is
+    /// actually running, fold it into the lifetime mean).
+    pub fn note_bucket(&mut self, live: usize, rows: usize) {
+        self.bucket_live = live;
+        self.bucket_rows = rows;
+        if rows > 0 {
+            self.occupancy_rounds += 1;
+            self.occupancy_sum += live as f64 / rows as f64;
+        }
+    }
+
+    /// Live rows over bucket rows (0 when no fused bucket is running).
+    pub fn bucket_occupancy(&self) -> f64 {
+        if self.bucket_rows == 0 {
+            0.0
+        } else {
+            self.bucket_live as f64 / self.bucket_rows as f64
+        }
+    }
+
+    /// Mean occupancy across bucket-running rounds (0 when none ran).
+    pub fn mean_bucket_occupancy(&self) -> f64 {
+        if self.occupancy_rounds == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.occupancy_rounds as f64
+        }
     }
 
     /// Record one request's admission wait under its priority class.
@@ -184,8 +253,8 @@ mod tests {
 
     #[test]
     fn ptl_first_last_mean() {
-        let seqs = vec![seq_with(10, 1.0), seq_with(10, 2.0),
-                        seq_with(5, 1.5)];
+        let seqs = [seq_with(10, 1.0), seq_with(10, 2.0),
+                    seq_with(5, 1.5)];
         let m = BatchMetrics::from_seqs(&seqs, 2.0);
         assert!((m.ptl_first - 0.1).abs() < 1e-9);
         assert!((m.ptl_last - 0.3).abs() < 1e-9);
@@ -205,7 +274,7 @@ mod tests {
 
     #[test]
     fn zero_token_seqs_skipped() {
-        let seqs = vec![seq_with(0, 1.0), seq_with(10, 1.0)];
+        let seqs = [seq_with(0, 1.0), seq_with(10, 1.0)];
         let m = BatchMetrics::from_seqs(&seqs, 1.0);
         assert_eq!(m.ptl.len(), 1);
     }
@@ -243,6 +312,27 @@ mod tests {
         s.preemptions += 1;
         s.resumes += 1;
         assert_eq!((s.preemptions, s.resumes), (1, 1));
+    }
+
+    #[test]
+    fn sched_stats_track_rebuckets_and_occupancy() {
+        let mut s = SchedStats::default();
+        assert_eq!(s.rebuckets(), 0);
+        assert_eq!(s.bucket_occupancy(), 0.0, "no bucket: occupancy 0");
+        s.note_rebucket(true, 3); // grow carrying 3 rows
+        s.note_rebucket(true, 1);
+        s.note_rebucket(false, 2); // shrink carrying 2 rows
+        assert_eq!(s.rebuckets_grow, 2);
+        assert_eq!(s.rebuckets_shrink, 1);
+        assert_eq!(s.rebuckets(), 3);
+        assert_eq!(s.rebucket_migrated, 6);
+        s.note_bucket(3, 4);
+        assert!((s.bucket_occupancy() - 0.75).abs() < 1e-12);
+        s.note_bucket(1, 4);
+        s.note_bucket(0, 0); // idle / SPLIT: gauge zero, mean unaffected
+        assert_eq!(s.bucket_occupancy(), 0.0);
+        assert_eq!(s.occupancy_rounds, 2);
+        assert!((s.mean_bucket_occupancy() - 0.5).abs() < 1e-12);
     }
 
     #[test]

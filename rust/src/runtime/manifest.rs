@@ -270,6 +270,12 @@ impl Manifest {
         best.max(buckets[0])
     }
 
+    /// Largest exported batch bucket (0 when none are exported) — the
+    /// ceiling a live PAD re-bucket may grow to.
+    pub fn largest_batch(&self) -> usize {
+        self.batches.iter().copied().max().unwrap_or(0)
+    }
+
     /// Smallest exported batch bucket that fits `n` sequences.
     pub fn bucket_batch(&self, n: usize) -> Result<usize> {
         self.batches
@@ -290,8 +296,7 @@ impl Manifest {
     /// (`SpecConfig::pad_headroom`).
     pub fn bucket_batch_padded(&self, n: usize, headroom: usize,
                                cap: usize) -> Result<usize> {
-        let largest = self.batches.iter().copied().max().unwrap_or(0);
-        let want = (n + headroom).min(cap).min(largest).max(n);
+        let want = (n + headroom).min(cap).min(self.largest_batch()).max(n);
         self.bucket_batch(want)
     }
 }
@@ -371,6 +376,7 @@ mod tests {
         assert_eq!(m.bucket_batch(3).unwrap(), 4);
         assert_eq!(m.bucket_batch(1).unwrap(), 1);
         assert!(m.bucket_batch(5).is_err());
+        assert_eq!(m.largest_batch(), 4);
     }
 
     #[test]

@@ -1,0 +1,631 @@
+//! Mode-agnostic exec backends: everything that used to branch on
+//! [`ExecMode`] inside the spec engine lives behind the [`Backend`]
+//! trait, so the batch orchestrator ([`super::SpecBatch`]) is written
+//! once against the contract below and [`PadBackend`] / [`SplitBackend`]
+//! own the device caches and the mode-specific row lifecycle.
+//!
+//! # The backend contract
+//!
+//! A backend owns the device KV caches and answers five questions for
+//! the orchestrator, which owns the [`Row`] table and all host-side
+//! sequence state:
+//!
+//! 1. **Where can work land?** [`Backend::free_slots`] /
+//!    [`Backend::admissible_row`]. SPLIT: `Free` rows. PAD before the
+//!    lazy start: `Free` rows of the capacity table. A *running* PAD
+//!    bucket: reusable `Husk`/`Shadow` rows of the fused bucket.
+//! 2. **How does a context get device KV?** [`Backend::bind_row`] binds
+//!    `ctx` (a fresh prompt, or a resume's `prompt ‖ generated`) to a
+//!    row *before* the orchestrator installs its [`Slot`]. SPLIT runs a
+//!    per-slot B=1 prefill; a running PAD bucket scatter-prefills the
+//!    row via the v3 `prefill_scatter` artifacts; a not-yet-started PAD
+//!    batch defers to [`Backend::start`], which bucketizes (headroom
+//!    applied), pads with `Shadow` rows and runs one fused prefill.
+//! 3. **How does a step execute?** [`Backend::draft`] /
+//!    [`Backend::verify`] take the orchestrator-assembled per-row I/O
+//!    ([`DraftIo`] / [`VerifyIo`]) and run the fused artifact (PAD) or
+//!    per-slot B=1 artifacts skipping inactive rows (SPLIT).
+//! 4. **How does a row free?** [`Backend::release`] takes the [`Slot`]
+//!    out (retire/suspend): SPLIT drops the slot's caches and leaves
+//!    `Free`; a running PAD bucket leaves a `Husk` so the fused
+//!    artifact keeps valid length inputs. [`Backend::reset`] drops all
+//!    device state on drain (the orchestrator resets rows/clock/policy).
+//! 5. **Can the live batch re-shape?** [`Backend::live_bucket`] /
+//!    [`Backend::rebucket`]. Only PAD has a fused bucket:
+//!    re-bucketing re-encodes every carried `Seq` row's context with
+//!    one fused prefill at the new bucket — the same bitwise recompute
+//!    primitive as resume, so carried sequences are byte-exact — and
+//!    replaces `Husk`/`Shadow` rows with fresh `Shadow` grow-room. The
+//!    old caches are replaced only after the new prefill succeeds, so a
+//!    device failure leaves the running bucket intact. SPLIT declines
+//!    (`live_bucket` = None): its slots are per-sequence, there is
+//!    nothing to re-shape.
+//!
+//! The *only* place an [`ExecMode`] becomes concrete is [`make`]; no
+//! other code in `spec/` may match on the mode.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::flops::FlopCounter;
+use crate::kv::SeqState;
+use crate::runtime::{Engine, ModelInfo};
+use crate::sampling::Pcg32;
+
+use super::config::{ExecMode, SpecConfig};
+use super::seq::{Row, Slot};
+
+/// What the orchestrator lends a backend for device work: the engine,
+/// the batch configuration, and the prefill accounting sinks (draft and
+/// verify timing stays orchestrator-side, around the step calls).
+pub(super) struct ExecCtx<'a> {
+    pub engine: &'a Engine,
+    pub cfg: &'a SpecConfig,
+    pub main_info: &'a ModelInfo,
+    pub draft_info: &'a ModelInfo,
+    pub prefill_secs: &'a mut f64,
+    pub flops: &'a mut FlopCounter,
+}
+
+/// Orchestrator-assembled per-row inputs of one fused draft call
+/// (`b = stepping.len()` rows; see `Engine::draft` for the layouts).
+pub(super) struct DraftIo<'a> {
+    pub k: usize,
+    pub tokens_in: &'a [i32],
+    pub n_in: &'a [i32],
+    pub dlens: &'a [i32],
+    pub uniforms: &'a [f32],
+    pub temps: &'a [f32],
+    pub tps: &'a [f32],
+    /// Rows holding a still-active sequence (SPLIT skips the rest; the
+    /// fused PAD call computes every row regardless).
+    pub stepping: &'a [bool],
+}
+
+/// Per-row inputs of one verify (main-model decode) call.
+pub(super) struct VerifyIo<'a> {
+    pub q: usize,
+    pub vtokens: &'a [i32],
+    pub mlens: &'a [i32],
+    pub stepping: &'a [bool],
+}
+
+/// The exec-backend contract (see the module docs for the narrative).
+pub(super) trait Backend {
+    /// Device caches exist — the batch has started stepping. SPLIT is
+    /// always "started" (slots own their caches); PAD flips at the lazy
+    /// fused prefill.
+    fn started(&self) -> bool;
+
+    /// Rows a new admission/resume could bind right now.
+    fn free_slots(&self, rows: &[Row]) -> usize;
+
+    /// The row the next admission/resume binds to (the error names the
+    /// mode-specific reason nothing is available).
+    fn admissible_row(&self, rows: &[Row]) -> Result<usize>;
+
+    /// Give `ctx` (a fresh prompt, or a resume's `prompt ‖ generated`)
+    /// device KV in `row`, before the caller installs the [`Slot`].
+    fn bind_row(&mut self, cx: &mut ExecCtx, rows: &[Row], row: usize,
+                ctx: &[u8]) -> Result<()>;
+
+    /// Lazy start before the first step (PAD: bucketize + shadow-pad +
+    /// fused prefill; SPLIT: no-op). Only called while `!started()`.
+    fn start(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
+             capacity: usize) -> Result<()>;
+
+    /// One draft call over the batch; returns `([B,K] tokens, [B,K,V]
+    /// q-distributions)`.
+    fn draft(&mut self, cx: &mut ExecCtx, io: &DraftIo)
+             -> Result<(Vec<i32>, Vec<f32>)>;
+
+    /// One verify (main decode) call; returns `[B,Q,V]` logits.
+    fn verify(&mut self, cx: &mut ExecCtx, io: &VerifyIo)
+              -> Result<Vec<f32>>;
+
+    /// Take the [`Slot`] out of a released (retired/suspended) row,
+    /// leaving the mode's placeholder behind and dropping any per-slot
+    /// caches.
+    fn release(&mut self, rows: &mut [Row], idx: usize) -> Slot;
+
+    /// Drop all device state (drain auto-reset); the orchestrator
+    /// resets the row table, clock and policy.
+    fn reset(&mut self);
+
+    /// Rows of the live fused bucket — `None` for SPLIT or a PAD batch
+    /// that has not started.
+    fn live_bucket(&self, rows: &[Row]) -> Option<usize>;
+
+    /// Re-shape the running fused batch to `bucket` rows without a
+    /// drain; returns the number of carried (re-encoded) real rows.
+    fn rebucket(&mut self, _cx: &mut ExecCtx, _rows: &mut Vec<Row>,
+                _bucket: usize) -> Result<usize> {
+        bail!("this backend has no fused bucket to re-shape");
+    }
+}
+
+/// The one place an [`ExecMode`] becomes a concrete backend.
+pub(super) fn make(cfg: &SpecConfig, capacity: usize) -> Box<dyn Backend> {
+    match cfg.mode {
+        ExecMode::Pad => Box::new(PadBackend { store: None }),
+        ExecMode::Split => Box::new(SplitBackend {
+            main: (0..capacity).map(|_| Vec::new()).collect(),
+            draft: (0..capacity).map(|_| Vec::new()).collect(),
+        }),
+    }
+}
+
+/// Right-pad `ctx` into a prefill token window of `p`, tail-clamped: a
+/// context longer than the window keeps its tail. The clamp only ever
+/// fires for rows whose outputs are never read again (finished rows
+/// carried across a live re-bucket; the shadow padding replicating
+/// them) — exact-recompute preconditions reject clamping a live row.
+fn encode_window(ctx: &[u8], p: usize) -> (Vec<i32>, i32) {
+    let tail = if ctx.len() > p { &ctx[ctx.len() - p..] } else { ctx };
+    let mut tokens = vec![0i32; p];
+    for (j, &byte) in tail.iter().enumerate() {
+        tokens[j] = byte as i32;
+    }
+    (tokens, tail.len() as i32)
+}
+
+// ---------------------------------------------------------------------
+// BASS-PAD: one fused artifact padded to the batch bucket.
+// ---------------------------------------------------------------------
+
+/// Fused-bucket backend. `store` holds both models' fused cache buffers
+/// once the lazy start ran; the bucket is `rows.len()` from then on.
+pub(super) struct PadBackend {
+    /// (main caches, draft caches); `None` until the fused prefill.
+    store: Option<(Vec<PjRtBuffer>, Vec<PjRtBuffer>)>,
+}
+
+impl PadBackend {
+    /// Re-encode the batch at `bucket` rows: keep `Seq` rows (in slot
+    /// order), drop `Husk`/`Shadow` rows, pad with fresh `Shadow` rows
+    /// replicating the last real context, and run the fused prefill for
+    /// both models over every row's context (tail-clamped only for rows
+    /// whose outputs are dead — active rows are precondition-checked by
+    /// the caller). Commits rows and caches **only on success**, so a
+    /// failed prefill leaves a running bucket untouched. Returns the
+    /// number of carried real rows.
+    ///
+    /// Rows are encoded from their full `prompt ‖ generated` context, so
+    /// sequences resumed before the start — and every row carried across
+    /// a re-bucket — prefill their pre-existing output too: the bitwise
+    /// recompute that makes both paths byte-exact.
+    fn fused_prefill(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
+                     bucket: usize) -> Result<usize> {
+        let cfg = cx.cfg;
+        let eng = cx.engine;
+        let p = eng.manifest.prefill_p;
+        let real_ctx: Vec<Vec<u8>> = rows
+            .iter()
+            .filter_map(|r| match r {
+                Row::Seq(s) => Some(s.state.context_tail(p)),
+                _ => None,
+            })
+            .collect();
+        let n_real = real_ctx.len();
+        if n_real == 0 {
+            bail!("cannot start an empty PAD batch");
+        }
+        if bucket < n_real {
+            bail!("bucket {bucket} cannot hold {n_real} occupied rows");
+        }
+        let last_ctx = real_ctx.last().expect("n_real >= 1").clone();
+        let mut tokens = vec![0i32; bucket * p];
+        let mut plens = vec![0i32; bucket];
+        for i in 0..bucket {
+            let ctx = if i < n_real { &real_ctx[i] } else { &last_ctx };
+            let (t, l) = encode_window(ctx, p);
+            tokens[i * p..(i + 1) * p].copy_from_slice(&t);
+            plens[i] = l;
+        }
+        let t0 = Instant::now();
+        let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn,
+                            bucket, &tokens, &plens)?;
+        let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn,
+                            bucket, &tokens, &plens)?;
+        *cx.prefill_secs += t0.elapsed().as_secs_f64();
+        cx.flops.add_prefill(cx.main_info, bucket, p);
+        cx.flops.add_prefill(cx.draft_info, bucket, p);
+        // Commit: compact Seq rows to the front, fresh Shadow padding
+        // after them (exactly the padded rows the fused artifact
+        // computes anyway).
+        let mut new_rows: Vec<Row> = std::mem::take(rows)
+            .into_iter()
+            .filter(|r| matches!(r, Row::Seq(_)))
+            .collect();
+        for i in n_real..bucket {
+            let state = SeqState::new(last_ctx.clone(),
+                                      *last_ctx.last().expect("non-empty"),
+                                      last_ctx.len() as i32);
+            new_rows.push(Row::Shadow(Slot {
+                id: u64::MAX, // never reported
+                state,
+                rng_draft: Pcg32::new(cfg.seed, 2 * i as u64),
+                rng_accept: Pcg32::new(cfg.seed, 2 * i as u64 + 1),
+                max_new_tokens: cfg.max_new_tokens,
+                temperature: cfg.temperature,
+                top_p: cfg.top_p,
+            }));
+        }
+        *rows = new_rows;
+        self.store = Some((m.caches, d.caches));
+        Ok(n_real)
+    }
+}
+
+impl Backend for PadBackend {
+    fn started(&self) -> bool {
+        self.store.is_some()
+    }
+
+    fn free_slots(&self, rows: &[Row]) -> usize {
+        if self.started() {
+            // Reusable rows of the running fused bucket: retired/suspended
+            // Husks and padding Shadows a mid-flight admission/resume
+            // scatter-prefills over. Growing past them takes a re-bucket.
+            rows.iter()
+                .filter(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+                .count()
+        } else {
+            rows.iter().filter(|r| r.is_free()).count()
+        }
+    }
+
+    fn admissible_row(&self, rows: &[Row]) -> Result<usize> {
+        if self.started() {
+            rows.iter()
+                .position(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+                .ok_or_else(|| {
+                    anyhow!("no reusable PAD row (bucket of {} fully \
+                             live; wait for a retirement, a re-bucket, \
+                             or the drain)",
+                            rows.len())
+                })
+        } else {
+            rows.iter().position(Row::is_free).ok_or_else(|| {
+                anyhow!("no free slot (capacity {})", rows.len())
+            })
+        }
+    }
+
+    /// Mid-flight scatter-prefill of `ctx` into a reusable row of the
+    /// running fused bucket (both models); a no-op before the lazy
+    /// start, which encodes the row itself. The row's whole KV slice is
+    /// replaced, so the previous occupant cannot leak into the new
+    /// sequence, and no other row is touched. Resolving + compiling the
+    /// scatter executables first means the likely failures (stale
+    /// pre-v3 artifact set, bucket not exported) reject only this
+    /// admission/resume and leave the running batch intact — as do
+    /// upload failures inside `prefill_into_slot`, which consumes the
+    /// fused caches only at the execute itself. Only an execute failure
+    /// (post-donation) is batch-fatal: the next step errors and the
+    /// serving layer's recovery path rebuilds a fresh batch.
+    fn bind_row(&mut self, cx: &mut ExecCtx, rows: &[Row], row: usize,
+                ctx: &[u8]) -> Result<()> {
+        let cfg = cx.cfg;
+        let eng = cx.engine;
+        if self.store.is_none() {
+            return Ok(()); // lazy start encodes this row's context
+        }
+        let b = rows.len();
+        eng.ensure_prefill_scatter(&cfg.main_model, cfg.precision,
+                                   cfg.attn, b)?;
+        eng.ensure_prefill_scatter(&cfg.draft_model, cfg.precision,
+                                   cfg.attn, b)?;
+        let p = eng.manifest.prefill_p;
+        let (tokens, plen) = encode_window(ctx, p);
+        let (main, draft) = self.store.as_mut().expect("store present");
+        let t0 = Instant::now();
+        eng.prefill_into_slot(&cfg.main_model, cfg.precision, cfg.attn, b,
+                              row, &tokens, plen, main)
+            .context("PAD scatter prefill (main model)")?;
+        eng.prefill_into_slot(&cfg.draft_model, cfg.precision, cfg.attn, b,
+                              row, &tokens, plen, draft)
+            .context("PAD scatter prefill (draft model)")?;
+        *cx.prefill_secs += t0.elapsed().as_secs_f64();
+        cx.flops.add_prefill(cx.main_info, 1, p);
+        cx.flops.add_prefill(cx.draft_info, 1, p);
+        Ok(())
+    }
+
+    /// PAD lazy start: bucketize the admitted count (rounded up by
+    /// `SpecConfig::pad_headroom` so the running bucket keeps reusable
+    /// grow-room rows) and fused-prefill every row.
+    fn start(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
+             capacity: usize) -> Result<()> {
+        let n_real = rows.iter().filter(|r| !r.is_free()).count();
+        if n_real == 0 {
+            bail!("cannot start an empty PAD batch");
+        }
+        let b = cx.engine.manifest.bucket_batch_padded(
+            n_real, cx.cfg.pad_headroom, capacity)?;
+        self.fused_prefill(cx, rows, b).map(|_| ())
+    }
+
+    fn draft(&mut self, cx: &mut ExecCtx, io: &DraftIo)
+             -> Result<(Vec<i32>, Vec<f32>)> {
+        let Some((_, draft)) = self.store.as_mut() else {
+            bail!("PAD store missing");
+        };
+        let cfg = cx.cfg;
+        let b = io.stepping.len();
+        let caches = std::mem::take(draft);
+        let out = cx.engine.draft(&cfg.draft_model, cfg.precision,
+                                  cfg.attn, b, io.k, io.tokens_in,
+                                  io.n_in, io.dlens, io.uniforms,
+                                  io.temps, io.tps, caches)?;
+        *draft = out.caches;
+        Ok((out.tokens, out.qdists))
+    }
+
+    fn verify(&mut self, cx: &mut ExecCtx, io: &VerifyIo)
+              -> Result<Vec<f32>> {
+        let Some((main, _)) = self.store.as_mut() else {
+            bail!("PAD store missing");
+        };
+        let cfg = cx.cfg;
+        let b = io.stepping.len();
+        let caches = std::mem::take(main);
+        let out = cx.engine.decode(&cfg.main_model, cfg.precision,
+                                   cfg.attn, b, io.q, io.vtokens,
+                                   io.mlens, caches)?;
+        *main = out.caches;
+        Ok(out.logits)
+    }
+
+    fn release(&mut self, rows: &mut [Row], idx: usize) -> Slot {
+        let replacement = if self.started() {
+            // The fused artifact keeps computing this row; leave a
+            // frozen state so its dlens/mlens inputs stay valid.
+            match &rows[idx] {
+                Row::Seq(s) => Row::Husk(s.state.clone()),
+                _ => unreachable!("release of a non-Seq row"),
+            }
+        } else {
+            Row::Free
+        };
+        let Row::Seq(slot) = std::mem::replace(&mut rows[idx], replacement)
+        else {
+            unreachable!("release of a non-Seq row");
+        };
+        slot
+    }
+
+    fn reset(&mut self) {
+        self.store = None;
+    }
+
+    fn live_bucket(&self, rows: &[Row]) -> Option<usize> {
+        self.started().then_some(rows.len())
+    }
+
+    fn rebucket(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
+                bucket: usize) -> Result<usize> {
+        if self.store.is_none() {
+            bail!("PAD batch has not started; nothing to re-bucket");
+        }
+        self.fused_prefill(cx, rows, bucket)
+    }
+}
+
+// ---------------------------------------------------------------------
+// BASS-SPLIT: per-sequence B=1 artifacts, skipping inactive slots.
+// ---------------------------------------------------------------------
+
+/// Per-slot backend: one B=1 cache set per slot for each model; empty
+/// vectors mark free slots.
+pub(super) struct SplitBackend {
+    main: Vec<Vec<PjRtBuffer>>,
+    draft: Vec<Vec<PjRtBuffer>>,
+}
+
+impl Backend for SplitBackend {
+    fn started(&self) -> bool {
+        true // every slot owns its caches; there is no fused start
+    }
+
+    fn free_slots(&self, rows: &[Row]) -> usize {
+        rows.iter().filter(|r| r.is_free()).count()
+    }
+
+    fn admissible_row(&self, rows: &[Row]) -> Result<usize> {
+        rows.iter().position(Row::is_free).ok_or_else(|| {
+            anyhow!("no free slot (capacity {})", rows.len())
+        })
+    }
+
+    /// Prefill one slot's own B=1 caches (both models) over `ctx`.
+    fn bind_row(&mut self, cx: &mut ExecCtx, _rows: &[Row], row: usize,
+                ctx: &[u8]) -> Result<()> {
+        let cfg = cx.cfg;
+        let eng = cx.engine;
+        let p = eng.manifest.prefill_p;
+        let (tokens, plen) = encode_window(ctx, p);
+        let plens = [plen];
+        let t0 = Instant::now();
+        let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn, 1,
+                            &tokens, &plens)?;
+        let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn, 1,
+                            &tokens, &plens)?;
+        *cx.prefill_secs += t0.elapsed().as_secs_f64();
+        cx.flops.add_prefill(cx.main_info, 1, p);
+        cx.flops.add_prefill(cx.draft_info, 1, p);
+        self.main[row] = m.caches;
+        self.draft[row] = d.caches;
+        Ok(())
+    }
+
+    fn start(&mut self, _cx: &mut ExecCtx, _rows: &mut Vec<Row>,
+             _capacity: usize) -> Result<()> {
+        Ok(()) // slots prefill at bind time; nothing fused to start
+    }
+
+    fn draft(&mut self, cx: &mut ExecCtx, io: &DraftIo)
+             -> Result<(Vec<i32>, Vec<f32>)> {
+        let cfg = cx.cfg;
+        let vocab = cx.engine.manifest.vocab;
+        let b = io.stepping.len();
+        let k = io.k;
+        let mut toks = vec![0i32; b * k];
+        let mut qd = vec![0f32; b * k * vocab];
+        for i in 0..b {
+            if !io.stepping[i] {
+                continue; // SPLIT skips finished/free slots
+            }
+            let caches = std::mem::take(&mut self.draft[i]);
+            let out = cx.engine.draft(
+                &cfg.draft_model, cfg.precision, cfg.attn, 1, k,
+                &io.tokens_in[i * 2..i * 2 + 2], &io.n_in[i..=i],
+                &io.dlens[i..=i], &io.uniforms[i * k..(i + 1) * k],
+                &io.temps[i..=i], &io.tps[i..=i], caches)?;
+            self.draft[i] = out.caches;
+            toks[i * k..(i + 1) * k].copy_from_slice(&out.tokens);
+            qd[i * k * vocab..(i + 1) * k * vocab]
+                .copy_from_slice(&out.qdists);
+        }
+        Ok((toks, qd))
+    }
+
+    fn verify(&mut self, cx: &mut ExecCtx, io: &VerifyIo)
+              -> Result<Vec<f32>> {
+        let cfg = cx.cfg;
+        let vocab = cx.engine.manifest.vocab;
+        let b = io.stepping.len();
+        let q = io.q;
+        let mut logits = vec![0f32; b * q * vocab];
+        for i in 0..b {
+            if !io.stepping[i] {
+                continue;
+            }
+            let caches = std::mem::take(&mut self.main[i]);
+            let out = cx.engine.decode(
+                &cfg.main_model, cfg.precision, cfg.attn, 1, q,
+                &io.vtokens[i * q..(i + 1) * q], &io.mlens[i..=i],
+                caches)?;
+            self.main[i] = out.caches;
+            logits[i * q * vocab..(i + 1) * q * vocab]
+                .copy_from_slice(&out.logits);
+        }
+        Ok(logits)
+    }
+
+    fn release(&mut self, rows: &mut [Row], idx: usize) -> Slot {
+        self.main[idx] = Vec::new();
+        self.draft[idx] = Vec::new();
+        let Row::Seq(slot) = std::mem::replace(&mut rows[idx], Row::Free)
+        else {
+            unreachable!("release of a non-Seq row");
+        };
+        slot
+    }
+
+    fn reset(&mut self) {
+        // Per-slot caches were dropped release by release; clear
+        // defensively so a reset never leaks a stale cache set.
+        for c in self.main.iter_mut().chain(self.draft.iter_mut()) {
+            c.clear();
+        }
+    }
+
+    fn live_bucket(&self, _rows: &[Row]) -> Option<usize> {
+        None // per-sequence slots: no fused bucket to re-shape
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::SeqState;
+
+    fn slot(id: u64, prompt: Vec<u8>) -> Slot {
+        let last = *prompt.last().unwrap();
+        let len = prompt.len() as i32;
+        Slot {
+            id,
+            state: SeqState::new(prompt, last, len),
+            rng_draft: Pcg32::new(0, 2 * id),
+            rng_accept: Pcg32::new(0, 2 * id + 1),
+            max_new_tokens: 8,
+            temperature: 1.0,
+            top_p: 1.0,
+        }
+    }
+
+    #[test]
+    fn encode_window_pads_and_clamps() {
+        let (t, l) = encode_window(&[1, 2, 3], 5);
+        assert_eq!(t, vec![1, 2, 3, 0, 0]);
+        assert_eq!(l, 3);
+        // Longer than the window: keep the tail (dead rows only).
+        let (t, l) = encode_window(&[1, 2, 3, 4, 5, 6], 4);
+        assert_eq!(t, vec![3, 4, 5, 6]);
+        assert_eq!(l, 4);
+    }
+
+    #[test]
+    fn make_builds_the_mode_matching_backend() {
+        let pad = make(&SpecConfig::default(), 4);
+        assert!(!pad.started(), "PAD starts lazily at the fused prefill");
+        let split = make(&SpecConfig { mode: ExecMode::Split,
+                                       ..SpecConfig::default() }, 4);
+        assert!(split.started(), "SPLIT slots need no fused start");
+        assert!(split.live_bucket(&[]).is_none());
+    }
+
+    #[test]
+    fn pad_prestart_uses_free_rows_and_releases_to_free() {
+        let mut be = PadBackend { store: None };
+        let mut rows = [Row::Seq(slot(0, vec![1, 2])), Row::Free];
+        assert_eq!(be.free_slots(&rows), 1);
+        assert_eq!(be.admissible_row(&rows).unwrap(), 1);
+        assert!(be.live_bucket(&rows).is_none(), "not started: no bucket");
+        // Pre-start release frees the row outright (no husk: no fused
+        // artifact is computing it).
+        let s = be.release(&mut rows, 0);
+        assert_eq!(s.id, 0);
+        assert!(rows[0].is_free());
+        assert_eq!(be.free_slots(&rows), 2);
+    }
+
+    #[test]
+    fn running_pad_admits_into_husk_and_shadow_rows_only() {
+        let mut be = PadBackend { store: Some((Vec::new(), Vec::new())) };
+        let mut rows = [
+            Row::Seq(slot(0, vec![1, 2])),
+            Row::Husk(SeqState::new(vec![3], 3, 1)),
+            Row::Shadow(slot(1, vec![4, 5])),
+        ];
+        assert_eq!(be.free_slots(&rows), 2);
+        assert_eq!(be.admissible_row(&rows).unwrap(), 1);
+        assert_eq!(be.live_bucket(&rows), Some(3));
+        // Releasing a live row of the running bucket husks it.
+        let s = be.release(&mut rows, 0);
+        assert_eq!(s.id, 0);
+        assert!(matches!(rows[0], Row::Husk(_)));
+        assert_eq!(be.free_slots(&rows), 3);
+        // A fully-live bucket reports the re-bucket option in its error.
+        let full = [Row::Seq(slot(2, vec![9]))];
+        let err = be.admissible_row(&full).unwrap_err().to_string();
+        assert!(err.contains("re-bucket"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn split_rows_are_per_slot_and_never_bucketed() {
+        let cfg = SpecConfig { mode: ExecMode::Split,
+                               ..SpecConfig::default() };
+        let mut be = make(&cfg, 2);
+        let mut rows = [Row::Seq(slot(0, vec![1, 2])), Row::Free];
+        assert_eq!(be.free_slots(&rows), 1);
+        assert_eq!(be.admissible_row(&rows).unwrap(), 1);
+        assert!(be.live_bucket(&rows).is_none());
+        let s = be.release(&mut rows, 0);
+        assert_eq!(s.id, 0);
+        assert!(rows[0].is_free());
+    }
+}

@@ -1,0 +1,87 @@
+//! Batch-wide speculative configuration: execution mode, draft-length
+//! policy selection and sampling defaults. Per-sequence overrides ride
+//! [`super::AdmitOpts`]; the *mode* becomes concrete only when
+//! [`super::backend::make`] builds the matching exec backend.
+
+use crate::runtime::{Attn, Precision};
+
+/// How model calls are batched (paper Fig 4b vs 4c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One batched artifact padded to the batch bucket (BASS-PAD).
+    Pad,
+    /// Per-sequence B=1 artifacts (BASS-SPLIT).
+    Split,
+}
+
+/// Draft-length policy selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Paper Algorithm 1 (testbed constants, l_limit matching buckets).
+    Heuristic,
+    /// Constant draft length (Table 6 ablation rows).
+    Fixed(usize),
+}
+
+/// Configuration of one speculative generation run.
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    pub main_model: String,
+    pub draft_model: String,
+    pub precision: Precision,
+    pub attn: Attn,
+    /// Default sampling temperature; sequences admitted with an
+    /// [`super::AdmitOpts`] override keep their own (per-row everywhere).
+    pub temperature: f32,
+    /// Default nucleus threshold (same override scope as `temperature`).
+    pub top_p: f32,
+    pub max_new_tokens: usize,
+    pub policy: Policy,
+    pub mode: ExecMode,
+    pub seed: u64,
+    /// Wall-clock budget from generation start (Fig 5); sequences still
+    /// running when it expires are left unfinished.
+    pub time_budget_secs: Option<f64>,
+    /// PAD grow-room: pad the bucket up to this many rows above the
+    /// admitted count (clamped to the serving capacity and the largest
+    /// exported bucket), so a running fused batch keeps reusable padding
+    /// rows for mid-flight admissions. Re-applied on every live
+    /// re-bucket ([`super::SpecBatch::rebucket`]), so a grown or shrunk
+    /// bucket keeps the same grow-room policy. 0 (the default)
+    /// reproduces the tight bucket. SPLIT ignores it (slots are always
+    /// per-sequence).
+    pub pad_headroom: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig {
+            main_model: "main".into(),
+            draft_model: "draft_a".into(),
+            precision: Precision::F32,
+            attn: Attn::Dense,
+            temperature: 0.2,
+            top_p: 0.95,
+            max_new_tokens: 96,
+            policy: Policy::Heuristic,
+            mode: ExecMode::Pad,
+            seed: 0,
+            time_budget_secs: None,
+            pad_headroom: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_is_sane() {
+        let c = SpecConfig::default();
+        assert_eq!(c.main_model, "main");
+        assert_eq!(c.mode, ExecMode::Pad);
+        assert!(matches!(c.policy, Policy::Heuristic));
+        assert_eq!(c.pad_headroom, 0);
+    }
+}

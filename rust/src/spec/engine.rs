@@ -1,20 +1,21 @@
-//! The BASS speculative decoding loop (paper §3), decomposed into a
-//! **resumable step API** so a serving layer can do continuous batching.
+//! The BASS speculative decoding loop (paper §3) as a **mode-agnostic
+//! batch orchestrator**: [`SpecBatch`] owns the host-side row table,
+//! per-slot sequence state, RNG streams and the draft-length policy, and
+//! drives an exec [`Backend`](super::backend::Backend) (BASS-PAD fused
+//! bucket / BASS-SPLIT per-slot artifacts) through the contract in
+//! [`super::backend`]. Nothing here matches on the execution mode.
 //!
-//! [`SpecBatch`] owns the device caches and per-slot sequence state and
-//! exposes three operations the coordinator drives at step boundaries:
+//! The coordinator drives five operations at step boundaries:
 //!
 //! * [`SpecBatch::admit`] — place a prompt into a free slot, **in either
 //!   mode at any step boundary**. SPLIT prefills the slot's own B=1
 //!   caches; PAD admission into a running batch scatter-prefills the new
 //!   sequence into a freed row (a retired Husk or padding Shadow) of the
-//!   fused cache via the per-row `prefill_scatter` artifact
-//!   ([`Engine::prefill_into_slot`]), so the batch never has to drain.
-//!   [`AdmitOpts`] carries per-sequence overrides — `max_new_tokens`, a
-//!   pinned RNG stream, and **per-sequence sampling params**:
-//!   `temperature` / `top_p` live in the slot and flow as `[B]` rows into
-//!   the fused draft artifact and into the host-side verify warp, so
-//!   co-batched requests never have to agree on sampling knobs.
+//!   fused cache via the per-row `prefill_scatter` artifact, so the
+//!   batch never has to drain. [`AdmitOpts`] carries per-sequence
+//!   overrides — `max_new_tokens`, a pinned RNG stream, and
+//!   **per-sequence sampling params** flowing as `[B]` rows into the
+//!   fused draft artifact and into the host-side verify warp.
 //! * [`SpecBatch::step`] — one draft + verify + accept round over the
 //!   currently-active slots:
 //!
@@ -29,33 +30,38 @@
 //!   ```
 //!
 //! * [`SpecBatch::retire`] — take a sequence's final state out of the
-//!   batch, freeing its slot. In SPLIT mode the slot's caches are dropped
-//!   and the slot is immediately reusable by the next `admit`; in PAD mode
-//!   the row freezes into a Husk placeholder that the next admission
-//!   scatter-prefills over (the batch still auto-resets to full capacity
-//!   when the last real sequence leaves, so an idle engine re-buckets).
+//!   batch, freeing its slot (SPLIT frees the row; a running PAD batch
+//!   husks it; draining the last real sequence resets the batch).
 //! * [`SpecBatch::suspend`] / [`SpecBatch::resume`] — **preemption**.
-//!   Suspend lifts a still-running sequence out of the batch as a
-//!   host-side [`SuspendedSeq`] (verified bytes, PCG32 stream positions,
-//!   per-sequence sampling params and budget) and frees its slot exactly
-//!   like `retire`; the device KV is deliberately dropped. Resume rebuilds
-//!   the KV row by **recompute**: a fresh prefill over
-//!   `prompt ‖ generated` — per-slot (SPLIT) or scatter (running PAD) —
-//!   using the *existing* v3 artifacts, no new ABI. Because the ragged
-//!   attention masks per query position with exact-zero pad probability
-//!   and each position's KV is a pure function of its token prefix, the
-//!   recomputed row is **bitwise identical** to the incrementally built
-//!   one (pinned host-side by `test_parity.py::test_resume_recompute_*`
-//!   and end-to-end by `rust/tests/step_equivalence.rs` /
-//!   `admission_interleaving.rs`), so a preempted-then-resumed sequence
-//!   reproduces its uninterrupted run byte-for-byte under
-//!   [`Policy::Fixed`]. The suspended set lives on the host, so a serving
-//!   layer can hold more admitted work than there are device slots —
-//!   suspend-to-host is the recompute analog of paging KV out. The one
-//!   bound: `prompt ‖ generated` must still fit the prefill capacity
-//!   (`manifest.prefill_p`) or the resume could not be exact —
-//!   [`SpecBatch::can_suspend`] checks; longer sequences are pinned to
-//!   their slot and schedulers must pick another victim.
+//!   Suspend lifts a still-running sequence out as a host-side
+//!   [`SuspendedSeq`]; resume rebuilds the KV row by **recompute**: a
+//!   fresh prefill over `prompt ‖ generated` using the *existing* v3
+//!   artifacts. Because the ragged attention masks per query position
+//!   with exact-zero pad probability and each position's KV is a pure
+//!   function of its token prefix, the recomputed row is **bitwise
+//!   identical** to the incrementally built one (pinned host-side by
+//!   `test_parity.py::test_resume_recompute_*` and end-to-end by
+//!   `rust/tests/step_equivalence.rs` / `admission_interleaving.rs`), so
+//!   a preempted-then-resumed sequence reproduces its uninterrupted run
+//!   byte-for-byte under [`Policy::Fixed`]. The one bound:
+//!   `prompt ‖ generated` must still fit `manifest.prefill_p`
+//!   ([`SpecBatch::can_suspend`]).
+//! * [`SpecBatch::rebucket`] — **live re-bucketing**. A running PAD
+//!   bucket grows (burst larger than its reusable rows) or shrinks
+//!   (occupancy fell below a smaller bucket) **without draining**: every
+//!   carried row rides the same bitwise recompute primitive as resume —
+//!   one fused prefill at the new bucket re-encodes each row's
+//!   `prompt ‖ generated` — while SeqIds, RNG stream positions, sampling
+//!   params, the batch clock and the draft-length policy all carry over,
+//!   so outputs are byte-identical under [`Policy::Fixed`] and **no
+//!   artifact rebuild or manifest bump is needed** (the per-bucket
+//!   `prefill` programs in the v3 grid already cover every target).
+//!   Cost model: one fused prefill at the new bucket `b'` (≈ `b'`
+//!   row-prefills over `prefill_p`) buys rows *now* for queued work that
+//!   would otherwise wait unboundedly for a retirement or the drain
+//!   (grow), or removes `b - b'` dead rows from every subsequent fused
+//!   step (shrink). [`SpecConfig::pad_headroom`] is re-applied at every
+//!   re-bucket, so the new bucket keeps the same grow-room policy.
 //!
 //! Each admitted sequence gets its own pair of PCG32 streams keyed by a
 //! monotonically increasing admission counter, so given the same per-step
@@ -64,307 +70,47 @@
 //! Draft lengths are exactly reproducible under [`Policy::Fixed`]; under
 //! the adaptive heuristic they are batch-global Algorithm-1 state fed by
 //! every co-batched sequence (by design). That is what makes stepwise
-//! driving with mid-flight admission — in both modes — reproduce one-shot
-//! [`SpecEngine::generate`] byte-for-byte
+//! driving with mid-flight admission, preemption and live re-bucketing
+//! reproduce one-shot [`super::SpecEngine::generate`] byte-for-byte
 //! (`rust/tests/step_equivalence.rs`, and under randomized
-//! admit/step/retire schedules, `rust/tests/admission_interleaving.rs`).
-//!
-//! BASS-PAD runs one batched artifact padded to the batch bucket; BASS-SPLIT
-//! runs per-sequence B=1 artifacts, skipping finished sequences entirely —
-//! the same compute/launch trade the paper's Figure 4 kernels make.
+//! admit/step/suspend/resume/re-bucket/retire schedules,
+//! `rust/tests/admission_interleaving.rs`).
 
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
-use xla::PjRtBuffer;
+use anyhow::{bail, Result};
 
 use crate::flops::FlopCounter;
-use crate::kv::{FinishReason, SeqState};
-use crate::metrics::BatchMetrics;
-use crate::runtime::{Attn, Engine, ModelInfo, Precision};
+use crate::kv::SeqState;
+use crate::runtime::{Engine, ModelInfo};
 use crate::sampling::{logp_of, spec_accept, warp_top_p, Pcg32};
 use crate::spec::draft_len::{DraftLenPolicy, Fixed, Heuristic};
 
-/// How model calls are batched (paper Fig 4b vs 4c).
+use super::backend::{self, Backend, DraftIo, ExecCtx, VerifyIo};
+use super::config::{Policy, SpecConfig};
+use super::seq::{live_row_states, AdmitOpts, Row, SeqEvent, SeqId, Slot,
+                 StepReport, SuspendedSeq};
+
+/// One executed live re-bucket (see [`SpecBatch::rebucket`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ExecMode {
-    /// One batched artifact padded to the batch bucket (BASS-PAD).
-    Pad,
-    /// Per-sequence B=1 artifacts (BASS-SPLIT).
-    Split,
-}
-
-/// Draft-length policy selection.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Policy {
-    /// Paper Algorithm 1 (testbed constants, l_limit matching buckets).
-    Heuristic,
-    /// Constant draft length (Table 6 ablation rows).
-    Fixed(usize),
-}
-
-/// Configuration of one speculative generation run.
-#[derive(Debug, Clone)]
-pub struct SpecConfig {
-    pub main_model: String,
-    pub draft_model: String,
-    pub precision: Precision,
-    pub attn: Attn,
-    /// Default sampling temperature; sequences admitted with an
-    /// [`AdmitOpts`] override keep their own (per-row everywhere).
-    pub temperature: f32,
-    /// Default nucleus threshold (same override scope as `temperature`).
-    pub top_p: f32,
-    pub max_new_tokens: usize,
-    pub policy: Policy,
-    pub mode: ExecMode,
-    pub seed: u64,
-    /// Wall-clock budget from generation start (Fig 5); sequences still
-    /// running when it expires are left unfinished.
-    pub time_budget_secs: Option<f64>,
-    /// PAD grow-room: pad the initial bucket up to this many rows above
-    /// the admitted count (clamped to the serving capacity and the
-    /// largest exported bucket), so a running fused batch keeps reusable
-    /// padding rows for mid-flight admissions instead of making a burst
-    /// wait for the drain-and-re-bucket. 0 (the default) reproduces the
-    /// tight bucket. SPLIT ignores it (slots are always per-sequence).
-    pub pad_headroom: usize,
-}
-
-impl Default for SpecConfig {
-    fn default() -> Self {
-        SpecConfig {
-            main_model: "main".into(),
-            draft_model: "draft_a".into(),
-            precision: Precision::F32,
-            attn: Attn::Dense,
-            temperature: 0.2,
-            top_p: 0.95,
-            max_new_tokens: 96,
-            policy: Policy::Heuristic,
-            mode: ExecMode::Pad,
-            seed: 0,
-            time_budget_secs: None,
-            pad_headroom: 0,
-        }
-    }
-}
-
-/// Result of one batched speculative generation.
-#[derive(Debug)]
-pub struct SpecResult {
-    /// Final state of every *real* (non-padding) sequence.
-    pub seqs: Vec<SeqState>,
-    pub metrics: BatchMetrics,
-    /// Total draft tokens proposed / accepted (acceptance-rate numerator
-    /// counts accepted drafts only, not corrections).
-    pub drafted: usize,
-    pub accepted: usize,
-    pub steps: usize,
-    /// Prefill wall time (reported separately; PTL clocks start after
-    /// prefill, matching the paper's incremental-decoding focus).
-    pub prefill_secs: f64,
-    pub draft_secs: f64,
-    pub verify_secs: f64,
-    pub flops: FlopCounter,
-    /// History of (draft length used, accepted counts) per step.
-    pub step_log: Vec<(usize, Vec<usize>)>,
-}
-
-/// Identity of one admitted sequence (the admission counter; unique for
-/// the lifetime of a [`SpecBatch`], never reused across slot turnover).
-pub type SeqId = u64;
-
-/// What happened to one live sequence during a [`SpecBatch::step`].
-#[derive(Debug, Clone)]
-pub struct SeqEvent {
-    pub id: SeqId,
-    /// Draft tokens accepted this step (0..=k).
-    pub accepted: usize,
-    /// Bytes appended to the sequence this step, post-EOS truncation.
-    pub new_bytes: Vec<u8>,
-    /// Sequence finished this step (EOS / length / capacity).
-    pub done: bool,
-    pub finish: FinishReason,
-}
-
-/// Outcome of one [`SpecBatch::step`].
-#[derive(Debug, Clone, Default)]
-pub struct StepReport {
-    /// 0-based index of the step just executed.
-    pub step: usize,
-    /// Draft length used (bucketized).
-    pub k: usize,
-    /// Per-sequence events, in slot order (live sequences only).
-    pub events: Vec<SeqEvent>,
-    /// Sequences that finished on this step (retire them to free slots).
-    pub finished: Vec<SeqId>,
-    /// Real sequences still generating after this step.
-    pub active: usize,
-    /// Real sequences occupying slots (active + finished-but-unretired).
-    pub occupied: usize,
-}
-
-/// Device cache handles, PAD (one fused set) or SPLIT (one set per slot;
-/// empty vectors mark free slots).
-enum CacheStore {
-    Pad { main: Vec<PjRtBuffer>, draft: Vec<PjRtBuffer> },
-    Split { main: Vec<Vec<PjRtBuffer>>, draft: Vec<Vec<PjRtBuffer>> },
-}
-
-/// Per-admission overrides for [`SpecBatch::admit_opts`]. Every `None`
-/// falls back to the batch-wide [`SpecConfig`] value, so
-/// `AdmitOpts::default()` reproduces plain [`SpecBatch::admit`].
-#[derive(Debug, Clone, Default)]
-pub struct AdmitOpts {
-    /// Per-sequence generation limit.
-    pub max_new_tokens: Option<usize>,
-    /// Pinned PCG32 stream index (see [`SpecBatch::admit_opts`]).
-    pub stream: Option<u64>,
-    /// Per-sequence sampling temperature — drives both this row of the
-    /// fused draft artifact and the verify-side warp.
-    pub temperature: Option<f32>,
-    /// Per-sequence nucleus threshold (same scope as `temperature`).
-    pub top_p: Option<f32>,
-}
-
-impl AdmitOpts {
-    /// Range-check the sampling overrides; the `Err` names the offending
-    /// field. [`SpecBatch::admit_opts`] runs this before consuming a slot,
-    /// so a bad wire value (`top_p: 0`, NaN, …) fails that one request
-    /// up front instead of warping its rows into all-zero/NaN
-    /// distributions mid-generation.
-    pub fn validate(&self) -> Result<()> {
-        if let Some(t) = self.temperature {
-            if !t.is_finite() || t < 0.0 {
-                bail!("temperature must be finite and >= 0 (got {t})");
-            }
-        }
-        if let Some(p) = self.top_p {
-            if !p.is_finite() || p <= 0.0 || p > 1.0 {
-                bail!("top_p must be in (0, 1] (got {p})");
-            }
-        }
-        Ok(())
-    }
-}
-
-/// A sequence lifted out of the batch by [`SpecBatch::suspend`]: the
-/// complete host-side identity — prompt, verified output bytes, PCG32
-/// stream positions, per-sequence sampling params and generation budget.
-/// Device KV is deliberately **not** captured: [`SpecBatch::resume`]
-/// rebuilds it bitwise by recomputing a prefill over
-/// `prompt ‖ generated` with the existing artifacts, so a snapshot costs
-/// a few hundred host bytes and resuming costs one prefill — the
-/// recompute end of the preemption cost model (cheap to hold, one
-/// prompt-length compute to reinstate).
-#[derive(Debug, Clone)]
-pub struct SuspendedSeq {
-    prompt: Vec<u8>,
-    generated: Vec<u8>,
-    logp_sum: f64,
-    rng_draft: Pcg32,
-    rng_accept: Pcg32,
-    max_new_tokens: usize,
-    temperature: f32,
-    top_p: f32,
-}
-
-impl SuspendedSeq {
-    /// Build a snapshot "as if" freshly admitted with `admit_opts(prompt,
-    /// seed, opts)` and suspended before any step: zero progress, RNG
-    /// streams at their start. Lets a scheduler park work host-side
-    /// without ever occupying a device slot (and lets host-only tests
-    /// construct parked entries). An unpinned `opts.stream` defaults to
-    /// stream 0 — callers wanting the batch's admission-counter streams
-    /// should admit for real instead.
-    pub fn fresh(prompt: &[u8], seed: u64, opts: &AdmitOpts,
-                 cfg: &SpecConfig) -> SuspendedSeq {
-        let stream = opts.stream.unwrap_or(0);
-        SuspendedSeq {
-            prompt: prompt.to_vec(),
-            generated: Vec::new(),
-            logp_sum: 0.0,
-            rng_draft: Pcg32::new(seed, 2 * stream),
-            rng_accept: Pcg32::new(seed, 2 * stream + 1),
-            max_new_tokens: opts
-                .max_new_tokens
-                .unwrap_or(cfg.max_new_tokens),
-            temperature: opts.temperature.unwrap_or(cfg.temperature),
-            top_p: opts.top_p.unwrap_or(cfg.top_p),
-        }
-    }
-
-    /// Output bytes verified before the suspension.
-    pub fn tokens_generated(&self) -> usize {
-        self.generated.len()
-    }
-
-    /// Length of the verified context (`prompt ‖ generated`) a resume
-    /// must recompute; must fit `manifest.prefill_p` to be resumable.
-    pub fn context_len(&self) -> usize {
-        self.prompt.len() + self.generated.len()
-    }
-
-    /// Collapse into a plain (still `Running`) sequence state — what a
-    /// serving layer reports when it must answer a request whose
-    /// sequence is parked (time-budget expiry, shutdown) without
-    /// resuming it.
-    pub fn into_state(self) -> SeqState {
-        SeqState::resumed(self.prompt, self.generated, self.logp_sum)
-    }
-}
-
-/// One occupied slot: sequence state plus its private RNG streams and
-/// sampling params.
-struct Slot {
-    id: SeqId,
-    state: SeqState,
-    rng_draft: Pcg32,
-    rng_accept: Pcg32,
-    max_new_tokens: usize,
-    /// Per-sequence sampling params (seeded from [`SpecConfig`], overridden
-    /// per admission): used for this row of the fused draft call and the
-    /// host-side verify warp.
-    temperature: f32,
-    top_p: f32,
-}
-
-/// A batch row. `Shadow` rows are PAD padding (they advance like real
-/// sequences, matching the padded artifact rows, but are never reported);
-/// `Husk` rows are retired PAD sequences — frozen state that keeps feeding
-/// the fused artifact valid lengths. Both are mid-flight admission
-/// targets: a new sequence scatter-prefills over the row and turns it
-/// back into `Seq`.
-enum Row {
-    Free,
-    Seq(Slot),
-    Shadow(Slot),
-    Husk(SeqState),
-}
-
-impl Row {
-    fn state(&self) -> Option<&SeqState> {
-        match self {
-            Row::Free => None,
-            Row::Seq(s) | Row::Shadow(s) => Some(&s.state),
-            Row::Husk(st) => Some(st),
-        }
-    }
-
-    fn is_free(&self) -> bool {
-        matches!(self, Row::Free)
-    }
+pub struct Rebucket {
+    /// Bucket rows before.
+    pub from: usize,
+    /// Bucket rows after.
+    pub to: usize,
+    /// Real (Seq) rows re-encoded across the move.
+    pub migrated: usize,
 }
 
 /// A resumable speculative batch over up to `capacity` concurrent
-/// sequences. See the module docs for the admit / step / retire contract.
+/// sequences. See the module docs for the admit / step / retire /
+/// suspend / resume / rebucket contract.
 pub struct SpecBatch<'a> {
     engine: &'a Engine,
     cfg: SpecConfig,
     capacity: usize,
     rows: Vec<Row>,
-    store: Option<CacheStore>,
+    backend: Box<dyn Backend>,
     policy: Box<dyn DraftLenPolicy>,
     /// Admission counter; doubles as the SeqId and the PCG32 stream index.
     next_stream: u64,
@@ -396,19 +142,13 @@ impl<'a> SpecBatch<'a> {
         let draft_info = engine.manifest.model(&cfg.draft_model)?.clone();
         let s_max = main_info.s_max as i32;
         let policy = fresh_policy(&cfg);
-        let store = match cfg.mode {
-            ExecMode::Pad => None, // fused prefill happens at first step
-            ExecMode::Split => Some(CacheStore::Split {
-                main: (0..capacity).map(|_| Vec::new()).collect(),
-                draft: (0..capacity).map(|_| Vec::new()).collect(),
-            }),
-        };
+        let backend = backend::make(&cfg, capacity);
         Ok(SpecBatch {
             engine,
             cfg,
             capacity,
             rows: (0..capacity).map(|_| Row::Free).collect(),
-            store,
+            backend,
             policy,
             next_stream: 0,
             t0: None,
@@ -426,6 +166,25 @@ impl<'a> SpecBatch<'a> {
         })
     }
 
+    /// Split the batch into its backend, the execution context the
+    /// backend borrows, and the row table — disjoint fields, so the
+    /// three can be used together without aliasing.
+    fn backend_cx(&mut self)
+                  -> (&mut dyn Backend, ExecCtx<'_>, &mut Vec<Row>) {
+        (
+            self.backend.as_mut(),
+            ExecCtx {
+                engine: self.engine,
+                cfg: &self.cfg,
+                main_info: &self.main_info,
+                draft_info: &self.draft_info,
+                prefill_secs: &mut self.prefill_secs,
+                flops: &mut self.flops,
+            },
+            &mut self.rows,
+        )
+    }
+
     // -- introspection ----------------------------------------------------
 
     /// The batch-wide speculative configuration (mode, policy, sampling
@@ -437,17 +196,10 @@ impl<'a> SpecBatch<'a> {
     /// Slots a new sequence could occupy right now. In a *running* PAD
     /// batch these are the reusable rows of the fused bucket — retired
     /// (Husk) and padding (Shadow) rows that mid-flight admission
-    /// scatter-prefills over; the bucket itself cannot grow until the
-    /// batch drains and re-buckets.
+    /// scatter-prefills over; growing past them takes a live
+    /// [`SpecBatch::rebucket`].
     pub fn free_slots(&self) -> usize {
-        if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
-            return self
-                .rows
-                .iter()
-                .filter(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
-                .count();
-        }
-        self.rows.iter().filter(|r| r.is_free()).count()
+        self.backend.free_slots(&self.rows)
     }
 
     /// True when `admit` would succeed for a 1-sequence request.
@@ -470,6 +222,12 @@ impl<'a> SpecBatch<'a> {
 
     pub fn has_active(&self) -> bool {
         self.active() > 0
+    }
+
+    /// Rows of the live fused bucket — `None` for SPLIT, or for a PAD
+    /// batch that has not started stepping yet.
+    pub fn bucket_rows(&self) -> Option<usize> {
+        self.backend.live_bucket(&self.rows)
     }
 
     /// Seconds since the first step began (0 before the batch starts);
@@ -515,17 +273,13 @@ impl<'a> SpecBatch<'a> {
         if tail.is_empty() {
             bail!("empty prompt");
         }
-        if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
-            return self.admit_pad_midflight(tail, seed, opts);
-        }
-        let Some(row) = self.rows.iter().position(Row::is_free) else {
-            bail!("no free slot (capacity {})", self.capacity);
-        };
+        let row = self.backend.admissible_row(&self.rows)?;
         let slot = self.make_slot(tail, seed, opts);
-        if self.cfg.mode == ExecMode::Split {
-            self.prefill_split_slot(row, &slot.state.prompt)?;
-        }
         let id = slot.id;
+        {
+            let (be, mut cx, rows) = self.backend_cx();
+            be.bind_row(&mut cx, rows, row, &slot.state.prompt)?;
+        }
         self.rows[row] = Row::Seq(slot);
         Ok(id)
     }
@@ -552,184 +306,6 @@ impl<'a> SpecBatch<'a> {
         }
     }
 
-    /// Mid-flight PAD admission: scatter-prefill the new sequence into a
-    /// reusable row (retired Husk or padding Shadow) of the running fused
-    /// batch. The row's whole KV slice is replaced, its slot gets fresh
-    /// per-sequence state — sampling params, PCG32 streams, ragged
-    /// lengths at `prompt_len - 1` — so the previous occupant cannot leak
-    /// into the new sequence, and no other row is touched.
-    fn admit_pad_midflight(&mut self, tail: &[u8], seed: u64,
-                           opts: AdmitOpts) -> Result<SeqId> {
-        let row = self.reusable_pad_row()?;
-        self.ensure_scatter_ready()?;
-        let slot = self.make_slot(tail, seed, opts);
-        self.prefill_pad_row(row, &slot.state.prompt)?;
-        let id = slot.id;
-        self.rows[row] = Row::Seq(slot);
-        Ok(id)
-    }
-
-    /// First reusable row of the running fused bucket — a retired Husk or
-    /// padding Shadow a mid-flight admission/resume may scatter over.
-    fn reusable_pad_row(&self) -> Result<usize> {
-        self.rows
-            .iter()
-            .position(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
-            .ok_or_else(|| {
-                anyhow!("no reusable PAD row (bucket of {} fully live; \
-                         wait for a retirement or the drain)",
-                        self.rows.len())
-            })
-    }
-
-    /// Resolve + compile both models' scatter executables up front: the
-    /// likely failures (stale pre-v3 artifact set, bucket not exported)
-    /// reject only this admission/resume and leave the running batch
-    /// intact — as do upload failures inside `prefill_into_slot`, which
-    /// consumes the fused caches only at the execute itself. Only an
-    /// execute failure (post-donation) is batch-fatal: the next `step`
-    /// errors and the serving layer's recovery path fails the in-flight
-    /// requests and rebuilds a fresh batch (see `coordinator::worker`).
-    fn ensure_scatter_ready(&self) -> Result<()> {
-        let b = self.rows.len();
-        let cfg = &self.cfg;
-        self.engine.ensure_prefill_scatter(&cfg.main_model, cfg.precision,
-                                           cfg.attn, b)?;
-        self.engine.ensure_prefill_scatter(&cfg.draft_model, cfg.precision,
-                                           cfg.attn, b)?;
-        Ok(())
-    }
-
-    /// Scatter-prefill one context (`ctx` — a fresh admission's prompt,
-    /// or a resume's `prompt ‖ generated`) into row `row` of the running
-    /// PAD batch's fused caches (both models). Pre-execute failures
-    /// leave the caches untouched (see [`Engine::prefill_into_slot`]);
-    /// an execute failure leaves that model's cache vector empty — the
-    /// batch is poisoned and the next `step` fails, which the
-    /// coordinator turns into a full-batch error + rebuild.
-    fn prefill_pad_row(&mut self, row: usize, ctx: &[u8]) -> Result<()> {
-        let cfg = self.cfg.clone();
-        let eng = self.engine;
-        let b = self.rows.len();
-        let p = eng.manifest.prefill_p;
-        let mut tokens = vec![0i32; p];
-        for (j, &byte) in ctx.iter().enumerate() {
-            tokens[j] = byte as i32;
-        }
-        let plen = ctx.len() as i32;
-        let t0 = Instant::now();
-        let Some(CacheStore::Pad { main, draft }) = self.store.as_mut()
-        else {
-            bail!("PAD store missing");
-        };
-        eng.prefill_into_slot(&cfg.main_model, cfg.precision, cfg.attn, b,
-                              row, &tokens, plen, main)
-            .context("PAD scatter prefill (main model)")?;
-        eng.prefill_into_slot(&cfg.draft_model, cfg.precision, cfg.attn, b,
-                              row, &tokens, plen, draft)
-            .context("PAD scatter prefill (draft model)")?;
-        self.prefill_secs += t0.elapsed().as_secs_f64();
-        self.flops.add_prefill(&self.main_info, 1, p);
-        self.flops.add_prefill(&self.draft_info, 1, p);
-        Ok(())
-    }
-
-    /// Prefill one SPLIT slot (B=1 artifacts for both models) over `ctx`
-    /// — a fresh admission's prompt, or a resume's `prompt ‖ generated`.
-    fn prefill_split_slot(&mut self, row: usize, ctx: &[u8]) -> Result<()> {
-        let cfg = &self.cfg;
-        let eng = self.engine;
-        let p = eng.manifest.prefill_p;
-        let mut tokens = vec![0i32; p];
-        for (j, &byte) in ctx.iter().enumerate() {
-            tokens[j] = byte as i32;
-        }
-        let plens = [ctx.len() as i32];
-        let t0 = Instant::now();
-        let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn, 1,
-                            &tokens, &plens)?;
-        let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn, 1,
-                            &tokens, &plens)?;
-        self.prefill_secs += t0.elapsed().as_secs_f64();
-        self.flops.add_prefill(&self.main_info, 1, p);
-        self.flops.add_prefill(&self.draft_info, 1, p);
-        match self.store.as_mut() {
-            Some(CacheStore::Split { main, draft }) => {
-                main[row] = m.caches;
-                draft[row] = d.caches;
-                Ok(())
-            }
-            _ => bail!("SPLIT store missing"),
-        }
-    }
-
-    /// PAD lazy start: bucketize the admitted count (rounded up by
-    /// [`SpecConfig::pad_headroom`] so the running bucket keeps reusable
-    /// grow-room rows), pad the row vector with shadow sequences
-    /// replicating the last real context (exactly the padded rows the
-    /// fused artifact computes anyway) and run the fused prefill for both
-    /// models. Rows are encoded from their full context
-    /// (`prompt ‖ generated`) so resumed sequences placed before the
-    /// start prefill their pre-suspend output too.
-    fn start_pad(&mut self) -> Result<()> {
-        let cfg = self.cfg.clone();
-        let eng = self.engine;
-        let p = eng.manifest.prefill_p;
-        // Compact real slots to the front (pre-start retires leave holes).
-        let mut real: Vec<Row> = Vec::new();
-        for r in std::mem::take(&mut self.rows) {
-            if !r.is_free() {
-                real.push(r);
-            }
-        }
-        let n_real = real.len();
-        if n_real == 0 {
-            bail!("cannot start an empty PAD batch");
-        }
-        let b = eng.manifest.bucket_batch_padded(n_real, cfg.pad_headroom,
-                                                 self.capacity)?;
-        let last_ctx = real
-            .last()
-            .and_then(|r| r.state())
-            .map(|s| s.context())
-            .expect("real rows have state");
-        self.rows = real;
-        for i in n_real..b {
-            let state = SeqState::new(last_ctx.clone(),
-                                      *last_ctx.last().unwrap(),
-                                      last_ctx.len() as i32);
-            self.rows.push(Row::Shadow(Slot {
-                id: u64::MAX, // never reported
-                state,
-                rng_draft: Pcg32::new(cfg.seed, 2 * i as u64),
-                rng_accept: Pcg32::new(cfg.seed, 2 * i as u64 + 1),
-                max_new_tokens: cfg.max_new_tokens,
-                temperature: cfg.temperature,
-                top_p: cfg.top_p,
-            }));
-        }
-        let mut tokens = vec![0i32; b * p];
-        let mut plens = vec![0i32; b];
-        for (i, row) in self.rows.iter().enumerate() {
-            let st = row.state().expect("all PAD rows live at start");
-            let ctx = st.context();
-            for (j, &byte) in ctx.iter().enumerate() {
-                tokens[i * p + j] = byte as i32;
-            }
-            plens[i] = ctx.len() as i32;
-        }
-        let t0 = Instant::now();
-        let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn, b,
-                            &tokens, &plens)?;
-        let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn, b,
-                            &tokens, &plens)?;
-        self.prefill_secs += t0.elapsed().as_secs_f64();
-        self.flops.add_prefill(&self.main_info, b, p);
-        self.flops.add_prefill(&self.draft_info, b, p);
-        self.store = Some(CacheStore::Pad { main: m.caches, draft: d.caches });
-        Ok(())
-    }
-
     // -- step --------------------------------------------------------------
 
     /// Run one draft + verify + accept round over the active sequences.
@@ -742,27 +318,26 @@ impl<'a> SpecBatch<'a> {
                 ..StepReport::default()
             });
         }
-        if self.store.is_none() {
-            self.start_pad()?;
+        if !self.backend.started() {
+            let capacity = self.capacity;
+            let (be, mut cx, rows) = self.backend_cx();
+            be.start(&mut cx, rows, capacity)?;
         }
         if self.t0.is_none() {
             self.t0 = Some(Instant::now());
         }
-        let mut store = self.store.take().expect("store present");
-        let res = self.step_inner(&mut store);
-        self.store = Some(store);
-        res
+        self.step_inner()
     }
 
-    fn step_inner(&mut self, store: &mut CacheStore) -> Result<StepReport> {
-        let cfg = self.cfg.clone();
+    fn step_inner(&mut self) -> Result<StepReport> {
         let eng = self.engine;
         let man = &eng.manifest;
         let vocab = man.vocab;
         let b = self.rows.len();
         let t0 = self.t0.expect("clock started");
         let now = |t: Instant| t.elapsed().as_secs_f64();
-        let k = man.bucket_k(&cfg.draft_model, self.policy.current());
+        let k = man.bucket_k(&self.cfg.draft_model, self.policy.current());
+        let (def_temp, def_tp) = (self.cfg.temperature, self.cfg.top_p);
 
         // -- draft ---------------------------------------------------------
         let mut tokens_in = vec![0i32; b * 2];
@@ -772,8 +347,8 @@ impl<'a> SpecBatch<'a> {
         // Per-row sampling params for the fused draft call. Free and Husk
         // rows carry the batch defaults — their outputs are never read, the
         // artifact just needs a valid value per row.
-        let mut temps = vec![cfg.temperature; b];
-        let mut tps = vec![cfg.top_p; b];
+        let mut temps = vec![def_temp; b];
+        let mut tps = vec![def_tp; b];
         for (i, row) in self.rows.iter_mut().enumerate() {
             if let Some(s) = row.state() {
                 tokens_in[i * 2] = s.pending_draft[0] as i32;
@@ -801,18 +376,38 @@ impl<'a> SpecBatch<'a> {
             })
             .collect();
         let td = Instant::now();
-        let (draft_tokens, qdists) = self.draft_all(
-            store, b, k, &tokens_in, &n_in, &dlens, &uniforms, &temps,
-            &tps, &stepping)?;
+        let io = DraftIo {
+            k,
+            tokens_in: &tokens_in,
+            n_in: &n_in,
+            dlens: &dlens,
+            uniforms: &uniforms,
+            temps: &temps,
+            tps: &tps,
+            stepping: &stepping,
+        };
+        let (draft_tokens, qdists) = {
+            let (be, mut cx, _) = self.backend_cx();
+            be.draft(&mut cx, &io)?
+        };
         self.draft_secs += now(td);
         // FLOP/throughput accounting charges *live* rows only. The fused
         // PAD artifact still computes Husk (retired) and Shadow (padding)
         // rows, but that is overhead, not served work — counting it
-        // inflated PAD throughput/utilization numbers.
-        let live = live_row_states(&self.rows);
-        let n_compute = live.len();
-        let ctx_d = live.iter().map(|s| s.draft_len as usize).sum::<usize>()
-            / live.len().max(1);
+        // inflated PAD throughput/utilization numbers. (Both context
+        // averages are taken here: lengths do not move between the draft
+        // and verify calls.)
+        let (n_compute, ctx_d, ctx_m) = {
+            let live = live_row_states(&self.rows);
+            let denom = live.len().max(1);
+            (
+                live.len(),
+                live.iter().map(|s| s.draft_len as usize).sum::<usize>()
+                    / denom,
+                live.iter().map(|s| s.main_len as usize).sum::<usize>()
+                    / denom,
+            )
+        };
         self.flops.add_step(&self.draft_info, n_compute, k + 1, ctx_d);
 
         // -- verify --------------------------------------------------------
@@ -829,11 +424,17 @@ impl<'a> SpecBatch<'a> {
             }
         }
         let tv = Instant::now();
-        let logits =
-            self.verify_all(store, b, q, &vtokens, &mlens, &stepping)?;
+        let vio = VerifyIo {
+            q,
+            vtokens: &vtokens,
+            mlens: &mlens,
+            stepping: &stepping,
+        };
+        let logits = {
+            let (be, mut cx, _) = self.backend_cx();
+            be.verify(&mut cx, &vio)?
+        };
         self.verify_secs += now(tv);
-        let ctx_m = live.iter().map(|s| s.main_len as usize).sum::<usize>()
-            / live.len().max(1);
         self.flops.add_step(&self.main_info, n_compute, q, ctx_m);
 
         // -- accept/reject per sequence (host) -----------------------------
@@ -948,40 +549,17 @@ impl<'a> SpecBatch<'a> {
     }
 
     /// Free one occupied row (shared tail of `retire` and `suspend`):
-    /// SPLIT drops the slot's caches and frees the row; a running PAD
-    /// batch freezes the row into a Husk so the fused artifact keeps
-    /// valid dlens/mlens inputs. Draining the last real sequence resets
-    /// the batch (fresh clock, fresh policy; PAD drops its bucket).
+    /// the backend leaves its placeholder (SPLIT: Free; running PAD: a
+    /// Husk so the fused artifact keeps valid dlens/mlens inputs).
+    /// Draining the last real sequence resets the batch — fresh clock,
+    /// fresh draft-length policy, device state dropped — so a request
+    /// hitting an idle server behaves identically in both modes
+    /// regardless of earlier traffic.
     fn release_row(&mut self, idx: usize) -> Slot {
-        let pad_running = self.cfg.mode == ExecMode::Pad
-            && self.store.is_some();
-        let replacement = if pad_running {
-            // The fused artifact keeps computing this row; leave a frozen
-            // state so dlens/mlens inputs stay valid.
-            match &self.rows[idx] {
-                Row::Seq(s) => Row::Husk(s.state.clone()),
-                _ => unreachable!(),
-            }
-        } else {
-            Row::Free
-        };
-        let Row::Seq(slot) = std::mem::replace(&mut self.rows[idx],
-                                               replacement)
-        else {
-            unreachable!();
-        };
-        if let Some(CacheStore::Split { main, draft }) = self.store.as_mut()
-        {
-            main[idx] = Vec::new();
-            draft[idx] = Vec::new();
-        }
-        if pad_running && self.occupied() == 0 {
-            self.reset_pad();
-        } else if self.occupied() == 0 {
-            // Batch drained: the next busy period gets a fresh clock and
-            // a fresh draft-length policy, same as a PAD reset — so a
-            // request hitting an idle server behaves identically in both
-            // modes regardless of earlier traffic.
+        let slot = self.backend.release(&mut self.rows, idx);
+        if self.occupied() == 0 {
+            self.backend.reset();
+            self.rows = (0..self.capacity).map(|_| Row::Free).collect();
             self.t0 = None;
             self.policy = fresh_policy(&self.cfg);
         }
@@ -1001,16 +579,15 @@ impl<'a> SpecBatch<'a> {
         self.rows.iter().any(|r| matches!(r, Row::Seq(s)
             if s.id == id
                 && s.state.active()
-                && s.state.prompt.len() + s.state.generated.len() <= p_cap))
+                && s.state.context_len() <= p_cap))
     }
 
     /// Preempt a still-running sequence: lift its complete host-side
     /// identity out of the batch as a [`SuspendedSeq`] and free its slot
-    /// exactly like [`SpecBatch::retire`] (SPLIT frees the row; a running
-    /// PAD batch husks it; draining the last real sequence resets the
-    /// batch). The device KV is dropped — [`SpecBatch::resume`] rebuilds
-    /// it bitwise by recompute, so the pair is invisible to the
-    /// sequence's output under [`Policy::Fixed`].
+    /// exactly like [`SpecBatch::retire`]. The device KV is dropped —
+    /// [`SpecBatch::resume`] rebuilds it bitwise by recompute, so the
+    /// pair is invisible to the sequence's output under
+    /// [`Policy::Fixed`].
     pub fn suspend(&mut self, id: SeqId) -> Result<SuspendedSeq> {
         let Some(idx) = self.rows.iter().position(
             |r| matches!(r, Row::Seq(s) if s.id == id))
@@ -1021,24 +598,14 @@ impl<'a> SpecBatch<'a> {
         if !slot.state.active() {
             bail!("sequence {id} already finished; retire it instead");
         }
-        let ctx = slot.state.prompt.len() + slot.state.generated.len();
+        let ctx = slot.state.context_len();
         let p_cap = self.engine.manifest.prefill_p;
         if ctx > p_cap {
             bail!("sequence {id} context ({ctx} bytes) exceeds the prefill \
                    capacity ({p_cap}); a resume could not recompute it \
                    exactly");
         }
-        let slot = self.release_row(idx);
-        Ok(SuspendedSeq {
-            prompt: slot.state.prompt,
-            generated: slot.state.generated,
-            logp_sum: slot.state.logp_sum,
-            rng_draft: slot.rng_draft,
-            rng_accept: slot.rng_accept,
-            max_new_tokens: slot.max_new_tokens,
-            temperature: slot.temperature,
-            top_p: slot.top_p,
-        })
+        Ok(SuspendedSeq::from_slot(self.release_row(idx)))
     }
 
     /// Re-admit a suspended sequence by **recompute**: prefill
@@ -1065,134 +632,90 @@ impl<'a> SpecBatch<'a> {
             bail!("suspended context ({ctx_len} bytes) exceeds the \
                    prefill capacity ({p_cap})");
         }
+        let row = self.backend.admissible_row(&self.rows)?;
         let id = self.next_stream;
         self.next_stream += 1;
-        let slot = Slot {
-            id,
-            state: SeqState::resumed(susp.prompt, susp.generated,
-                                     susp.logp_sum),
-            rng_draft: susp.rng_draft,
-            rng_accept: susp.rng_accept,
-            max_new_tokens: susp.max_new_tokens,
-            temperature: susp.temperature,
-            top_p: susp.top_p,
-        };
+        let slot = susp.into_slot(id);
         let ctx = slot.state.context();
-        if self.cfg.mode == ExecMode::Pad && self.store.is_some() {
-            let row = self.reusable_pad_row()?;
-            self.ensure_scatter_ready()?;
-            self.prefill_pad_row(row, &ctx)?;
-            self.rows[row] = Row::Seq(slot);
-            return Ok(id);
-        }
-        let Some(row) = self.rows.iter().position(Row::is_free) else {
-            bail!("no free slot (capacity {})", self.capacity);
-        };
-        if self.cfg.mode == ExecMode::Split {
-            self.prefill_split_slot(row, &ctx)?;
+        {
+            let (be, mut cx, rows) = self.backend_cx();
+            be.bind_row(&mut cx, rows, row, &ctx)?;
         }
         self.rows[row] = Row::Seq(slot);
         Ok(id)
     }
 
-    /// Drop the drained PAD batch so new admissions start a fresh bucket.
-    fn reset_pad(&mut self) {
-        self.store = None;
-        self.rows = (0..self.capacity).map(|_| Row::Free).collect();
-        self.t0 = None;
-        self.policy = fresh_policy(&self.cfg);
-    }
+    // -- live re-bucketing -------------------------------------------------
 
-    // -- mode-dispatched model calls ---------------------------------------
-
-    #[allow(clippy::too_many_arguments)]
-    fn draft_all(&self, store: &mut CacheStore, b: usize, k: usize,
-                 tokens_in: &[i32], n_in: &[i32], dlens: &[i32],
-                 uniforms: &[f32], temps: &[f32], tps: &[f32],
-                 stepping: &[bool])
-                 -> Result<(Vec<i32>, Vec<f32>)> {
-        let cfg = &self.cfg;
-        let eng = self.engine;
-        let vocab = eng.manifest.vocab;
-        match store {
-            CacheStore::Pad { draft, .. } => {
-                let caches = std::mem::take(draft);
-                let out = eng.draft(&cfg.draft_model, cfg.precision,
-                                    cfg.attn, b, k, tokens_in, n_in, dlens,
-                                    uniforms, temps, tps, caches)?;
-                *draft = out.caches;
-                Ok((out.tokens, out.qdists))
-            }
-            CacheStore::Split { draft, .. } => {
-                let mut toks = vec![0i32; b * k];
-                let mut qd = vec![0f32; b * k * vocab];
-                for i in 0..b {
-                    if !stepping[i] {
-                        continue; // SPLIT skips finished/free slots
-                    }
-                    let caches = std::mem::take(&mut draft[i]);
-                    let out = eng.draft(
-                        &cfg.draft_model, cfg.precision, cfg.attn, 1, k,
-                        &tokens_in[i * 2..i * 2 + 2], &n_in[i..=i],
-                        &dlens[i..=i], &uniforms[i * k..(i + 1) * k],
-                        &temps[i..=i], &tps[i..=i], caches)?;
-                    draft[i] = out.caches;
-                    toks[i * k..(i + 1) * k].copy_from_slice(&out.tokens);
-                    qd[i * k * vocab..(i + 1) * k * vocab]
-                        .copy_from_slice(&out.qdists);
-                }
-                Ok((toks, qd))
-            }
+    /// The bucket a live re-bucket toward `desired_rows` total rows
+    /// would land on — [`SpecConfig::pad_headroom`] re-applied, clamped
+    /// to the serving capacity and the largest exported bucket, never
+    /// below the occupied rows — or `None` when re-bucketing is
+    /// impossible or pointless: SPLIT (no fused bucket), a PAD batch
+    /// that has not started (the lazy start buckets by itself), an
+    /// empty batch (the drain auto-reset re-buckets for free), a live
+    /// row whose context outgrew `manifest.prefill_p` (its KV could not
+    /// be recomputed *exactly*), or a target that resolves to the
+    /// current bucket. This is the single validation path
+    /// [`SpecBatch::rebucket`] trusts, so a scheduler probing it cannot
+    /// drift from what the batch will actually do.
+    pub fn rebucket_target(&self, desired_rows: usize) -> Option<usize> {
+        let cur = self.backend.live_bucket(&self.rows)?;
+        let occupied = self.occupied();
+        if occupied == 0 {
+            return None;
         }
-    }
-
-    fn verify_all(&self, store: &mut CacheStore, b: usize, q: usize,
-                  vtokens: &[i32], mlens: &[i32], stepping: &[bool])
-                  -> Result<Vec<f32>> {
-        let cfg = &self.cfg;
-        let eng = self.engine;
-        let vocab = eng.manifest.vocab;
-        match store {
-            CacheStore::Pad { main, .. } => {
-                let caches = std::mem::take(main);
-                let out = eng.decode(&cfg.main_model, cfg.precision,
-                                     cfg.attn, b, q, vtokens, mlens,
-                                     caches)?;
-                *main = out.caches;
-                Ok(out.logits)
-            }
-            CacheStore::Split { main, .. } => {
-                let mut logits = vec![0f32; b * q * vocab];
-                for i in 0..b {
-                    if !stepping[i] {
-                        continue;
-                    }
-                    let caches = std::mem::take(&mut main[i]);
-                    let out = eng.decode(
-                        &cfg.main_model, cfg.precision, cfg.attn, 1, q,
-                        &vtokens[i * q..(i + 1) * q], &mlens[i..=i],
-                        caches)?;
-                    main[i] = out.caches;
-                    logits[i * q * vocab..(i + 1) * q * vocab]
-                        .copy_from_slice(&out.logits);
-                }
-                Ok(logits)
-            }
+        let p_cap = self.engine.manifest.prefill_p;
+        let movable = self.rows.iter().all(|r| match r {
+            // Only still-active rows carry a live KV contract; finished
+            // rows are reported from host state and may be re-encoded
+            // clamped, husks and shadows are dropped.
+            Row::Seq(s) if s.state.active() => s.state.context_len()
+                <= p_cap,
+            _ => true,
+        });
+        if !movable {
+            return None;
         }
+        let largest = self.engine.manifest.largest_batch();
+        let ceil = largest.min(self.capacity).max(occupied);
+        let want = desired_rows.clamp(occupied, ceil);
+        let b = self
+            .engine
+            .manifest
+            .bucket_batch_padded(want, self.cfg.pad_headroom,
+                                 self.capacity)
+            .ok()?;
+        (b != cur).then_some(b)
     }
-}
 
-/// States of the rows whose compute is *served work* this step: live real
-/// sequences only. Husk (retired) and Shadow (padding) rows still ride
-/// the fused PAD artifact, but they serve no request — FLOP and token
-/// accounting must not charge them (`flops_count_live_rows_only`).
-fn live_row_states(rows: &[Row]) -> Vec<&SeqState> {
-    rows.iter()
-        .filter_map(|r| match r {
-            Row::Seq(s) if s.state.active() => Some(&s.state),
-            _ => None,
-        })
-        .collect()
+    /// Re-shape the running fused bucket to cover `desired_rows` total
+    /// rows **without draining** — grow for a burst larger than the
+    /// reusable rows, shrink when occupancy fell below a smaller bucket.
+    /// Every carried row rides the same bitwise recompute primitive as
+    /// [`SpecBatch::resume`]: one fused prefill at the new bucket
+    /// re-encodes each row's `prompt ‖ generated`, while SeqIds, RNG
+    /// stream positions, sampling params, the batch clock and the
+    /// draft-length policy carry over — so carried sequences are
+    /// byte-identical to never having been re-bucketed under
+    /// [`Policy::Fixed`], and no artifact rebuild or manifest bump is
+    /// needed. Returns `Ok(None)` when no re-bucket is possible or
+    /// needed ([`SpecBatch::rebucket_target`]). On a device failure the
+    /// previous bucket stays intact (the old caches are replaced only
+    /// after the new prefill succeeds), so the caller may simply keep
+    /// driving the batch.
+    pub fn rebucket(&mut self, desired_rows: usize)
+                    -> Result<Option<Rebucket>> {
+        let Some(bucket) = self.rebucket_target(desired_rows) else {
+            return Ok(None);
+        };
+        let from = self.rows.len();
+        let migrated = {
+            let (be, mut cx, rows) = self.backend_cx();
+            be.rebucket(&mut cx, rows, bucket)?
+        };
+        Ok(Some(Rebucket { from, to: bucket, migrated }))
+    }
 }
 
 fn fresh_policy(cfg: &SpecConfig) -> Box<dyn DraftLenPolicy> {
@@ -1202,199 +725,16 @@ fn fresh_policy(cfg: &SpecConfig) -> Box<dyn DraftLenPolicy> {
     }
 }
 
-pub struct SpecEngine<'a> {
-    pub engine: &'a Engine,
-    pub cfg: SpecConfig,
-}
-
-impl<'a> SpecEngine<'a> {
-    pub fn new(engine: &'a Engine, cfg: SpecConfig) -> SpecEngine<'a> {
-        SpecEngine { engine, cfg }
-    }
-
-    /// Generate completions for a batch of prompts (1 ≤ n ≤ largest batch
-    /// bucket). Prompts longer than the prefill capacity keep their tail.
-    /// This is a thin one-shot loop over the resumable [`SpecBatch`] API:
-    /// admit everything, step until done (or the time budget expires),
-    /// retire everything.
-    pub fn generate(&self, prompts: &[Vec<u8>]) -> Result<SpecResult> {
-        let cfg = &self.cfg;
-        if prompts.is_empty() {
-            bail!("empty prompt batch");
-        }
-        let mut batch =
-            SpecBatch::new(self.engine, cfg.clone(), prompts.len())?;
-        let mut ids = Vec::with_capacity(prompts.len());
-        for p in prompts {
-            ids.push(batch.admit(p, cfg.seed)?);
-        }
-        while batch.has_active() {
-            if let Some(budget) = cfg.time_budget_secs {
-                if batch.elapsed_secs() >= budget {
-                    break;
-                }
-            }
-            batch.step()?;
-        }
-        let wall = batch.elapsed_secs();
-        let seqs: Vec<SeqState> = ids
-            .into_iter()
-            .map(|id| batch.retire(id))
-            .collect::<Result<_>>()?;
-        let mut metrics = BatchMetrics::from_seqs(&seqs, wall);
-        metrics.steps = batch.steps;
-        metrics.acceptance_rate = if batch.drafted > 0 {
-            batch.accepted as f64 / batch.drafted as f64
-        } else {
-            0.0
-        };
-        metrics.tokens_per_step = if batch.steps > 0 {
-            metrics.total_tokens as f64 / batch.steps as f64
-        } else {
-            0.0
-        };
-        Ok(SpecResult {
-            seqs,
-            metrics,
-            drafted: batch.drafted,
-            accepted: batch.accepted,
-            steps: batch.steps,
-            prefill_secs: batch.prefill_secs,
-            draft_secs: batch.draft_secs,
-            verify_secs: batch.verify_secs,
-            flops: batch.flops.clone(),
-            step_log: batch.step_log.clone(),
-        })
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn config_default_is_sane() {
-        let c = SpecConfig::default();
-        assert_eq!(c.main_model, "main");
-        assert_eq!(c.mode, ExecMode::Pad);
-        assert!(matches!(c.policy, Policy::Heuristic));
-    }
-
-    #[test]
-    fn step_report_default_is_idle() {
-        let r = StepReport::default();
-        assert_eq!(r.active, 0);
-        assert!(r.events.is_empty() && r.finished.is_empty());
-    }
-
-    fn slot(id: SeqId, prompt: Vec<u8>) -> Slot {
-        let last = *prompt.last().unwrap();
-        let len = prompt.len() as i32;
-        Slot {
-            id,
-            state: SeqState::new(prompt, last, len),
-            rng_draft: Pcg32::new(0, 2 * id),
-            rng_accept: Pcg32::new(0, 2 * id + 1),
-            max_new_tokens: 8,
-            temperature: 1.0,
-            top_p: 1.0,
-        }
-    }
-
-    #[test]
-    fn flops_count_live_rows_only() {
-        // Regression for the PAD metrics skew: Husk (retired) and Shadow
-        // (padding) rows used to accrue draft/verify FLOPs — the fused
-        // artifact does compute them, but they serve no request, so
-        // charging them inflated PAD throughput/utilization.
-        let mut finished = slot(2, vec![4, 5]);
-        finished.state.finish_at(FinishReason::Eos, 1.0);
-        let rows = vec![
-            Row::Seq(slot(0, vec![1, 2, 3])), // live: the only countable
-            Row::Husk(SeqState::new(vec![9, 9], 9, 2)), // retired
-            Row::Shadow(slot(1, vec![7, 8])),           // padding
-            Row::Seq(finished), // finished-but-unretired: not served work
-            Row::Free,
-        ];
-        let live = live_row_states(&rows);
-        assert_eq!(live.len(), 1);
-        assert_eq!(live[0].prompt, vec![1, 2, 3]);
-    }
-
-    #[test]
-    fn suspended_husk_rows_charge_nothing() {
-        // A PAD preemption husks the row with a *still-Running* state
-        // (unlike a retire husk, which is finished). It serves no request
-        // while suspended, so FLOP/token accounting must skip it — the
-        // preemption variant of the PAD metrics-skew regression.
-        let suspended_husk = SeqState::new(vec![3, 4, 5], 5, 3);
-        assert!(suspended_husk.active(), "suspend husks stay Running");
-        let rows = vec![
-            Row::Seq(slot(0, vec![1, 2])),
-            Row::Husk(suspended_husk),
-        ];
-        let live = live_row_states(&rows);
-        assert_eq!(live.len(), 1);
-        assert_eq!(live[0].prompt, vec![1, 2]);
-    }
-
-    #[test]
-    fn fresh_suspended_seq_round_trips_into_state() {
-        // SuspendedSeq::fresh == "admitted then suspended before any
-        // step": zero progress, budget/params resolved against the
-        // config, and into_state() reconstructs a fresh-admit SeqState.
-        let cfg = SpecConfig::default();
-        let opts = AdmitOpts {
-            max_new_tokens: Some(7),
-            temperature: Some(1.5),
-            ..AdmitOpts::default()
-        };
-        let susp = SuspendedSeq::fresh(&[9, 8, 7], 42, &opts, &cfg);
-        assert_eq!(susp.tokens_generated(), 0);
-        assert_eq!(susp.context_len(), 3);
-        assert_eq!(susp.max_new_tokens, 7);
-        assert_eq!(susp.temperature, 1.5);
-        assert_eq!(susp.top_p, cfg.top_p); // unset -> config default
-        let st = susp.into_state();
-        let fresh = SeqState::new(vec![9, 8, 7], 7, 3);
-        assert_eq!(st.main_len, fresh.main_len);
-        assert_eq!(st.pending_main, fresh.pending_main);
-        assert!(st.active());
-    }
-
-    #[test]
-    fn all_padding_batch_counts_zero_live_rows() {
-        // A drained-but-unreset PAD bucket (husks + still-running shadows)
-        // must charge nothing.
-        let rows = vec![
-            Row::Husk(SeqState::new(vec![1], 1, 1)),
-            Row::Shadow(slot(0, vec![2, 3])),
-        ];
-        assert!(live_row_states(&rows).is_empty());
-    }
-
-    #[test]
-    fn admit_opts_sampling_overrides_are_range_checked() {
-        let ok = |o: AdmitOpts| o.validate().is_ok();
-        assert!(ok(AdmitOpts::default()));
-        assert!(ok(AdmitOpts { temperature: Some(0.0),
-                               ..AdmitOpts::default() })); // warp clamps
-        assert!(ok(AdmitOpts { temperature: Some(2.5),
-                               top_p: Some(1.0),
-                               ..AdmitOpts::default() }));
-        for bad in [
-            AdmitOpts { top_p: Some(0.0), ..AdmitOpts::default() },
-            AdmitOpts { top_p: Some(-0.5), ..AdmitOpts::default() },
-            AdmitOpts { top_p: Some(1.5), ..AdmitOpts::default() },
-            AdmitOpts { top_p: Some(f32::NAN), ..AdmitOpts::default() },
-            AdmitOpts { temperature: Some(-1.0),
-                        ..AdmitOpts::default() },
-            AdmitOpts { temperature: Some(f32::INFINITY),
-                        ..AdmitOpts::default() },
-            AdmitOpts { temperature: Some(f32::NAN),
-                        ..AdmitOpts::default() },
-        ] {
-            assert!(bad.validate().is_err(), "accepted: {bad:?}");
-        }
+    fn rebucket_report_orients_grow_and_shrink() {
+        let grow = Rebucket { from: 2, to: 4, migrated: 2 };
+        assert!(grow.to > grow.from);
+        let shrink = Rebucket { from: 8, to: 2, migrated: 1 };
+        assert!(shrink.to < shrink.from);
+        assert_eq!(shrink.migrated, 1);
     }
 }

@@ -1,16 +1,37 @@
-//! The paper's contribution: batched speculative sampling (§3).
+//! The paper's contribution: batched speculative sampling (§3), layered
+//! so the decode loop is written once and the execution modes plug in:
 //!
+//! * `config` — [`SpecConfig`] / [`ExecMode`] / [`Policy`]: the
+//!   batch-wide knobs. The mode is data here; it becomes behavior only
+//!   inside `backend`.
+//! * `seq` (internal) — the slot/row model: per-sequence state, RNG
+//!   streams and sampling params ([`AdmitOpts`] overrides), the
+//!   Husk/Shadow row lifecycle, and the [`SuspendedSeq`] host snapshot
+//!   that preemption *and* live re-bucketing rebuild rows from.
+//! * `backend` (internal) — the **mode-agnostic exec backend
+//!   contract**: `PadBackend` (one fused artifact per batch bucket) and
+//!   `SplitBackend` (per-sequence B=1 artifacts) own the device caches
+//!   and implement admission binding, the lazy start, step execution,
+//!   row release and — PAD only — live re-bucketing. No code outside
+//!   the backend implementations branches on [`ExecMode`].
 //! * [`draft_len`] — Algorithm 1 and fixed-length baselines.
-//! * [`engine`] — the BASS decode loop, exposed both as the resumable
-//!   [`SpecBatch`] step API (admit / step / retire, plus suspend / resume
-//!   by recompute — what the coordinator's continuous batching and
-//!   preemptive scheduling drive) and as the one-shot [`SpecEngine`]
-//!   convenience wrapper.
+//! * `engine` — the mode-free batch orchestrator: the resumable
+//!   [`SpecBatch`] step API (admit / step / retire, suspend / resume by
+//!   recompute, and [`SpecBatch::rebucket`] — grow or shrink a running
+//!   PAD bucket without a drain, no artifact rebuild).
+//! * `oneshot` — the [`SpecEngine`] convenience wrapper (admit a prompt
+//!   batch, step to completion, aggregate a [`SpecResult`]).
 
 pub mod draft_len;
-mod engine;
 
+mod backend;
+mod config;
+mod engine;
+mod oneshot;
+mod seq;
+
+pub use config::{ExecMode, Policy, SpecConfig};
 pub use draft_len::{DraftLenPolicy, Fixed, Heuristic};
-pub use engine::{AdmitOpts, ExecMode, Policy, SeqEvent, SeqId, SpecBatch,
-                 SpecConfig, SpecEngine, SpecResult, StepReport,
-                 SuspendedSeq};
+pub use engine::{Rebucket, SpecBatch};
+pub use oneshot::{SpecEngine, SpecResult};
+pub use seq::{AdmitOpts, SeqEvent, SeqId, StepReport, SuspendedSeq};

@@ -1,0 +1,101 @@
+//! The one-shot convenience wrapper over the resumable batch API:
+//! [`SpecEngine::generate`] admits a whole prompt batch, steps it to
+//! completion (or its time budget) and aggregates the run into a
+//! [`SpecResult`] — what the benches, eval harness and CLI drive.
+
+use anyhow::{bail, Result};
+
+use crate::flops::FlopCounter;
+use crate::kv::SeqState;
+use crate::metrics::BatchMetrics;
+use crate::runtime::Engine;
+
+use super::config::SpecConfig;
+use super::engine::SpecBatch;
+
+/// Result of one batched speculative generation.
+#[derive(Debug)]
+pub struct SpecResult {
+    /// Final state of every *real* (non-padding) sequence.
+    pub seqs: Vec<SeqState>,
+    pub metrics: BatchMetrics,
+    /// Total draft tokens proposed / accepted (acceptance-rate numerator
+    /// counts accepted drafts only, not corrections).
+    pub drafted: usize,
+    pub accepted: usize,
+    pub steps: usize,
+    /// Prefill wall time (reported separately; PTL clocks start after
+    /// prefill, matching the paper's incremental-decoding focus).
+    pub prefill_secs: f64,
+    pub draft_secs: f64,
+    pub verify_secs: f64,
+    pub flops: FlopCounter,
+    /// History of (draft length used, accepted counts) per step.
+    pub step_log: Vec<(usize, Vec<usize>)>,
+}
+
+pub struct SpecEngine<'a> {
+    pub engine: &'a Engine,
+    pub cfg: SpecConfig,
+}
+
+impl<'a> SpecEngine<'a> {
+    pub fn new(engine: &'a Engine, cfg: SpecConfig) -> SpecEngine<'a> {
+        SpecEngine { engine, cfg }
+    }
+
+    /// Generate completions for a batch of prompts (1 ≤ n ≤ largest batch
+    /// bucket). Prompts longer than the prefill capacity keep their tail.
+    /// This is a thin one-shot loop over the resumable [`SpecBatch`] API:
+    /// admit everything, step until done (or the time budget expires),
+    /// retire everything.
+    pub fn generate(&self, prompts: &[Vec<u8>]) -> Result<SpecResult> {
+        let cfg = &self.cfg;
+        if prompts.is_empty() {
+            bail!("empty prompt batch");
+        }
+        let mut batch =
+            SpecBatch::new(self.engine, cfg.clone(), prompts.len())?;
+        let mut ids = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            ids.push(batch.admit(p, cfg.seed)?);
+        }
+        while batch.has_active() {
+            if let Some(budget) = cfg.time_budget_secs {
+                if batch.elapsed_secs() >= budget {
+                    break;
+                }
+            }
+            batch.step()?;
+        }
+        let wall = batch.elapsed_secs();
+        let seqs: Vec<SeqState> = ids
+            .into_iter()
+            .map(|id| batch.retire(id))
+            .collect::<Result<_>>()?;
+        let mut metrics = BatchMetrics::from_seqs(&seqs, wall);
+        metrics.steps = batch.steps;
+        metrics.acceptance_rate = if batch.drafted > 0 {
+            batch.accepted as f64 / batch.drafted as f64
+        } else {
+            0.0
+        };
+        metrics.tokens_per_step = if batch.steps > 0 {
+            metrics.total_tokens as f64 / batch.steps as f64
+        } else {
+            0.0
+        };
+        Ok(SpecResult {
+            seqs,
+            metrics,
+            drafted: batch.drafted,
+            accepted: batch.accepted,
+            steps: batch.steps,
+            prefill_secs: batch.prefill_secs,
+            draft_secs: batch.draft_secs,
+            verify_secs: batch.verify_secs,
+            flops: batch.flops.clone(),
+            step_log: batch.step_log.clone(),
+        })
+    }
+}

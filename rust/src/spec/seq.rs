@@ -1,0 +1,391 @@
+//! Per-sequence batch state: the slot/row model every exec backend and
+//! the batch orchestrator share.
+//!
+//! * [`Slot`] — one admitted sequence: its [`SeqState`], private PCG32
+//!   streams, and per-sequence sampling params / budget.
+//! * [`Row`] — one batch row. `Shadow` rows are PAD padding (they advance
+//!   like real sequences, matching the padded artifact rows, but are
+//!   never reported); `Husk` rows are released PAD sequences — frozen
+//!   state that keeps feeding the fused artifact valid lengths. Both are
+//!   mid-flight admission targets: a new sequence scatter-prefills over
+//!   the row and turns it back into `Seq`.
+//! * [`SuspendedSeq`] — the host-side snapshot preemption and live
+//!   re-bucketing are built on: everything needed to rebuild the row
+//!   bitwise by recompute.
+//! * [`AdmitOpts`] / [`SeqEvent`] / [`StepReport`] — the admission and
+//!   step-reporting surface of [`super::SpecBatch`].
+
+use anyhow::{bail, Result};
+
+use crate::kv::{FinishReason, SeqState};
+use crate::sampling::Pcg32;
+
+use super::config::SpecConfig;
+
+/// Identity of one admitted sequence (the admission counter; unique for
+/// the lifetime of a [`super::SpecBatch`], never reused across slot
+/// turnover).
+pub type SeqId = u64;
+
+/// What happened to one live sequence during a [`super::SpecBatch::step`].
+#[derive(Debug, Clone)]
+pub struct SeqEvent {
+    pub id: SeqId,
+    /// Draft tokens accepted this step (0..=k).
+    pub accepted: usize,
+    /// Bytes appended to the sequence this step, post-EOS truncation.
+    pub new_bytes: Vec<u8>,
+    /// Sequence finished this step (EOS / length / capacity).
+    pub done: bool,
+    pub finish: FinishReason,
+}
+
+/// Outcome of one [`super::SpecBatch::step`].
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    /// 0-based index of the step just executed.
+    pub step: usize,
+    /// Draft length used (bucketized).
+    pub k: usize,
+    /// Per-sequence events, in slot order (live sequences only).
+    pub events: Vec<SeqEvent>,
+    /// Sequences that finished on this step (retire them to free slots).
+    pub finished: Vec<SeqId>,
+    /// Real sequences still generating after this step.
+    pub active: usize,
+    /// Real sequences occupying slots (active + finished-but-unretired).
+    pub occupied: usize,
+}
+
+/// Per-admission overrides for [`super::SpecBatch::admit_opts`]. Every
+/// `None` falls back to the batch-wide [`SpecConfig`] value, so
+/// `AdmitOpts::default()` reproduces plain [`super::SpecBatch::admit`].
+#[derive(Debug, Clone, Default)]
+pub struct AdmitOpts {
+    /// Per-sequence generation limit.
+    pub max_new_tokens: Option<usize>,
+    /// Pinned PCG32 stream index (see [`super::SpecBatch::admit_opts`]).
+    pub stream: Option<u64>,
+    /// Per-sequence sampling temperature — drives both this row of the
+    /// fused draft artifact and the verify-side warp.
+    pub temperature: Option<f32>,
+    /// Per-sequence nucleus threshold (same scope as `temperature`).
+    pub top_p: Option<f32>,
+}
+
+impl AdmitOpts {
+    /// Range-check the sampling overrides; the `Err` names the offending
+    /// field. [`super::SpecBatch::admit_opts`] runs this before consuming
+    /// a slot, so a bad wire value (`top_p: 0`, NaN, …) fails that one
+    /// request up front instead of warping its rows into all-zero/NaN
+    /// distributions mid-generation.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(t) = self.temperature {
+            if !t.is_finite() || t < 0.0 {
+                bail!("temperature must be finite and >= 0 (got {t})");
+            }
+        }
+        if let Some(p) = self.top_p {
+            if !p.is_finite() || p <= 0.0 || p > 1.0 {
+                bail!("top_p must be in (0, 1] (got {p})");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One occupied slot: sequence state plus its private RNG streams and
+/// sampling params.
+pub(crate) struct Slot {
+    pub(crate) id: SeqId,
+    pub(crate) state: SeqState,
+    pub(crate) rng_draft: Pcg32,
+    pub(crate) rng_accept: Pcg32,
+    pub(crate) max_new_tokens: usize,
+    /// Per-sequence sampling params (seeded from [`SpecConfig`],
+    /// overridden per admission): used for this row of the fused draft
+    /// call and the host-side verify warp.
+    pub(crate) temperature: f32,
+    pub(crate) top_p: f32,
+}
+
+/// A batch row (see the module docs for the `Shadow`/`Husk` lifecycle).
+pub(crate) enum Row {
+    Free,
+    Seq(Slot),
+    Shadow(Slot),
+    Husk(SeqState),
+}
+
+impl Row {
+    pub(crate) fn state(&self) -> Option<&SeqState> {
+        match self {
+            Row::Free => None,
+            Row::Seq(s) | Row::Shadow(s) => Some(&s.state),
+            Row::Husk(st) => Some(st),
+        }
+    }
+
+    pub(crate) fn is_free(&self) -> bool {
+        matches!(self, Row::Free)
+    }
+}
+
+/// States of the rows whose compute is *served work* this step: live real
+/// sequences only. Husk (released) and Shadow (padding) rows still ride
+/// the fused PAD artifact, but they serve no request — FLOP and token
+/// accounting must not charge them (`flops_count_live_rows_only`).
+pub(crate) fn live_row_states(rows: &[Row]) -> Vec<&SeqState> {
+    rows.iter()
+        .filter_map(|r| match r {
+            Row::Seq(s) if s.state.active() => Some(&s.state),
+            _ => None,
+        })
+        .collect()
+}
+
+/// A sequence lifted out of the batch by [`super::SpecBatch::suspend`]:
+/// the complete host-side identity — prompt, verified output bytes, PCG32
+/// stream positions, per-sequence sampling params and generation budget.
+/// Device KV is deliberately **not** captured: [`super::SpecBatch::resume`]
+/// (and a live re-bucket, which round-trips every carried row through the
+/// same primitive) rebuilds it bitwise by recomputing a prefill over
+/// `prompt ‖ generated` with the existing artifacts, so a snapshot costs
+/// a few hundred host bytes and reinstating costs one prefill — the
+/// recompute end of the preemption cost model (cheap to hold, one
+/// prompt-length compute to reinstate).
+#[derive(Debug, Clone)]
+pub struct SuspendedSeq {
+    prompt: Vec<u8>,
+    generated: Vec<u8>,
+    logp_sum: f64,
+    rng_draft: Pcg32,
+    rng_accept: Pcg32,
+    max_new_tokens: usize,
+    temperature: f32,
+    top_p: f32,
+}
+
+impl SuspendedSeq {
+    /// Build a snapshot "as if" freshly admitted with `admit_opts(prompt,
+    /// seed, opts)` and suspended before any step: zero progress, RNG
+    /// streams at their start. Lets a scheduler park work host-side
+    /// without ever occupying a device slot (and lets host-only tests
+    /// construct parked entries). An unpinned `opts.stream` defaults to
+    /// stream 0 — callers wanting the batch's admission-counter streams
+    /// should admit for real instead.
+    pub fn fresh(prompt: &[u8], seed: u64, opts: &AdmitOpts,
+                 cfg: &SpecConfig) -> SuspendedSeq {
+        let stream = opts.stream.unwrap_or(0);
+        SuspendedSeq {
+            prompt: prompt.to_vec(),
+            generated: Vec::new(),
+            logp_sum: 0.0,
+            rng_draft: Pcg32::new(seed, 2 * stream),
+            rng_accept: Pcg32::new(seed, 2 * stream + 1),
+            max_new_tokens: opts
+                .max_new_tokens
+                .unwrap_or(cfg.max_new_tokens),
+            temperature: opts.temperature.unwrap_or(cfg.temperature),
+            top_p: opts.top_p.unwrap_or(cfg.top_p),
+        }
+    }
+
+    /// Snapshot a released slot (the suspend path): the Slot's host
+    /// state *is* the sequence's complete identity.
+    pub(crate) fn from_slot(slot: Slot) -> SuspendedSeq {
+        SuspendedSeq {
+            prompt: slot.state.prompt,
+            generated: slot.state.generated,
+            logp_sum: slot.state.logp_sum,
+            rng_draft: slot.rng_draft,
+            rng_accept: slot.rng_accept,
+            max_new_tokens: slot.max_new_tokens,
+            temperature: slot.temperature,
+            top_p: slot.top_p,
+        }
+    }
+
+    /// Rebuild a slot under a fresh [`SeqId`] (the resume path): the
+    /// restored RNG streams, params and budget plus a
+    /// [`SeqState::resumed`] ragged restart make the continuation
+    /// byte-identical to never having been suspended once the device KV
+    /// is recomputed.
+    pub(crate) fn into_slot(self, id: SeqId) -> Slot {
+        Slot {
+            id,
+            state: SeqState::resumed(self.prompt, self.generated,
+                                     self.logp_sum),
+            rng_draft: self.rng_draft,
+            rng_accept: self.rng_accept,
+            max_new_tokens: self.max_new_tokens,
+            temperature: self.temperature,
+            top_p: self.top_p,
+        }
+    }
+
+    /// Output bytes verified before the suspension.
+    pub fn tokens_generated(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// Length of the verified context (`prompt ‖ generated`) a resume
+    /// must recompute; must fit `manifest.prefill_p` to be resumable.
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    /// Collapse into a plain (still `Running`) sequence state — what a
+    /// serving layer reports when it must answer a request whose
+    /// sequence is parked (time-budget expiry, shutdown) without
+    /// resuming it.
+    pub fn into_state(self) -> SeqState {
+        SeqState::resumed(self.prompt, self.generated, self.logp_sum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(id: SeqId, prompt: Vec<u8>) -> Slot {
+        let last = *prompt.last().unwrap();
+        let len = prompt.len() as i32;
+        Slot {
+            id,
+            state: SeqState::new(prompt, last, len),
+            rng_draft: Pcg32::new(0, 2 * id),
+            rng_accept: Pcg32::new(0, 2 * id + 1),
+            max_new_tokens: 8,
+            temperature: 1.0,
+            top_p: 1.0,
+        }
+    }
+
+    #[test]
+    fn step_report_default_is_idle() {
+        let r = StepReport::default();
+        assert_eq!(r.active, 0);
+        assert!(r.events.is_empty() && r.finished.is_empty());
+    }
+
+    #[test]
+    fn flops_count_live_rows_only() {
+        // Regression for the PAD metrics skew: Husk (released) and Shadow
+        // (padding) rows used to accrue draft/verify FLOPs — the fused
+        // artifact does compute them, but they serve no request, so
+        // charging them inflated PAD throughput/utilization.
+        let mut finished = slot(2, vec![4, 5]);
+        finished.state.finish_at(FinishReason::Eos, 1.0);
+        let rows = [
+            Row::Seq(slot(0, vec![1, 2, 3])), // live: the only countable
+            Row::Husk(SeqState::new(vec![9, 9], 9, 2)), // retired
+            Row::Shadow(slot(1, vec![7, 8])),           // padding
+            Row::Seq(finished), // finished-but-unretired: not served work
+            Row::Free,
+        ];
+        let live = live_row_states(&rows);
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].prompt, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn suspended_husk_rows_charge_nothing() {
+        // A PAD preemption husks the row with a *still-Running* state
+        // (unlike a retire husk, which is finished). It serves no request
+        // while suspended, so FLOP/token accounting must skip it — the
+        // preemption variant of the PAD metrics-skew regression.
+        let suspended_husk = SeqState::new(vec![3, 4, 5], 5, 3);
+        assert!(suspended_husk.active(), "suspend husks stay Running");
+        let rows = [
+            Row::Seq(slot(0, vec![1, 2])),
+            Row::Husk(suspended_husk),
+        ];
+        let live = live_row_states(&rows);
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].prompt, vec![1, 2]);
+    }
+
+    #[test]
+    fn all_padding_batch_counts_zero_live_rows() {
+        // A drained-but-unreset PAD bucket (husks + still-running shadows)
+        // must charge nothing.
+        let rows = [
+            Row::Husk(SeqState::new(vec![1], 1, 1)),
+            Row::Shadow(slot(0, vec![2, 3])),
+        ];
+        assert!(live_row_states(&rows).is_empty());
+    }
+
+    #[test]
+    fn fresh_suspended_seq_round_trips_into_state() {
+        // SuspendedSeq::fresh == "admitted then suspended before any
+        // step": zero progress, budget/params resolved against the
+        // config, and into_state() reconstructs a fresh-admit SeqState.
+        let cfg = SpecConfig::default();
+        let opts = AdmitOpts {
+            max_new_tokens: Some(7),
+            temperature: Some(1.5),
+            ..AdmitOpts::default()
+        };
+        let susp = SuspendedSeq::fresh(&[9, 8, 7], 42, &opts, &cfg);
+        assert_eq!(susp.tokens_generated(), 0);
+        assert_eq!(susp.context_len(), 3);
+        assert_eq!(susp.max_new_tokens, 7);
+        assert_eq!(susp.temperature, 1.5);
+        assert_eq!(susp.top_p, cfg.top_p); // unset -> config default
+        let st = susp.into_state();
+        let fresh = SeqState::new(vec![9, 8, 7], 7, 3);
+        assert_eq!(st.main_len, fresh.main_len);
+        assert_eq!(st.pending_main, fresh.pending_main);
+        assert!(st.active());
+    }
+
+    #[test]
+    fn slot_snapshot_round_trip_preserves_identity() {
+        // from_slot ∘ into_slot is the suspend/resume (and re-bucket)
+        // host identity: bytes, RNG positions, params and budget all
+        // survive; only the SeqId and the ragged restart differ.
+        let mut s = slot(3, vec![10, 11, 12]);
+        s.state.generated = vec![20, 21];
+        s.state.logp_sum = -1.5;
+        s.rng_draft.next_f32(); // advance the streams off their start
+        s.rng_accept.next_f32();
+        let mut rng_d = s.rng_draft.clone();
+        let mut rng_a = s.rng_accept.clone();
+        let mut back = SuspendedSeq::from_slot(s).into_slot(9);
+        assert_eq!(back.id, 9);
+        assert_eq!(back.state.prompt, vec![10, 11, 12]);
+        assert_eq!(back.state.generated, vec![20, 21]);
+        assert_eq!(back.state.logp_sum, -1.5);
+        assert_eq!(back.state.main_len, 4); // context - 1 ragged restart
+        assert_eq!(back.max_new_tokens, 8);
+        assert_eq!(back.rng_draft.next_u32(), rng_d.next_u32());
+        assert_eq!(back.rng_accept.next_u32(), rng_a.next_u32());
+    }
+
+    #[test]
+    fn admit_opts_sampling_overrides_are_range_checked() {
+        let ok = |o: AdmitOpts| o.validate().is_ok();
+        assert!(ok(AdmitOpts::default()));
+        assert!(ok(AdmitOpts { temperature: Some(0.0),
+                               ..AdmitOpts::default() })); // warp clamps
+        assert!(ok(AdmitOpts { temperature: Some(2.5),
+                               top_p: Some(1.0),
+                               ..AdmitOpts::default() }));
+        for bad in [
+            AdmitOpts { top_p: Some(0.0), ..AdmitOpts::default() },
+            AdmitOpts { top_p: Some(-0.5), ..AdmitOpts::default() },
+            AdmitOpts { top_p: Some(1.5), ..AdmitOpts::default() },
+            AdmitOpts { top_p: Some(f32::NAN), ..AdmitOpts::default() },
+            AdmitOpts { temperature: Some(-1.0),
+                        ..AdmitOpts::default() },
+            AdmitOpts { temperature: Some(f32::INFINITY),
+                        ..AdmitOpts::default() },
+            AdmitOpts { temperature: Some(f32::NAN),
+                        ..AdmitOpts::default() },
+        ] {
+            assert!(bad.validate().is_err(), "accepted: {bad:?}");
+        }
+    }
+}

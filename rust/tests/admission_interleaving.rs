@@ -113,6 +113,10 @@ struct ScheduleOutcome {
     suspensions: usize,
     /// Resumes into a batch that was running at the time.
     resumes_midflight: usize,
+    /// Live re-buckets that grew the running fused bucket (PAD only).
+    grows: usize,
+    /// Live re-buckets that shrank it (PAD only).
+    shrinks: usize,
 }
 
 /// Replay one random schedule with random admissions, retirements AND
@@ -175,6 +179,39 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
         }
         if batch.occupied() == 0 {
             stepped_since_empty = false; // drained (PAD auto-reset point)
+        }
+
+        // Random live re-bucketing (p=0.5 per eligible boundary): GROW
+        // when waiting work cannot be placed (the bucket is fully live —
+        // no husk/shadow row left), SHRINK when nothing is waiting and
+        // the occupancy fits a smaller bucket — the same two triggers
+        // the coordinator's scheduler uses. Every carried sequence rides
+        // the recompute primitive, so the byte-identity checks below pin
+        // re-bucketing exactly like admission and preemption. SPLIT has
+        // no fused bucket: `rebucket` probes to `None` and the counters
+        // must stay at zero.
+        if stepped_since_empty && batch.occupied() > 0
+            && rng.next_f32() < 0.5
+        {
+            let waiting = pending.len() + parked.len();
+            if waiting > 0 && batch.free_slots() == 0 {
+                if let Some(r) = batch
+                    .rebucket(batch.occupied() + waiting)
+                    .unwrap()
+                {
+                    assert!(r.to > r.from,
+                            "demand against a full bucket must grow");
+                    out.grows += 1;
+                }
+            } else if waiting == 0 {
+                if let Some(r) = batch.rebucket(batch.occupied()).unwrap()
+                {
+                    assert!(r.to < r.from,
+                            "idle re-bucket must shrink");
+                    assert!(r.to >= batch.occupied());
+                    out.shrinks += 1;
+                }
+            }
         }
 
         // Random resume of parked sequences (p=0.5 each boundary, slots
@@ -247,6 +284,8 @@ fn run_mode(mode: ExecMode) {
         total.midflight += o.midflight;
         total.suspensions += o.suspensions;
         total.resumes_midflight += o.resumes_midflight;
+        total.grows += o.grows;
+        total.shrinks += o.shrinks;
     }
     assert!(total.checked >= 600,
             "{mode:?}: only {} sequences checked — schedules degenerate",
@@ -270,6 +309,26 @@ fn run_mode(mode: ExecMode) {
             "{mode:?}: only {} mid-flight resumes across {SCHEDULES} \
              schedules — resumes never hit a running batch",
             total.resumes_midflight);
+    // Live re-bucketing floors: PAD schedules must actually grow and
+    // shrink running buckets many times (the recompute-carry path the
+    // identity checks pin); SPLIT has no fused bucket and every rebucket
+    // call must have declined as a no-op.
+    match mode {
+        ExecMode::Pad => {
+            assert!(total.grows >= 10,
+                    "{mode:?}: only {} live grows across {SCHEDULES} \
+                     schedules — the harness is not exercising \
+                     re-bucketing", total.grows);
+            assert!(total.shrinks >= 5,
+                    "{mode:?}: only {} live shrinks across {SCHEDULES} \
+                     schedules — the harness is not exercising \
+                     re-bucketing", total.shrinks);
+        }
+        ExecMode::Split => {
+            assert_eq!((total.grows, total.shrinks), (0, 0),
+                       "SPLIT has no fused bucket to re-shape");
+        }
+    }
 }
 
 #[test]

@@ -313,6 +313,85 @@ fn pad_midflight_admission_into_running_batch() {
     assert!(long.seqs[0].n_tokens >= late.seqs[0].n_tokens);
 }
 
+/// The live-grow acceptance test (this PR's tentpole): a PAD batch
+/// running at bucket b admits a burst of b+k sequences **without
+/// draining** — the scheduler grows the live fused bucket by recompute
+/// (there is no husk/shadow row to scatter into, and equal priorities
+/// never preempt), the burst is answered while the original request
+/// keeps generating, and the response's `"rebuckets"` counter reports
+/// the grow. Byte-identity of grow/shrink carries is pinned separately
+/// in `step_equivalence.rs` / `admission_interleaving.rs`.
+#[test]
+fn pad_burst_beyond_bucket_grows_without_drain() {
+    require_artifacts!();
+    let coord = Arc::new(coordinator_with(
+        SpecConfig {
+            max_new_tokens: 96,
+            mode: ExecMode::Pad,
+            temperature: 2.0, // keep the long request rambling (no EOS)
+            ..SpecConfig::default()
+        },
+        4, 1));
+    // Warm up so step timing is not dominated by lazy compiles.
+    let _ = coord.generate(request("def f(x):\n    return", 1, 4, false));
+
+    // Long request alone: the lazy start buckets TIGHT (bucket 1, no
+    // headroom), so the running bucket has zero reusable rows. The
+    // short prompt keeps its context recomputable for many steps.
+    let rx_long = coord.submit(
+        request("def f(x):\n    return", 1, 96, true));
+    match rx_long.recv().expect("long request alive") {
+        Reply::Step(_) => {} // first step done => batch started
+        Reply::Done(r) => panic!("long request finished instantly: {r:?}"),
+    }
+
+    // Burst beyond the bucket: serving it requires growing the live
+    // batch — pre-grow there is nowhere to scatter-admit.
+    let rx_a = coord.submit(request("def mul_3(x):\n    return", 1, 2,
+                                    false));
+    let rx_b = coord.submit(
+        request("article: alice went to the market. summary:", 1, 2,
+                false));
+    let a = Coordinator::wait(rx_a).unwrap();
+    let b = Coordinator::wait(rx_b).unwrap();
+    for (name, r) in [("a", &a), ("b", &b)] {
+        assert_eq!(r.seqs.len(), 1);
+        assert!(r.seqs[0].n_tokens > 0,
+                "burst {name} generated nothing");
+        assert!(r.batch_size > 1,
+                "burst {name} was not co-resident with the long request \
+                 (batch_size {}) — no live grow happened",
+                r.batch_size);
+        assert!(r.rebuckets >= 1,
+                "burst {name} answered without a grow (rebuckets {})",
+                r.rebuckets);
+        assert_eq!(r.preempted, 0,
+                   "equal priorities must grow, not preempt");
+    }
+
+    // The long request must still be running when the burst answered —
+    // the bucket was re-shaped, never drained.
+    let mut long_done_early = false;
+    loop {
+        match rx_long.try_recv() {
+            Ok(Reply::Step(_)) => continue,
+            Ok(Reply::Done(_)) => {
+                long_done_early = true;
+                break;
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => break,
+            Err(e) => panic!("long request channel died: {e}"),
+        }
+    }
+    assert!(!long_done_early,
+            "burst did not overtake the long request — the bucket \
+             drained instead of growing");
+    let long = Coordinator::wait(rx_long).unwrap();
+    assert_eq!(long.seqs.len(), 1);
+    assert!(long.seqs[0].n_tokens >= a.seqs[0].n_tokens,
+            "the grown-over request lost output");
+}
+
 /// The preemptive-scheduler acceptance test: with a single engine slot, a
 /// high-priority late arrival can only run by **suspending** the running
 /// low-priority sequence. It must answer first; the preempted request

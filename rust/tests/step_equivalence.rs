@@ -377,6 +377,154 @@ fn suspend_resume_into_running_pad_bucket() {
     assert!((want.mean_logp() - got.mean_logp()).abs() < 1e-12);
 }
 
+/// Run a one-slot reference batch for `prompt` with a pinned stream and
+/// return its final state (the solo run every re-bucket pin compares
+/// against).
+fn solo_pinned(e: &Engine, cfg: &SpecConfig, prompt: &[u8], seed: u64)
+               -> bass::kv::SeqState {
+    let mut refb = SpecBatch::new(e, cfg.clone(), 1).unwrap();
+    let id = refb
+        .admit_opts(prompt, seed, AdmitOpts {
+            stream: Some(0),
+            ..AdmitOpts::default()
+        })
+        .unwrap();
+    let mut guard = 0;
+    while refb.has_active() {
+        refb.step().unwrap();
+        guard += 1;
+        assert!(guard < 200, "runaway reference run");
+    }
+    refb.retire(id).unwrap()
+}
+
+/// Live re-bucketing identity, GROW: a PAD batch running at bucket 1
+/// grows mid-generation (the carried row is rebuilt by the same bitwise
+/// recompute as resume), a late burst scatter-admits into the fresh
+/// Shadow rows with no drain, and the carried sequence still reproduces
+/// its solo run byte-for-byte (and logP-for-logP) under `Policy::Fixed`.
+/// No artifact/manifest change is involved: the grow is one fused
+/// prefill with the existing per-bucket programs.
+#[test]
+fn rebucket_grow_mid_generation_is_invisible_pad() {
+    require_artifacts!();
+    let e = engine();
+    let cfg = SpecConfig {
+        temperature: 2.0, // ramble: the target outlives the whole dance
+        top_p: 1.0,
+        ..cfg(ExecMode::Pad)
+    };
+    let prompt = &prompts()[0];
+    let want = solo_pinned(&e, &cfg, prompt, 7);
+    assert!(want.tokens_generated() >= 10,
+            "reference too short ({} tokens) to bisect with a grow",
+            want.tokens_generated());
+
+    // Interrupted: the same admission at capacity 4 — the lazy start
+    // still buckets TIGHT at 1, so the running bucket has zero reusable
+    // rows and a burst can only be served by growing it live.
+    let mut batch = SpecBatch::new(&e, cfg.clone(), 4).unwrap();
+    let target = batch
+        .admit_opts(prompt, 7, AdmitOpts {
+            stream: Some(0),
+            ..AdmitOpts::default()
+        })
+        .unwrap();
+    batch.step().unwrap();
+    assert_eq!(batch.bucket_rows(), Some(1), "tight bucket to start");
+    assert!(!batch.can_admit(), "bucket of 1 fully live");
+    let r = batch
+        .rebucket(3)
+        .unwrap()
+        .expect("grow must execute on a fully-live bucket");
+    assert_eq!((r.from, r.migrated), (1, 1));
+    assert!(r.to >= 3, "bucket must cover the demand (got {})", r.to);
+    assert_eq!(batch.bucket_rows(), Some(r.to));
+    // The burst lands in the grown bucket's fresh rows while the target
+    // keeps generating — scatter admission, no drain in between.
+    let a = batch.admit(&prompts()[1], 11).unwrap();
+    let b = batch.admit(&prompts()[2], 13).unwrap();
+    assert!(batch.occupied() >= 3);
+    let mut guard = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        guard += 1;
+        assert!(guard < 200, "runaway grown run");
+    }
+    let got = batch.retire(target).unwrap();
+    let _ = batch.retire(a);
+    let _ = batch.retire(b);
+
+    assert_eq!(want.generated, got.generated,
+               "grow-carried bytes diverge from the solo run");
+    assert_eq!(want.finish, got.finish, "finish reason");
+    assert!((want.mean_logp() - got.mean_logp()).abs() < 1e-12,
+            "mean_logp {} vs {}", want.mean_logp(), got.mean_logp());
+    assert_ne!(got.finish, FinishReason::Running);
+}
+
+/// Live re-bucketing identity, SHRINK: three sequences start at bucket
+/// 4; after the two short companions retire, the bucket shrinks to 1
+/// mid-generation (dropping their husk rows) and the survivor still
+/// matches its solo run byte-for-byte.
+#[test]
+fn rebucket_shrink_after_retire_is_invisible_pad() {
+    require_artifacts!();
+    let e = engine();
+    let cfg = SpecConfig {
+        temperature: 2.0,
+        top_p: 1.0,
+        ..cfg(ExecMode::Pad)
+    };
+    let prompt = &prompts()[0];
+    let want = solo_pinned(&e, &cfg, prompt, 7);
+    assert!(want.tokens_generated() >= 10, "reference too short");
+
+    let mut batch = SpecBatch::new(&e, cfg.clone(), 4).unwrap();
+    let target = batch
+        .admit_opts(prompt, 7, AdmitOpts {
+            stream: Some(0),
+            ..AdmitOpts::default()
+        })
+        .unwrap();
+    let short = |batch: &mut SpecBatch, p: &[u8], seed: u64| {
+        batch
+            .admit_opts(p, seed, AdmitOpts {
+                max_new_tokens: Some(2), // one step and out
+                ..AdmitOpts::default()
+            })
+            .unwrap()
+    };
+    let c1 = short(&mut batch, &prompts()[1], 11);
+    let c2 = short(&mut batch, &prompts()[2], 13);
+    batch.step().unwrap();
+    assert_eq!(batch.bucket_rows(), Some(4), "3 admits bucket at 4");
+    batch.retire(c1).unwrap();
+    batch.retire(c2).unwrap();
+    assert_eq!(batch.occupied(), 1, "companions must have retired");
+    assert!(batch.has_active(), "target must still be generating");
+    let r = batch
+        .rebucket(batch.occupied())
+        .unwrap()
+        .expect("shrink must execute on a mostly-empty bucket");
+    assert_eq!((r.from, r.to, r.migrated), (4, 1, 1));
+    assert_eq!(batch.bucket_rows(), Some(1));
+    let mut guard = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        guard += 1;
+        assert!(guard < 200, "runaway shrunk run");
+    }
+    let got = batch.retire(target).unwrap();
+
+    assert_eq!(want.generated, got.generated,
+               "shrink-carried bytes diverge from the solo run");
+    assert_eq!(want.finish, got.finish, "finish reason");
+    assert!((want.mean_logp() - got.mean_logp()).abs() < 1e-12,
+            "mean_logp {} vs {}", want.mean_logp(), got.mean_logp());
+    assert_ne!(got.finish, FinishReason::Running);
+}
+
 #[test]
 fn split_slot_reuse_is_isolated() {
     require_artifacts!();
