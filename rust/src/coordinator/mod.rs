@@ -70,7 +70,7 @@ use anyhow::{anyhow, Result};
 
 use crate::kv::FinishReason;
 use crate::runtime::Engine;
-use crate::spec::{AdmitOpts, SeqId, SpecBatch, SpecConfig};
+use crate::spec::{AdmitOpts, ExecMode, SeqId, SpecBatch, SpecConfig};
 use batcher::BatcherConfig;
 use scheduler::{ParkedSeq, RunningSeq, Scheduler, SchedulerConfig,
                 Urgency};
@@ -151,6 +151,13 @@ pub struct Response {
     /// a load/behavior signal: a rising count under bursty traffic
     /// means the fused bucket is being re-shaped instead of draining.
     pub rebuckets: u64,
+    /// Time to first token: wall seconds from submission to the first
+    /// step on which any of this request's sequences emitted bytes.
+    /// Recorded once per request — preemption/resume cannot reset it —
+    /// and `None` when no byte was ever emitted (e.g. a time budget
+    /// expired before the first step, or the request expired while
+    /// still queued).
+    pub ttft_secs: Option<f64>,
 }
 
 /// One per-step progress notification for a streaming request.
@@ -299,6 +306,12 @@ struct InFlight {
     enqueued: Instant,
     /// Preemption events suffered (reported as `Response::preempted`).
     preempted: usize,
+    /// Seconds from submission to the request's first emitted byte, set
+    /// exactly once in the event-relay loop. Lives here (not on any
+    /// sequence) because the `InFlight` record survives preemption and
+    /// resume — the TTFT of a preempted request is still its first
+    /// token, not its first token after the resume.
+    ttft_secs: Option<f64>,
 }
 
 impl InFlight {
@@ -317,20 +330,30 @@ impl InFlight {
             preempted: self.preempted,
             queue_depth,
             rebuckets,
+            ttft_secs: self.ttft_secs,
         })));
     }
 }
 
 fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
           ready: Sender<Result<()>>) {
-    let engine = match Engine::load(&cfg.artifacts_root) {
-        Ok(e) => e,
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
+    // A stub-mode coordinator serves without a device: the host-only
+    // backend needs no artifacts and nothing to prewarm, so the whole
+    // scheduler stack — admission, preemption, re-bucketing, budgets —
+    // runs on machines without the PJRT binding (the serving load
+    // harness and the CI perf gate drive this path).
+    let engine = if cfg.spec.mode == ExecMode::Stub {
+        Engine::stub()
+    } else {
+        match Engine::load(&cfg.artifacts_root) {
+            Ok(e) => e,
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
         }
     };
-    if cfg.prewarm {
+    if cfg.prewarm && !engine.is_stub() {
         let batches: Vec<usize> = engine.manifest.batches.iter().copied()
             .filter(|&b| b <= cfg.batcher.max_batch)
             .collect();
@@ -539,8 +562,18 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 continue;
             }
             let Some(job) = jobs.remove(&rid) else { continue };
-            admit_request(&mut batch, rid, job, &mut inflight,
-                          &mut seq_owner, now);
+            if let Some(job) = admit_request(&mut batch, rid, job,
+                                             &mut inflight,
+                                             &mut seq_owner, now) {
+                // Zero free rows by the time the admission executed
+                // (e.g. a race with this round's resumes): same
+                // phantom-row treatment — back in the queue, payload
+                // retained, queue wait re-observed on the eventual
+                // admission.
+                sched.submit(rid, job.req.n_seqs.max(1), job.urgency,
+                             job.enqueued);
+                jobs.insert(rid, job);
+            }
         }
         // Bucket-occupancy gauge: live rows of the fused bucket only —
         // SPLIT and an idle/not-started engine report (0, 0) as the
@@ -580,6 +613,7 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                                    rebuckets);
                 }
             }
+            expire_queued_jobs(budget, &mut jobs, &mut sched);
         }
 
         if !batch.has_active() {
@@ -640,10 +674,17 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             }
         };
 
-        // -- relay streaming events ----------------------------------------
+        // -- record TTFT and relay streaming events ------------------------
         for ev in &report.events {
             let Some(&owner) = seq_owner.get(&ev.id) else { continue };
-            let Some(job) = inflight.get(&owner) else { continue };
+            let Some(job) = inflight.get_mut(&owner) else { continue };
+            if !ev.new_bytes.is_empty() && job.ttft_secs.is_none() {
+                // First emitted byte of the whole request (any fan-out
+                // sequence), measured from submission. Set once: later
+                // events — including post-resume ones — cannot move it.
+                job.ttft_secs =
+                    Some(job.enqueued.elapsed().as_secs_f64());
+            }
             if job.stream && (!ev.new_bytes.is_empty() || ev.done) {
                 let _ = job.reply.send(Reply::Step(StepEvent {
                     seq: job.seq_index[&ev.id],
@@ -692,13 +733,21 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
 /// Admit one planned request: fan-out into free slots (clamped to the
 /// batch capacity), per-sequence overrides threaded through
 /// [`AdmitOpts`]. A partial admission failure rolls the request back and
-/// fails it.
+/// fails it. Zero free slots hands the payload back (`Some`) for the
+/// caller to re-queue — admitting a fan-out "clamped to 1" against a
+/// full batch could only fail the whole request on a row that was never
+/// there.
 fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
                  inflight: &mut HashMap<u64, InFlight>,
-                 seq_owner: &mut HashMap<SeqId, u64>, now: Instant) {
+                 seq_owner: &mut HashMap<SeqId, u64>, now: Instant)
+                 -> Option<PendingJob> {
     let default_seed = batch.config().seed;
     let n_requested = job.req.n_seqs.max(1);
-    let n = n_requested.min(batch.free_slots().max(1));
+    let free = batch.free_slots();
+    if free == 0 {
+        return Some(job);
+    }
+    let n = n_requested.min(free);
     let queue_secs = now.duration_since(job.enqueued).as_secs_f64();
     let seed = job.req.seed.unwrap_or(default_seed);
     let mut fl = InFlight {
@@ -714,6 +763,7 @@ fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
         urgency: job.urgency,
         enqueued: job.enqueued,
         preempted: 0,
+        ttft_secs: None,
     };
     let mut failed = None;
     for i in 0..n {
@@ -745,9 +795,58 @@ fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
             seq_owner.remove(&id);
         }
         let _ = fl.reply.send(Reply::Done(Err(e)));
-        return;
+        return None;
     }
     inflight.insert(rid, fl);
+    None
+}
+
+/// A budgeted request can expire while **still queued** (open-loop
+/// overload): it was never admitted, so the inflight budget sweep cannot
+/// see it, and before this sweep existed it would wedge in the queue
+/// until capacity freed — long after its budget made the answer useless
+/// — and then burn a full generation's compute on output nobody was
+/// waiting for. Answer it as-is at the step boundary: the full requested
+/// fan-out of empty, unfinished sequences — the same "budget ran out"
+/// shape an admitted-but-unfinished request reports. Its age runs from
+/// submission (there is no admission timestamp).
+fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
+                      sched: &mut Scheduler) {
+    let expired_queued: Vec<u64> = jobs
+        .iter()
+        .filter(|(_, j)| j.enqueued.elapsed().as_secs_f64() >= budget)
+        .map(|(&id, _)| id)
+        .collect();
+    for rid in expired_queued {
+        if !sched.remove_queued(rid) {
+            // Not in the queue: planned/admitted this round. The
+            // inflight sweep answers it at the next boundary.
+            continue;
+        }
+        let Some(job) = jobs.remove(&rid) else { continue };
+        let n = job.req.n_seqs.max(1);
+        let _ = job.reply.send(Reply::Done(Ok(Response {
+            seqs: (0..n)
+                .map(|_| GenSeq {
+                    text: String::new(),
+                    finished: false,
+                    // 0.0, not mean_logp()'s -inf for an empty
+                    // sequence: -inf does not survive the JSON wire
+                    // format.
+                    mean_logp: 0.0,
+                    n_tokens: 0,
+                })
+                .collect(),
+            n_requested: n,
+            batch_secs: 0.0,
+            batch_size: 0,
+            queue_secs: job.enqueued.elapsed().as_secs_f64(),
+            preempted: 0,
+            queue_depth: sched.queue_depth(),
+            rebuckets: sched.stats.rebuckets(),
+            ttft_secs: None,
+        })));
+    }
 }
 
 /// Move one finished (or budget-stalled) sequence out of the batch and
@@ -811,4 +910,128 @@ fn fail_request(batch: &mut SpecBatch, owner: u64, err: &anyhow::Error,
     }
     let _ = sched.take_parked_of(owner);
     let _ = job.reply.send(Reply::Done(Err(anyhow!("{err:#}"))));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::Policy;
+
+    #[test]
+    fn zero_slot_admission_hands_the_job_back_for_requeue() {
+        let engine = Engine::stub();
+        let spec = SpecConfig {
+            mode: ExecMode::Stub,
+            policy: Policy::Fixed(2),
+            max_new_tokens: 64,
+            ..SpecConfig::default()
+        };
+        let mut batch = SpecBatch::new(&engine, spec, 1).unwrap();
+        batch.admit(b"occupy", 1).unwrap();
+        batch.step().unwrap(); // lazy start: a bucket of 1, fully live
+        assert_eq!(batch.free_slots(), 0);
+        let (tx, rx) = channel::<Reply>();
+        let now = Instant::now();
+        let job = PendingJob {
+            req: Request {
+                prompt: b"queued".to_vec(),
+                n_seqs: 2,
+                max_new_tokens: None,
+                temperature: None,
+                top_p: None,
+                seed: None,
+                priority: None,
+                deadline_ms: None,
+                stream: false,
+            },
+            reply: tx,
+            enqueued: now,
+            urgency: Urgency { priority: 0, deadline: None },
+        };
+        let mut inflight = HashMap::new();
+        let mut seq_owner = HashMap::new();
+        let back = admit_request(&mut batch, 7, job, &mut inflight,
+                                 &mut seq_owner, now);
+        // The old clamp `free_slots().max(1)` admitted one sequence
+        // against the full batch, which failed the whole request on a
+        // row that was never there; the payload must instead come back
+        // intact for the caller to re-queue.
+        assert!(back.is_some(), "zero slots: hand the job back");
+        assert!(inflight.is_empty());
+        assert!(seq_owner.is_empty());
+        assert!(rx.try_recv().is_err(), "no answer, no error: re-queued");
+    }
+
+    fn queued_job(n_seqs: usize, enqueued: Instant)
+                  -> (PendingJob, Receiver<Reply>) {
+        let (tx, rx) = channel::<Reply>();
+        (PendingJob {
+            req: Request {
+                prompt: b"overload".to_vec(),
+                n_seqs,
+                max_new_tokens: None,
+                temperature: None,
+                top_p: None,
+                seed: None,
+                priority: None,
+                deadline_ms: None,
+                stream: false,
+            },
+            reply: tx,
+            enqueued,
+            urgency: Urgency { priority: 0, deadline: None },
+        }, rx)
+    }
+
+    /// The budget-expiry bugfix: the sweep used to scan only `inflight`,
+    /// so a request whose budget ran out while it was **still queued**
+    /// was admitted anyway once capacity freed and burned a full
+    /// generation on an answer nobody could use. Expired queued jobs
+    /// must instead be answered as-is from the queue: the full
+    /// requested fan-out of empty unfinished sequences, no TTFT, never
+    /// admitted.
+    #[test]
+    fn expired_queued_jobs_are_answered_without_admission() {
+        let mut sched = Scheduler::new(SchedulerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                window: Duration::from_millis(0),
+            },
+            ..SchedulerConfig::default()
+        });
+        let now = Instant::now();
+        let stale = now - Duration::from_secs(1);
+        let (expired, rx_expired) = queued_job(3, stale);
+        let (fresh, rx_fresh) = queued_job(1, now);
+        let mut jobs = HashMap::new();
+        sched.submit(1, 3, expired.urgency, stale);
+        jobs.insert(1u64, expired);
+        sched.submit(2, 1, fresh.urgency, now);
+        jobs.insert(2u64, fresh);
+
+        expire_queued_jobs(0.5, &mut jobs, &mut sched);
+
+        // The stale job is gone from both the payload map and the
+        // scheduler queue, and answered with its full fan-out of empty
+        // unfinished sequences.
+        assert!(!jobs.contains_key(&1));
+        assert!(jobs.contains_key(&2), "fresh job must stay queued");
+        match rx_expired.try_recv() {
+            Ok(Reply::Done(Ok(resp))) => {
+                assert_eq!(resp.seqs.len(), 3);
+                assert_eq!(resp.n_requested, 3);
+                assert!(resp.seqs.iter().all(|s| {
+                    !s.finished && s.n_tokens == 0 && s.text.is_empty()
+                }));
+                assert_eq!(resp.batch_size, 0, "never admitted");
+                assert!(resp.ttft_secs.is_none(), "no byte was emitted");
+                assert!(resp.queue_secs >= 0.5, "aged in the queue");
+            }
+            other => panic!("expected an empty response, got {other:?}"),
+        }
+        assert!(rx_fresh.try_recv().is_err(),
+                "the unexpired job must not be answered");
+        // The scheduler still ranks exactly the fresh job.
+        assert_eq!(sched.queue_depth(), 1);
+    }
 }

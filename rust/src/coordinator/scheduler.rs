@@ -278,6 +278,22 @@ impl Scheduler {
         self.queue.len()
     }
 
+    /// Remove one queued request by id — the queued-budget-expiry path:
+    /// a time-budgeted request that expired before ever being admitted
+    /// is answered as-is by the coordinator and must leave the queue,
+    /// or it would wedge there under open-loop overload. Returns
+    /// whether an entry was removed (false: the request was already
+    /// planned out of the queue this round).
+    pub fn remove_queued(&mut self, id: u64) -> bool {
+        let before = self.queue.len();
+        self.queue.retain(|q| q.id != id);
+        let removed = self.queue.len() != before;
+        if removed {
+            self.stats.note_depth(self.queue.len());
+        }
+        removed
+    }
+
     pub fn has_queued(&self) -> bool {
         !self.queue.is_empty()
     }
@@ -534,6 +550,21 @@ mod tests {
 
     fn urgency(priority: i32) -> Urgency {
         Urgency { priority, deadline: None }
+    }
+
+    #[test]
+    fn remove_queued_drops_exactly_the_named_entry() {
+        let mut s = sched(4, 0, false);
+        let now = Instant::now();
+        s.submit(1, 1, urgency(0), now);
+        s.submit(2, 1, urgency(0), now);
+        assert_eq!(s.queue_depth(), 2);
+        assert!(s.remove_queued(1), "present: removed");
+        assert!(!s.remove_queued(1), "already gone");
+        assert_eq!(s.queue_depth(), 1);
+        assert_eq!(s.stats.queue_depth, 1, "depth gauge re-observed");
+        assert!(s.remove_queued(2));
+        assert!(!s.has_queued());
     }
 
     /// A batch view with `free` slots and no re-bucketing capability

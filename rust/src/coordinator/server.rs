@@ -8,8 +8,14 @@
 //!     "deadline_ms": 250}
 //! <- {"ok": true, "seqs": [{"text": " x + 7", "finished": true, ...}],
 //!     "n_requested": 4, "batch_size": 4, "batch_ms": 120.5,
-//!     "queue_ms": 0.8, "preempted": 0, "queue_depth": 3}
+//!     "queue_ms": 0.8, "ttft_ms": 14.2, "preempted": 0,
+//!     "queue_depth": 3}
 //! ```
+//!
+//! `"ttft_ms"` is the request's time to first token — submission to the
+//! first step that emitted a byte of any of its sequences, recorded once
+//! (preemption/resume cannot reset it) — or `null` when nothing was ever
+//! emitted (e.g. the time budget expired first).
 //!
 //! With `"stream": true` the server relays one event line per speculative
 //! step a sequence advanced, before the final `"ok"` line:
@@ -20,6 +26,16 @@
 //! <- {"event": "step", "seq": 0, "delta": " + 7", "done": true}
 //! <- {"ok": true, "seqs": [...], ...}
 //! ```
+//!
+//! Requests **pipeline** on one connection: every line is submitted the
+//! moment it parses — the server never waits for an earlier request's
+//! response before reading the next line — and reply lines of
+//! concurrent requests may interleave (whole lines, never bytes). A
+//! pipelining client tags each request with an `"id"` (any JSON value);
+//! the server echoes it verbatim on every event/response/error line of
+//! that request, which is how interleaved replies are correlated.
+//! Untagged requests get untagged replies, and a client that sends one
+//! request at a time observes the old strictly-ordered behavior.
 //!
 //! A thread per connection forwards requests to the engine worker. The
 //! coordinator schedules concurrent connections **preemptively**: work is
@@ -62,7 +78,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -95,50 +111,100 @@ fn write_line(w: &mut impl Write, j: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Per-connection loop. Requests **pipeline**: each parsed line is
+/// submitted to the coordinator immediately — the reader never blocks
+/// on an earlier request's reply — and a relay thread per request
+/// streams its event/response lines back as they arrive, so one socket
+/// can carry many in-flight requests (the open-loop load harness
+/// drives exactly this). Reply lines of concurrent requests
+/// interleave; a pipelining client tags each request with an `"id"`
+/// and correlates replies by the echoed tag. One-request-at-a-time
+/// clients see the old behavior unchanged.
 fn handle_conn(coord: &Coordinator, stream: TcpStream) -> Result<()> {
-    let mut writer = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
+    let mut relays = Vec::new();
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request(&line) {
+        let (id, parsed) = parse_line(&line);
+        match parsed {
             Ok(req) => {
                 let rx = coord.submit(req);
-                loop {
-                    match rx.recv() {
-                        Ok(Reply::Step(ev)) => {
-                            write_line(&mut writer, &event_json(&ev))?;
-                        }
-                        Ok(Reply::Done(Ok(resp))) => {
-                            write_line(&mut writer, &response_json(&resp))?;
-                            break;
-                        }
-                        Ok(Reply::Done(Err(e))) => {
-                            write_line(&mut writer,
-                                       &error_json(&format!("{e:#}")))?;
-                            break;
-                        }
-                        Err(_) => {
-                            write_line(&mut writer, &error_json(
-                                "engine thread terminated"))?;
-                            break;
-                        }
-                    }
-                }
+                let w = Arc::clone(&writer);
+                relays.push(std::thread::spawn(move || {
+                    relay_replies(&rx, &w, &id);
+                }));
             }
             Err(e) => {
-                write_line(&mut writer,
-                           &error_json(&format!("bad request: {e:#}")))?;
+                let Ok(mut w) = writer.lock() else { break };
+                write_line(&mut *w, &with_id(
+                    error_json(&format!("bad request: {e:#}")), &id))?;
             }
         }
+    }
+    // The client closed its write side; finish relaying the in-flight
+    // replies before dropping the connection.
+    for h in relays {
+        let _ = h.join();
     }
     Ok(())
 }
 
+/// Relay one request's replies onto the shared connection writer,
+/// tagging every line with the client's echoed `"id"` (if any). Each
+/// line is written under the writer lock, so concurrent relays
+/// interleave whole lines, never bytes. A dead writer ends the relay;
+/// the coordinator-side receiver is simply dropped.
+fn relay_replies(rx: &std::sync::mpsc::Receiver<Reply>,
+                 writer: &Mutex<TcpStream>, id: &Option<Json>) {
+    loop {
+        let (line, done) = match rx.recv() {
+            Ok(Reply::Step(ev)) => (event_json(&ev), false),
+            Ok(Reply::Done(Ok(resp))) => (response_json(&resp), true),
+            Ok(Reply::Done(Err(e))) => {
+                (error_json(&format!("{e:#}")), true)
+            }
+            Err(_) => (error_json("engine thread terminated"), true),
+        };
+        let Ok(mut w) = writer.lock() else { return };
+        if write_line(&mut *w, &with_id(line, id)).is_err() {
+            return;
+        }
+        if done {
+            return;
+        }
+    }
+}
+
+/// Echo the client's request tag onto a reply line: pipelined clients
+/// correlate interleaved replies by it. Untagged requests keep
+/// untagged replies.
+fn with_id(mut j: Json, id: &Option<Json>) -> Json {
+    if let (Json::Obj(map), Some(tag)) = (&mut j, id) {
+        map.insert("id".to_string(), tag.clone());
+    }
+    j
+}
+
+/// Split one wire line into its optional client `"id"` tag and the
+/// parsed request. The tag comes back even when the request is
+/// invalid, so the error line still correlates (it is `None` only when
+/// the line is not JSON at all).
+fn parse_line(line: &str) -> (Option<Json>, Result<Request>) {
+    match Json::parse(line) {
+        Ok(j) => (j.opt("id").cloned(), request_from(&j)),
+        Err(e) => (None, Err(e)),
+    }
+}
+
 pub fn parse_request(line: &str) -> Result<Request> {
-    let j = Json::parse(line)?;
+    request_from(&Json::parse(line)?)
+}
+
+fn request_from(j: &Json) -> Result<Request> {
     Ok(Request {
         prompt: crate::tokenizer::encode(j.get("prompt")?.as_str()?),
         n_seqs: j.opt("n").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
@@ -201,6 +267,12 @@ pub fn response_json(resp: &super::Response) -> Json {
         ("preempted", resp.preempted.into()),
         ("queue_depth", resp.queue_depth.into()),
         ("rebuckets", (resp.rebuckets as usize).into()),
+        // Time to first token, `null` when no byte was ever emitted
+        // (a time budget expired before the first step).
+        ("ttft_ms", match resp.ttft_secs {
+            Some(s) => (s * 1e3).into(),
+            None => Json::Null,
+        }),
         ("seqs", Json::Arr(resp.seqs.iter().map(|s| {
             Json::obj(vec![
                 ("text", s.text.as_str().into()),
@@ -281,6 +353,7 @@ mod tests {
             preempted: 2,
             queue_depth: 3,
             rebuckets: 5,
+            ttft_secs: Some(0.0255),
         };
         let j = response_json(&resp);
         // A client compares n_requested to seqs.len() to detect the
@@ -293,6 +366,61 @@ mod tests {
         assert_eq!(j.get("preempted").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("rebuckets").unwrap().as_usize().unwrap(), 5);
+        let ttft = j.get("ttft_ms").unwrap().as_f64().unwrap();
+        assert!((ttft - 25.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn response_json_ttft_is_null_when_nothing_was_emitted() {
+        let resp = crate::coordinator::Response {
+            seqs: vec![],
+            n_requested: 1,
+            batch_secs: 0.0,
+            batch_size: 0,
+            queue_secs: 0.3,
+            preempted: 0,
+            queue_depth: 0,
+            rebuckets: 0,
+            ttft_secs: None,
+        };
+        let j = response_json(&resp);
+        // A budget-expired request never produced a byte: the field is
+        // present (schema-stable) but explicitly `null`, not 0.0.
+        assert_eq!(j.get("ttft_ms").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn with_id_echoes_the_client_tag_verbatim() {
+        let tag = Some(Json::Str("req-7".into()));
+        let j = with_id(error_json("boom"), &tag);
+        assert_eq!(j.get("id").unwrap().as_str().unwrap(), "req-7");
+        // The tag is any JSON value, echoed as-is — numbers included.
+        let tag = Some(Json::Num(42.0));
+        let j = with_id(event_json(&StepEvent {
+            seq: 0,
+            text_delta: "x".into(),
+            done: false,
+        }), &tag);
+        assert_eq!(j.get("id").unwrap().as_f64().unwrap(), 42.0);
+        // Untagged requests keep untagged replies: a one-at-a-time
+        // client sees the pre-pipelining wire format unchanged.
+        let j = with_id(error_json("boom"), &None);
+        assert!(j.opt("id").is_none());
+    }
+
+    #[test]
+    fn parse_line_returns_the_tag_even_for_bad_requests() {
+        // The id must come back with the *error* line too, or a
+        // pipelining client cannot tell which in-flight request died.
+        let (id, req) = parse_line(r#"{"id": 3, "n": 2}"#);
+        assert_eq!(id, Some(Json::Num(3.0)));
+        assert!(req.is_err());
+        let (id, req) = parse_line(r#"{"id": "a", "prompt": "hi"}"#);
+        assert_eq!(id, Some(Json::Str("a".into())));
+        assert_eq!(req.unwrap().prompt, b"hi");
+        // Unparseable line: no id recoverable at all.
+        let (id, req) = parse_line("not json");
+        assert!(id.is_none() && req.is_err());
     }
 
     #[test]

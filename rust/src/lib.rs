@@ -22,6 +22,7 @@
 //! * [`baseline::RegularDecoder`] — optimized auto-regressive decoding
 //!   (the paper's RD anchor).
 //! * [`coordinator::Coordinator`] — request queue, dynamic batcher, server.
+//! * [`loadgen`] — open-loop serving load harness (`BENCH_serving.json`).
 //! * [`eval`] — ROUGE-2 / Pass@K harnesses for the paper's tasks.
 
 pub mod baseline;
@@ -31,6 +32,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod flops;
 pub mod kv;
+pub mod loadgen;
 pub mod metrics;
 pub mod runtime;
 pub mod sampling;

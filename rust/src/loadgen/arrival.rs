@@ -1,0 +1,179 @@
+//! Open-loop arrival processes for the serving load harness.
+//!
+//! Open-loop means arrival times are fixed **before** the run: a slow
+//! server does not slow the generator down, so queueing delay shows up
+//! in the measurements instead of being hidden by client back-pressure
+//! (the closed-loop fallacy). All processes are seeded [`Pcg32`] draws —
+//! the same `(process, n, seed)` triple always produces the identical
+//! schedule, which is what lets the CI gate re-run a scenario and diff
+//! its counters bit-for-bit.
+
+use crate::sampling::Pcg32;
+
+/// RNG stream id for arrival schedules (distinct from the workload
+/// sampler's so the same scenario seed drives both independently).
+const ARRIVAL_STREAM: u64 = 0xA221;
+
+/// An open-loop arrival process. `schedule` renders it into concrete
+/// request offsets (seconds from the run's t0), sorted non-decreasing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// Homogeneous Poisson process: exponential inter-arrival gaps at
+    /// `rate_rps` requests/second — the standard serving-benchmark
+    /// arrival model.
+    Poisson { rate_rps: f64 },
+    /// Bursty traffic: piecewise-exponential gaps whose rate alternates
+    /// between `burst_rps` (for the first `duty` fraction of every
+    /// `period_secs` window) and `base_rps` (the rest). An
+    /// approximation of a modulated Poisson process — each gap is drawn
+    /// at the rate in force when it starts — which is enough to slam
+    /// the scheduler with admission bursts and let it drain between
+    /// them.
+    Bursty {
+        base_rps: f64,
+        burst_rps: f64,
+        period_secs: f64,
+        duty: f64,
+    },
+    /// Trace replay: explicit offsets (seconds from t0). Asking for
+    /// more requests than the trace holds replays it cyclically, each
+    /// pass shifted by the trace's span plus one mean gap.
+    Trace { offsets_secs: Vec<f64> },
+}
+
+impl Arrival {
+    /// Render the first `n` arrival offsets of this process.
+    pub fn schedule(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg32::new(seed, ARRIVAL_STREAM);
+        match self {
+            Arrival::Poisson { rate_rps } => {
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        t += exp_gap(&mut rng, *rate_rps);
+                        t
+                    })
+                    .collect()
+            }
+            Arrival::Bursty { base_rps, burst_rps, period_secs, duty } => {
+                let period = period_secs.max(1e-6);
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        let phase = (t / period).fract();
+                        let rate = if phase < duty.clamp(0.0, 1.0) {
+                            *burst_rps
+                        } else {
+                            *base_rps
+                        };
+                        t += exp_gap(&mut rng, rate);
+                        t
+                    })
+                    .collect()
+            }
+            Arrival::Trace { offsets_secs } => {
+                let mut offs = offsets_secs.clone();
+                offs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                if offs.is_empty() {
+                    return vec![0.0; n];
+                }
+                let last = *offs.last().unwrap();
+                let span = last + last / offs.len() as f64;
+                (0..n)
+                    .map(|i| {
+                        offs[i % offs.len()]
+                            + span * (i / offs.len()) as f64
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Scenario-config JSON (embedded in `BENCH_serving.json` so a
+    /// report names the process that produced it).
+    pub fn to_json(&self) -> crate::runtime::json::Json {
+        use crate::runtime::json::Json;
+        match self {
+            Arrival::Poisson { rate_rps } => Json::obj(vec![
+                ("kind", "poisson".into()),
+                ("rate_rps", (*rate_rps).into()),
+            ]),
+            Arrival::Bursty { base_rps, burst_rps, period_secs, duty } => {
+                Json::obj(vec![
+                    ("kind", "bursty".into()),
+                    ("base_rps", (*base_rps).into()),
+                    ("burst_rps", (*burst_rps).into()),
+                    ("period_secs", (*period_secs).into()),
+                    ("duty", (*duty).into()),
+                ])
+            }
+            Arrival::Trace { offsets_secs } => Json::obj(vec![
+                ("kind", "trace".into()),
+                ("n_offsets", offsets_secs.len().into()),
+            ]),
+        }
+    }
+}
+
+/// One exponential inter-arrival gap by inverse CDF. `next_f32` is in
+/// [0, 1), so `1 - u` is in (0, 1] and the log never sees zero.
+fn exp_gap(rng: &mut Pcg32, rate_rps: f64) -> f64 {
+    let u = rng.next_f32() as f64;
+    -(1.0 - u).ln() / rate_rps.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_is_seed_deterministic() {
+        let a = Arrival::Poisson { rate_rps: 100.0 };
+        let s1 = a.schedule(64, 7);
+        let s2 = a.schedule(64, 7);
+        assert_eq!(s1, s2, "same seed must replay bit-identically");
+        let s3 = a.schedule(64, 8);
+        assert_ne!(s1, s3, "a different seed must move the arrivals");
+        assert!(s1.windows(2).all(|w| w[0] <= w[1]), "sorted offsets");
+        assert!(s1.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_the_rate() {
+        let a = Arrival::Poisson { rate_rps: 200.0 };
+        let s = a.schedule(4000, 3);
+        let mean_gap = s.last().unwrap() / s.len() as f64;
+        // Exponential(200) has mean 5ms; 4000 samples put the empirical
+        // mean within a few percent.
+        assert!((mean_gap - 0.005).abs() < 0.0005,
+                "mean gap {mean_gap} is far from 1/rate");
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_the_burst_window() {
+        let a = Arrival::Bursty {
+            base_rps: 20.0,
+            burst_rps: 400.0,
+            period_secs: 1.0,
+            duty: 0.2,
+        };
+        let s = a.schedule(600, 11);
+        let in_burst = s.iter().filter(|t| t.fract() < 0.2).count();
+        // 20% of the time carries the large majority of arrivals.
+        assert!(in_burst * 2 > s.len(),
+                "only {in_burst}/{} arrivals in the burst window",
+                s.len());
+    }
+
+    #[test]
+    fn trace_replays_cyclically_and_stays_sorted() {
+        let a = Arrival::Trace { offsets_secs: vec![0.3, 0.1, 0.2] };
+        let s = a.schedule(7, 0);
+        assert_eq!(s.len(), 7);
+        assert!((s[0] - 0.1).abs() < 1e-12);
+        assert!((s[2] - 0.3).abs() < 1e-12);
+        // Second pass: shifted by span = 0.3 + 0.3/3 = 0.4.
+        assert!((s[3] - 0.5).abs() < 1e-12);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

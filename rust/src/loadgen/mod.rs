@@ -1,0 +1,84 @@
+//! The serving load harness: open-loop load generation against the
+//! [`crate::coordinator::Coordinator`], measuring what the paper-table
+//! benches cannot — serving behavior under concurrent traffic.
+//!
+//! Layers:
+//! * [`arrival`] — seeded open-loop arrival processes (Poisson, bursty,
+//!   trace replay).
+//! * [`workload`] — seeded request-mix sampling (prompt length,
+//!   fan-out, priority, deadline, generation budget).
+//! * [`run`] — the runner: timed submissions driving the coordinator
+//!   directly or through the TCP line protocol (one pipelined
+//!   connection, replies correlated by `"id"`), per-request TTFT /
+//!   TPOT / e2e / queue-wait outcomes.
+//! * [`report`] — the schema-stable `BENCH_serving.json` record:
+//!   latency distributions (mean/p50/p99), goodput under an SLO,
+//!   preemption/re-bucket overhead, and a deterministic counter
+//!   subset the CI perf gate diffs bit-for-bit.
+//!
+//! The harness runs end to end on the host-only stub backend
+//! ([`crate::spec::ExecMode::Stub`]): no artifacts, no device, full
+//! scheduler stack — which is exactly what a CI machine has.
+
+pub mod arrival;
+pub mod report;
+pub mod run;
+pub mod workload;
+
+pub use arrival::Arrival;
+pub use run::{run_direct, run_tcp, Outcome, Scenario};
+pub use workload::{LoadRequest, Workload};
+
+use anyhow::{bail, Result};
+
+/// Build the named scenario set. `deterministic` selects the CI-gate
+/// workload (fan-out 1 → timing-independent counters); otherwise the
+/// mixed serving population runs.
+pub fn scenarios(arrival: &str, deterministic: bool, n_requests: usize,
+                 rate_rps: f64, seed: u64, slo_ms: f64)
+                 -> Result<Vec<Scenario>> {
+    let workload = if deterministic {
+        Workload::gate()
+    } else {
+        Workload::mixed()
+    };
+    let poisson = Scenario {
+        name: if deterministic {
+            "poisson-gate".into()
+        } else {
+            "poisson".into()
+        },
+        seed,
+        n_requests,
+        arrival: Arrival::Poisson { rate_rps },
+        workload: workload.clone(),
+        slo_ms,
+    };
+    // The burst alternates 4x the offered rate (one fifth of the time)
+    // with a light trough — the admission-spike shape that exercises
+    // live re-bucketing and preemption.
+    let bursty = Scenario {
+        name: if deterministic {
+            "bursty-gate".into()
+        } else {
+            "bursty".into()
+        },
+        seed: seed.wrapping_add(1),
+        n_requests,
+        arrival: Arrival::Bursty {
+            base_rps: rate_rps * 0.25,
+            burst_rps: rate_rps * 4.0,
+            period_secs: 1.0,
+            duty: 0.2,
+        },
+        workload,
+        slo_ms,
+    };
+    Ok(match arrival {
+        "poisson" => vec![poisson],
+        "bursty" => vec![bursty],
+        "both" => vec![poisson, bursty],
+        other => bail!("unknown arrival '{other}' \
+                        (try: poisson|bursty|both)"),
+    })
+}

@@ -1,0 +1,334 @@
+//! The open-loop runner: renders a [`Scenario`] into timed submissions
+//! against a live [`Coordinator`] — directly (in-process mpsc) or over
+//! the TCP line protocol — and collects per-request latency outcomes.
+//!
+//! Submission is open-loop: each request is fired at its scheduled
+//! offset whether or not earlier ones have answered, so server-side
+//! queueing shows up as measured latency. Every request is collected on
+//! its own thread (direct path) or correlated by its echoed `"id"` tag
+//! (TCP path, one pipelined connection), so a slow request never skews
+//! a fast one's end-to-end clock.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Coordinator, Response};
+use crate::runtime::json::Json;
+
+use super::arrival::Arrival;
+use super::workload::{LoadRequest, Workload};
+
+/// One load scenario: an arrival process driving a workload mix.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    pub n_requests: usize,
+    pub arrival: Arrival,
+    pub workload: Workload,
+    /// End-to-end SLO for the goodput metric, milliseconds.
+    pub slo_ms: f64,
+}
+
+impl Scenario {
+    /// Render the concrete run: arrival offsets and sampled requests.
+    /// The workload stream is decorrelated from the arrival stream by a
+    /// seed twist so "same gap" never implies "same request shape".
+    pub fn requests(&self) -> (Vec<f64>, Vec<LoadRequest>) {
+        let offsets = self.arrival.schedule(self.n_requests, self.seed);
+        let reqs = self
+            .workload
+            .sample(self.n_requests, self.seed ^ 0x9E37_79B9_7F4A_7C15);
+        (offsets, reqs)
+    }
+}
+
+/// What one request observed, client side plus server echoes.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// The request was answered (not a transport/engine error).
+    pub ok: bool,
+    /// Server-measured time to first token, ms (`None`: no byte ever).
+    pub ttft_ms: Option<f64>,
+    /// Client-measured submission → final answer, ms.
+    pub e2e_ms: f64,
+    /// Time per output token after the first, ms.
+    pub tpot_ms: Option<f64>,
+    /// Server-reported admission wait, ms.
+    pub queue_ms: f64,
+    pub n_seqs_requested: usize,
+    pub n_seqs_returned: usize,
+    /// Generated tokens summed over the fan-out.
+    pub n_tokens: usize,
+    /// Every returned sequence ran to its own finish.
+    pub all_finished: bool,
+    /// Came back empty and unfinished: a time budget expired before
+    /// the request produced anything (possibly while still queued).
+    pub expired_unserved: bool,
+    pub preempted: usize,
+    pub rebuckets: u64,
+    pub queue_depth: usize,
+}
+
+impl Outcome {
+    fn error(e2e_ms: f64) -> Outcome {
+        Outcome {
+            ok: false,
+            ttft_ms: None,
+            e2e_ms,
+            tpot_ms: None,
+            queue_ms: 0.0,
+            n_seqs_requested: 0,
+            n_seqs_returned: 0,
+            n_tokens: 0,
+            all_finished: false,
+            expired_unserved: false,
+            preempted: 0,
+            rebuckets: 0,
+            queue_depth: 0,
+        }
+    }
+
+    fn from_response(resp: &Response, e2e_ms: f64) -> Outcome {
+        let n_tokens: usize = resp.seqs.iter().map(|s| s.n_tokens).sum();
+        let ttft_ms = resp.ttft_secs.map(|s| s * 1e3);
+        Outcome {
+            ok: true,
+            ttft_ms,
+            e2e_ms,
+            tpot_ms: tpot(ttft_ms, e2e_ms, n_tokens),
+            queue_ms: resp.queue_secs * 1e3,
+            n_seqs_requested: resp.n_requested,
+            n_seqs_returned: resp.seqs.len(),
+            n_tokens,
+            all_finished: !resp.seqs.is_empty()
+                && resp.seqs.iter().all(|s| s.finished),
+            expired_unserved: n_tokens == 0
+                && resp.seqs.iter().all(|s| !s.finished),
+            preempted: resp.preempted,
+            rebuckets: resp.rebuckets,
+            queue_depth: resp.queue_depth,
+        }
+    }
+}
+
+fn tpot(ttft_ms: Option<f64>, e2e_ms: f64, n_tokens: usize)
+        -> Option<f64> {
+    match ttft_ms {
+        Some(t) if n_tokens >= 2 => {
+            Some(((e2e_ms - t) / (n_tokens - 1) as f64).max(0.0))
+        }
+        _ => None,
+    }
+}
+
+/// Sleep until `offset` seconds past `t0` (no-op when already late —
+/// open loop means late submissions fire immediately, they never
+/// stretch the schedule).
+fn pace(t0: Instant, offset: f64) {
+    let target = Duration::from_secs_f64(offset.max(0.0));
+    if let Some(wait) = target.checked_sub(t0.elapsed()) {
+        std::thread::sleep(wait);
+    }
+}
+
+/// Drive the coordinator directly over its mpsc submission API.
+/// Returns per-request outcomes (in request order) and the makespan,
+/// seconds from first submission tick to last answer.
+pub fn run_direct(coord: &Coordinator, sc: &Scenario)
+                  -> (Vec<Outcome>, f64) {
+    let (offsets, reqs) = sc.requests();
+    let t0 = Instant::now();
+    let mut collectors = Vec::with_capacity(reqs.len());
+    for (offset, lr) in offsets.iter().zip(&reqs) {
+        pace(t0, *offset);
+        let submitted = Instant::now();
+        let rx = coord.submit(lr.to_request(false));
+        collectors.push(std::thread::spawn(move || {
+            match Coordinator::wait(rx) {
+                Ok(resp) => Outcome::from_response(
+                    &resp, submitted.elapsed().as_secs_f64() * 1e3),
+                Err(_) => Outcome::error(
+                    submitted.elapsed().as_secs_f64() * 1e3),
+            }
+        }));
+    }
+    let outcomes: Vec<Outcome> = collectors
+        .into_iter()
+        .map(|h| h.join().expect("collector thread panicked"))
+        .collect();
+    (outcomes, t0.elapsed().as_secs_f64())
+}
+
+/// Drive the coordinator through the TCP server over **one pipelined
+/// connection**: every request line carries an `"id"` tag and replies
+/// are correlated by the echoed tag (the head-of-line-blocking bugfix
+/// is load-bearing here — before it, one connection serialized the
+/// whole open loop).
+pub fn run_tcp(addr: &str, sc: &Scenario) -> Result<(Vec<Outcome>, f64)> {
+    let (offsets, reqs) = sc.requests();
+    let n = reqs.len();
+    let mut wstream = TcpStream::connect(addr)?;
+    let rstream = wstream.try_clone()?;
+    let submits: Arc<Mutex<Vec<Option<Instant>>>> =
+        Arc::new(Mutex::new(vec![None; n]));
+
+    let reader_submits = Arc::clone(&submits);
+    let reader = std::thread::spawn(move || -> Result<Vec<Outcome>> {
+        let mut out: Vec<Option<Outcome>> = vec![None; n];
+        let mut done = 0usize;
+        let mut lines = BufReader::new(rstream).lines();
+        while done < n {
+            let line = lines
+                .next()
+                .ok_or_else(|| anyhow!("server closed the connection"))??;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(&line)?;
+            if j.opt("event").is_some() {
+                continue; // streaming step line of some request
+            }
+            let idx = j.get("id")?.as_usize()?;
+            if idx >= n {
+                anyhow::bail!("reply for unknown id {idx}");
+            }
+            let submitted = reader_submits.lock().unwrap()[idx]
+                .ok_or_else(|| anyhow!("reply before submission"))?;
+            let e2e_ms = submitted.elapsed().as_secs_f64() * 1e3;
+            let oc = if j.get("ok")? == &Json::Bool(true) {
+                outcome_from_wire(&j, e2e_ms)?
+            } else {
+                Outcome::error(e2e_ms)
+            };
+            if out[idx].replace(oc).is_none() {
+                done += 1;
+            }
+        }
+        Ok(out.into_iter().flatten().collect())
+    });
+
+    let t0 = Instant::now();
+    for (i, (offset, lr)) in offsets.iter().zip(&reqs).enumerate() {
+        pace(t0, *offset);
+        submits.lock().unwrap()[i] = Some(Instant::now());
+        let line = lr.to_wire_json(i).to_string_pretty()
+            .replace('\n', " ");
+        wstream.write_all(line.as_bytes())?;
+        wstream.write_all(b"\n")?;
+    }
+    wstream.flush()?;
+    let outcomes = reader
+        .join()
+        .map_err(|_| anyhow!("reader thread panicked"))??;
+    Ok((outcomes, t0.elapsed().as_secs_f64()))
+}
+
+/// Rebuild an [`Outcome`] from a server response line (the fields
+/// `coordinator::server::response_json` emits).
+fn outcome_from_wire(j: &Json, e2e_ms: f64) -> Result<Outcome> {
+    let seqs = j.get("seqs")?.as_arr()?;
+    let mut n_tokens = 0usize;
+    let mut all_finished = !seqs.is_empty();
+    let mut any_finished = false;
+    for s in seqs {
+        n_tokens += s.get("n_tokens")?.as_usize()?;
+        let fin = s.get("finished")? == &Json::Bool(true);
+        all_finished &= fin;
+        any_finished |= fin;
+    }
+    let ttft_ms = match j.get("ttft_ms")? {
+        Json::Null => None,
+        v => Some(v.as_f64()?),
+    };
+    Ok(Outcome {
+        ok: true,
+        ttft_ms,
+        e2e_ms,
+        tpot_ms: tpot(ttft_ms, e2e_ms, n_tokens),
+        queue_ms: j.get("queue_ms")?.as_f64()?,
+        n_seqs_requested: j.get("n_requested")?.as_usize()?,
+        n_seqs_returned: seqs.len(),
+        n_tokens,
+        all_finished,
+        expired_unserved: n_tokens == 0 && !any_finished
+            && !seqs.is_empty(),
+        preempted: j.get("preempted")?.as_usize()?,
+        rebuckets: j.get("rebuckets")?.as_usize()? as u64,
+        queue_depth: j.get("queue_depth")?.as_usize()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_util::artifacts_root;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::spec::{ExecMode, Policy, SpecConfig};
+
+    fn stub_coordinator(max_batch: usize) -> Coordinator {
+        Coordinator::start(CoordinatorConfig::new(
+            artifacts_root(),
+            SpecConfig {
+                mode: ExecMode::Stub,
+                policy: Policy::Fixed(4),
+                ..SpecConfig::default()
+            },
+            BatcherConfig {
+                max_batch,
+                window: Duration::from_millis(1),
+            },
+        ))
+        .expect("stub coordinator")
+    }
+
+    /// The harness-determinism pin: on the stub backend with the gate
+    /// mix (fan-out 1, no budget), `total_tokens` equals Σ max_new of
+    /// the sampled requests **independent of scheduling order** — the
+    /// invariant the CI perf gate diffs across runs.
+    #[test]
+    fn direct_open_loop_counters_match_the_sampled_workload() {
+        let sc = Scenario {
+            name: "unit-gate".into(),
+            seed: 23,
+            n_requests: 12,
+            arrival: Arrival::Poisson { rate_rps: 2000.0 },
+            workload: Workload::gate(),
+            slo_ms: 1000.0,
+        };
+        let coord = stub_coordinator(4);
+        let (outcomes, makespan) = run_direct(&coord, &sc);
+        assert_eq!(outcomes.len(), 12);
+        assert!(makespan > 0.0);
+        let (_, reqs) = sc.requests();
+        let want: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+        let got: usize = outcomes.iter().map(|o| o.n_tokens).sum();
+        assert_eq!(got, want,
+                   "stub gate runs must generate exactly Σ max_new");
+        for o in &outcomes {
+            assert!(o.ok);
+            assert!(o.all_finished);
+            assert_eq!(o.n_seqs_returned, 1);
+            let ttft = o.ttft_ms.expect("every request emitted bytes");
+            assert!(ttft >= 0.0 && ttft <= o.e2e_ms,
+                    "ttft {ttft}ms outside e2e {}ms", o.e2e_ms);
+            assert!(o.tpot_ms.is_some(), "max_new >= 8 implies a tpot");
+        }
+    }
+
+    #[test]
+    fn tpot_needs_a_first_token_and_a_second() {
+        assert_eq!(tpot(None, 50.0, 10), None);
+        assert_eq!(tpot(Some(10.0), 50.0, 1), None);
+        let t = tpot(Some(10.0), 50.0, 5).unwrap();
+        assert!((t - 10.0).abs() < 1e-9, "(50-10)/(5-1) = 10, got {t}");
+        // A clock-skew artifact (ttft past e2e) clamps to zero rather
+        // than reporting negative time.
+        assert_eq!(tpot(Some(60.0), 50.0, 5), Some(0.0));
+    }
+}

@@ -1,0 +1,215 @@
+//! Seeded request-mix sampling for the serving load harness.
+//!
+//! A [`Workload`] describes the request population — prompt lengths,
+//! fan-outs, priorities, deadlines, generation budgets — and `sample`
+//! renders `n` concrete requests from it deterministically, so a
+//! scenario seed pins the exact byte-for-byte request stream.
+
+use crate::coordinator::Request;
+use crate::runtime::json::Json;
+use crate::sampling::Pcg32;
+
+/// RNG stream id for workload sampling (distinct from the arrival
+/// process's stream; see `arrival::ARRIVAL_STREAM`).
+const WORKLOAD_STREAM: u64 = 0xB10C;
+
+/// The request-mix distribution. Ranges are inclusive; `Vec` fields are
+/// uniform choice sets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    /// Prompt length range, bytes (the tokenizer is byte-level).
+    pub prompt_len: (usize, usize),
+    /// Per-request `max_new_tokens` range.
+    pub max_new: (usize, usize),
+    /// Fan-out choices (`Request::n_seqs`).
+    pub fanout: Vec<usize>,
+    /// Priority choices (wire `"priority"`).
+    pub priorities: Vec<i32>,
+    /// Deadline choices (wire `"deadline_ms"`; `None` = undeadlined).
+    pub deadlines_ms: Vec<Option<u64>>,
+}
+
+/// One concrete sampled request, ready to submit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadRequest {
+    pub prompt: Vec<u8>,
+    pub n_seqs: usize,
+    pub max_new_tokens: usize,
+    pub priority: i32,
+    pub deadline_ms: Option<u64>,
+}
+
+impl Workload {
+    /// The CI-gate mix: fan-out pinned to 1 and every request run to
+    /// completion, which makes `total_tokens = Σ max_new` exact and
+    /// **timing-independent** — admission order may vary run to run,
+    /// but each request always generates exactly its budget on the
+    /// stub backend. The deterministic-counters contract of
+    /// `BENCH_serving.json` rests on this mix.
+    pub fn gate() -> Workload {
+        Workload {
+            prompt_len: (16, 96),
+            max_new: (8, 48),
+            fanout: vec![1],
+            priorities: vec![-1, 0, 0, 0, 5],
+            deadlines_ms: vec![None, Some(50), Some(250)],
+        }
+    }
+
+    /// The serving mix: mixed fan-outs, priorities and deadlines —
+    /// the paper-style heterogeneous open-loop population. Fan-out > 1
+    /// makes `n_seqs_returned` admission-timing dependent (the engine
+    /// clamps fan-out to free slots), so this mix reports its counters
+    /// as observed, not as a determinism gate.
+    pub fn mixed() -> Workload {
+        Workload {
+            prompt_len: (16, 192),
+            max_new: (8, 64),
+            fanout: vec![1, 1, 1, 2, 2, 4],
+            priorities: vec![-1, 0, 0, 0, 0, 3, 5],
+            deadlines_ms: vec![None, None, Some(50), Some(150), Some(400)],
+        }
+    }
+
+    /// Render `n` concrete requests. Same `(workload, n, seed)` —
+    /// same requests, byte for byte.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<LoadRequest> {
+        let mut rng = Pcg32::new(seed, WORKLOAD_STREAM);
+        (0..n)
+            .map(|_| {
+                let len = range(&mut rng, self.prompt_len);
+                let prompt: Vec<u8> = (0..len)
+                    .map(|_| b'a' + (rng.next_u32() % 26) as u8)
+                    .collect();
+                LoadRequest {
+                    prompt,
+                    max_new_tokens: range(&mut rng, self.max_new),
+                    n_seqs: *pick(&mut rng, &self.fanout),
+                    priority: *pick(&mut rng, &self.priorities),
+                    deadline_ms: *pick(&mut rng, &self.deadlines_ms),
+                }
+            })
+            .collect()
+    }
+
+    /// Scenario-config JSON (embedded in `BENCH_serving.json`).
+    pub fn to_json(&self) -> Json {
+        let pair = |(lo, hi): (usize, usize)| {
+            Json::Arr(vec![lo.into(), hi.into()])
+        };
+        Json::obj(vec![
+            ("prompt_len", pair(self.prompt_len)),
+            ("max_new", pair(self.max_new)),
+            ("fanout",
+             Json::Arr(self.fanout.iter().map(|&f| f.into()).collect())),
+            ("priorities",
+             Json::Arr(self.priorities.iter()
+                 .map(|&p| (p as f64).into()).collect())),
+            ("deadlines_ms",
+             Json::Arr(self.deadlines_ms.iter()
+                 .map(|d| match d {
+                     Some(ms) => (*ms as usize).into(),
+                     None => Json::Null,
+                 })
+                 .collect())),
+        ])
+    }
+}
+
+impl LoadRequest {
+    /// The coordinator-level request this sample denotes.
+    pub fn to_request(&self, stream: bool) -> Request {
+        Request {
+            prompt: self.prompt.clone(),
+            n_seqs: self.n_seqs,
+            max_new_tokens: Some(self.max_new_tokens),
+            temperature: None,
+            top_p: None,
+            seed: None,
+            priority: Some(self.priority),
+            deadline_ms: self.deadline_ms,
+            stream,
+        }
+    }
+
+    /// The wire-protocol request line (tagged with `"id"` so replies
+    /// can pipeline on one connection; see `coordinator::server`).
+    pub fn to_wire_json(&self, id: usize) -> Json {
+        let mut pairs = vec![
+            ("id", id.into()),
+            ("prompt",
+             String::from_utf8(self.prompt.clone())
+                 .expect("sampled prompts are ASCII")
+                 .into()),
+            ("n", self.n_seqs.into()),
+            ("max_new_tokens", self.max_new_tokens.into()),
+            ("priority", (self.priority as f64).into()),
+        ];
+        if let Some(ms) = self.deadline_ms {
+            pairs.push(("deadline_ms", (ms as usize).into()));
+        }
+        Json::obj(pairs)
+    }
+}
+
+fn range(rng: &mut Pcg32, (lo, hi): (usize, usize)) -> usize {
+    debug_assert!(lo <= hi);
+    lo + (rng.next_u32() as usize) % (hi - lo + 1)
+}
+
+fn pick<'a, T>(rng: &mut Pcg32, xs: &'a [T]) -> &'a T {
+    &xs[(rng.next_u32() as usize) % xs.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let w = Workload::mixed();
+        let a = w.sample(40, 9);
+        let b = w.sample(40, 9);
+        assert_eq!(a, b, "same seed must replay the identical stream");
+        let c = w.sample(40, 10);
+        assert_ne!(a, c, "a different seed must change the stream");
+    }
+
+    #[test]
+    fn samples_respect_the_distribution() {
+        let w = Workload::mixed();
+        for lr in w.sample(200, 4) {
+            assert!(lr.prompt.len() >= w.prompt_len.0
+                    && lr.prompt.len() <= w.prompt_len.1);
+            assert!(lr.prompt.iter().all(u8::is_ascii_lowercase),
+                    "prompts must stay JSON-safe ASCII");
+            assert!(lr.max_new_tokens >= w.max_new.0
+                    && lr.max_new_tokens <= w.max_new.1);
+            assert!(w.fanout.contains(&lr.n_seqs));
+            assert!(w.priorities.contains(&lr.priority));
+            assert!(w.deadlines_ms.contains(&lr.deadline_ms));
+        }
+    }
+
+    #[test]
+    fn gate_mix_pins_fanout_to_one() {
+        // The deterministic-counters contract: every gate request is a
+        // single sequence run to completion, so total_tokens is exactly
+        // Σ max_new regardless of scheduling order.
+        assert!(Workload::gate().sample(64, 1).iter()
+                .all(|lr| lr.n_seqs == 1));
+    }
+
+    #[test]
+    fn wire_line_carries_the_id_tag() {
+        let lr = &Workload::gate().sample(1, 2)[0];
+        let j = lr.to_wire_json(17);
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 17);
+        assert_eq!(j.get("n").unwrap().as_usize().unwrap(), lr.n_seqs);
+        assert_eq!(j.get("prompt").unwrap().as_str().unwrap().len(),
+                   lr.prompt.len());
+        // One line on the wire: the compact form must hold no newlines
+        // once flattened the way the server writes lines.
+        assert!(!j.to_string_pretty().replace('\n', " ").contains('\n'));
+    }
+}

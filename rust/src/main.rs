@@ -12,6 +12,15 @@
 //!   bursty load, no drain or artifact rebuild; `--pad-headroom N`
 //!   starts PAD buckets with N grow-room rows; requests may set
 //!   `"stream": true` for per-step event lines).
+//! * `serving`   — open-loop serving load harness: seeded Poisson /
+//!   bursty arrivals with mixed priorities, fan-outs, prompt lengths
+//!   and budgets drive the coordinator (directly, or over one
+//!   pipelined TCP connection with `--tcp`) and emit the schema-stable
+//!   `BENCH_serving.json` (TTFT/TPOT/e2e mean/p50/p99, goodput under
+//!   `--slo-ms`, preemption/re-bucket overhead, deterministic
+//!   counters). Defaults to `--mode stub` — the host-only backend — so
+//!   it runs on artifact-less machines; `--deterministic` selects the
+//!   CI-gate workload whose counters are timing-independent.
 //! * `eval`      — run a task (`--task code|summ`) and report accuracy.
 //! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
 //! * `info`      — print the manifest summary.
@@ -53,6 +62,9 @@ fn spec_config_from(args: &Args) -> Result<SpecConfig> {
         mode: match args.flag_or("mode", "pad").as_str() {
             "pad" => ExecMode::Pad,
             "split" => ExecMode::Split,
+            // Host-only deterministic backend: no artifacts, no device;
+            // the serving load harness and CI perf gate run on it.
+            "stub" => ExecMode::Stub,
             m => bail!("unknown mode '{m}'"),
         },
         seed: args.u64_flag("seed", 0)?,
@@ -97,9 +109,10 @@ fn run(argv: &[String]) -> Result<()> {
         "generate" => generate(&args),
         "eval" => eval_task(&args),
         "serve" => serve_cmd(&args),
+        "serving" => serving_cmd(&args),
         other => bail!(
             "unknown subcommand '{other}' \
-             (try: info|calibrate|selftest|generate|eval|serve)"),
+             (try: info|calibrate|selftest|generate|eval|serve|serving)"),
     }
 }
 
@@ -231,6 +244,82 @@ fn eval_task(args: &Args) -> Result<()> {
         }
         other => bail!("unknown task '{other}'"),
     }
+    Ok(())
+}
+
+/// The open-loop serving load harness (`serving` subcommand).
+fn serving_cmd(args: &Args) -> Result<()> {
+    let mut spec = spec_config_from(args)?;
+    if args.flag("mode").is_none() {
+        // The harness default is the host-only backend: no artifacts,
+        // no device, full scheduler stack — what a CI machine has.
+        spec.mode = ExecMode::Stub;
+    }
+    let deterministic = args.switch("deterministic");
+    let n = args.usize_flag("requests", 160)?;
+    let rate = args.f32_flag("rate", 120.0)? as f64;
+    let seed = args.u64_flag("seed", 5)?;
+    let slo_ms = args.f32_flag("slo-ms", 250.0)? as f64;
+    let arrival = args.flag_or("arrival", "both");
+    let out = args.flag_or("out", "BENCH_serving.json");
+    let tcp = args.switch("tcp");
+    let max_batch = args.usize_flag("max-batch", 8)?;
+    let window_ms = args.usize_flag("window-ms", 2)? as u64;
+    let driver = if tcp { "tcp" } else { "direct" };
+    let mode_name = match spec.mode {
+        ExecMode::Pad => "pad",
+        ExecMode::Split => "split",
+        ExecMode::Stub => "stub",
+    };
+
+    let scenarios = bass::loadgen::scenarios(&arrival, deterministic, n,
+                                             rate, seed, slo_ms)?;
+    let mut entries = Vec::new();
+    for sc in &scenarios {
+        // A fresh coordinator per scenario: engine-lifetime counters
+        // (rebuckets, queue stats) start at zero, and one scenario's
+        // backlog cannot bleed into the next one's latencies.
+        let cfg = CoordinatorConfig::new(
+            artifacts_root(),
+            spec.clone(),
+            bass::coordinator::batcher::BatcherConfig {
+                max_batch,
+                window: std::time::Duration::from_millis(window_ms),
+            },
+        );
+        let (outcomes, makespan) = if tcp {
+            let coord = Arc::new(Coordinator::start(cfg)?);
+            let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+            let srv = coord.clone();
+            std::thread::spawn(move || {
+                let _ = server::serve(srv, "127.0.0.1:0", move |a| {
+                    let _ = addr_tx.send(a);
+                });
+            });
+            let addr = addr_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("server failed to bind"))?;
+            bass::loadgen::run_tcp(&addr.to_string(), sc)?
+        } else {
+            let coord = Coordinator::start(cfg)?;
+            bass::loadgen::run_direct(&coord, sc)
+        };
+        let entry = bass::loadgen::report::scenario_report(sc, &outcomes,
+                                                           makespan);
+        let g = entry.get("goodput")?;
+        println!("[serving] {}: {} reqs in {:.2}s — goodput {:.1} rps \
+                  ({}/{} within {:.0}ms SLO)",
+                 sc.name, outcomes.len(), makespan,
+                 g.get("goodput_rps")?.as_f64()?,
+                 g.get("within_slo")?.as_usize()?,
+                 g.get("served")?.as_usize()?, sc.slo_ms);
+        entries.push(entry);
+    }
+    let doc = bass::loadgen::report::bench_report(
+        entries, &format!("bass serving ({driver}/{mode_name})"), driver,
+        mode_name);
+    std::fs::write(&out, doc.to_string_pretty() + "\n")?;
+    println!("[serving] wrote {out}");
     Ok(())
 }
 

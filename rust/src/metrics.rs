@@ -222,14 +222,23 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Linear-interpolation percentile (the "linear" / type-7 estimator):
+    /// rank `(n-1)·p` interpolated between its neighbors. The old
+    /// nearest-rank `round()` collapsed p99 to the max (or under-reported
+    /// by a whole rank) for small sample counts — the serving harness
+    /// reports p99 over a few hundred requests, where that bias is the
+    /// difference between "met the SLO" and "missed it".
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((s.len() - 1) as f64 * p).round() as usize;
-        s[idx]
+        let rank = (s.len() - 1) as f64 * p.clamp(0.0, 1.0);
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        s[lo] + (s[hi] - s[lo]) * frac
     }
 
     pub fn min(&self) -> f64 {
@@ -344,7 +353,29 @@ mod tests {
         assert!((s.mean() - 50.5).abs() < 1e-9);
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.percentile(1.0), 100.0);
-        assert_eq!(s.percentile(0.5), 51.0); // round(49.5) = 50 -> s[50]
+        // Linear interpolation: rank 99·0.5 = 49.5 -> (50 + 51)/2.
+        assert!((s.percentile(0.5) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.99) - 99.01).abs() < 1e-9);
         assert_eq!(s.min(), 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolates_small_samples() {
+        // The regression the harness hit: nearest-rank `round()` returned
+        // the MAX as p99 for any sample count below ~50, making every
+        // small-run p99 a worst-case outlier report. With interpolation,
+        // p99 of {10, 20, 30, 40} sits just below the max, p50 between
+        // the middle ranks — and a singleton is every percentile.
+        let mut s = Summary::default();
+        for v in [10.0, 20.0, 30.0, 40.0] {
+            s.add(v);
+        }
+        assert!((s.percentile(0.5) - 25.0).abs() < 1e-9);
+        let p99 = s.percentile(0.99);
+        assert!(p99 < 40.0 && p99 > 39.0, "p99 {p99} must interpolate");
+        let mut one = Summary::default();
+        one.add(7.0);
+        assert_eq!(one.percentile(0.99), 7.0);
+        assert_eq!(Summary::default().percentile(0.5), 0.0);
     }
 }

@@ -66,7 +66,10 @@ pub struct DraftOut {
 }
 
 pub struct Engine {
-    client: PjRtClient,
+    /// `None` for a host-only stub engine ([`Engine::stub`]): every
+    /// device path errors through [`Engine::client`], and the stub exec
+    /// backend never calls one.
+    client: Option<PjRtClient>,
     pub manifest: Manifest,
     executables: RefCell<HashMap<ArtifactKey, Rc<PjRtLoadedExecutable>>>,
     weights: RefCell<HashMap<(String, Precision), Rc<Vec<PjRtBuffer>>>>,
@@ -79,7 +82,7 @@ impl Engine {
         let manifest = Manifest::load(root)?;
         let client = PjRtClient::cpu()?;
         Ok(Engine {
-            client,
+            client: Some(client),
             manifest,
             executables: RefCell::new(HashMap::new()),
             weights: RefCell::new(HashMap::new()),
@@ -87,8 +90,37 @@ impl Engine {
         })
     }
 
+    /// Create a host-only engine: no PJRT client, no artifact directory —
+    /// a synthetic [`Manifest::stub`] supplies the model geometry and
+    /// bucket ladders the batching/scheduling layers consult. Only the
+    /// `ExecMode::Stub` backend can execute against it; any device phase
+    /// call fails through [`Engine::client`].
+    pub fn stub() -> Engine {
+        Engine {
+            client: None,
+            manifest: Manifest::stub(),
+            executables: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        }
+    }
+
+    /// True when this engine was built by [`Engine::stub`].
+    pub fn is_stub(&self) -> bool {
+        self.client.is_none()
+    }
+
+    fn client(&self) -> Result<&PjRtClient> {
+        self.client.as_ref().context(
+            "host-only stub engine: no PJRT client (device phase calls \
+             are only valid on Engine::load engines)")
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.client {
+            Some(c) => c.platform_name(),
+            None => "host-stub".to_string(),
+        }
     }
 
     // -- artifact / weight caches -------------------------------------------
@@ -104,7 +136,7 @@ impl Engine {
         let proto = HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 path")?)?;
         let exe = self
-            .client
+            .client()?
             .compile(&XlaComputation::from_proto(&proto))
             .with_context(|| format!("compiling {key}"))?;
         let exe = Rc::new(exe);
@@ -138,7 +170,7 @@ impl Engine {
                 DType::I32 => ElementType::S32,
             };
             bytes += t.data.len() as u64;
-            bufs.push(self.client.buffer_from_host_raw_bytes(
+            bufs.push(self.client()?.buffer_from_host_raw_bytes(
                 ty, &t.data, &t.dims, None)?);
         }
         self.stats.borrow_mut().h2d_bytes += bytes;
@@ -151,12 +183,12 @@ impl Engine {
 
     fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
         self.stats.borrow_mut().h2d_bytes += 4 * data.len() as u64;
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        Ok(self.client()?.buffer_from_host_buffer(data, dims, None)?)
     }
 
     fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
         self.stats.borrow_mut().h2d_bytes += 4 * data.len() as u64;
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        Ok(self.client()?.buffer_from_host_buffer(data, dims, None)?)
     }
 
     fn download_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
@@ -396,7 +428,7 @@ impl Engine {
         let path = self.manifest.root.join(&self.manifest.calib_file);
         let proto = HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 path")?)?;
-        let exe = self.client.compile(&XlaComputation::from_proto(&proto))?;
+        let exe = self.client()?.compile(&XlaComputation::from_proto(&proto))?;
         let n = (self.manifest.calib_flops as f64 / 2.0).cbrt() as usize;
         let host = vec![1.0f32; n * n];
         let a = self.upload_f32(&host, &[n, n])?;

@@ -233,6 +233,42 @@ impl Manifest {
         })
     }
 
+    /// Synthetic manifest for the host-only stub engine
+    /// ([`super::Engine::stub`]): the real testbed geometry (byte vocab,
+    /// eos 0, the exported batch/k ladders) with NO artifact or weight
+    /// files — the stub exec backend computes everything on the host, so
+    /// only the fields the batching/scheduling layers consult matter
+    /// (bucket ladders, `prefill_p`, model `s_max`).
+    pub fn stub() -> Manifest {
+        let model = |name: &str| ModelInfo {
+            name: name.to_string(),
+            n_layer: 4,
+            n_head: 8,
+            d_model: 256,
+            d_ff: 1024,
+            s_max: 4096,
+            d_head: 32,
+            param_count: 3_290_624,
+            weights: HashMap::new(),
+        };
+        let mut models = HashMap::new();
+        models.insert("main".to_string(), model("main"));
+        models.insert("draft_a".to_string(), model("draft_a"));
+        Manifest {
+            root: PathBuf::from("<stub>"),
+            vocab: 256,
+            eos: 0,
+            prefill_p: 64,
+            batches: vec![1, 2, 4, 8, 16],
+            draft_k_buckets: vec![1, 2, 4, 8],
+            small_k_buckets: vec![2, 4],
+            models,
+            artifacts: HashMap::new(),
+            calib_file: String::new(),
+            calib_flops: 0,
+        }
+    }
+
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models
             .get(name)
@@ -377,6 +413,21 @@ mod tests {
         assert_eq!(m.bucket_batch(1).unwrap(), 1);
         assert!(m.bucket_batch(5).is_err());
         assert_eq!(m.largest_batch(), 4);
+    }
+
+    #[test]
+    fn stub_manifest_serves_the_batching_layers() {
+        let m = Manifest::stub();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.eos, 0);
+        assert!(m.model("main").is_ok() && m.model("draft_a").is_ok());
+        assert_eq!(m.bucket_batch(3).unwrap(), 4);
+        assert_eq!(m.largest_batch(), 16);
+        assert_eq!(m.bucket_k("draft_a", 5), 4);
+        assert!(m.artifacts.is_empty(), "stub exports no device programs");
+        // Generation room: a prefill-capacity context plus a full budget
+        // must fit s_max (SpecBatch admission checks this bound).
+        assert!(m.model("main").unwrap().s_max > m.prefill_p + 1024);
     }
 
     #[test]

@@ -154,6 +154,7 @@ pub(super) fn make(cfg: &SpecConfig, capacity: usize) -> Box<dyn Backend> {
             main: (0..capacity).map(|_| Vec::new()).collect(),
             draft: (0..capacity).map(|_| Vec::new()).collect(),
         }),
+        ExecMode::Stub => Box::new(StubBackend { started: false }),
     }
 }
 
@@ -169,6 +170,52 @@ fn encode_window(ctx: &[u8], p: usize) -> (Vec<i32>, i32) {
         tokens[j] = byte as i32;
     }
     (tokens, tail.len() as i32)
+}
+
+/// Commit one bucket (re-)shape of a fused row table: keep `Seq` rows
+/// in slot order, drop `Husk`/`Shadow` rows, pad with fresh `Shadow`
+/// rows replicating the last real context (tail-clamped to the `p`-byte
+/// prefill window). Shared by the PAD fused prefill — which runs it
+/// only after the device calls succeed, so a failure leaves a running
+/// bucket intact — and the host-only stub backend, which has no device
+/// calls at all. Returns the number of carried real rows.
+fn commit_bucket(cfg: &SpecConfig, p: usize, rows: &mut Vec<Row>,
+                 bucket: usize) -> Result<usize> {
+    let n_real = rows.iter().filter(|r| matches!(r, Row::Seq(_))).count();
+    if n_real == 0 {
+        bail!("cannot start an empty fused batch");
+    }
+    if bucket < n_real {
+        bail!("bucket {bucket} cannot hold {n_real} occupied rows");
+    }
+    let last_ctx = rows
+        .iter()
+        .rev()
+        .find_map(|r| match r {
+            Row::Seq(s) => Some(s.state.context_tail(p)),
+            _ => None,
+        })
+        .expect("n_real >= 1");
+    let mut new_rows: Vec<Row> = std::mem::take(rows)
+        .into_iter()
+        .filter(|r| matches!(r, Row::Seq(_)))
+        .collect();
+    for i in n_real..bucket {
+        let state = SeqState::new(last_ctx.clone(),
+                                  *last_ctx.last().expect("non-empty"),
+                                  last_ctx.len() as i32);
+        new_rows.push(Row::Shadow(Slot {
+            id: u64::MAX, // never reported
+            state,
+            rng_draft: Pcg32::new(cfg.seed, 2 * i as u64),
+            rng_accept: Pcg32::new(cfg.seed, 2 * i as u64 + 1),
+            max_new_tokens: cfg.max_new_tokens,
+            temperature: cfg.temperature,
+            top_p: cfg.top_p,
+        }));
+    }
+    *rows = new_rows;
+    Ok(n_real)
 }
 
 // ---------------------------------------------------------------------
@@ -235,27 +282,9 @@ impl PadBackend {
         // Commit: compact Seq rows to the front, fresh Shadow padding
         // after them (exactly the padded rows the fused artifact
         // computes anyway).
-        let mut new_rows: Vec<Row> = std::mem::take(rows)
-            .into_iter()
-            .filter(|r| matches!(r, Row::Seq(_)))
-            .collect();
-        for i in n_real..bucket {
-            let state = SeqState::new(last_ctx.clone(),
-                                      *last_ctx.last().expect("non-empty"),
-                                      last_ctx.len() as i32);
-            new_rows.push(Row::Shadow(Slot {
-                id: u64::MAX, // never reported
-                state,
-                rng_draft: Pcg32::new(cfg.seed, 2 * i as u64),
-                rng_accept: Pcg32::new(cfg.seed, 2 * i as u64 + 1),
-                max_new_tokens: cfg.max_new_tokens,
-                temperature: cfg.temperature,
-                top_p: cfg.top_p,
-            }));
-        }
-        *rows = new_rows;
+        let n = commit_bucket(cfg, p, rows, bucket)?;
         self.store = Some((m.caches, d.caches));
-        Ok(n_real)
+        Ok(n)
     }
 }
 
@@ -538,6 +567,180 @@ impl Backend for SplitBackend {
     }
 }
 
+// ---------------------------------------------------------------------
+// Stub: host-only deterministic backend (no device, no artifacts).
+// ---------------------------------------------------------------------
+
+/// The non-eos token a stub draft emits for uniform `u` — the whole
+/// "model": a pure function of the per-sequence RNG stream, never the
+/// eos byte (0), always `< vocab`.
+fn stub_token(u: f32, vocab: usize) -> usize {
+    let span = stub_span(vocab);
+    1 + ((u * span as f32) as usize).min(span - 1)
+}
+
+/// How many distinct non-eos tokens the stub emits (`1..=span`).
+fn stub_span(vocab: usize) -> usize {
+    vocab.saturating_sub(1).min(250).max(1)
+}
+
+/// A one-hot logit this strong survives [`crate::sampling::warp_top_p`]
+/// at any temperature/top-p as probability exactly 1.0 in f32 (the
+/// competing mass is `255·e^-50 ≈ 5e-20`), which is what makes stub
+/// verification accept every draft token with certainty.
+const STUB_LOGIT: f32 = 50.0;
+
+/// Host-only deterministic backend: no device, no artifacts, no KV —
+/// the host-side [`SeqState`] *is* the whole sequence identity. The
+/// draft emits seeded non-eos tokens with exact one-hot q-distributions
+/// and verify emits one-hot logits agreeing at those very tokens (it
+/// reads them back out of `vtokens`), so every step accepts `k + 1`
+/// tokens with probability 1 and no cache-length bookkeeping needs
+/// mirroring. Sequences finish by `Length`/`Capacity`/budget only.
+///
+/// The row lifecycle mirrors BASS-PAD's fused bucket — lazy start
+/// bucketizes and `Shadow`-pads, retirement leaves `Husk` rows,
+/// mid-flight admission reuses them, live re-bucketing re-commits the
+/// row table — so the whole coordinator/scheduler stack (admission,
+/// preemption, re-bucketing, budgets) runs unmodified on machines
+/// without the PJRT binding. The serving load harness and the CI perf
+/// gate drive this backend.
+pub(super) struct StubBackend {
+    /// Flipped by the lazy start, like PAD's fused prefill (there is
+    /// just no device work behind it).
+    started: bool,
+}
+
+impl Backend for StubBackend {
+    fn started(&self) -> bool {
+        self.started
+    }
+
+    fn free_slots(&self, rows: &[Row]) -> usize {
+        if self.started {
+            rows.iter()
+                .filter(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+                .count()
+        } else {
+            rows.iter().filter(|r| r.is_free()).count()
+        }
+    }
+
+    fn admissible_row(&self, rows: &[Row]) -> Result<usize> {
+        if self.started {
+            rows.iter()
+                .position(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+                .ok_or_else(|| {
+                    anyhow!("no reusable stub row (bucket of {} fully \
+                             live; wait for a retirement, a re-bucket, \
+                             or the drain)",
+                            rows.len())
+                })
+        } else {
+            rows.iter().position(Row::is_free).ok_or_else(|| {
+                anyhow!("no free slot (capacity {})", rows.len())
+            })
+        }
+    }
+
+    fn bind_row(&mut self, _cx: &mut ExecCtx, _rows: &[Row], _row: usize,
+                _ctx: &[u8]) -> Result<()> {
+        Ok(()) // no device KV to build; SeqState carries everything
+    }
+
+    /// Stub lazy start: bucketize like PAD (headroom applied, so the
+    /// running bucket keeps reusable `Shadow` grow-room) and commit the
+    /// row table — the fused prefill minus the device calls.
+    fn start(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
+             capacity: usize) -> Result<()> {
+        let n_real = rows.iter().filter(|r| !r.is_free()).count();
+        if n_real == 0 {
+            bail!("cannot start an empty stub batch");
+        }
+        let b = cx.engine.manifest.bucket_batch_padded(
+            n_real, cx.cfg.pad_headroom, capacity)?;
+        commit_bucket(cx.cfg, cx.engine.manifest.prefill_p, rows, b)?;
+        self.started = true;
+        Ok(())
+    }
+
+    fn draft(&mut self, cx: &mut ExecCtx, io: &DraftIo)
+             -> Result<(Vec<i32>, Vec<f32>)> {
+        let vocab = cx.engine.manifest.vocab;
+        let b = io.stepping.len();
+        let k = io.k;
+        let mut toks = vec![0i32; b * k];
+        let mut qd = vec![0f32; b * k * vocab];
+        // Like the fused PAD artifact, every row computes (dead rows'
+        // outputs are simply never read).
+        for i in 0..b {
+            for j in 0..k {
+                let t = stub_token(io.uniforms[i * k + j], vocab);
+                toks[i * k + j] = t as i32;
+                qd[(i * k + j) * vocab + t] = 1.0;
+            }
+        }
+        Ok((toks, qd))
+    }
+
+    fn verify(&mut self, cx: &mut ExecCtx, io: &VerifyIo)
+              -> Result<Vec<f32>> {
+        let vocab = cx.engine.manifest.vocab;
+        let b = io.stepping.len();
+        let q = io.q;
+        let mut logits = vec![0f32; b * q * vocab];
+        for i in 0..b {
+            // Position j predicts the token after stream position j —
+            // which for j < k is draft token d_{j+1}, sitting right
+            // there in the verify input. Agreeing with it one-hot makes
+            // the accept ratio exactly 1.
+            for j in 0..q - 1 {
+                let d = (io.vtokens[i * q + 1 + j] as usize)
+                    .min(vocab - 1);
+                logits[(i * q + j) * vocab + d] = STUB_LOGIT;
+            }
+            // Bonus position: a deterministic non-eos token that moves
+            // with the sequence's cache length, so outputs vary step to
+            // step but never depend on wall-clock or co-batch identity.
+            let bonus = 1 + (io.mlens[i] as usize % stub_span(vocab));
+            logits[(i * q + q - 1) * vocab + bonus] = STUB_LOGIT;
+        }
+        Ok(logits)
+    }
+
+    fn release(&mut self, rows: &mut [Row], idx: usize) -> Slot {
+        let replacement = if self.started {
+            match &rows[idx] {
+                Row::Seq(s) => Row::Husk(s.state.clone()),
+                _ => unreachable!("release of a non-Seq row"),
+            }
+        } else {
+            Row::Free
+        };
+        let Row::Seq(slot) = std::mem::replace(&mut rows[idx], replacement)
+        else {
+            unreachable!("release of a non-Seq row");
+        };
+        slot
+    }
+
+    fn reset(&mut self) {
+        self.started = false;
+    }
+
+    fn live_bucket(&self, rows: &[Row]) -> Option<usize> {
+        self.started.then_some(rows.len())
+    }
+
+    fn rebucket(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
+                bucket: usize) -> Result<usize> {
+        if !self.started {
+            bail!("stub batch has not started; nothing to re-bucket");
+        }
+        commit_bucket(cx.cfg, cx.engine.manifest.prefill_p, rows, bucket)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -627,5 +830,138 @@ mod tests {
         let s = be.release(&mut rows, 0);
         assert_eq!(s.id, 0);
         assert!(rows[0].is_free());
+    }
+
+    // -- stub backend ------------------------------------------------------
+
+    use crate::sampling::warp_top_p;
+
+    #[test]
+    fn stub_mirrors_the_pad_row_lifecycle() {
+        let cfg = SpecConfig { mode: ExecMode::Stub,
+                               ..SpecConfig::default() };
+        let mut be = make(&cfg, 4);
+        assert!(!be.started(), "stub starts lazily like PAD");
+        let mut rows = vec![Row::Seq(slot(0, vec![1, 2])), Row::Free];
+        assert_eq!(be.free_slots(&rows), 1);
+        assert!(be.live_bucket(&rows).is_none());
+        // Pre-start release frees the row outright.
+        let s = be.release(&mut rows, 0);
+        assert_eq!(s.id, 0);
+        assert!(rows[0].is_free());
+    }
+
+    #[test]
+    fn stub_start_commits_a_shadow_padded_bucket() {
+        let eng = Engine::stub();
+        let cfg = SpecConfig { mode: ExecMode::Stub,
+                               ..SpecConfig::default() };
+        let main_info = eng.manifest.model("main").unwrap().clone();
+        let draft_info = eng.manifest.model("draft_a").unwrap().clone();
+        let mut secs = 0.0;
+        let mut flops = FlopCounter::default();
+        let mut cx = ExecCtx {
+            engine: &eng,
+            cfg: &cfg,
+            main_info: &main_info,
+            draft_info: &draft_info,
+            prefill_secs: &mut secs,
+            flops: &mut flops,
+        };
+        let mut be = StubBackend { started: false };
+        let mut rows = vec![
+            Row::Seq(slot(0, vec![1, 2])),
+            Row::Seq(slot(1, vec![3, 4, 5])),
+            Row::Free,
+            Row::Free,
+            Row::Free,
+        ];
+        be.start(&mut cx, &mut rows, 5).unwrap();
+        assert!(be.started());
+        // 2 real rows bucketize to 2 (no headroom): Seq rows compacted,
+        // no padding needed.
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| matches!(r, Row::Seq(_))));
+        assert_eq!(be.live_bucket(&rows), Some(2));
+        // Retiring one leaves a reusable Husk, like a running PAD batch.
+        let s = be.release(&mut rows, 0);
+        assert_eq!(s.id, 0);
+        assert!(matches!(rows[0], Row::Husk(_)));
+        assert_eq!(be.free_slots(&rows), 1);
+        assert_eq!(be.admissible_row(&rows).unwrap(), 0);
+        // Re-bucket to 4 drops the Husk and pads with Shadows.
+        be.rebucket(&mut cx, &mut rows, 4).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(
+            rows.iter().filter(|r| matches!(r, Row::Seq(_))).count(), 1);
+        assert_eq!(
+            rows.iter().filter(|r| matches!(r, Row::Shadow(_))).count(),
+            3);
+        assert_eq!(secs, 0.0, "stub does no timed device work");
+    }
+
+    #[test]
+    fn stub_draft_and_verify_agree_for_full_acceptance() {
+        let eng = Engine::stub();
+        let cfg = SpecConfig { mode: ExecMode::Stub,
+                               ..SpecConfig::default() };
+        let main_info = eng.manifest.model("main").unwrap().clone();
+        let draft_info = eng.manifest.model("draft_a").unwrap().clone();
+        let mut secs = 0.0;
+        let mut flops = FlopCounter::default();
+        let mut cx = ExecCtx {
+            engine: &eng,
+            cfg: &cfg,
+            main_info: &main_info,
+            draft_info: &draft_info,
+            prefill_secs: &mut secs,
+            flops: &mut flops,
+        };
+        let mut be = StubBackend { started: true };
+        let vocab = eng.manifest.vocab;
+        let k = 2;
+        let uniforms = [0.3f32, 0.9];
+        let io = DraftIo {
+            k,
+            tokens_in: &[5, 0],
+            n_in: &[1],
+            dlens: &[0],
+            uniforms: &uniforms,
+            temps: &[0.2],
+            tps: &[0.95],
+            stepping: &[true],
+        };
+        let (toks, qd) = be.draft(&mut cx, &io).unwrap();
+        let (toks2, _) = be.draft(&mut cx, &io).unwrap();
+        assert_eq!(toks, toks2, "same uniforms, same tokens");
+        for j in 0..k {
+            let t = toks[j] as usize;
+            assert!((1..=250).contains(&t), "non-eos byte token: {t}");
+            assert_eq!(qd[j * vocab + t], 1.0, "exact one-hot q-dist");
+            assert_eq!(
+                qd[j * vocab..(j + 1) * vocab].iter().sum::<f32>(), 1.0);
+        }
+        // Verify sees the draft tokens in vtokens and agrees one-hot:
+        // after the per-slot warp each draft token has probability 1.0,
+        // so spec_accept takes all of them plus the bonus.
+        let q = k + 1;
+        let vtokens = [5, toks[0], toks[1]];
+        let vio = VerifyIo {
+            q,
+            vtokens: &vtokens,
+            mlens: &[7],
+            stepping: &[true],
+        };
+        let logits = be.verify(&mut cx, &vio).unwrap();
+        for j in 0..k {
+            let w = warp_top_p(&logits[j * vocab..(j + 1) * vocab],
+                               0.2, 0.95);
+            assert_eq!(w[toks[j] as usize], 1.0,
+                       "verify must certainly accept draft token {j}");
+        }
+        let wb = warp_top_p(&logits[k * vocab..(k + 1) * vocab],
+                            0.2, 0.95);
+        let bonus = wb.iter().position(|&p| p == 1.0).unwrap();
+        assert!(bonus >= 1, "bonus is never the eos byte");
     }
 }

@@ -12,6 +12,15 @@ pub enum ExecMode {
     Pad,
     /// Per-sequence B=1 artifacts (BASS-SPLIT).
     Split,
+    /// Host-only deterministic backend: no device, no artifacts — the
+    /// draft emits seeded byte tokens with one-hot q-distributions and
+    /// verify agrees exactly, so every step accepts k+1 tokens. Mirrors
+    /// PAD's fused-bucket row lifecycle (Husk/Shadow rows, live
+    /// re-bucketing), which makes the whole coordinator/scheduler stack
+    /// — admission, preemption, re-bucketing, budgets — exercisable on
+    /// machines without the PJRT binding. This is what the serving load
+    /// harness and the CI perf gate run against.
+    Stub,
 }
 
 /// Draft-length policy selection.

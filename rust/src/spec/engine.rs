@@ -737,4 +737,42 @@ mod tests {
         assert!(shrink.to < shrink.from);
         assert_eq!(shrink.migrated, 1);
     }
+
+    #[test]
+    fn stub_batch_runs_the_full_spec_loop_deterministically() {
+        use crate::spec::ExecMode;
+        let eng = Engine::stub();
+        let cfg = SpecConfig {
+            mode: ExecMode::Stub,
+            policy: Policy::Fixed(4),
+            max_new_tokens: 13,
+            ..SpecConfig::default()
+        };
+        let run = || {
+            let mut batch = SpecBatch::new(&eng, cfg.clone(), 4).unwrap();
+            let a = batch.admit(b"hello", 7).unwrap();
+            let b = batch.admit(b"world!", 7).unwrap();
+            let mut steps = 0usize;
+            while batch.has_active() {
+                batch.step().unwrap();
+                steps += 1;
+                assert!(steps < 64, "stub batch failed to converge");
+            }
+            assert_eq!(batch.accepted, batch.drafted,
+                       "stub verify accepts every draft token");
+            let sa = batch.retire(a).unwrap();
+            let sb = batch.retire(b).unwrap();
+            (steps, sa.generated, sb.generated)
+        };
+        let (steps, ga, gb) = run();
+        // Fixed k=4 with certain acceptance emits 5 tokens/step:
+        // 13 new tokens land in ceil(13/5) = 3 steps, truncated exactly.
+        assert_eq!(steps, 3);
+        assert_eq!(ga.len(), 13);
+        assert_eq!(gb.len(), 13);
+        assert!(ga.iter().all(|&t| t != 0), "never the eos byte");
+        assert_ne!(ga, gb, "per-sequence RNG streams differ");
+        let again = run();
+        assert_eq!(again, (steps, ga, gb), "bit-deterministic replay");
+    }
 }

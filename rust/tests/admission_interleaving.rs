@@ -328,6 +328,7 @@ fn run_mode(mode: ExecMode) {
             assert_eq!((total.grows, total.shrinks), (0, 0),
                        "SPLIT has no fused bucket to re-shape");
         }
+        ExecMode::Stub => unreachable!("run_mode drives device modes"),
     }
 }
 

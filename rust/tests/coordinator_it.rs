@@ -2,6 +2,11 @@
 //! (mid-flight admission, immediate retirement), preemptive priority
 //! scheduling (suspend/resume-by-recompute), queueing, fan-out slicing,
 //! streaming and the line protocol, over real artifacts.
+//!
+//! Tests prefixed `stub_` run the same coordinator stack on the
+//! host-only [`ExecMode::Stub`] backend — no artifacts, no device — so
+//! they execute on every machine (they are what the CI serving gate
+//! leans on).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -555,4 +560,154 @@ fn tcp_server_line_protocol() {
         break;
     }
     assert!(saw_event, "no event lines before the final response");
+}
+
+// ---------------------------------------------------------------------------
+// Stub-backend tests — ExecMode::Stub needs no artifacts and no device,
+// so everything below runs on any machine (including CI). They pin the
+// latency-accounting and serving-path behavior the load harness
+// (`bass serving`) depends on.
+// ---------------------------------------------------------------------------
+
+fn stub_spec() -> SpecConfig {
+    SpecConfig {
+        mode: ExecMode::Stub,
+        policy: Policy::Fixed(4),
+        max_new_tokens: 16,
+        ..SpecConfig::default()
+    }
+}
+
+#[test]
+fn stub_roundtrip_counts_tokens_and_records_ttft() {
+    let coord = coordinator_with(stub_spec(), 4, 1);
+    let t0 = std::time::Instant::now();
+    let resp = coord.generate(request("hello stub", 2, 10, false))
+        .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(resp.seqs.len(), 2);
+    for s in &resp.seqs {
+        // The stub backend accepts every drafted token, so the length
+        // cap is hit exactly: deterministic counters for the CI gate.
+        assert_eq!(s.n_tokens, 10);
+        assert!(s.finished);
+    }
+    let ttft = resp.ttft_secs.expect("bytes were emitted → TTFT set");
+    assert!(ttft >= 0.0 && ttft <= wall,
+            "ttft {ttft}s outside [0, {wall}s]");
+}
+
+/// TTFT is pinned at the *first* emitted byte and never moved by later
+/// steps: the server-side value must not exceed the client-observed
+/// elapsed time at the first streaming event (submission happens-before
+/// enqueue; recording happens-before the event is received — so any
+/// later overwrite would violate this bound).
+#[test]
+fn stub_ttft_is_recorded_once_at_the_first_byte() {
+    let coord = coordinator_with(stub_spec(), 4, 1);
+    let t0 = std::time::Instant::now();
+    let rx = coord.submit(request("stream me", 1, 24, true));
+    let mut first_evt_secs = None;
+    let resp = loop {
+        match rx.recv().expect("worker alive") {
+            Reply::Step(ev) => {
+                if first_evt_secs.is_none() && !ev.text_delta.is_empty() {
+                    first_evt_secs = Some(t0.elapsed().as_secs_f64());
+                }
+            }
+            Reply::Done(r) => break r.unwrap(),
+        }
+    };
+    let first_evt = first_evt_secs.expect("saw a non-empty delta");
+    let ttft = resp.ttft_secs.expect("TTFT set on a streamed request");
+    assert!(ttft > 0.0, "ttft must be positive, got {ttft}");
+    assert!(ttft <= first_evt,
+            "ttft {ttft}s was re-recorded after the first byte \
+             (client saw the first delta at {first_evt}s)");
+}
+
+/// Wedge guard for the queued-budget-expiry fix: with a zero budget and
+/// a single slot, *every* request — admitted or still queued — must be
+/// answered (empty, unfinished, no TTFT) instead of the queued one
+/// waiting forever on a batch that never runs. Assertions hold for
+/// either drain ordering, so the test is race-free.
+#[test]
+fn stub_zero_budget_answers_queued_requests_too() {
+    let coord = coordinator_with(
+        SpecConfig { time_budget_secs: Some(0.0), ..stub_spec() }, 1, 1);
+    let rx1 = coord.submit(request("first", 1, 32, false));
+    let rx2 = coord.submit(request("second", 1, 32, false));
+    for (name, rx) in [("first", rx1), ("second", rx2)] {
+        let resp = loop {
+            match rx.recv_timeout(Duration::from_secs(10)) {
+                Ok(Reply::Step(_)) => continue,
+                Ok(Reply::Done(r)) => break r.unwrap(),
+                Err(e) => panic!("{name} request wedged: {e}"),
+            }
+        };
+        assert_eq!(resp.seqs.len(), 1, "{name}");
+        assert_eq!(resp.seqs[0].n_tokens, 0,
+                   "{name}: budget 0 must yield no tokens");
+        assert!(!resp.seqs[0].finished,
+                "{name}: expiry leaves sequences unfinished");
+        assert!(resp.ttft_secs.is_none(),
+                "{name}: no byte emitted → ttft_ms must be null");
+    }
+}
+
+/// Pipelining over one TCP connection: tagged requests answered
+/// out-of-order-safe, every reply carrying its client `"id"` verbatim —
+/// including structured errors for tagged-but-bad requests — and the
+/// final lines reporting `"ttft_ms"`.
+#[test]
+fn stub_tcp_pipelining_correlates_replies_by_id() {
+    let coord = Arc::new(coordinator_with(stub_spec(), 4, 1));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv_coord = coord.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve(srv_coord, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    // Three lines back-to-back, no reads in between: a long request, a
+    // short one, and a tagged-but-malformed one (no prompt).
+    stream.write_all(
+        b"{\"id\": 7, \"prompt\": \"abc\", \"max_new_tokens\": 30}\n\
+          {\"id\": 9, \"prompt\": \"xyz\", \"max_new_tokens\": 4}\n\
+          {\"id\": \"bad\", \"n\": 2}\n").unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut by_id = std::collections::HashMap::new();
+    while by_id.len() < 3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        if j.opt("event").is_some() {
+            continue; // streaming deltas (none expected here)
+        }
+        let id = match j.get("id").expect("every reply is tagged") {
+            Json::Num(n) => format!("{n}"),
+            Json::Str(s) => s.clone(),
+            other => panic!("unexpected id shape: {other:?}"),
+        };
+        by_id.insert(id, j);
+    }
+
+    let ok7 = &by_id["7"];
+    assert_eq!(ok7.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(ok7.get("seqs").unwrap().as_arr().unwrap()[0]
+               .get("n_tokens").unwrap().as_usize().unwrap(), 30);
+    assert!(ok7.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+    let ok9 = &by_id["9"];
+    assert_eq!(ok9.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(ok9.get("seqs").unwrap().as_arr().unwrap()[0]
+               .get("n_tokens").unwrap().as_usize().unwrap(), 4);
+
+    let bad = &by_id["bad"];
+    assert_eq!(bad.get("ok").unwrap(), &Json::Bool(false),
+               "malformed tagged request must error, with the id echoed");
 }

@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""CI gate for BENCH_serving.json (schema bass-serving-bench/v1).
+
+Three modes:
+
+  diff_bench_serving.py CHECK run.json
+      Schema/invariant checks on a single report (always hard).
+
+  diff_bench_serving.py --determinism a.json b.json
+      The perf-regression gate's deterministic half: the CI job runs the
+      gate scenarios twice on the same machine and the two reports'
+      `counters` blocks must match **bit for bit** (the gate workload
+      pins fan-out to 1, so counters are a function of the scenario seed
+      alone — any drift is a real behavior change, not timing noise).
+      Hard failure on any difference.
+
+  diff_bench_serving.py --baseline BENCH_serving.json run.json [--update]
+      Compare a fresh run against the committed baseline. `counters`
+      must match exactly; wall-clock sections (latency/goodput/overhead)
+      are reported but never gated (machine-dependent). While the
+      baseline is marked `"generated_by": "bootstrap-estimate"` the
+      counters comparison is *advisory* (the baseline was hand-estimated
+      before a toolchain could run the harness); regenerate it with
+
+          cargo run --release -- serving --deterministic --arrival both \
+              --requests 96 --rate 400 --seed 7 --out run.json
+          python3 scripts/diff_bench_serving.py \
+              --baseline BENCH_serving.json run.json --update
+
+      after which the gate is hard. `--update` rewrites the baseline
+      from the run (clearing the bootstrap marker).
+
+Exit status: 0 clean/advisory, 1 hard failure.
+"""
+
+import argparse
+import json
+import sys
+
+SCHEMA = "bass-serving-bench/v1"
+BOOTSTRAP = "bootstrap-estimate"
+LATENCY_METRICS = ("ttft_ms", "tpot_ms", "e2e_ms", "queue_ms")
+STATS = ("mean", "p50", "p99")
+COUNTER_KEYS = ("n_requests", "n_seqs_requested", "total_tokens",
+                "all_finished")
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+
+def check_report(doc, path):
+    """Hard schema + internal-consistency invariants for one report."""
+    if doc.get("schema") != SCHEMA:
+        fail(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    for key in ("generated_by", "driver", "mode", "scenarios"):
+        if key not in doc:
+            fail(f"{path}: missing top-level key {key!r}")
+    if not doc["scenarios"]:
+        fail(f"{path}: empty scenarios")
+    for s in doc["scenarios"]:
+        name = s.get("name", "<unnamed>")
+        for section in ("arrival", "workload", "latency", "goodput",
+                        "overhead", "counters"):
+            if section not in s:
+                fail(f"{path}:{name}: missing section {section!r}")
+        for metric in LATENCY_METRICS:
+            m = s["latency"].get(metric)
+            if m is None:
+                fail(f"{path}:{name}: latency missing {metric!r}")
+            for stat in STATS:
+                if not isinstance(m.get(stat), (int, float)):
+                    fail(f"{path}:{name}: {metric}.{stat} not a number")
+            if m["p50"] > m["p99"]:
+                fail(f"{path}:{name}: {metric} p50 {m['p50']} > "
+                     f"p99 {m['p99']}")
+        g, c = s["goodput"], s["counters"]
+        for key in COUNTER_KEYS:
+            if key not in c:
+                fail(f"{path}:{name}: counters missing {key!r}")
+        if not (0 <= g["within_slo"] <= g["served"] <= c["n_requests"]):
+            fail(f"{path}:{name}: within_slo {g['within_slo']} <= served "
+                 f"{g['served']} <= n_requests {c['n_requests']} violated")
+        if c["n_seqs_requested"] < c["n_requests"]:
+            fail(f"{path}:{name}: n_seqs_requested {c['n_seqs_requested']}"
+                 f" < n_requests {c['n_requests']}")
+        if c["all_finished"] and c["total_tokens"] <= 0:
+            fail(f"{path}:{name}: all_finished with zero total_tokens")
+    print(f"ok: {path} passes {SCHEMA} invariants "
+          f"({len(doc['scenarios'])} scenario(s))")
+
+
+def counters_by_name(doc):
+    return {s["name"]: s["counters"] for s in doc["scenarios"]}
+
+
+def diff_counters(a, b, a_path, b_path):
+    """Return a list of human-readable counter differences."""
+    diffs = []
+    ca, cb = counters_by_name(a), counters_by_name(b)
+    for name in sorted(set(ca) | set(cb)):
+        if name not in ca:
+            diffs.append(f"scenario {name!r} only in {b_path}")
+            continue
+        if name not in cb:
+            diffs.append(f"scenario {name!r} only in {a_path}")
+            continue
+        for key in sorted(set(ca[name]) | set(cb[name])):
+            va, vb = ca[name].get(key), cb[name].get(key)
+            if va != vb:
+                diffs.append(f"{name}.counters.{key}: "
+                             f"{va!r} ({a_path}) != {vb!r} ({b_path})")
+    return diffs
+
+
+def show_advisory(base, run):
+    """Print wall-clock section movement — never gated."""
+    by_name = {s["name"]: s for s in base["scenarios"]}
+    for s in run["scenarios"]:
+        b = by_name.get(s["name"])
+        if b is None:
+            continue
+        for metric in LATENCY_METRICS:
+            cur = s["latency"][metric]["p99"]
+            ref = b["latency"][metric]["p99"]
+            delta = cur - ref
+            print(f"  {s['name']}.{metric}.p99: {ref:.3g} -> {cur:.3g} "
+                  f"({delta:+.3g} ms, advisory)")
+        cur = s["goodput"]["goodput_rps"]
+        ref = b["goodput"]["goodput_rps"]
+        print(f"  {s['name']}.goodput_rps: {ref:.4g} -> {cur:.4g} "
+              f"(advisory)")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="BENCH_serving.json invariant/diff gate")
+    ap.add_argument("--determinism", nargs=2, metavar=("A", "B"),
+                    help="hard bit-for-bit counters diff of two runs")
+    ap.add_argument("--baseline", nargs=2, metavar=("BASELINE", "RUN"),
+                    help="compare RUN's counters against BASELINE")
+    ap.add_argument("--update", action="store_true",
+                    help="with --baseline: rewrite BASELINE from RUN")
+    ap.add_argument("report", nargs="?",
+                    help="single report to invariant-check")
+    args = ap.parse_args()
+
+    if args.determinism:
+        a_path, b_path = args.determinism
+        a, b = load(a_path), load(b_path)
+        check_report(a, a_path)
+        check_report(b, b_path)
+        diffs = diff_counters(a, b, a_path, b_path)
+        if diffs:
+            for d in diffs:
+                print(f"  {d}", file=sys.stderr)
+            fail("counters differ between identical-seed runs — "
+                 "the deterministic gate workload drifted")
+        print("ok: deterministic counters identical across runs")
+        return
+
+    if args.baseline:
+        base_path, run_path = args.baseline
+        base, run = load(base_path), load(run_path)
+        check_report(base, base_path)
+        check_report(run, run_path)
+        if args.update:
+            run = dict(run)
+            run["generated_by"] = (
+                f"scripts/diff_bench_serving.py --update "
+                f"(from {run.get('generated_by', '?')})")
+            with open(base_path, "w") as f:
+                json.dump(run, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"ok: {base_path} updated from {run_path}")
+            return
+        diffs = diff_counters(base, run, base_path, run_path)
+        advisory = base.get("generated_by") == BOOTSTRAP
+        show_advisory(base, run)
+        if diffs:
+            for d in diffs:
+                print(f"  {d}", file=sys.stderr)
+            if advisory:
+                print("warn: counters differ from the bootstrap-estimate "
+                      "baseline (advisory until regenerated with "
+                      "--update)")
+            else:
+                fail("counters regressed against the committed baseline")
+        else:
+            print("ok: counters match the committed baseline")
+        return
+
+    if not args.report:
+        ap.error("give a report path, or --determinism / --baseline")
+    check_report(load(args.report), args.report)
+
+
+if __name__ == "__main__":
+    main()
