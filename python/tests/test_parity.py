@@ -18,7 +18,12 @@ snapshotting device memory. That is only sound if a prefill-recomputed row
 is **bitwise identical** to one built incrementally by decode calls of
 assorted Q shapes (with speculative-rollback stale tails in between) —
 the property `test_resume_recompute_*` pins here, on the real model graph,
-for both attention impls, eager and jitted."""
+for both attention impls, eager and jitted.
+
+Ragged co-batch: per-sequence draft lengths launch decode at the batch's
+max `k_i + 1` with per-row filler beyond each row's real tokens —
+`test_ragged_cobatch_decode_matches_solo` pins that a short-draft row's
+real-position logits are bitwise those of its solo run."""
 
 import jax
 import jax.numpy as jnp
@@ -285,6 +290,74 @@ def test_resume_recompute_scatter_into_running_batch():
             np.testing.assert_array_equal(
                 np.asarray(cf)[row], 7.5 * np.ones_like(np.asarray(cf)[row]),
                 err_msg=f"buffer {i}: co-resident row {row} touched")
+
+
+# ---------------------------------------------------------------------------
+# Ragged co-batched decode (per-sequence draft lengths)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("attn", ["dense", "pallas"])
+def test_ragged_cobatch_decode_matches_solo(attn):
+    """Per-sequence draft lengths make verify launches RAGGED: a row
+    drafting k_i rides a program sized by the batch max, its Q axis
+    carrying k_i+1 real tokens and junk filler after them. Soundness
+    rests on two exact properties, both pinned here **bitwise**: (1) a
+    row's logits at its real q positions are unaffected by the trailing
+    filler (causal masking — a later position cannot feed an earlier
+    output), and (2) they are unaffected by the co-batched row entirely
+    (row independence). The Rust engine's per-row `k_i` loop
+    (`DraftIo::klens` / `VerifyIo::qlens`, rust/src/spec/backend.rs)
+    samples from these logits byte-for-byte, so tolerance-based
+    closeness would not be enough."""
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    rng = np.random.default_rng(3)
+
+    ctx_a = rng.integers(1, 256, size=(5,)).astype(np.int32).tolist()
+    ctx_b = rng.integers(1, 256, size=(9,)).astype(np.int32).tolist()
+    k_short, k_long = 1, 4          # row A drafts 1, row B drafts 4
+    q = k_long + 1                  # launch width = batch max k + 1
+    qa = [ctx_a[-1]] + rng.integers(
+        1, 256, size=(k_short,)).astype(np.int32).tolist()
+    qb = [ctx_b[-1]] + rng.integers(
+        1, 256, size=(k_long,)).astype(np.int32).tolist()
+
+    def solo(ctx, q_toks):
+        """The row alone, decoded at exactly its own q length."""
+        toks = np.zeros((1, _P), np.int32)
+        toks[0, : len(ctx)] = ctx
+        _, caches = prefill(params, jnp.asarray(toks),
+                            jnp.asarray([len(ctx)], np.int32), cfg, attn)
+        logits, _ = decode(params, jnp.asarray([q_toks], jnp.int32),
+                           jnp.asarray([len(ctx) - 1], np.int32),
+                           caches, cfg, attn)
+        return np.asarray(logits[0])
+
+    want_a = solo(ctx_a, qa)        # a Q = k_short+1 program
+    want_b = solo(ctx_b, qb)        # a Q = k_long+1 program
+
+    # Co-batched: one fused prefill, one decode at the launch width. Row
+    # A's q is padded past its k_short+1 real tokens with a deliberately
+    # nonzero filler byte a correct mask must render inert.
+    toks = np.zeros((2, _P), np.int32)
+    toks[0, : len(ctx_a)] = ctx_a
+    toks[1, : len(ctx_b)] = ctx_b
+    plens = jnp.asarray([len(ctx_a), len(ctx_b)], np.int32)
+    _, caches = prefill(params, jnp.asarray(toks), plens, cfg, attn)
+    q_toks = np.full((2, q), 213, np.int32)
+    q_toks[0, : k_short + 1] = qa
+    q_toks[1] = qb
+    seq_lens = jnp.asarray([len(ctx_a) - 1, len(ctx_b) - 1], np.int32)
+    logits, _ = decode(params, jnp.asarray(q_toks), seq_lens, caches,
+                       cfg, attn)
+    got = np.asarray(logits)
+
+    np.testing.assert_array_equal(
+        got[0, : k_short + 1], want_a,
+        err_msg=f"short row's real-position logits != solo (attn={attn})")
+    np.testing.assert_array_equal(
+        got[1], want_b,
+        err_msg=f"long row's logits != solo (attn={attn})")
 
 
 def test_scatter_prefill_artifact_lowers_with_batch_correct_specs():

@@ -70,7 +70,8 @@ use anyhow::{anyhow, Result};
 
 use crate::kv::FinishReason;
 use crate::runtime::Engine;
-use crate::spec::{AdmitOpts, ExecMode, SeqId, SpecBatch, SpecConfig};
+use crate::spec::{AdmitOpts, ExecMode, SeqId, SpecBatch, SpecConfig,
+                  SuspendedSeq};
 use batcher::BatcherConfig;
 use scheduler::{ParkedSeq, RunningSeq, Scheduler, SchedulerConfig,
                 Urgency};
@@ -90,13 +91,15 @@ pub struct Request {
     pub top_p: Option<f32>,
     /// Per-request RNG seed. When set, each fan-out sequence's RNG
     /// stream is pinned to its fan-out index, so {prompt, seed}
-    /// reproduces the same output regardless of server traffic history —
-    /// provided the per-step draft lengths match, i.e. the server runs
-    /// `Policy::Fixed` (under the adaptive heuristic, k is batch-global
-    /// Algorithm-1 state fed by co-batched traffic). Preemption does not
-    /// break this: a suspended sequence resumes with its exact RNG
-    /// stream positions. Defaults to the server's spec seed with
-    /// traffic-dependent streams.
+    /// reproduces the same output regardless of server traffic history
+    /// — under **both** draft-length policies: each sequence runs its
+    /// own Algorithm-1 controller fed only by its own acceptance, and
+    /// consumes exactly `k_i` draft uniforms per step, so its draft
+    /// lengths and RNG positions are a pure function of {prompt, seed},
+    /// never of co-batched traffic. Preemption does not break this
+    /// either: a suspended sequence resumes with its exact RNG stream
+    /// positions *and* its learned controller state. Defaults to the
+    /// server's spec seed with traffic-dependent streams.
     pub seed: Option<u64>,
     /// Scheduling priority: higher runs first and may **preempt**
     /// strictly-lower-priority running work (suspend-to-host +
@@ -158,6 +161,14 @@ pub struct Response {
     /// expired before the first step, or the request expired while
     /// still queued).
     pub ttft_secs: Option<f64>,
+    /// Mean per-row draft length over this request's (sequence, step)
+    /// observations — under the adaptive policy each sequence runs its
+    /// own Algorithm-1 controller, so this is the request's realized γ,
+    /// not a batch-global setting. 0 when no speculative step ran.
+    pub draft_len_mean: f64,
+    /// Draft tokens accepted over draft tokens proposed across this
+    /// request's sequences (0 when nothing was drafted).
+    pub acceptance_rate: f64,
 }
 
 /// One per-step progress notification for a streaming request.
@@ -312,6 +323,15 @@ struct InFlight {
     /// resume — the TTFT of a preempted request is still its first
     /// token, not its first token after the resume.
     ttft_secs: Option<f64>,
+    /// Draft tokens proposed across this request's sequences, summed in
+    /// the event-relay loop from each step's [`crate::spec::SeqEvent`]
+    /// (per-row `draft_len`, so co-batched traffic never pollutes it).
+    drafted: u64,
+    /// Draft tokens accepted across this request's sequences.
+    accepted: u64,
+    /// (sequence, step) observations behind `drafted` — the divisor for
+    /// `Response::draft_len_mean`.
+    draft_steps: u64,
 }
 
 impl InFlight {
@@ -331,6 +351,16 @@ impl InFlight {
             queue_depth,
             rebuckets,
             ttft_secs: self.ttft_secs,
+            draft_len_mean: if self.draft_steps > 0 {
+                self.drafted as f64 / self.draft_steps as f64
+            } else {
+                0.0
+            },
+            acceptance_rate: if self.drafted > 0 {
+                self.accepted as f64 / self.drafted as f64
+            } else {
+                0.0
+            },
         })));
     }
 }
@@ -488,29 +518,98 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             });
         }
 
+        let mut resumes = plan.resume;
         if let Some(target) = plan.rebucket {
             // Grow for waiting demand / shrink to the occupancy —
             // executed after preemptions (the victims' husk rows are
-            // dropped by the move) and before resumes/admissions, which
-            // land in the new bucket's fresh rows.
-            match batch.rebucket(target) {
-                Ok(Some(r)) => {
-                    sched.stats.note_rebucket(r.to > r.from, r.migrated);
+            // dropped by the move) and before scatter-resumes and
+            // admissions, which land in the new bucket's fresh rows.
+            //
+            // Resumes planned for the same round **ride the re-bucket**:
+            // their contexts are folded into the move's fused prefill
+            // ([`SpecBatch::rebucket_resume`]) instead of paying one
+            // scatter prefill each right after the bucket was already
+            // re-encoded. A rider is taken only while a target bucket
+            // provably covers it (`rebucket_target_with` re-probed per
+            // rider); the rest fall through to the scatter loop below.
+            // Orphans (owner already failed) are left for that loop's
+            // own drop-guard.
+            let mut riders: Vec<ParkedSeq> = Vec::new();
+            let mut rest: Vec<ParkedSeq> = Vec::new();
+            for parked in resumes {
+                if inflight.contains_key(&parked.owner)
+                    && batch
+                        .rebucket_target_with(target, riders.len() + 1)
+                        .is_some()
+                {
+                    riders.push(parked);
+                } else {
+                    rest.push(parked);
                 }
-                Ok(None) => {} // raced to a no-op; work keeps waiting
-                Err(e) => {
-                    // The old bucket survives a failed re-prefill (the
-                    // caches are swapped only on success), so keep
-                    // serving from it; any resume/admission this round
-                    // truly had no row for fails its request loudly
-                    // below.
-                    eprintln!("[bass-engine] live re-bucket failed; \
-                               keeping the current bucket: {e:#}");
+            }
+            resumes = rest;
+            if riders.is_empty() {
+                match batch.rebucket(target) {
+                    Ok(Some(r)) => {
+                        sched.stats.note_rebucket(r.to > r.from,
+                                                  r.migrated);
+                    }
+                    Ok(None) => {} // raced to a no-op; work keeps waiting
+                    Err(e) => {
+                        // The old bucket survives a failed re-prefill
+                        // (the caches are swapped only on success), so
+                        // keep serving from it; any resume/admission
+                        // this round truly had no row for fails its
+                        // request loudly below.
+                        eprintln!("[bass-engine] live re-bucket failed; \
+                                   keeping the current bucket: {e:#}");
+                    }
+                }
+            } else {
+                let metas: Vec<(u64, usize)> = riders
+                    .iter()
+                    .map(|p| (p.owner, p.fanout_index))
+                    .collect();
+                let snaps: Vec<SuspendedSeq> =
+                    riders.into_iter().map(|p| p.snapshot).collect();
+                match batch.rebucket_resume(target, snaps) {
+                    Ok((r, ids)) => {
+                        sched.stats.note_rebucket(r.to > r.from,
+                                                  r.migrated);
+                        sched.stats.resumes += metas.len() as u64;
+                        for (id, (owner, fanout_index)) in
+                            ids.into_iter().zip(metas)
+                        {
+                            seq_owner.insert(id, owner);
+                            if let Some(job) = inflight.get_mut(&owner) {
+                                job.seq_index.insert(id, fanout_index);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // The rider snapshots are consumed and their
+                        // requests cannot be made whole — fail each
+                        // owner loudly (same contract as a scatter
+                        // resume failing below). The old bucket
+                        // survives (caches swap only on success), so
+                        // keep serving everyone else from it.
+                        eprintln!("[bass-engine] live re-bucket with {} \
+                                   folded resumes failed; keeping the \
+                                   current bucket: {e:#}",
+                                  metas.len());
+                        let owners: HashSet<u64> =
+                            metas.iter().map(|&(o, _)| o).collect();
+                        for owner in owners {
+                            fail_request(&mut batch, owner, &e,
+                                         &mut inflight, &mut seq_owner,
+                                         &mut sched);
+                        }
+                    }
                 }
             }
         }
 
-        for parked in plan.resume {
+        for parked in resumes {
             let owner = parked.owner;
             // A resume failure earlier in this round may have failed the
             // owner already; its remaining snapshots are dead — dropping
@@ -674,10 +773,16 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             }
         };
 
-        // -- record TTFT and relay streaming events ------------------------
+        // -- record TTFT, draft economy, and streaming events --------------
         for ev in &report.events {
+            // Engine-wide draft-length economy (per-row: each event
+            // carries its own sequence's k_i and accepted count).
+            sched.stats.observe_draft(ev.draft_len, ev.accepted);
             let Some(&owner) = seq_owner.get(&ev.id) else { continue };
             let Some(job) = inflight.get_mut(&owner) else { continue };
+            job.drafted += ev.draft_len as u64;
+            job.accepted += ev.accepted as u64;
+            job.draft_steps += 1;
             if !ev.new_bytes.is_empty() && job.ttft_secs.is_none() {
                 // First emitted byte of the whole request (any fan-out
                 // sequence), measured from submission. Set once: later
@@ -721,11 +826,14 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             .collect();
         eprintln!("[bass-engine] scheduler: preemptions={} resumes={} \
                    rebuckets={} (grow {} / shrink {}, {} rows migrated) \
-                   bucket_occ≈{:.0}% max_queue_depth={} queue_wait[{}]",
+                   bucket_occ≈{:.0}% draft_len≈{:.1} accept≈{:.0}% \
+                   max_queue_depth={} queue_wait[{}]",
                   st.preemptions, st.resumes, st.rebuckets(),
                   st.rebuckets_grow, st.rebuckets_shrink,
                   st.rebucket_migrated,
                   st.mean_bucket_occupancy() * 100.0,
+                  st.mean_draft_len(),
+                  st.draft_acceptance() * 100.0,
                   st.max_queue_depth, waits.join(" "));
     }
 }
@@ -764,6 +872,9 @@ fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
         enqueued: job.enqueued,
         preempted: 0,
         ttft_secs: None,
+        drafted: 0,
+        accepted: 0,
+        draft_steps: 0,
     };
     let mut failed = None;
     for i in 0..n {
@@ -845,6 +956,8 @@ fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
             queue_depth: sched.queue_depth(),
             rebuckets: sched.stats.rebuckets(),
             ttft_secs: None,
+            draft_len_mean: 0.0,
+            acceptance_rate: 0.0,
         })));
     }
 }

@@ -46,7 +46,8 @@
 //! row is dropped and later rebuilt bitwise by re-prefilling
 //! `prompt ‖ generated` (recompute-resume), so the preempted request
 //! still returns exactly the output it would have produced uninterrupted
-//! (byte-exact under `--fixed-draft`); it just returns later, and its
+//! (byte-exact under both draft policies — the per-sequence controller
+//! state rides the snapshot); it just returns later, and its
 //! `"preempted"` count says so. The cost model: a suspension holds a few
 //! hundred host bytes; each resume costs one prompt-length prefill —
 //! cheap next to the latency a blocked high-priority request would eat.
@@ -267,6 +268,11 @@ pub fn response_json(resp: &super::Response) -> Json {
         ("preempted", resp.preempted.into()),
         ("queue_depth", resp.queue_depth.into()),
         ("rebuckets", (resp.rebuckets as usize).into()),
+        // Draft economy of this request's own sequences: mean per-row
+        // draft length (the adaptive controller's realized γ) and the
+        // accepted/proposed draft-token ratio.
+        ("draft_len_mean", resp.draft_len_mean.into()),
+        ("acceptance_rate", resp.acceptance_rate.into()),
         // Time to first token, `null` when no byte was ever emitted
         // (a time budget expired before the first step).
         ("ttft_ms", match resp.ttft_secs {
@@ -354,6 +360,8 @@ mod tests {
             queue_depth: 3,
             rebuckets: 5,
             ttft_secs: Some(0.0255),
+            draft_len_mean: 3.5,
+            acceptance_rate: 0.75,
         };
         let j = response_json(&resp);
         // A client compares n_requested to seqs.len() to detect the
@@ -368,6 +376,11 @@ mod tests {
         assert_eq!(j.get("rebuckets").unwrap().as_usize().unwrap(), 5);
         let ttft = j.get("ttft_ms").unwrap().as_f64().unwrap();
         assert!((ttft - 25.5).abs() < 1e-9);
+        // Draft economy echoes (per-request, per-row — see Response).
+        let dl = j.get("draft_len_mean").unwrap().as_f64().unwrap();
+        assert!((dl - 3.5).abs() < 1e-9);
+        let ar = j.get("acceptance_rate").unwrap().as_f64().unwrap();
+        assert!((ar - 0.75).abs() < 1e-9);
     }
 
     #[test]
@@ -382,6 +395,8 @@ mod tests {
             queue_depth: 0,
             rebuckets: 0,
             ttft_secs: None,
+            draft_len_mean: 0.0,
+            acceptance_rate: 0.0,
         };
         let j = response_json(&resp);
         // A budget-expired request never produced a byte: the field is

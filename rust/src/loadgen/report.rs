@@ -1,10 +1,12 @@
 //! `BENCH_serving.json` — the schema-stable serving benchmark record.
 //!
-//! Schema `bass-serving-bench/v1`:
+//! Schema `bass-serving-bench/v2` (v1 + the `draft` section: per-request
+//! mean draft lengths and acceptance rates, reported since the engine
+//! runs one adaptive draft-length controller per sequence):
 //!
 //! ```text
 //! {
-//!   "schema": "bass-serving-bench/v1",
+//!   "schema": "bass-serving-bench/v2",
 //!   "generated_by": <tool/provenance string>,
 //!   "driver": "direct" | "tcp",
 //!   "mode": "stub" | "pad" | "split",
@@ -20,11 +22,19 @@
 //!                  "offered_rps"},
 //!     "overhead": {"preemptions", "rebuckets", "max_queue_depth",
 //!                  "expired_unserved", "errors"},
+//!     "draft":    {"draft_len": {"mean", "p50", "p99"},
+//!                  "acceptance_rate": {"mean", "p50", "p99"}},
 //!     "counters": {"n_requests", "n_seqs_requested", "total_tokens",
 //!                  "all_finished"}
 //!   }, ...]
 //! }
 //! ```
+//!
+//! `draft` distributions are **across requests** (each sample is one
+//! request's server-reported `draft_len_mean` / `acceptance_rate`, over
+//! requests that actually ran a speculative step), so a single
+//! long-running request cannot drown out the tail the way a
+//! per-step-weighted aggregate would.
 //!
 //! The split matters: `latency`/`goodput`/`overhead` are wall-clock
 //! observations (machine- and load-dependent — the CI gate treats them
@@ -38,7 +48,7 @@ use crate::runtime::json::Json;
 
 use super::run::{Outcome, Scenario};
 
-pub const SCHEMA: &str = "bass-serving-bench/v1";
+pub const SCHEMA: &str = "bass-serving-bench/v2";
 
 /// Aggregate one scenario's outcomes into its report entry.
 pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
@@ -97,6 +107,20 @@ pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
         ("errors",
          outcomes.iter().filter(|o| !o.ok).count().into()),
     ]);
+    // Per-request draft economy (v2): samples are requests whose
+    // server-reported draft_len_mean is positive — i.e. that ran at
+    // least one speculative step (expired-unserved requests carry no
+    // draft signal).
+    let draft = Json::obj(vec![
+        ("draft_len",
+         dist(&mut outcomes.iter()
+              .filter(|o| o.ok && o.draft_len_mean > 0.0)
+              .map(|o| o.draft_len_mean))),
+        ("acceptance_rate",
+         dist(&mut outcomes.iter()
+              .filter(|o| o.ok && o.draft_len_mean > 0.0)
+              .map(|o| o.acceptance_rate))),
+    ]);
     let counters = Json::obj(vec![
         ("n_requests", outcomes.len().into()),
         ("n_seqs_requested",
@@ -117,6 +141,7 @@ pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
         ("latency", latency),
         ("goodput", goodput),
         ("overhead", overhead),
+        ("draft", draft),
         ("counters", counters),
     ])
 }
@@ -153,6 +178,8 @@ mod tests {
             preempted: 1,
             rebuckets: 3,
             queue_depth: 2,
+            draft_len_mean: if tokens > 0 { 3.0 } else { 0.0 },
+            acceptance_rate: if tokens > 0 { 0.6 } else { 0.0 },
         }
     }
 
@@ -192,7 +219,7 @@ mod tests {
     }
 
     /// The schema-stability pin: a report round-trips through the
-    /// hand-rolled JSON layer losslessly and carries every v1 key.
+    /// hand-rolled JSON layer losslessly and carries every v2 key.
     #[test]
     fn report_round_trips_and_is_schema_complete() {
         let outcomes: Vec<Outcome> =
@@ -207,7 +234,7 @@ mod tests {
         assert_eq!(back.get("schema").unwrap().as_str().unwrap(), SCHEMA);
         let s = &back.get("scenarios").unwrap().as_arr().unwrap()[0];
         for section in ["arrival", "workload", "latency", "goodput",
-                        "overhead", "counters"] {
+                        "overhead", "draft", "counters"] {
             assert!(s.opt(section).is_some(), "missing {section}");
         }
         for metric in ["ttft_ms", "tpot_ms", "e2e_ms", "queue_ms"] {
@@ -219,10 +246,25 @@ mod tests {
             let p99 = m.get("p99").unwrap().as_f64().unwrap();
             assert!(p50 <= p99, "{metric}: p50 {p50} > p99 {p99}");
         }
+        for metric in ["draft_len", "acceptance_rate"] {
+            let m = s.get("draft").unwrap().get(metric).unwrap();
+            for stat in ["mean", "p50", "p99"] {
+                assert!(m.opt(stat).is_some(), "{metric} missing {stat}");
+            }
+        }
         for key in ["n_requests", "n_seqs_requested", "total_tokens",
                     "all_finished"] {
             assert!(s.get("counters").unwrap().opt(key).is_some(),
                     "counters missing {key}");
         }
+        // v2 draft samples: every test outcome drafted at mean 3.0 with
+        // 60% acceptance.
+        let d = s.get("draft").unwrap();
+        let dl = d.get("draft_len").unwrap()
+            .get("mean").unwrap().as_f64().unwrap();
+        assert!((dl - 3.0).abs() < 1e-9);
+        let ar = d.get("acceptance_rate").unwrap()
+            .get("p50").unwrap().as_f64().unwrap();
+        assert!((ar - 0.6).abs() < 1e-9);
     }
 }

@@ -4,19 +4,20 @@
 //!
 //! Submission is open-loop: each request is fired at its scheduled
 //! offset whether or not earlier ones have answered, so server-side
-//! queueing shows up as measured latency. Every request is collected on
-//! its own thread (direct path) or correlated by its echoed `"id"` tag
-//! (TCP path, one pipelined connection), so a slow request never skews
-//! a fast one's end-to-end clock.
+//! queueing shows up as measured latency. Requests are collected by a
+//! bounded pool of polling workers (direct path) or correlated by their
+//! echoed `"id"` tags (TCP path, one pipelined connection), so a slow
+//! request never skews a fast one's end-to-end clock.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{Coordinator, Response};
+use crate::coordinator::{Coordinator, Reply, Response};
 use crate::runtime::json::Json;
 
 use super::arrival::Arrival;
@@ -72,6 +73,13 @@ pub struct Outcome {
     pub preempted: usize,
     pub rebuckets: u64,
     pub queue_depth: usize,
+    /// Server-reported mean per-row draft length over this request's
+    /// (sequence, step) observations — the adaptive controller's
+    /// realized γ for this request's own traffic.
+    pub draft_len_mean: f64,
+    /// Server-reported accepted/proposed draft-token ratio of this
+    /// request's sequences.
+    pub acceptance_rate: f64,
 }
 
 impl Outcome {
@@ -90,6 +98,8 @@ impl Outcome {
             preempted: 0,
             rebuckets: 0,
             queue_depth: 0,
+            draft_len_mean: 0.0,
+            acceptance_rate: 0.0,
         }
     }
 
@@ -112,6 +122,8 @@ impl Outcome {
             preempted: resp.preempted,
             rebuckets: resp.rebuckets,
             queue_depth: resp.queue_depth,
+            draft_len_mean: resp.draft_len_mean,
+            acceptance_rate: resp.acceptance_rate,
         }
     }
 }
@@ -139,29 +151,130 @@ fn pace(t0: Instant, offset: f64) {
 /// Drive the coordinator directly over its mpsc submission API.
 /// Returns per-request outcomes (in request order) and the makespan,
 /// seconds from first submission tick to last answer.
+///
+/// Collection runs on a **bounded worker pool**, not a thread per
+/// request: the old shape spawned one OS thread per submission just to
+/// block on its reply channel, so a 10k-request scenario meant 10k
+/// threads — most asleep, all paying stack + scheduler cost, and the
+/// harness hit thread limits long before the engine was the
+/// bottleneck. Each pool worker owns the receivers of the requests it
+/// accepted and *polls* them (`try_recv`, short idle sleep) rather
+/// than blocking on one: replies are observed within a poll tick of
+/// arriving regardless of completion order, so the e2e clock never
+/// inflates behind a slow co-pending request. Submission stays on the
+/// caller's thread — the open-loop pacing contract is untouched.
 pub fn run_direct(coord: &Coordinator, sc: &Scenario)
                   -> (Vec<Outcome>, f64) {
     let (offsets, reqs) = sc.requests();
+    let n = reqs.len();
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .clamp(2, 16)
+        .min(n.max(1));
+    let (work_tx, work_rx) =
+        channel::<(usize, Instant, Receiver<Reply>)>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let out: Arc<Mutex<Vec<Option<Outcome>>>> =
+        Arc::new(Mutex::new(vec![None; n]));
+    let pool: Vec<_> = (0..workers)
+        .map(|_| {
+            let work_rx = Arc::clone(&work_rx);
+            let out = Arc::clone(&out);
+            std::thread::spawn(move || collect_replies(&work_rx, &out))
+        })
+        .collect();
+
     let t0 = Instant::now();
-    let mut collectors = Vec::with_capacity(reqs.len());
-    for (offset, lr) in offsets.iter().zip(&reqs) {
+    for (i, (offset, lr)) in offsets.iter().zip(&reqs).enumerate() {
         pace(t0, *offset);
         let submitted = Instant::now();
         let rx = coord.submit(lr.to_request(false));
-        collectors.push(std::thread::spawn(move || {
-            match Coordinator::wait(rx) {
-                Ok(resp) => Outcome::from_response(
-                    &resp, submitted.elapsed().as_secs_f64() * 1e3),
-                Err(_) => Outcome::error(
-                    submitted.elapsed().as_secs_f64() * 1e3),
-            }
-        }));
+        let _ = work_tx.send((i, submitted, rx));
     }
-    let outcomes: Vec<Outcome> = collectors
+    drop(work_tx); // pool drains what's pending, then exits
+    for h in pool {
+        h.join().expect("collector worker panicked");
+    }
+    let makespan = t0.elapsed().as_secs_f64();
+    let outcomes = Arc::try_unwrap(out)
+        .expect("pool exited")
+        .into_inner()
+        .unwrap()
         .into_iter()
-        .map(|h| h.join().expect("collector thread panicked"))
+        .map(|o| o.expect("every request collected"))
         .collect();
-    (outcomes, t0.elapsed().as_secs_f64())
+    (outcomes, makespan)
+}
+
+/// One pool worker: accept submitted requests from the shared queue,
+/// poll the accepted reply channels round-robin, record each outcome at
+/// the moment its `Done` is observed. Exits when the submission side
+/// hung up and every accepted request has answered.
+fn collect_replies(
+    work_rx: &Mutex<Receiver<(usize, Instant, Receiver<Reply>)>>,
+    out: &Mutex<Vec<Option<Outcome>>>,
+) {
+    use std::sync::mpsc::TryRecvError;
+    let mut mine: Vec<(usize, Instant, Receiver<Reply>)> = Vec::new();
+    let mut open = true;
+    while open || !mine.is_empty() {
+        let mut progressed = false;
+        {
+            // Non-blocking job intake (never hold the lock across a
+            // blocking recv — sibling workers need it for their own
+            // intake between polls).
+            let rx = work_rx.lock().unwrap();
+            loop {
+                match rx.try_recv() {
+                    Ok(job) => {
+                        mine.push(job);
+                        progressed = true;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        mine.retain_mut(|(idx, submitted, rx)| {
+            let oc = loop {
+                match rx.try_recv() {
+                    // Direct collection discards step events (the
+                    // harness submits stream=false; defensive anyway).
+                    Ok(Reply::Step(_)) => continue,
+                    Ok(Reply::Done(Ok(resp))) => {
+                        break Some(Outcome::from_response(
+                            &resp,
+                            submitted.elapsed().as_secs_f64() * 1e3,
+                        ))
+                    }
+                    Ok(Reply::Done(Err(_))) | Err(TryRecvError::Disconnected) => {
+                        break Some(Outcome::error(
+                            submitted.elapsed().as_secs_f64() * 1e3,
+                        ))
+                    }
+                    Err(TryRecvError::Empty) => break None,
+                }
+            };
+            match oc {
+                Some(oc) => {
+                    out.lock().unwrap()[*idx] = Some(oc);
+                    progressed = true;
+                    false
+                }
+                None => true,
+            }
+        });
+        if !progressed {
+            // Nothing moved this cycle: idle briefly instead of
+            // spinning. The tick bounds reply-observation skew (and
+            // thus e2e inflation) to ~0.1 ms.
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
 }
 
 /// Drive the coordinator through the TCP server over **one pipelined
@@ -260,6 +373,8 @@ fn outcome_from_wire(j: &Json, e2e_ms: f64) -> Result<Outcome> {
         preempted: j.get("preempted")?.as_usize()?,
         rebuckets: j.get("rebuckets")?.as_usize()? as u64,
         queue_depth: j.get("queue_depth")?.as_usize()?,
+        draft_len_mean: j.get("draft_len_mean")?.as_f64()?,
+        acceptance_rate: j.get("acceptance_rate")?.as_f64()?,
     })
 }
 

@@ -121,6 +121,13 @@ pub struct SchedStats {
     /// priority -> aggregated admission waits (queue time before the
     /// request first entered the engine batch).
     pub queue_wait: BTreeMap<i32, QueueWait>,
+    /// Draft-token economy over every (sequence, step) the engine
+    /// executed: each live row contributes its **own** per-row draft
+    /// length `k_i` (the adaptive controller's bucketized choice, not
+    /// the batch launch width) and its own accepted count.
+    pub draft_steps: u64,
+    pub draft_len_sum: u64,
+    pub draft_accepted_sum: u64,
 }
 
 /// Aggregated queue-wait observations of one priority class.
@@ -181,6 +188,34 @@ impl SchedStats {
             0.0
         } else {
             self.occupancy_sum / self.occupancy_rounds as f64
+        }
+    }
+
+    /// Record one (sequence, step) draft observation: the row's own
+    /// draft length and how many of those tokens were accepted.
+    pub fn observe_draft(&mut self, draft_len: usize, accepted: usize) {
+        self.draft_steps += 1;
+        self.draft_len_sum += draft_len as u64;
+        self.draft_accepted_sum += accepted as u64;
+    }
+
+    /// Mean per-row draft length across all observed (sequence, step)
+    /// pairs (0 when no speculative step ran).
+    pub fn mean_draft_len(&self) -> f64 {
+        if self.draft_steps == 0 {
+            0.0
+        } else {
+            self.draft_len_sum as f64 / self.draft_steps as f64
+        }
+    }
+
+    /// Accepted draft tokens over proposed draft tokens (0 when nothing
+    /// was drafted).
+    pub fn draft_acceptance(&self) -> f64 {
+        if self.draft_len_sum == 0 {
+            0.0
+        } else {
+            self.draft_accepted_sum as f64 / self.draft_len_sum as f64
         }
     }
 
@@ -321,6 +356,19 @@ mod tests {
         s.preemptions += 1;
         s.resumes += 1;
         assert_eq!((s.preemptions, s.resumes), (1, 1));
+    }
+
+    #[test]
+    fn sched_stats_track_draft_economy() {
+        let mut s = SchedStats::default();
+        assert_eq!(s.mean_draft_len(), 0.0);
+        assert_eq!(s.draft_acceptance(), 0.0);
+        s.observe_draft(4, 4); // hot row: full accept
+        s.observe_draft(8, 2); // long draft, poor acceptance
+        s.observe_draft(0, 0); // zero-length rows still count a step
+        assert_eq!(s.draft_steps, 3);
+        assert!((s.mean_draft_len() - 4.0).abs() < 1e-12);
+        assert!((s.draft_acceptance() - 0.5).abs() < 1e-12);
     }
 
     #[test]

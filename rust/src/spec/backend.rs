@@ -23,23 +23,30 @@
 //!    applied), pads with `Shadow` rows and runs one fused prefill.
 //! 3. **How does a step execute?** [`Backend::draft`] /
 //!    [`Backend::verify`] take the orchestrator-assembled per-row I/O
-//!    ([`DraftIo`] / [`VerifyIo`]) and run the fused artifact (PAD) or
-//!    per-slot B=1 artifacts skipping inactive rows (SPLIT).
+//!    ([`DraftIo`] / [`VerifyIo`]) — **ragged**: each row carries its
+//!    own draft length `k_i` (`klens`) and verify width `q_i = k_i + 1`
+//!    (`qlens`) next to the launch-width `k`/`q`. PAD runs the fused
+//!    artifact at the launch width and rows past their own `k_i` are
+//!    masked by never being read; SPLIT runs each row's B=1 artifact at
+//!    that row's *own* `k_i`/`q_i` bucket, so short rows really skip
+//!    the FLOPs; the stub honors the raggedness exactly.
 //! 4. **How does a row free?** [`Backend::release`] takes the [`Slot`]
 //!    out (retire/suspend): SPLIT drops the slot's caches and leaves
 //!    `Free`; a running PAD bucket leaves a `Husk` so the fused
 //!    artifact keeps valid length inputs. [`Backend::reset`] drops all
-//!    device state on drain (the orchestrator resets rows/clock/policy).
+//!    device state on drain (the orchestrator resets rows and clock).
 //! 5. **Can the live batch re-shape?** [`Backend::live_bucket`] /
 //!    [`Backend::rebucket`]. Only PAD has a fused bucket:
 //!    re-bucketing re-encodes every carried `Seq` row's context with
 //!    one fused prefill at the new bucket — the same bitwise recompute
 //!    primitive as resume, so carried sequences are byte-exact — and
-//!    replaces `Husk`/`Shadow` rows with fresh `Shadow` grow-room. The
-//!    old caches are replaced only after the new prefill succeeds, so a
-//!    device failure leaves the running bucket intact. SPLIT declines
-//!    (`live_bucket` = None): its slots are per-sequence, there is
-//!    nothing to re-shape.
+//!    replaces `Husk`/`Shadow` rows with fresh `Shadow` grow-room.
+//!    Suspended sequences handed to `rebucket` ride that same fused
+//!    prefill as fresh `Seq` rows (no separate scatter prefill per
+//!    resume). The old caches are replaced only after the new prefill
+//!    succeeds, so a device failure leaves the running bucket intact.
+//!    SPLIT declines (`live_bucket` = None): its slots are
+//!    per-sequence, there is nothing to re-shape.
 //!
 //! The *only* place an [`ExecMode`] becomes concrete is [`make`]; no
 //! other code in `spec/` may match on the mode.
@@ -55,6 +62,7 @@ use crate::runtime::{Engine, ModelInfo};
 use crate::sampling::Pcg32;
 
 use super::config::{ExecMode, SpecConfig};
+use super::draft_len::Controller;
 use super::seq::{Row, Slot};
 
 /// What the orchestrator lends a backend for device work: the engine,
@@ -72,10 +80,18 @@ pub(super) struct ExecCtx<'a> {
 /// Orchestrator-assembled per-row inputs of one fused draft call
 /// (`b = stepping.len()` rows; see `Engine::draft` for the layouts).
 pub(super) struct DraftIo<'a> {
+    /// Launch draft length: `max_i k_i` over the slot-holding rows.
+    /// PAD/stub buffers (`uniforms`, returned tokens/q-dists) are laid
+    /// out at this width.
     pub k: usize,
     pub tokens_in: &'a [i32],
     pub n_in: &'a [i32],
     pub dlens: &'a [i32],
+    /// Per-row draft lengths `k_i` (0 for Free/Husk rows): each row's
+    /// own bucketized adaptive draft length. Only positions `0..k_i` of
+    /// a row's uniforms/outputs are meaningful; SPLIT executes the row
+    /// at exactly this bucket.
+    pub klens: &'a [i32],
     pub uniforms: &'a [f32],
     pub temps: &'a [f32],
     pub tps: &'a [f32],
@@ -86,9 +102,14 @@ pub(super) struct DraftIo<'a> {
 
 /// Per-row inputs of one verify (main-model decode) call.
 pub(super) struct VerifyIo<'a> {
+    /// Launch verify width: launch `k + 1`; `[B,Q,V]` logits layout.
     pub q: usize,
     pub vtokens: &'a [i32],
     pub mlens: &'a [i32],
+    /// Per-row verify widths `q_i = k_i + 1` (0 for Free/Husk rows):
+    /// the host reads a row's logits only at `0..q_i`, with the bonus
+    /// position at `q_i - 1`; SPLIT decodes the row at exactly `q_i`.
+    pub qlens: &'a [i32],
     pub stepping: &'a [bool],
 }
 
@@ -131,7 +152,7 @@ pub(super) trait Backend {
     fn release(&mut self, rows: &mut [Row], idx: usize) -> Slot;
 
     /// Drop all device state (drain auto-reset); the orchestrator
-    /// resets the row table, clock and policy.
+    /// resets the row table and clock.
     fn reset(&mut self);
 
     /// Rows of the live fused bucket — `None` for SPLIT or a PAD batch
@@ -139,9 +160,11 @@ pub(super) trait Backend {
     fn live_bucket(&self, rows: &[Row]) -> Option<usize>;
 
     /// Re-shape the running fused batch to `bucket` rows without a
-    /// drain; returns the number of carried (re-encoded) real rows.
+    /// drain, folding `resumes` (already re-slotted suspended
+    /// sequences) into the same fused prefill as fresh `Seq` rows;
+    /// returns the number of re-encoded real rows (carried + resumed).
     fn rebucket(&mut self, _cx: &mut ExecCtx, _rows: &mut Vec<Row>,
-                _bucket: usize) -> Result<usize> {
+                _bucket: usize, _resumes: Vec<Slot>) -> Result<usize> {
         bail!("this backend has no fused bucket to re-shape");
     }
 }
@@ -173,22 +196,30 @@ fn encode_window(ctx: &[u8], p: usize) -> (Vec<i32>, i32) {
 }
 
 /// Commit one bucket (re-)shape of a fused row table: keep `Seq` rows
-/// in slot order, drop `Husk`/`Shadow` rows, pad with fresh `Shadow`
-/// rows replicating the last real context (tail-clamped to the `p`-byte
-/// prefill window). Shared by the PAD fused prefill — which runs it
-/// only after the device calls succeed, so a failure leaves a running
-/// bucket intact — and the host-only stub backend, which has no device
-/// calls at all. Returns the number of carried real rows.
+/// in slot order, append `resumes` (re-slotted suspended sequences
+/// riding the same fused prefill) as fresh `Seq` rows after them, drop
+/// `Husk`/`Shadow` rows, and pad with fresh `Shadow` rows replicating
+/// the last real context (tail-clamped to the `p`-byte prefill
+/// window). Shared by the PAD fused prefill — which runs it only after
+/// the device calls succeed, so a failure leaves a running bucket
+/// intact — and the host-only stub backend, which has no device calls
+/// at all. Returns the number of real rows (carried + resumed).
 fn commit_bucket(cfg: &SpecConfig, p: usize, rows: &mut Vec<Row>,
-                 bucket: usize) -> Result<usize> {
-    let n_real = rows.iter().filter(|r| matches!(r, Row::Seq(_))).count();
+                 bucket: usize, resumes: Vec<Slot>) -> Result<usize> {
+    let n_real = rows.iter().filter(|r| matches!(r, Row::Seq(_))).count()
+        + resumes.len();
     if n_real == 0 {
         bail!("cannot start an empty fused batch");
     }
     if bucket < n_real {
         bail!("bucket {bucket} cannot hold {n_real} occupied rows");
     }
-    let last_ctx = rows
+    let mut new_rows: Vec<Row> = std::mem::take(rows)
+        .into_iter()
+        .filter(|r| matches!(r, Row::Seq(_)))
+        .chain(resumes.into_iter().map(Row::Seq))
+        .collect();
+    let last_ctx = new_rows
         .iter()
         .rev()
         .find_map(|r| match r {
@@ -196,10 +227,6 @@ fn commit_bucket(cfg: &SpecConfig, p: usize, rows: &mut Vec<Row>,
             _ => None,
         })
         .expect("n_real >= 1");
-    let mut new_rows: Vec<Row> = std::mem::take(rows)
-        .into_iter()
-        .filter(|r| matches!(r, Row::Seq(_)))
-        .collect();
     for i in n_real..bucket {
         let state = SeqState::new(last_ctx.clone(),
                                   *last_ctx.last().expect("non-empty"),
@@ -212,6 +239,7 @@ fn commit_bucket(cfg: &SpecConfig, p: usize, rows: &mut Vec<Row>,
             max_new_tokens: cfg.max_new_tokens,
             temperature: cfg.temperature,
             top_p: cfg.top_p,
+            draft_ctrl: Controller::for_policy(&cfg.policy),
         }));
     }
     *rows = new_rows;
@@ -242,19 +270,23 @@ impl PadBackend {
     /// Rows are encoded from their full `prompt ‖ generated` context, so
     /// sequences resumed before the start — and every row carried across
     /// a re-bucket — prefill their pre-existing output too: the bitwise
-    /// recompute that makes both paths byte-exact.
+    /// recompute that makes both paths byte-exact. Suspended sequences
+    /// handed in as `resumes` are encoded in this same launch, right
+    /// after the carried rows — one fused prefill covers the move *and*
+    /// the resumes, instead of a scatter prefill per resume afterwards.
     fn fused_prefill(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
-                     bucket: usize) -> Result<usize> {
+                     bucket: usize, resumes: Vec<Slot>) -> Result<usize> {
         let cfg = cx.cfg;
         let eng = cx.engine;
         let p = eng.manifest.prefill_p;
-        let real_ctx: Vec<Vec<u8>> = rows
+        let mut real_ctx: Vec<Vec<u8>> = rows
             .iter()
             .filter_map(|r| match r {
                 Row::Seq(s) => Some(s.state.context_tail(p)),
                 _ => None,
             })
             .collect();
+        real_ctx.extend(resumes.iter().map(|s| s.state.context_tail(p)));
         let n_real = real_ctx.len();
         if n_real == 0 {
             bail!("cannot start an empty PAD batch");
@@ -279,10 +311,11 @@ impl PadBackend {
         *cx.prefill_secs += t0.elapsed().as_secs_f64();
         cx.flops.add_prefill(cx.main_info, bucket, p);
         cx.flops.add_prefill(cx.draft_info, bucket, p);
-        // Commit: compact Seq rows to the front, fresh Shadow padding
-        // after them (exactly the padded rows the fused artifact
-        // computes anyway).
-        let n = commit_bucket(cfg, p, rows, bucket)?;
+        // Commit: compact Seq rows to the front, resumes after them,
+        // fresh Shadow padding last (exactly the padded rows the fused
+        // artifact computes anyway) — the same order the contexts were
+        // encoded in above.
+        let n = commit_bucket(cfg, p, rows, bucket, resumes)?;
         self.store = Some((m.caches, d.caches));
         Ok(n)
     }
@@ -374,7 +407,7 @@ impl Backend for PadBackend {
         }
         let b = cx.engine.manifest.bucket_batch_padded(
             n_real, cx.cfg.pad_headroom, capacity)?;
-        self.fused_prefill(cx, rows, b).map(|_| ())
+        self.fused_prefill(cx, rows, b, Vec::new()).map(|_| ())
     }
 
     fn draft(&mut self, cx: &mut ExecCtx, io: &DraftIo)
@@ -435,11 +468,11 @@ impl Backend for PadBackend {
     }
 
     fn rebucket(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
-                bucket: usize) -> Result<usize> {
+                bucket: usize, resumes: Vec<Slot>) -> Result<usize> {
         if self.store.is_none() {
             bail!("PAD batch has not started; nothing to re-bucket");
         }
-        self.fused_prefill(cx, rows, bucket)
+        self.fused_prefill(cx, rows, bucket, resumes)
     }
 }
 
@@ -507,15 +540,21 @@ impl Backend for SplitBackend {
             if !io.stepping[i] {
                 continue; // SPLIT skips finished/free slots
             }
+            // Each row runs its own k_i bucket: the per-sequence draft
+            // length is a real FLOP saving here, not just masking.
+            // Outputs land in the launch-width (k) layout the
+            // orchestrator indexes; positions k_i..k stay zero and are
+            // never read.
+            let ki = io.klens[i] as usize;
             let caches = std::mem::take(&mut self.draft[i]);
             let out = cx.engine.draft(
-                &cfg.draft_model, cfg.precision, cfg.attn, 1, k,
+                &cfg.draft_model, cfg.precision, cfg.attn, 1, ki,
                 &io.tokens_in[i * 2..i * 2 + 2], &io.n_in[i..=i],
-                &io.dlens[i..=i], &io.uniforms[i * k..(i + 1) * k],
+                &io.dlens[i..=i], &io.uniforms[i * k..i * k + ki],
                 &io.temps[i..=i], &io.tps[i..=i], caches)?;
             self.draft[i] = out.caches;
-            toks[i * k..(i + 1) * k].copy_from_slice(&out.tokens);
-            qd[i * k * vocab..(i + 1) * k * vocab]
+            toks[i * k..i * k + ki].copy_from_slice(&out.tokens);
+            qd[i * k * vocab..(i * k + ki) * vocab]
                 .copy_from_slice(&out.qdists);
         }
         Ok((toks, qd))
@@ -532,13 +571,16 @@ impl Backend for SplitBackend {
             if !io.stepping[i] {
                 continue;
             }
+            // Decode at this row's own q_i = k_i + 1 (the k_i buckets
+            // are exported, so the q_i decode program always exists).
+            let qi = io.qlens[i] as usize;
             let caches = std::mem::take(&mut self.main[i]);
             let out = cx.engine.decode(
-                &cfg.main_model, cfg.precision, cfg.attn, 1, q,
-                &io.vtokens[i * q..(i + 1) * q], &io.mlens[i..=i],
+                &cfg.main_model, cfg.precision, cfg.attn, 1, qi,
+                &io.vtokens[i * q..i * q + qi], &io.mlens[i..=i],
                 caches)?;
             self.main[i] = out.caches;
-            logits[i * q * vocab..(i + 1) * q * vocab]
+            logits[i * q * vocab..(i * q + qi) * vocab]
                 .copy_from_slice(&out.logits);
         }
         Ok(logits)
@@ -659,7 +701,8 @@ impl Backend for StubBackend {
         }
         let b = cx.engine.manifest.bucket_batch_padded(
             n_real, cx.cfg.pad_headroom, capacity)?;
-        commit_bucket(cx.cfg, cx.engine.manifest.prefill_p, rows, b)?;
+        commit_bucket(cx.cfg, cx.engine.manifest.prefill_p, rows, b,
+                      Vec::new())?;
         self.started = true;
         Ok(())
     }
@@ -671,10 +714,12 @@ impl Backend for StubBackend {
         let k = io.k;
         let mut toks = vec![0i32; b * k];
         let mut qd = vec![0f32; b * k * vocab];
-        // Like the fused PAD artifact, every row computes (dead rows'
-        // outputs are simply never read).
+        // Honor the raggedness exactly: each row emits its own k_i
+        // tokens from its own k_i uniforms; launch-width filler
+        // positions stay zero (the host never reads them, matching the
+        // per-row RNG-consumption contract).
         for i in 0..b {
-            for j in 0..k {
+            for j in 0..io.klens[i] as usize {
                 let t = stub_token(io.uniforms[i * k + j], vocab);
                 toks[i * k + j] = t as i32;
                 qd[(i * k + j) * vocab + t] = 1.0;
@@ -690,20 +735,27 @@ impl Backend for StubBackend {
         let q = io.q;
         let mut logits = vec![0f32; b * q * vocab];
         for i in 0..b {
+            // This row's own verify width q_i = k_i + 1; rows without a
+            // slot (qlens 0) emit nothing — their outputs are dead.
+            let qi = io.qlens[i] as usize;
+            if qi == 0 {
+                continue;
+            }
             // Position j predicts the token after stream position j —
-            // which for j < k is draft token d_{j+1}, sitting right
+            // which for j < k_i is draft token d_{j+1}, sitting right
             // there in the verify input. Agreeing with it one-hot makes
             // the accept ratio exactly 1.
-            for j in 0..q - 1 {
+            for j in 0..qi - 1 {
                 let d = (io.vtokens[i * q + 1 + j] as usize)
                     .min(vocab - 1);
                 logits[(i * q + j) * vocab + d] = STUB_LOGIT;
             }
-            // Bonus position: a deterministic non-eos token that moves
-            // with the sequence's cache length, so outputs vary step to
-            // step but never depend on wall-clock or co-batch identity.
+            // Bonus position (q_i - 1, this row's own): a deterministic
+            // non-eos token that moves with the sequence's cache length,
+            // so outputs vary step to step but never depend on
+            // wall-clock or co-batch identity.
             let bonus = 1 + (io.mlens[i] as usize % stub_span(vocab));
-            logits[(i * q + q - 1) * vocab + bonus] = STUB_LOGIT;
+            logits[(i * q + qi - 1) * vocab + bonus] = STUB_LOGIT;
         }
         Ok(logits)
     }
@@ -733,11 +785,12 @@ impl Backend for StubBackend {
     }
 
     fn rebucket(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
-                bucket: usize) -> Result<usize> {
+                bucket: usize, resumes: Vec<Slot>) -> Result<usize> {
         if !self.started {
             bail!("stub batch has not started; nothing to re-bucket");
         }
-        commit_bucket(cx.cfg, cx.engine.manifest.prefill_p, rows, bucket)
+        commit_bucket(cx.cfg, cx.engine.manifest.prefill_p, rows, bucket,
+                      resumes)
     }
 }
 
@@ -757,6 +810,8 @@ mod tests {
             max_new_tokens: 8,
             temperature: 1.0,
             top_p: 1.0,
+            draft_ctrl: Controller::for_policy(
+                &crate::spec::Policy::Heuristic),
         }
     }
 
@@ -890,7 +945,7 @@ mod tests {
         assert_eq!(be.free_slots(&rows), 1);
         assert_eq!(be.admissible_row(&rows).unwrap(), 0);
         // Re-bucket to 4 drops the Husk and pads with Shadows.
-        be.rebucket(&mut cx, &mut rows, 4).unwrap();
+        be.rebucket(&mut cx, &mut rows, 4, Vec::new()).unwrap();
         assert_eq!(rows.len(), 4);
         assert_eq!(
             rows.iter().filter(|r| matches!(r, Row::Seq(_))).count(), 1);
@@ -926,6 +981,7 @@ mod tests {
             tokens_in: &[5, 0],
             n_in: &[1],
             dlens: &[0],
+            klens: &[k as i32],
             uniforms: &uniforms,
             temps: &[0.2],
             tps: &[0.95],
@@ -950,6 +1006,7 @@ mod tests {
             q,
             vtokens: &vtokens,
             mlens: &[7],
+            qlens: &[q as i32],
             stepping: &[true],
         };
         let logits = be.verify(&mut cx, &vio).unwrap();
@@ -963,5 +1020,72 @@ mod tests {
                             0.2, 0.95);
         let bonus = wb.iter().position(|&p| p == 1.0).unwrap();
         assert!(bonus >= 1, "bonus is never the eos byte");
+    }
+
+    #[test]
+    fn stub_honors_ragged_klens_and_qlens() {
+        let eng = Engine::stub();
+        let cfg = SpecConfig { mode: ExecMode::Stub,
+                               ..SpecConfig::default() };
+        let main_info = eng.manifest.model("main").unwrap().clone();
+        let draft_info = eng.manifest.model("draft_a").unwrap().clone();
+        let mut secs = 0.0;
+        let mut flops = FlopCounter::default();
+        let mut cx = ExecCtx {
+            engine: &eng,
+            cfg: &cfg,
+            main_info: &main_info,
+            draft_info: &draft_info,
+            prefill_secs: &mut secs,
+            flops: &mut flops,
+        };
+        let mut be = StubBackend { started: true };
+        let vocab = eng.manifest.vocab;
+        // Two rows at different own draft lengths under a launch k of 4.
+        let k = 4;
+        let uniforms: Vec<f32> =
+            (0..2 * k).map(|i| 0.05 + (i as f32) / 10.0).collect();
+        let io = DraftIo {
+            k,
+            tokens_in: &[5, 0, 6, 0],
+            n_in: &[1, 1],
+            dlens: &[0, 0],
+            klens: &[2, 4],
+            uniforms: &uniforms,
+            temps: &[1.0, 1.0],
+            tps: &[1.0, 1.0],
+            stepping: &[true, true],
+        };
+        let (toks, qd) = be.draft(&mut cx, &io).unwrap();
+        assert!(toks[0] != 0 && toks[1] != 0, "row 0 fills its k_i = 2");
+        assert_eq!(&toks[2..4], &[0, 0],
+                   "row 0 emits nothing past its own k_i");
+        assert!(toks[4..8].iter().all(|&t| t != 0),
+                "row 1 fills its k_i = 4");
+        assert!(qd[2 * vocab..4 * vocab].iter().all(|&p| p == 0.0),
+                "no q-dist mass past row 0's k_i");
+        // Verify: each row's bonus lands at its *own* q_i - 1.
+        let q = k + 1;
+        let mut vtokens = vec![0i32; 2 * q];
+        vtokens[0] = 5;
+        vtokens[1..3].copy_from_slice(&toks[0..2]);
+        vtokens[q] = 6;
+        vtokens[q + 1..q + 1 + k].copy_from_slice(&toks[4..8]);
+        let vio = VerifyIo {
+            q,
+            vtokens: &vtokens,
+            mlens: &[7, 9],
+            qlens: &[3, 5],
+            stepping: &[true, true],
+        };
+        let logits = be.verify(&mut cx, &vio).unwrap();
+        let row0 = &logits[..q * vocab];
+        assert!(row0[2 * vocab..3 * vocab].contains(&STUB_LOGIT),
+                "row 0's bonus sits at its own q_i - 1 = 2");
+        assert!(row0[3 * vocab..].iter().all(|&l| l == 0.0),
+                "row 0 emits nothing past its own q_i");
+        let row1 = &logits[q * vocab..];
+        assert!(row1[4 * vocab..5 * vocab].contains(&STUB_LOGIT),
+                "row 1's bonus sits at the launch q - 1");
     }
 }

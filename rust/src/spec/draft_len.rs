@@ -1,12 +1,35 @@
 //! Draft-length control: the paper's **Algorithm 1** plus the fixed-length
 //! baselines it is ablated against (Table 6).
 //!
-//! Rationale (paper §3.2): grow the draft when at least one sequence
-//! accepted everything last step; shrink it otherwise, faster when the
-//! current draft is long and on consecutive shrinks — but never below the
-//! best acceptance observed in the batch.
+//! Rationale (paper §3.2): grow the draft when the sequence accepted
+//! everything last step; shrink it otherwise, faster when the current
+//! draft is long and on consecutive shrinks — but never below the
+//! acceptance just observed.
+//!
+//! # Per-sequence controllers
+//!
+//! BASS adapts the draft length from *per-sequence* acceptance, so the
+//! unit of control here is one sequence: [`Controller`] is the
+//! clonable per-row state the engine keeps in every slot (and snapshots
+//! into a `SuspendedSeq`, so a preempted sequence resumes at its learned
+//! draft length). Each step the engine asks every live row's controller
+//! for its own `l_i`, buckets it (`manifest.bucket_k`), drafts that row
+//! at `k_i`, and feeds back **only that row's** accepted count — a
+//! sequence's draft-length trajectory is a pure function of its own
+//! acceptance history, never of co-batch composition.
+//!
+//! The batch-wide [`DraftLenPolicy`] trait and its [`Heuristic`] /
+//! [`Fixed`] impls remain as the literal Algorithm-1 reference (observe
+//! the whole batch's accepted counts, one global `l`): benches and
+//! ablations that want the paper's original batch-global variant keep
+//! using it, and [`Controller`] delegates to the same update rule with a
+//! single-row observation.
 
-/// A policy choosing the next step's (uniform-across-batch) draft length.
+use super::config::Policy;
+
+/// A policy choosing a batch-global draft length (the paper's original
+/// Algorithm-1 formulation; the engine itself now runs one
+/// [`Controller`] per sequence).
 pub trait DraftLenPolicy {
     /// Draft length to use for the next speculative step.
     fn current(&self) -> usize;
@@ -53,12 +76,12 @@ impl DraftLenPolicy for Heuristic {
     fn observe(&mut self, accepted: &[usize]) {
         let xmax = accepted.iter().copied().max().unwrap_or(0);
         if xmax == self.l {
-            // At least one sequence accepted the whole draft: grow.
+            // The whole draft was accepted: grow.
             self.l = (self.l + self.l_incre).min(self.l_limit);
             self.s = 0;
         } else {
             // Shrink: faster when long, faster on consecutive shrinks,
-            // but never below the best acceptance (or 1).
+            // but never below the observed acceptance (or 1).
             let dec = self.l.div_ceil(self.l_mod) + self.s;
             let next = self.l as i64 - dec as i64;
             self.l = next.max(1).max(xmax as i64) as usize;
@@ -86,6 +109,46 @@ impl DraftLenPolicy for Fixed {
 
     fn name(&self) -> String {
         format!("fixed({})", self.0)
+    }
+}
+
+/// Per-sequence draft-length state: one Algorithm-1 instance (or a
+/// fixed length) owned by a single sequence, observing **its own**
+/// accepted counts only. Clonable so the engine can snapshot it into a
+/// `SuspendedSeq` and carry it through suspend/resume and live
+/// re-bucketing — a preempted sequence resumes at its learned length.
+#[derive(Debug, Clone)]
+pub enum Controller {
+    Heuristic(Heuristic),
+    Fixed(usize),
+}
+
+impl Controller {
+    /// The controller a fresh admission under `policy` starts with.
+    pub fn for_policy(policy: &Policy) -> Controller {
+        match policy {
+            Policy::Heuristic => {
+                Controller::Heuristic(Heuristic::testbed())
+            }
+            Policy::Fixed(k) => Controller::Fixed(*k),
+        }
+    }
+
+    /// This sequence's draft length for the next step (unbucketized —
+    /// the engine buckets it against the exported draft artifacts).
+    pub fn current(&self) -> usize {
+        match self {
+            Controller::Heuristic(h) => h.current(),
+            Controller::Fixed(k) => *k,
+        }
+    }
+
+    /// Feed back this sequence's own accepted count from the last step
+    /// (Algorithm 1 with a single-row observation).
+    pub fn observe(&mut self, accepted: usize) {
+        if let Controller::Heuristic(h) = self {
+            h.observe(&[accepted]);
+        }
     }
 }
 
@@ -177,5 +240,61 @@ mod tests {
         f.observe(&[6, 6]);
         f.observe(&[0]);
         assert_eq!(f.current(), 6);
+    }
+
+    // -- per-sequence controllers -----------------------------------------
+
+    #[test]
+    fn controller_tracks_policy() {
+        let mut c = Controller::for_policy(&Policy::Fixed(5));
+        c.observe(5);
+        c.observe(0);
+        assert_eq!(c.current(), 5, "fixed controller never moves");
+        let h = Controller::for_policy(&Policy::Heuristic);
+        assert_eq!(h.current(), Heuristic::testbed().current());
+    }
+
+    #[test]
+    fn controller_matches_single_row_heuristic() {
+        // A Controller IS Algorithm 1 observing one row: feeding the
+        // same per-step accepted counts to both must trace identically.
+        let mut c = Controller::for_policy(&Policy::Heuristic);
+        let mut h = Heuristic::testbed();
+        for acc in [0usize, 3, 7, 9, 11, 0, 0, 2, 16, 16, 1] {
+            let a = acc.min(c.current());
+            c.observe(a);
+            h.observe(&[a]);
+            assert_eq!(c.current(), h.current());
+        }
+    }
+
+    #[test]
+    fn controllers_are_independent_across_sequences() {
+        // Two sequences with different acceptance regimes diverge — the
+        // whole point of going per-row: a cold row shrinks while a hot
+        // one grows, regardless of co-batching.
+        let mut hot = Controller::for_policy(&Policy::Heuristic);
+        let mut cold = Controller::for_policy(&Policy::Heuristic);
+        for _ in 0..6 {
+            let l = hot.current();
+            hot.observe(l); // always full accept
+            cold.observe(0); // never accepts
+        }
+        assert_eq!(hot.current(), 16, "hot row grows to the limit");
+        assert_eq!(cold.current(), 1, "cold row shrinks to 1");
+    }
+
+    #[test]
+    fn controller_clone_preserves_learned_state() {
+        // The suspend/resume carry: a cloned controller resumes exactly
+        // where the original stood (same l, same shrink streak).
+        let mut c = Controller::for_policy(&Policy::Heuristic);
+        c.observe(0);
+        c.observe(0);
+        let mut snap = c.clone();
+        assert_eq!(snap.current(), c.current());
+        c.observe(1);
+        snap.observe(1);
+        assert_eq!(snap.current(), c.current(), "same trajectory after");
     }
 }

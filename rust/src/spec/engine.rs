@@ -1,8 +1,9 @@
 //! The BASS speculative decoding loop (paper §3) as a **mode-agnostic
 //! batch orchestrator**: [`SpecBatch`] owns the host-side row table,
-//! per-slot sequence state, RNG streams and the draft-length policy, and
-//! drives an exec [`Backend`](super::backend::Backend) (BASS-PAD fused
-//! bucket / BASS-SPLIT per-slot artifacts) through the contract in
+//! per-slot sequence state, RNG streams and one per-sequence
+//! draft-length controller per slot, and drives an exec
+//! [`Backend`](super::backend::Backend) (BASS-PAD fused bucket /
+//! BASS-SPLIT per-slot artifacts) through the contract in
 //! [`super::backend`]. Nothing here matches on the execution mode.
 //!
 //! The coordinator drives five operations at step boundaries:
@@ -20,13 +21,17 @@
 //!   currently-active slots:
 //!
 //!   ```text
-//!     k  = bucket(policy.current())
-//!     draft : d_1..d_k per sequence  (one fused draft artifact call)
-//!     verify: main decode over [pending, d_1..d_k]  (Q = k+1)
+//!     per row i: k_i = bucket(controller_i.current())  (own history)
+//!     k = max_i k_i                   (fused PAD launch width)
+//!     draft : d_1..d_{k_i} per sequence  (PAD: one fused call at k,
+//!             rows masked via klens; SPLIT: each row at its own k_i
+//!             bucket — the short rows' FLOPs are really saved)
+//!     verify: main decode over [pending, d_1..d_{k_i}]
+//!             (PAD: Q = k+1; SPLIT: Q_i = k_i+1)
 //!     per sequence: stochastic accept/reject (sampling.rs) -> a_i accepted,
 //!       corrected/bonus next token; cache lengths advance by 1 + a_i
 //!       (raggedly!), draft rolls back to its accepted prefix
-//!     policy.observe(a_1..a_b)   (Algorithm 1)
+//!     controller_i.observe(a_i)   (Algorithm 1, per-sequence)
 //!   ```
 //!
 //! * [`SpecBatch::retire`] — take a sequence's final state out of the
@@ -52,10 +57,13 @@
 //!   carried row rides the same bitwise recompute primitive as resume —
 //!   one fused prefill at the new bucket re-encodes each row's
 //!   `prompt ‖ generated` — while SeqIds, RNG stream positions, sampling
-//!   params, the batch clock and the draft-length policy all carry over,
-//!   so outputs are byte-identical under [`Policy::Fixed`] and **no
-//!   artifact rebuild or manifest bump is needed** (the per-bucket
-//!   `prefill` programs in the v3 grid already cover every target).
+//!   params, the batch clock and each row's draft-length controller all
+//!   carry over, so outputs are byte-identical under [`Policy::Fixed`]
+//!   and **no artifact rebuild or manifest bump is needed** (the
+//!   per-bucket `prefill` programs in the v3 grid already cover every
+//!   target). Suspended sequences can ride the same fused prefill
+//!   ([`SpecBatch::rebucket_resume`]) instead of paying one scatter
+//!   prefill each after the move.
 //!   Cost model: one fused prefill at the new bucket `b'` (≈ `b'`
 //!   row-prefills over `prefill_p`) buys rows *now* for queued work that
 //!   would otherwise wait unboundedly for a retirement or the drain
@@ -64,15 +72,22 @@
 //!   re-bucket, so the new bucket keeps the same grow-room policy.
 //!
 //! Each admitted sequence gets its own pair of PCG32 streams keyed by a
-//! monotonically increasing admission counter, so given the same per-step
-//! draft lengths a sequence's output is a function of (prompt, seed,
-//! admission index) only — *not* of what else is or was in the batch.
-//! Draft lengths are exactly reproducible under [`Policy::Fixed`]; under
-//! the adaptive heuristic they are batch-global Algorithm-1 state fed by
-//! every co-batched sequence (by design). That is what makes stepwise
-//! driving with mid-flight admission, preemption and live re-bucketing
-//! reproduce one-shot [`super::SpecEngine::generate`] byte-for-byte
-//! (`rust/tests/step_equivalence.rs`, and under randomized
+//! monotonically increasing admission counter, and **consumes exactly
+//! `k_i` uniforms per step** — `k_i` being its own controller's
+//! bucketized draft length, itself a pure function of the sequence's
+//! own acceptance history. Launch-width filler positions (`k_i..k` in a
+//! fused PAD call) are zero-filled, *not* drawn from any stream: the
+//! in-graph draft sampling is autoregressive per row, so a row's first
+//! `k_i` positions never read them, and the host never reads tokens
+//! past `k_i`. A sequence's output is therefore a function of (prompt,
+//! seed, admission index) only — *not* of what else is or was in the
+//! batch — under [`Policy::Fixed`] **and** under the adaptive
+//! heuristic (per-sequence controllers made the adaptive policy
+//! co-batch-independent for the first time). That is what makes
+//! stepwise driving with mid-flight admission, preemption and live
+//! re-bucketing reproduce one-shot [`super::SpecEngine::generate`]
+//! byte-for-byte (`rust/tests/step_equivalence.rs`, including its
+//! `heuristic_cobatch_equals_solo` pins, and under randomized
 //! admit/step/suspend/resume/re-bucket/retire schedules,
 //! `rust/tests/admission_interleaving.rs`).
 
@@ -84,12 +99,12 @@ use crate::flops::FlopCounter;
 use crate::kv::SeqState;
 use crate::runtime::{Engine, ModelInfo};
 use crate::sampling::{logp_of, spec_accept, warp_top_p, Pcg32};
-use crate::spec::draft_len::{DraftLenPolicy, Fixed, Heuristic};
+use crate::spec::draft_len::Controller;
 
 use super::backend::{self, Backend, DraftIo, ExecCtx, VerifyIo};
-use super::config::{Policy, SpecConfig};
-use super::seq::{live_row_states, AdmitOpts, Row, SeqEvent, SeqId, Slot,
-                 StepReport, SuspendedSeq};
+use super::config::SpecConfig;
+use super::seq::{AdmitOpts, Row, SeqEvent, SeqId, Slot, StepReport,
+                 SuspendedSeq};
 
 /// One executed live re-bucket (see [`SpecBatch::rebucket`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,7 +126,6 @@ pub struct SpecBatch<'a> {
     capacity: usize,
     rows: Vec<Row>,
     backend: Box<dyn Backend>,
-    policy: Box<dyn DraftLenPolicy>,
     /// Admission counter; doubles as the SeqId and the PCG32 stream index.
     next_stream: u64,
     t0: Option<Instant>,
@@ -141,7 +155,6 @@ impl<'a> SpecBatch<'a> {
         let main_info = engine.manifest.model(&cfg.main_model)?.clone();
         let draft_info = engine.manifest.model(&cfg.draft_model)?.clone();
         let s_max = main_info.s_max as i32;
-        let policy = fresh_policy(&cfg);
         let backend = backend::make(&cfg, capacity);
         Ok(SpecBatch {
             engine,
@@ -149,7 +162,6 @@ impl<'a> SpecBatch<'a> {
             capacity,
             rows: (0..capacity).map(|_| Row::Free).collect(),
             backend,
-            policy,
             next_stream: 0,
             t0: None,
             main_info,
@@ -303,6 +315,7 @@ impl<'a> SpecBatch<'a> {
                 .unwrap_or(self.cfg.max_new_tokens),
             temperature: opts.temperature.unwrap_or(self.cfg.temperature),
             top_p: opts.top_p.unwrap_or(self.cfg.top_p),
+            draft_ctrl: Controller::for_policy(&self.cfg.policy),
         }
     }
 
@@ -336,13 +349,26 @@ impl<'a> SpecBatch<'a> {
         let b = self.rows.len();
         let t0 = self.t0.expect("clock started");
         let now = |t: Instant| t.elapsed().as_secs_f64();
-        let k = man.bucket_k(&self.cfg.draft_model, self.policy.current());
         let (def_temp, def_tp) = (self.cfg.temperature, self.cfg.top_p);
+
+        // Per-row draft lengths: every slot-holding row runs at its own
+        // controller's bucketized k_i; the fused launch width is their
+        // max. Free/Husk rows carry k_i = 0 — their outputs are never
+        // read, the artifact just needs valid inputs per row.
+        let mut k_rows = vec![0usize; b];
+        for (i, row) in self.rows.iter().enumerate() {
+            if let Row::Seq(slot) | Row::Shadow(slot) = row {
+                k_rows[i] = man.bucket_k(&self.cfg.draft_model,
+                                         slot.draft_ctrl.current());
+            }
+        }
+        let k = k_rows.iter().copied().max().unwrap_or(0).max(1);
 
         // -- draft ---------------------------------------------------------
         let mut tokens_in = vec![0i32; b * 2];
         let mut n_in = vec![1i32; b];
         let mut dlens = vec![0i32; b];
+        let mut klens = vec![0i32; b];
         let mut uniforms = vec![0f32; b * k];
         // Per-row sampling params for the fused draft call. Free and Husk
         // rows carry the batch defaults — their outputs are never read, the
@@ -356,12 +382,18 @@ impl<'a> SpecBatch<'a> {
                 n_in[i] = s.n_pending_draft;
                 dlens[i] = s.draft_len;
             }
-            // Every slot-holding row consumes its draft stream each step
-            // (finished-but-unretired included), so a sequence's randomness
-            // depends only on its own step count — never on co-batch
-            // composition.
+            // RNG contract: every slot-holding row (finished-but-unretired
+            // included) consumes **exactly k_i** uniforms from its own
+            // draft stream each step — a function of its own acceptance
+            // history only, never of co-batch composition. Launch-width
+            // filler positions (k_i..k) stay zero and are NOT drawn from
+            // the stream: in-graph draft sampling is autoregressive per
+            // row, so position j reads only that row's uniforms < j, and
+            // the filler feeds tokens the host never reads back.
             if let Row::Seq(slot) | Row::Shadow(slot) = row {
-                for j in 0..k {
+                let ki = k_rows[i];
+                klens[i] = ki as i32;
+                for j in 0..ki {
                     uniforms[i * k + j] = slot.rng_draft.next_f32();
                 }
                 temps[i] = slot.temperature;
@@ -381,6 +413,7 @@ impl<'a> SpecBatch<'a> {
             tokens_in: &tokens_in,
             n_in: &n_in,
             dlens: &dlens,
+            klens: &klens,
             uniforms: &uniforms,
             temps: &temps,
             tps: &tps,
@@ -391,29 +424,37 @@ impl<'a> SpecBatch<'a> {
             be.draft(&mut cx, &io)?
         };
         self.draft_secs += now(td);
-        // FLOP/throughput accounting charges *live* rows only. The fused
-        // PAD artifact still computes Husk (retired) and Shadow (padding)
-        // rows, but that is overhead, not served work — counting it
-        // inflated PAD throughput/utilization numbers. (Both context
-        // averages are taken here: lengths do not move between the draft
-        // and verify calls.)
-        let (n_compute, ctx_d, ctx_m) = {
-            let live = live_row_states(&self.rows);
-            let denom = live.len().max(1);
-            (
-                live.len(),
-                live.iter().map(|s| s.draft_len as usize).sum::<usize>()
-                    / denom,
-                live.iter().map(|s| s.main_len as usize).sum::<usize>()
-                    / denom,
-            )
-        };
-        self.flops.add_step(&self.draft_info, n_compute, k + 1, ctx_d);
+        // FLOP/throughput accounting charges *live* rows only, each at
+        // its own k_i and its own exact context length — no per-step
+        // batch averaging (the old integer mean both truncated and
+        // smeared context across rows), and no k_max smearing (a row
+        // drafting 2 is charged 2+1 tokens, not k_max+1). The fused PAD
+        // artifact still computes Husk (retired) and Shadow (padding)
+        // rows, but that is overhead, not served work. (Context lengths
+        // are read here, before accept moves them: they do not change
+        // between the draft and verify calls.)
+        let live_kc: Vec<(usize, usize, usize)> = self
+            .rows
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| match r {
+                Row::Seq(s) if s.state.active() => Some((
+                    k_rows[i],
+                    s.state.draft_len as usize,
+                    s.state.main_len as usize,
+                )),
+                _ => None,
+            })
+            .collect();
+        for &(ki, ctx_d, _) in &live_kc {
+            self.flops.add_step(&self.draft_info, 1, ki + 1, ctx_d);
+        }
 
         // -- verify --------------------------------------------------------
         let q = k + 1;
         let mut vtokens = vec![0i32; b * q];
         let mut mlens = vec![0i32; b];
+        let mut qlens = vec![0i32; b];
         for (i, row) in self.rows.iter().enumerate() {
             if let Some(s) = row.state() {
                 vtokens[i * q] = s.pending_main as i32;
@@ -422,12 +463,16 @@ impl<'a> SpecBatch<'a> {
                 }
                 mlens[i] = s.main_len;
             }
+            if matches!(row, Row::Seq(_) | Row::Shadow(_)) {
+                qlens[i] = k_rows[i] as i32 + 1;
+            }
         }
         let tv = Instant::now();
         let vio = VerifyIo {
             q,
             vtokens: &vtokens,
             mlens: &mlens,
+            qlens: &qlens,
             stepping: &stepping,
         };
         let logits = {
@@ -435,7 +480,9 @@ impl<'a> SpecBatch<'a> {
             be.verify(&mut cx, &vio)?
         };
         self.verify_secs += now(tv);
-        self.flops.add_step(&self.main_info, n_compute, q, ctx_m);
+        for &(ki, _, ctx_m) in &live_kc {
+            self.flops.add_step(&self.main_info, 1, ki + 1, ctx_m);
+        }
 
         // -- accept/reject per sequence (host) -----------------------------
         let mut events = Vec::new();
@@ -453,9 +500,12 @@ impl<'a> SpecBatch<'a> {
             if !slot.state.active() {
                 continue;
             }
-            // Warp main distributions for positions 0..=k with this
+            // This row's own draft length: only positions 0..k_i (and
+            // the bonus at k_i) of the launch-width buffers are real.
+            let ki = k_rows[i];
+            // Warp main distributions for positions 0..=k_i with this
             // slot's own sampling params (per-request, not batch-wide).
-            let warped: Vec<Vec<f32>> = (0..q)
+            let warped: Vec<Vec<f32>> = (0..=ki)
                 .map(|j| {
                     let r = &logits[(i * q + j) * vocab
                                     ..(i * q + j + 1) * vocab];
@@ -464,10 +514,10 @@ impl<'a> SpecBatch<'a> {
                 .collect();
             let p_refs: Vec<&[f32]> =
                 warped.iter().map(|w| w.as_slice()).collect();
-            let d_tokens: Vec<usize> = (0..k)
+            let d_tokens: Vec<usize> = (0..ki)
                 .map(|j| draft_tokens[i * k + j] as usize)
                 .collect();
-            let q_refs: Vec<&[f32]> = (0..k)
+            let q_refs: Vec<&[f32]> = (0..ki)
                 .map(|j| &qdists[(i * k + j) * vocab
                                  ..(i * k + j + 1) * vocab])
                 .collect();
@@ -486,17 +536,25 @@ impl<'a> SpecBatch<'a> {
             let n_in_used = slot.state.n_pending_draft;
             let gen_before = slot.state.generated.len();
             let emitted = slot.state.apply_step(
-                &acc_bytes, out.next_token as u8, out.bonus, k, n_in_used,
+                &acc_bytes, out.next_token as u8, out.bonus, ki, n_in_used,
                 logp);
             if real {
-                drafted_add += k;
+                drafted_add += ki;
                 accepted_add += out.accepted;
                 accepted_counts.push(out.accepted);
             }
+            // Algorithm 1, per sequence: the controller sees only this
+            // row's accepted count (Shadow rows too — they must trace
+            // the same trajectory as the real run they mirror).
+            slot.draft_ctrl.observe(out.accepted);
+            // Guard the cache limit against *next* step's draft length —
+            // the controller may have just grown it.
+            let k_next = man.bucket_k(&self.cfg.draft_model,
+                                      slot.draft_ctrl.current());
             let t_now = now(t0);
             slot.state.check_eos(man.eos, emitted, t_now);
             slot.state.check_limits(slot.max_new_tokens, s_max,
-                                    (k + 2) as i32, t_now);
+                                    (k_next + 2) as i32, t_now);
             debug_assert!(slot.state.check_invariants(s_max).is_ok());
             if real {
                 let done = !slot.state.active();
@@ -506,6 +564,7 @@ impl<'a> SpecBatch<'a> {
                 let cut = gen_before.min(slot.state.generated.len());
                 events.push(SeqEvent {
                     id: slot.id,
+                    draft_len: ki,
                     accepted: out.accepted,
                     new_bytes: slot.state.generated[cut..].to_vec(),
                     done,
@@ -517,8 +576,7 @@ impl<'a> SpecBatch<'a> {
         self.steps += 1;
         self.drafted += drafted_add;
         self.accepted += accepted_add;
-        self.step_log.push((k, accepted_counts.clone()));
-        self.policy.observe(&accepted_counts);
+        self.step_log.push((k, accepted_counts));
         Ok(StepReport {
             step,
             k,
@@ -552,16 +610,16 @@ impl<'a> SpecBatch<'a> {
     /// the backend leaves its placeholder (SPLIT: Free; running PAD: a
     /// Husk so the fused artifact keeps valid dlens/mlens inputs).
     /// Draining the last real sequence resets the batch — fresh clock,
-    /// fresh draft-length policy, device state dropped — so a request
-    /// hitting an idle server behaves identically in both modes
-    /// regardless of earlier traffic.
+    /// device state dropped (draft-length state needs no reset: each
+    /// controller lives and dies with its slot) — so a request hitting
+    /// an idle server behaves identically in both modes regardless of
+    /// earlier traffic.
     fn release_row(&mut self, idx: usize) -> Slot {
         let slot = self.backend.release(&mut self.rows, idx);
         if self.occupied() == 0 {
             self.backend.reset();
             self.rows = (0..self.capacity).map(|_| Row::Free).collect();
             self.t0 = None;
-            self.policy = fresh_policy(&self.cfg);
         }
         slot
     }
@@ -660,6 +718,19 @@ impl<'a> SpecBatch<'a> {
     /// [`SpecBatch::rebucket`] trusts, so a scheduler probing it cannot
     /// drift from what the batch will actually do.
     pub fn rebucket_target(&self, desired_rows: usize) -> Option<usize> {
+        self.rebucket_target_with(desired_rows, 0)
+    }
+
+    /// [`SpecBatch::rebucket_target`] with `resume_rows` suspended
+    /// sequences that would ride the same fused prefill
+    /// ([`SpecBatch::rebucket_resume`]): the target bucket must hold
+    /// the occupied rows *plus* the resumes. `None` keeps the same
+    /// meaning — and when the resolved bucket equals the current one,
+    /// the current bucket by construction has at least `resume_rows`
+    /// reusable rows, so the caller can always fall back to plain
+    /// per-row scatter resumes.
+    pub fn rebucket_target_with(&self, desired_rows: usize,
+                                resume_rows: usize) -> Option<usize> {
         let cur = self.backend.live_bucket(&self.rows)?;
         let occupied = self.occupied();
         if occupied == 0 {
@@ -677,9 +748,10 @@ impl<'a> SpecBatch<'a> {
         if !movable {
             return None;
         }
+        let floor = occupied + resume_rows;
         let largest = self.engine.manifest.largest_batch();
-        let ceil = largest.min(self.capacity).max(occupied);
-        let want = desired_rows.clamp(occupied, ceil);
+        let ceil = largest.min(self.capacity).max(floor);
+        let want = desired_rows.clamp(floor, ceil);
         let b = self
             .engine
             .manifest
@@ -712,16 +784,59 @@ impl<'a> SpecBatch<'a> {
         let from = self.rows.len();
         let migrated = {
             let (be, mut cx, rows) = self.backend_cx();
-            be.rebucket(&mut cx, rows, bucket)?
+            be.rebucket(&mut cx, rows, bucket, Vec::new())?
         };
         Ok(Some(Rebucket { from, to: bucket, migrated }))
     }
-}
 
-fn fresh_policy(cfg: &SpecConfig) -> Box<dyn DraftLenPolicy> {
-    match cfg.policy {
-        Policy::Heuristic => Box::new(Heuristic::testbed()),
-        Policy::Fixed(k) => Box::new(Fixed(k)),
+    /// [`SpecBatch::rebucket`] with suspended sequences folded into the
+    /// same fused prefill. A re-bucket re-encodes every carried row's
+    /// context in one launch anyway, so resuming *through* it encodes
+    /// the resumed contexts in that same call instead of paying one
+    /// scatter prefill per resume afterwards (the PR-5 double-prefill
+    /// debt). Returns the re-bucket report plus the **new** [`SeqId`]s
+    /// in input order. Call only after
+    /// [`SpecBatch::rebucket_target_with`] returned a bucket — like
+    /// [`SpecBatch::resume`] the snapshots are consumed, so on `Err`
+    /// the owning requests must be failed loudly. The previous bucket
+    /// itself survives a device failure (old caches are replaced only
+    /// after the new fused prefill succeeds).
+    pub fn rebucket_resume(&mut self, desired_rows: usize,
+                           resumes: Vec<SuspendedSeq>)
+                           -> Result<(Rebucket, Vec<SeqId>)> {
+        let p_cap = self.engine.manifest.prefill_p;
+        for s in &resumes {
+            let ctx = s.context_len();
+            if ctx == 0 {
+                bail!("suspended sequence has an empty context");
+            }
+            if ctx > p_cap {
+                bail!("suspended context ({ctx} bytes) exceeds the \
+                       prefill capacity ({p_cap})");
+            }
+        }
+        let Some(bucket) =
+            self.rebucket_target_with(desired_rows, resumes.len())
+        else {
+            bail!("no re-bucket target covering {} resumes (probe \
+                   rebucket_target_with first; scatter resumes still \
+                   work)", resumes.len());
+        };
+        let slots: Vec<Slot> = resumes
+            .into_iter()
+            .map(|s| {
+                let id = self.next_stream;
+                self.next_stream += 1;
+                s.into_slot(id)
+            })
+            .collect();
+        let ids: Vec<SeqId> = slots.iter().map(|s| s.id).collect();
+        let from = self.rows.len();
+        let migrated = {
+            let (be, mut cx, rows) = self.backend_cx();
+            be.rebucket(&mut cx, rows, bucket, slots)?
+        };
+        Ok((Rebucket { from, to: bucket, migrated }, ids))
     }
 }
 
@@ -740,7 +855,7 @@ mod tests {
 
     #[test]
     fn stub_batch_runs_the_full_spec_loop_deterministically() {
-        use crate::spec::ExecMode;
+        use crate::spec::{ExecMode, Policy};
         let eng = Engine::stub();
         let cfg = SpecConfig {
             mode: ExecMode::Stub,
@@ -774,5 +889,109 @@ mod tests {
         assert_ne!(ga, gb, "per-sequence RNG streams differ");
         let again = run();
         assert_eq!(again, (steps, ga, gb), "bit-deterministic replay");
+    }
+
+    /// The integer-truncation regression: the old accounting charged
+    /// each fused step at the batch's *integer-mean* context
+    /// (`ctx = (Σ ctx_i) / b`), so a [1, 2]-byte-prompt batch was
+    /// billed attention at ctx 1 — identical to a [1, 1] batch — and
+    /// the bias compounded every step. Per-row charging makes
+    /// co-batched FLOPs exactly the sum of the solo runs (the stub
+    /// backend charges no prefill, so step charges are the whole
+    /// total, and charges depend on context lengths, not token
+    /// values).
+    #[test]
+    fn per_row_flop_charging_has_no_truncation_bias() {
+        use crate::spec::{ExecMode, Policy};
+        let eng = Engine::stub();
+        let cfg = SpecConfig {
+            mode: ExecMode::Stub,
+            policy: Policy::Fixed(4),
+            max_new_tokens: 13,
+            ..SpecConfig::default()
+        };
+        let total = |prompts: &[&[u8]]| -> f64 {
+            let mut batch = SpecBatch::new(&eng, cfg.clone(), 4).unwrap();
+            let ids: Vec<_> = prompts
+                .iter()
+                .map(|p| batch.admit(p, 7).unwrap())
+                .collect();
+            let mut steps = 0usize;
+            while batch.has_active() {
+                batch.step().unwrap();
+                steps += 1;
+                assert!(steps < 64, "stub batch failed to converge");
+            }
+            for id in ids {
+                batch.retire(id).unwrap();
+            }
+            batch.flops.total
+        };
+        let solo_short = total(&[b"a"]);
+        let solo_long = total(&[b"bc"]);
+        let co = total(&[b"a", b"bc"]);
+        assert!(solo_long > solo_short, "longer context bills more");
+        let sum = solo_short + solo_long;
+        assert!((co - sum).abs() <= 1e-9 * co,
+                "co-batched FLOPs {co} != solo sum {sum}");
+        // And the headline bias: [1,2]-length contexts must out-bill
+        // [1,1] — under the truncated mean both charged ctx 1.
+        let co_same = total(&[b"a", b"b"]);
+        assert!(co > co_same,
+                "[1,2]-ctx batch ({co}) must out-bill [1,1] ({co_same})");
+    }
+
+    /// The resume-fold path on the host-only stub: a suspended sequence
+    /// rides [`SpecBatch::rebucket_resume`] into a grow's single
+    /// re-shape (keeping its snapshotted RNG streams and budget) and
+    /// both sequences finish byte-identical to an uninterrupted run.
+    /// `step_equivalence.rs` pins the device modes bitwise; this keeps
+    /// the fold covered when `artifacts/` is absent (CI's default).
+    #[test]
+    fn stub_rebucket_resume_folds_rider_deterministically() {
+        use crate::spec::{ExecMode, Policy};
+        let eng = Engine::stub();
+        let cfg = SpecConfig {
+            mode: ExecMode::Stub,
+            policy: Policy::Fixed(4),
+            max_new_tokens: 13,
+            ..SpecConfig::default()
+        };
+        // Reference: both sequences co-resident, uninterrupted.
+        let mut refb = SpecBatch::new(&eng, cfg.clone(), 4).unwrap();
+        let a = refb.admit(b"hello", 7).unwrap();
+        let b = refb.admit(b"world!", 7).unwrap();
+        while refb.has_active() {
+            refb.step().unwrap();
+        }
+        let want_a = refb.retire(a).unwrap().generated;
+        let want_b = refb.retire(b).unwrap().generated;
+
+        // Interrupted: suspend the rider after one step, run on, then
+        // fold it back through a grow's fused re-shape.
+        let mut batch = SpecBatch::new(&eng, cfg.clone(), 4).unwrap();
+        let a = batch.admit(b"hello", 7).unwrap();
+        let b = batch.admit(b"world!", 7).unwrap();
+        batch.step().unwrap();
+        let snap = batch.suspend(b).unwrap();
+        batch.step().unwrap();
+        assert!(batch.has_active(), "carried row must still be live");
+        assert!(batch.rebucket_target_with(3, 1).is_some(),
+                "a larger bucket must exist for the fold");
+        let (r, ids) = batch.rebucket_resume(3, vec![snap]).unwrap();
+        assert!(r.to >= 3, "bucket must cover the demand (got {})", r.to);
+        assert_eq!(r.migrated, 2, "carried + folded rows re-encode");
+        let b = ids[0];
+        let mut steps = 0usize;
+        while batch.has_active() {
+            batch.step().unwrap();
+            steps += 1;
+            assert!(steps < 64, "folded stub batch failed to converge");
+        }
+        assert_eq!(batch.retire(a).unwrap().generated, want_a,
+                   "carried bytes diverge from the uninterrupted run");
+        assert_eq!(batch.retire(b).unwrap().generated, want_b,
+                   "folded-rider bytes diverge from the uninterrupted \
+                    run");
     }
 }

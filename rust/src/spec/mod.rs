@@ -14,7 +14,9 @@
 //!   and implement admission binding, the lazy start, step execution,
 //!   row release and — PAD only — live re-bucketing. No code outside
 //!   the backend implementations branches on [`ExecMode`].
-//! * [`draft_len`] — Algorithm 1 and fixed-length baselines.
+//! * [`draft_len`] — Algorithm 1 and fixed-length baselines; the
+//!   engine runs one per-sequence [`Controller`] per slot (adaptive γ
+//!   per row), so draft lengths track each sequence's own acceptance.
 //! * `engine` — the mode-free batch orchestrator: the resumable
 //!   [`SpecBatch`] step API (admit / step / retire, suspend / resume by
 //!   recompute, and [`SpecBatch::rebucket`] — grow or shrink a running
@@ -31,7 +33,7 @@ mod oneshot;
 mod seq;
 
 pub use config::{ExecMode, Policy, SpecConfig};
-pub use draft_len::{DraftLenPolicy, Fixed, Heuristic};
+pub use draft_len::{Controller, DraftLenPolicy, Fixed, Heuristic};
 pub use engine::{Rebucket, SpecBatch};
 pub use oneshot::{SpecEngine, SpecResult};
 pub use seq::{AdmitOpts, SeqEvent, SeqId, StepReport, SuspendedSeq};

@@ -21,6 +21,7 @@ use crate::kv::{FinishReason, SeqState};
 use crate::sampling::Pcg32;
 
 use super::config::SpecConfig;
+use super::draft_len::Controller;
 
 /// Identity of one admitted sequence (the admission counter; unique for
 /// the lifetime of a [`super::SpecBatch`], never reused across slot
@@ -31,7 +32,10 @@ pub type SeqId = u64;
 #[derive(Debug, Clone)]
 pub struct SeqEvent {
     pub id: SeqId,
-    /// Draft tokens accepted this step (0..=k).
+    /// Draft length this sequence ran at this step (its own bucketized
+    /// `k_i` — per-row, not the batch launch width).
+    pub draft_len: usize,
+    /// Draft tokens accepted this step (0..=draft_len).
     pub accepted: usize,
     /// Bytes appended to the sequence this step, post-EOS truncation.
     pub new_bytes: Vec<u8>,
@@ -45,7 +49,9 @@ pub struct SeqEvent {
 pub struct StepReport {
     /// 0-based index of the step just executed.
     pub step: usize,
-    /// Draft length used (bucketized).
+    /// Launch draft length (bucketized `max_i k_i` over the stepping
+    /// rows — what the fused PAD artifact ran at; each row's own length
+    /// is in its [`SeqEvent::draft_len`]).
     pub k: usize,
     /// Per-sequence events, in slot order (live sequences only).
     pub events: Vec<SeqEvent>,
@@ -107,6 +113,11 @@ pub(crate) struct Slot {
     /// call and the host-side verify warp.
     pub(crate) temperature: f32,
     pub(crate) top_p: f32,
+    /// This sequence's own draft-length state (Algorithm 1 per row):
+    /// observes only this row's accepted counts, so the sequence's
+    /// draft-length trajectory — and therefore its RNG consumption —
+    /// is independent of co-batch composition.
+    pub(crate) draft_ctrl: Controller,
 }
 
 /// A batch row (see the module docs for the `Shadow`/`Husk` lifecycle).
@@ -135,6 +146,9 @@ impl Row {
 /// sequences only. Husk (released) and Shadow (padding) rows still ride
 /// the fused PAD artifact, but they serve no request — FLOP and token
 /// accounting must not charge them (`flops_count_live_rows_only`).
+/// Test-only since the engine went per-row: step accounting now walks
+/// each live row's own (k_i, context) instead of aggregating.
+#[cfg(test)]
 pub(crate) fn live_row_states(rows: &[Row]) -> Vec<&SeqState> {
     rows.iter()
         .filter_map(|r| match r {
@@ -164,6 +178,9 @@ pub struct SuspendedSeq {
     max_new_tokens: usize,
     temperature: f32,
     top_p: f32,
+    /// Learned draft-length state: carried through suspend/resume so a
+    /// preempted sequence resumes at its adapted length, not at `l0`.
+    draft_ctrl: Controller,
 }
 
 impl SuspendedSeq {
@@ -188,6 +205,7 @@ impl SuspendedSeq {
                 .unwrap_or(cfg.max_new_tokens),
             temperature: opts.temperature.unwrap_or(cfg.temperature),
             top_p: opts.top_p.unwrap_or(cfg.top_p),
+            draft_ctrl: Controller::for_policy(&cfg.policy),
         }
     }
 
@@ -203,6 +221,7 @@ impl SuspendedSeq {
             max_new_tokens: slot.max_new_tokens,
             temperature: slot.temperature,
             top_p: slot.top_p,
+            draft_ctrl: slot.draft_ctrl,
         }
     }
 
@@ -221,6 +240,7 @@ impl SuspendedSeq {
             max_new_tokens: self.max_new_tokens,
             temperature: self.temperature,
             top_p: self.top_p,
+            draft_ctrl: self.draft_ctrl,
         }
     }
 
@@ -259,6 +279,8 @@ mod tests {
             max_new_tokens: 8,
             temperature: 1.0,
             top_p: 1.0,
+            draft_ctrl: Controller::for_policy(
+                &crate::spec::Policy::Heuristic),
         }
     }
 
@@ -351,6 +373,11 @@ mod tests {
         s.state.logp_sum = -1.5;
         s.rng_draft.next_f32(); // advance the streams off their start
         s.rng_accept.next_f32();
+        s.draft_ctrl.observe(0); // learn: shrink off the l0 start
+        s.draft_ctrl.observe(0);
+        let learned = s.draft_ctrl.current();
+        assert_ne!(learned, Controller::for_policy(
+            &crate::spec::Policy::Heuristic).current());
         let mut rng_d = s.rng_draft.clone();
         let mut rng_a = s.rng_accept.clone();
         let mut back = SuspendedSeq::from_slot(s).into_slot(9);
@@ -362,6 +389,8 @@ mod tests {
         assert_eq!(back.max_new_tokens, 8);
         assert_eq!(back.rng_draft.next_u32(), rng_d.next_u32());
         assert_eq!(back.rng_accept.next_u32(), rng_a.next_u32());
+        assert_eq!(back.draft_ctrl.current(), learned,
+                   "resumes at the learned draft length, not l0");
     }
 
     #[test]

@@ -11,11 +11,16 @@
 //! row-lifecycle edges (scatter-prefill into Husk vs Shadow rows, drain
 //! auto-reset, delayed retirement, fan-out streams, suspension husks,
 //! resumes into running buckets *and* into fresh ones) are all crossed
-//! many times. `Policy::Fixed` keeps per-step draft lengths
-//! batch-independent and each admission pins its RNG stream, so a
-//! sequence's output is a pure function of (prompt, seed, stream,
-//! sampling params, budget) — the invariant that makes continuous
-//! batching *and preemptive scheduling* invisible to clients.
+//! many times. Each admission pins its RNG stream and — since draft
+//! lengths went per-sequence — BOTH policies keep a row's draft-length
+//! trajectory batch-independent: `Policy::Fixed` trivially, and
+//! `Policy::Heuristic` because every row runs its own Algorithm-1
+//! controller fed only by its own acceptance and consumes exactly its
+//! own `k_i` uniforms per step. So under either policy a sequence's
+//! output is a pure function of (prompt, seed, stream, sampling params,
+//! budget) — the invariant that makes continuous batching *and
+//! preemptive scheduling* invisible to clients; the sweep runs once per
+//! policy per mode.
 
 use std::collections::HashMap;
 
@@ -59,10 +64,10 @@ struct Plan {
     stream: u64,
 }
 
-fn base_cfg(mode: ExecMode) -> SpecConfig {
+fn base_cfg(mode: ExecMode, policy: Policy) -> SpecConfig {
     SpecConfig {
         max_new_tokens: 8,
-        policy: Policy::Fixed(K),
+        policy,
         mode,
         seed: 0,
         // Batch defaults deliberately unlike any plan's overrides, so an
@@ -89,9 +94,10 @@ fn plan_inputs(p: Plan) -> (Vec<u8>, u64, AdmitOpts) {
 
 /// The reference: the same admission alone in a one-slot batch, stepped
 /// to completion with nothing else ever co-resident.
-fn solo_run(e: &Engine, mode: ExecMode, p: Plan) -> SeqState {
+fn solo_run(e: &Engine, mode: ExecMode, policy: Policy, p: Plan)
+            -> SeqState {
     let (prompt, seed, opts) = plan_inputs(p);
-    let mut batch = SpecBatch::new(e, base_cfg(mode), 1).unwrap();
+    let mut batch = SpecBatch::new(e, base_cfg(mode, policy), 1).unwrap();
     let id = batch.admit_opts(&prompt, seed, opts).unwrap();
     let mut guard = 0;
     while batch.has_active() {
@@ -121,10 +127,12 @@ struct ScheduleOutcome {
 
 /// Replay one random schedule with random admissions, retirements AND
 /// preemptions (suspend/resume-by-recompute).
-fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
-                solo: &mut HashMap<Plan, SeqState>) -> ScheduleOutcome {
+fn run_schedule(e: &Engine, mode: ExecMode, policy: Policy,
+                schedule: u64, solo: &mut HashMap<Plan, SeqState>)
+                -> ScheduleOutcome {
     let mut rng = Pcg32::new(0xBA55_0000 + schedule, 1);
-    let mut batch = SpecBatch::new(e, base_cfg(mode), CAPACITY).unwrap();
+    let mut batch =
+        SpecBatch::new(e, base_cfg(mode, policy), CAPACITY).unwrap();
 
     // Draw the admission list: 3..=6 requests, fan-out 1..=2 each.
     let mut pending: Vec<Plan> = Vec::new();
@@ -244,7 +252,13 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
 
         if batch.has_active() {
             let report = batch.step().unwrap();
-            assert_eq!(report.k, K, "Fixed({K}) must hold every step");
+            // StepReport.k is the LAUNCH width (max over live rows'
+            // k_i): constant under Fixed, adaptive under Heuristic.
+            if matches!(policy, Policy::Fixed(_)) {
+                assert_eq!(report.k, K, "Fixed({K}) must hold every step");
+            } else {
+                assert!(report.k >= 1, "launch width must stay positive");
+            }
             stepped_since_empty = true;
             unretired.extend(report.finished);
         } else if pending.is_empty() && unretired.is_empty()
@@ -260,7 +274,7 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
     for (plan, st) in done {
         let want = solo
             .entry(plan)
-            .or_insert_with(|| solo_run(e, mode, plan));
+            .or_insert_with(|| solo_run(e, mode, policy, plan));
         assert_ne!(st.finish, FinishReason::Running);
         assert_eq!(st.generated, want.generated,
                    "{mode:?} schedule {schedule}: interleaved bytes \
@@ -274,12 +288,15 @@ fn run_schedule(e: &Engine, mode: ExecMode, schedule: u64,
     out
 }
 
-fn run_mode(mode: ExecMode) {
+fn run_mode(mode: ExecMode, policy: Policy) {
     let e = Engine::load(&artifacts_root()).expect("engine load");
+    // The solo-reference cache is policy-scoped: a Heuristic solo run
+    // draws different draft lengths (hence different RNG positions)
+    // than a Fixed one for the same Plan.
     let mut solo: HashMap<Plan, SeqState> = HashMap::new();
     let mut total = ScheduleOutcome::default();
     for schedule in 0..SCHEDULES {
-        let o = run_schedule(&e, mode, schedule, &mut solo);
+        let o = run_schedule(&e, mode, policy, schedule, &mut solo);
         total.checked += o.checked;
         total.midflight += o.midflight;
         total.suspensions += o.suspensions;
@@ -335,11 +352,31 @@ fn run_mode(mode: ExecMode) {
 #[test]
 fn interleaved_admission_matches_solo_pad() {
     require_artifacts!();
-    run_mode(ExecMode::Pad);
+    run_mode(ExecMode::Pad, Policy::Fixed(K));
 }
 
 #[test]
 fn interleaved_admission_matches_solo_split() {
     require_artifacts!();
-    run_mode(ExecMode::Split);
+    run_mode(ExecMode::Split, Policy::Fixed(K));
+}
+
+// The same 200-schedule sweep under the ADAPTIVE policy — the
+// per-sequence-draft-length pin at scale. Before draft lengths went
+// per-row this sweep could only run under Fixed (the batch-global
+// Algorithm-1 state made every sequence's k depend on its co-batch);
+// now a Heuristic row's trajectory is its own, so the exact same
+// solo-identity checks must hold across admission, preemption, resume
+// and live re-bucketing.
+
+#[test]
+fn interleaved_admission_matches_solo_heuristic_pad() {
+    require_artifacts!();
+    run_mode(ExecMode::Pad, Policy::Heuristic);
+}
+
+#[test]
+fn interleaved_admission_matches_solo_heuristic_split() {
+    require_artifacts!();
+    run_mode(ExecMode::Split, Policy::Heuristic);
 }

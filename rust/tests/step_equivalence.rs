@@ -212,6 +212,77 @@ fn mixed_params_cobatch_equals_solo_split() {
     assert_mixed_params_equivalent(ExecMode::Split);
 }
 
+/// The per-sequence-draft-length tentpole invariant: under the
+/// **adaptive** policy a request's output is a pure function of
+/// (prompt, seed, stream). Each row runs its own Algorithm-1 controller
+/// fed only by its own acceptance, and consumes exactly its own `k_i`
+/// draft uniforms per step — so co-batched traffic can bend neither its
+/// draft-length trajectory (the old batch-global Algorithm-1 state) nor
+/// its RNG stream positions (the old launch-width uniform draw). Before
+/// this refactor the equivalent assertion only held under
+/// `Policy::Fixed` (see `assert_mixed_params_equivalent`).
+fn assert_heuristic_cobatch_equals_solo(mode: ExecMode) {
+    let e = engine();
+    let base = SpecConfig {
+        max_new_tokens: 24,
+        policy: Policy::Heuristic,
+        mode,
+        seed: 7,
+        temperature: 2.0, // high entropy: acceptance differs per row,
+        top_p: 1.0,       // so per-row controllers genuinely diverge
+        ..SpecConfig::default()
+    };
+    let prompts = prompts();
+    let seeds = [7u64, 11, 99];
+
+    let solo: Vec<_> = (0..prompts.len())
+        .map(|i| solo_pinned(&e, &base, &prompts[i], seeds[i]))
+        .collect();
+
+    let mut batch =
+        SpecBatch::new(&e, base.clone(), prompts.len()).unwrap();
+    let ids: Vec<_> = (0..prompts.len())
+        .map(|i| {
+            batch
+                .admit_opts(&prompts[i], seeds[i], AdmitOpts {
+                    stream: Some(0),
+                    ..AdmitOpts::default()
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut guard = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        guard += 1;
+        assert!(guard < 1000, "runaway heuristic co-batch loop");
+    }
+    for (i, id) in ids.into_iter().enumerate() {
+        let st = batch.retire(id).unwrap();
+        assert_eq!(solo[i].generated, st.generated,
+                   "{mode:?} req {i}: adaptive-policy co-batched bytes \
+                    diverge from the solo run");
+        assert_eq!(solo[i].finish, st.finish,
+                   "{mode:?} req {i}: finish reason");
+        assert!((solo[i].mean_logp() - st.mean_logp()).abs() < 1e-12,
+                "{mode:?} req {i}: mean_logp {} vs {}",
+                solo[i].mean_logp(), st.mean_logp());
+        assert_ne!(st.finish, FinishReason::Running);
+    }
+}
+
+#[test]
+fn heuristic_cobatch_equals_solo_pad() {
+    require_artifacts!();
+    assert_heuristic_cobatch_equals_solo(ExecMode::Pad);
+}
+
+#[test]
+fn heuristic_cobatch_equals_solo_split() {
+    require_artifacts!();
+    assert_heuristic_cobatch_equals_solo(ExecMode::Split);
+}
+
 /// The preemption invariant (acceptance criterion of the scheduler PR):
 /// suspend → resume-by-recompute must be **invisible** to the sequence.
 /// The interrupted run goes through two full preemption cycles — suspend
@@ -461,6 +532,95 @@ fn rebucket_grow_mid_generation_is_invisible_pad() {
     assert!((want.mean_logp() - got.mean_logp()).abs() < 1e-12,
             "mean_logp {} vs {}", want.mean_logp(), got.mean_logp());
     assert_ne!(got.finish, FinishReason::Running);
+}
+
+/// Live re-bucketing identity, RESUME FOLD: a suspended sequence rides
+/// the grow's single fused prefill (`SpecBatch::rebucket_resume`)
+/// instead of a separate scatter prefill afterwards, and both the
+/// carried row and the folded rider still reproduce the co-resident
+/// reference byte-for-byte. This pins the one-launch resume path the
+/// coordinator prefers when a re-bucket and parked resumes land on the
+/// same tick.
+#[test]
+fn rebucket_resume_folds_rider_bitwise_pad() {
+    require_artifacts!();
+    let e = engine();
+    let cfg = SpecConfig {
+        temperature: 2.0,
+        top_p: 1.0,
+        max_new_tokens: 24,
+        ..cfg(ExecMode::Pad)
+    };
+    let p_target = &prompts()[0];
+    let p_rider = &prompts()[2];
+    fn admit_pinned(batch: &mut SpecBatch, p: &[u8], seed: u64)
+                    -> bass::spec::SeqId {
+        batch.admit_opts(p, seed, AdmitOpts {
+            stream: Some(0),
+            ..AdmitOpts::default()
+        }).unwrap()
+    }
+
+    // Reference: both sequences co-resident from step 0, uninterrupted.
+    // Streams are pinned, so each row's identity is a function of
+    // (prompt, seed, stream) regardless of bucket geometry.
+    let mut refb = SpecBatch::new(&e, cfg.clone(), 2).unwrap();
+    let t_ref = admit_pinned(&mut refb, p_target, 7);
+    let r_ref = admit_pinned(&mut refb, p_rider, 13);
+    let mut guard = 0;
+    while refb.has_active() {
+        refb.step().unwrap();
+        guard += 1;
+        assert!(guard < 200);
+    }
+    let want_t = refb.retire(t_ref).unwrap();
+    let want_r = refb.retire(r_ref).unwrap();
+    assert!(want_t.tokens_generated() >= 8
+                && want_r.tokens_generated() >= 8,
+            "references too short to bisect with a suspend + fold");
+
+    // Interrupted: suspend the rider after one step, let the target run
+    // on, then grow the live bucket with the rider folded into the SAME
+    // fused prefill (one launch re-encodes the carried target and
+    // prefills the rider's context).
+    let mut batch = SpecBatch::new(&e, cfg.clone(), 4).unwrap();
+    let target = admit_pinned(&mut batch, p_target, 7);
+    let rider = admit_pinned(&mut batch, p_rider, 13);
+    batch.step().unwrap();
+    assert_eq!(batch.bucket_rows(), Some(2), "tight bucket to start");
+    let snap = batch.suspend(rider).unwrap();
+    batch.step().unwrap();
+    assert!(batch.has_active(),
+            "target must still be running when the fold lands");
+    assert!(batch.rebucket_target_with(3, 1).is_some(),
+            "a larger bucket must exist for the fold to target");
+    let (r, ids) = batch.rebucket_resume(3, vec![snap]).unwrap();
+    assert!(r.to >= 3, "bucket must cover the demand (got {})", r.to);
+    // `migrated` counts every row the fused prefill re-encoded: the
+    // carried target plus the folded rider.
+    assert_eq!(r.migrated, 2, "carried target + folded rider re-encode");
+    assert_eq!(ids.len(), 1, "one rider resumed by the fold");
+    let rider = ids[0];
+    assert_eq!(batch.occupied(), 2);
+    let mut guard = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        guard += 1;
+        assert!(guard < 200, "runaway folded run");
+    }
+    let got_t = batch.retire(target).unwrap();
+    let got_r = batch.retire(rider).unwrap();
+
+    assert_eq!(want_t.generated, got_t.generated,
+               "fold-carried bytes diverge from the co-resident \
+                reference");
+    assert_eq!(want_r.generated, got_r.generated,
+               "folded-rider bytes diverge from the co-resident \
+                reference");
+    assert_eq!(want_t.finish, got_t.finish);
+    assert_eq!(want_r.finish, got_r.finish);
+    assert!((want_t.mean_logp() - got_t.mean_logp()).abs() < 1e-12);
+    assert!((want_r.mean_logp() - got_r.mean_logp()).abs() < 1e-12);
 }
 
 /// Live re-bucketing identity, SHRINK: three sequences start at bucket

@@ -1,5 +1,11 @@
 #!/usr/bin/env python3
-"""CI gate for BENCH_serving.json (schema bass-serving-bench/v1).
+"""CI gate for BENCH_serving.json (schema bass-serving-bench/v2).
+
+v2 = v1 + the per-scenario "draft" section (draft_len / acceptance_rate
+distributions across requests), added when the engine switched to one
+adaptive draft-length controller per sequence. Draft stats are
+wall-clock-independent but policy-dependent, so they are schema-checked
+(present, numeric, p50 <= p99) yet never counter-gated.
 
 Three modes:
 
@@ -37,9 +43,10 @@ import argparse
 import json
 import sys
 
-SCHEMA = "bass-serving-bench/v1"
+SCHEMA = "bass-serving-bench/v2"
 BOOTSTRAP = "bootstrap-estimate"
 LATENCY_METRICS = ("ttft_ms", "tpot_ms", "e2e_ms", "queue_ms")
+DRAFT_METRICS = ("draft_len", "acceptance_rate")
 STATS = ("mean", "p50", "p99")
 COUNTER_KEYS = ("n_requests", "n_seqs_requested", "total_tokens",
                 "all_finished")
@@ -70,19 +77,22 @@ def check_report(doc, path):
     for s in doc["scenarios"]:
         name = s.get("name", "<unnamed>")
         for section in ("arrival", "workload", "latency", "goodput",
-                        "overhead", "counters"):
+                        "overhead", "draft", "counters"):
             if section not in s:
                 fail(f"{path}:{name}: missing section {section!r}")
-        for metric in LATENCY_METRICS:
-            m = s["latency"].get(metric)
-            if m is None:
-                fail(f"{path}:{name}: latency missing {metric!r}")
-            for stat in STATS:
-                if not isinstance(m.get(stat), (int, float)):
-                    fail(f"{path}:{name}: {metric}.{stat} not a number")
-            if m["p50"] > m["p99"]:
-                fail(f"{path}:{name}: {metric} p50 {m['p50']} > "
-                     f"p99 {m['p99']}")
+        for section, metrics in (("latency", LATENCY_METRICS),
+                                 ("draft", DRAFT_METRICS)):
+            for metric in metrics:
+                m = s[section].get(metric)
+                if m is None:
+                    fail(f"{path}:{name}: {section} missing {metric!r}")
+                for stat in STATS:
+                    if not isinstance(m.get(stat), (int, float)):
+                        fail(f"{path}:{name}: {metric}.{stat} "
+                             f"not a number")
+                if m["p50"] > m["p99"]:
+                    fail(f"{path}:{name}: {metric} p50 {m['p50']} > "
+                         f"p99 {m['p99']}")
         g, c = s["goodput"], s["counters"]
         for key in COUNTER_KEYS:
             if key not in c:
