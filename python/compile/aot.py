@@ -29,7 +29,8 @@ from jax._src.lib import xla_client as xc
 
 from compile import bwt
 from compile.corpus import build_corpus, write_tasks
-from compile.model import (CONFIGS, ModelConfig, decode, draft_loop, prefill,
+from compile.model import (CONFIGS, ModelConfig, decode, decode_packed,
+                           draft_loop, draft_packed, prefill,
                            prefill_scatter)
 from compile.quant import quantize_params
 from compile.train import TrainConfig, held_out_loss, train_model
@@ -41,6 +42,11 @@ from compile.train import TrainConfig, held_out_loss, train_model
 BATCHES = [1, 2, 4, 8, 16]
 DRAFT_K_BUCKETS = [1, 2, 3, 4, 5, 6, 8, 10, 12, 16]   # Algorithm-1 range
 SMALL_K_BUCKETS = [2, 4, 6, 8]                         # draft_b / draft_c
+# Packed verification capacity ladder: a decode_packed artifact at (b, q')
+# carries C = b·q' packed tokens. Reusing {k + 1} keeps q_launch = max_i q_i
+# a ladder member, so the packed capacity bucket never exceeds PAD's
+# rectangle for the same batch (Σq_i ≤ b·q_launch rounds to q' ≤ q_launch).
+PACKED_Q_BUCKETS = sorted({k + 1 for k in DRAFT_K_BUCKETS})
 # Prompt capacity: must fit the longest task prompt (synth_xsum articles
 # run ~110 bytes); prompt + generation must stay within the *trained*
 # position range (TrainConfig.seq = 192).
@@ -63,9 +69,10 @@ def grid(quick: bool = False):
     main_q = [1] + [k + 1 for k in DRAFT_K_BUCKETS]
     if quick:
         main_q, draft_k, small_k = [1, 5], [4], [4]
-        drafts = ["draft_a"]
+        packed_q, drafts = [5], ["draft_a"]
     else:
         draft_k, small_k, drafts = DRAFT_K_BUCKETS, SMALL_K_BUCKETS, DRAFTS
+        packed_q = PACKED_Q_BUCKETS
     for b in batches:
         # Per-row prefill-scatter: PAD mid-flight admission re-primes one
         # row of a running fused batch. Bucket 1 is skipped — a one-row
@@ -79,6 +86,8 @@ def grid(quick: bool = False):
                        "dense")
             for q in main_q:
                 yield (MAIN, prec, "decode", b, q, "dense")
+            for q in packed_q:
+                yield (MAIN, prec, "decode_packed", b, q, "dense")
         for d in drafts:
             ks = draft_k if d == "draft_a" else small_k
             for prec in PRECISIONS[d]:
@@ -88,6 +97,7 @@ def grid(quick: bool = False):
                            "dense")
                 for k in ks:
                     yield (d, prec, "draft", b, k, "dense")
+                    yield (d, prec, "draft_packed", b, k, "dense")
     if not quick:
         for (m, phase, b, q) in PALLAS_SUBSET:
             yield (m, "f32", phase, b, q, "pallas")
@@ -163,6 +173,20 @@ def lower_artifact(cfg: ModelConfig, params, phase, batch, q, attn):
                 jax.ShapeDtypeStruct((batch,), i32),
                 _cache_specs(cfg, batch))
         jitted = jax.jit(fn, donate_argnums=(3,))
+    elif phase == "decode_packed":
+        # One packed [1, C] token stream (C = batch·q capacity) addressed
+        # by cumulative segment offsets; caches stay [B]-fused/donated.
+        c_tok = batch * q
+
+        def fn(flat_w, tokens, qoffs, seq_lens, caches):
+            p = jax.tree_util.tree_unflatten(treedef, flat_w)
+            return decode_packed(p, tokens, qoffs, seq_lens, caches, cfg,
+                                 attn)
+        args = (wspecs, jax.ShapeDtypeStruct((1, c_tok), i32),
+                jax.ShapeDtypeStruct((batch + 1,), i32),
+                jax.ShapeDtypeStruct((batch,), i32),
+                _cache_specs(cfg, batch))
+        jitted = jax.jit(fn, donate_argnums=(4,))
     elif phase == "draft":
         def fn(flat_w, tokens_in, n_in, seq_lens, uniforms, temp, top_p,
                caches):
@@ -182,6 +206,27 @@ def lower_artifact(cfg: ModelConfig, params, phase, batch, q, attn):
                 jax.ShapeDtypeStruct((batch,), f32),
                 _cache_specs(cfg, batch))
         jitted = jax.jit(fn, donate_argnums=(7,))
+    elif phase == "draft_packed":
+        # Offset-addressed draft ABI: uniforms and outputs live in a
+        # packed-prefix [B·K] layout indexed by koffs (see model.py).
+        cu = batch * q
+
+        def fn(flat_w, tokens_in, n_in, seq_lens, koffs, uniforms, temp,
+               top_p, caches):
+            p = jax.tree_util.tree_unflatten(treedef, flat_w)
+            toks, qdists, caches = draft_packed(
+                p, tokens_in, n_in, seq_lens, caches, koffs, uniforms,
+                temp, top_p, q, cfg, attn)
+            return (toks, qdists, *caches)
+        args = (wspecs, jax.ShapeDtypeStruct((batch, 2), i32),
+                jax.ShapeDtypeStruct((batch,), i32),
+                jax.ShapeDtypeStruct((batch,), i32),
+                jax.ShapeDtypeStruct((batch + 1,), i32),
+                jax.ShapeDtypeStruct((cu,), f32),
+                jax.ShapeDtypeStruct((batch,), f32),
+                jax.ShapeDtypeStruct((batch,), f32),
+                _cache_specs(cfg, batch))
+        jitted = jax.jit(fn, donate_argnums=(8,))
     else:
         raise ValueError(phase)
     return to_hlo_text(jitted.lower(*args))
@@ -316,10 +361,12 @@ def main():
 
     # ---- manifest -----------------------------------------------------------
     manifest = {
-        # v3: adds per-row prefill_scatter artifacts (PAD mid-flight
-        # admission); v2 made draft temperature/top_p [B] per-row vectors.
+        # v4: adds packed-segment decode_packed / draft_packed artifacts
+        # (ExecMode::Packed, offset-addressed ragged ABI); v3 added
+        # per-row prefill_scatter (PAD mid-flight admission); v2 made
+        # draft temperature/top_p [B] per-row vectors.
         # Must match rust/src/runtime/manifest.rs::MANIFEST_VERSION.
-        "version": 3,
+        "version": 4,
         "vocab": 256,
         "eos": 0,
         "prefill_p": PREFILL_P,

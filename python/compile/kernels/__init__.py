@@ -1,6 +1,7 @@
 """Layer-1 Pallas kernels for BASS ragged attention."""
 
 from compile.kernels.ragged_attention import (  # noqa: F401
+    packed_segment_attention,
     ragged_decode_attention,
     ragged_prefill_attention,
     split_decode_attention,

@@ -146,6 +146,58 @@ def ragged_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return ragged_decode_attention(q, k, v, zeros, s_blk=s_blk)
 
 
+def packed_segment_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             seq_lens: jax.Array, qoffs: jax.Array,
+                             window: int, attn=None) -> jax.Array:
+    """BASS-packed ragged attention over a packed query stream.
+
+    The packed exec mode lays the batch's ragged rows back-to-back in one
+    ``C``-token stream (row i occupies ``qoffs[i]:qoffs[i+1]``; the tail
+    beyond ``qoffs[B]`` is filler). Attention still needs per-row query
+    blocks against per-row cache rows, so each segment is realized as a
+    fixed window of the stream: ``seg_q[i, :, j] = q[:, qoffs[i] + j]``
+    for ``j < window``; window positions past a row's real length are
+    garbage and are discarded on scatter-back. ``window`` is a static
+    *global* per-row length bound (max draft bucket + 1), NOT the batch
+    max — the packed dense stream, not this gather, is where the
+    pad-FLOP saving lives; the gather merely lets the existing ragged
+    kernel run completely unchanged.
+
+    Per-query flash accumulation never mixes query rows, so every valid
+    packed position is bitwise-identical to the same query under the
+    rectangular BASS-PAD launch.
+
+    Args:
+      q: ``(H, C, Dh)`` packed queries.
+      k, v: ``(B, H, S, Dh)`` caches (new tokens already appended).
+      seq_lens: ``(B,)`` pre-append lengths.
+      qoffs: ``(B+1,)`` cumulative segment offsets, ``qoffs[0] = 0``.
+      window: static per-row length bound (must be ``>= max_i q_i``).
+      attn: ``(q, k, v, seq_lens) -> out`` callable; defaults to the
+        Pallas kernel.
+
+    Returns:
+      ``(H, C, Dh)``: ``out[:, t]`` is the attention output for packed
+      token t; filler positions hold garbage.
+    """
+    if attn is None:
+        attn = ragged_decode_attention
+    h, c, d_head = q.shape
+    b = seq_lens.shape[0]
+    w = min(window, c)
+    gather = jnp.clip(qoffs[:-1, None] + jnp.arange(w)[None, :], 0, c - 1)
+    seg_q = jnp.take(q, gather.reshape(-1), axis=1)
+    seg_q = seg_q.reshape(h, b, w, d_head).transpose(1, 0, 2, 3)
+    seg_out = attn(seg_q, k, v, seq_lens)                 # (B, H, W, Dh)
+    t_idx = jnp.arange(c)
+    rid = jnp.sum((t_idx[:, None] >= qoffs[None, 1:]).astype(jnp.int32),
+                  axis=1)
+    rid_c = jnp.clip(rid, 0, b - 1)
+    pos = jnp.clip(t_idx - qoffs[rid_c], 0, w - 1)
+    out = seg_out[rid_c, :, pos, :]                       # (C, H, Dh)
+    return out.transpose(1, 0, 2)
+
+
 def split_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                            seq_lens: jax.Array,
                            s_blk: int = DEFAULT_S_BLK) -> jax.Array:

@@ -26,7 +26,8 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from compile.kernels import ragged_decode_attention
+from compile.kernels import (packed_segment_attention,
+                             ragged_decode_attention)
 from compile.kernels.ref import ragged_decode_attention_ref
 from compile.quant import maybe_dequant
 
@@ -222,6 +223,94 @@ def decode(params, tokens, seq_lens, caches, cfg: ModelConfig,
     return logits, new_caches
 
 
+# Static global per-row length bound of the packed exec mode: the largest
+# draft bucket (aot.DRAFT_K_BUCKETS) plus the bonus-token query. Every
+# packed segment is at most this long, so the attention gather window is
+# independent of the batch's max row — the raggedness lives entirely in
+# the packed token stream.
+PACKED_WINDOW = 17
+
+
+def decode_packed(params, tokens, qoffs, seq_lens, caches, cfg: ModelConfig,
+                  attn_impl: str = "pallas"):
+    """Process a packed ragged batch of Σq_i new tokens in one launch.
+
+    BASS-packed exec mode: instead of PAD's rectangular ``[B, Q_launch]``
+    token block, the batch's variable-length rows are laid back-to-back in
+    one ``[1, C]`` token stream (``C`` = capacity bucket ≥ Σq_i; the tail
+    beyond ``qoffs[B]`` is filler). All dense work — embeddings, layer
+    norms, GEMMs, the LM head — runs on the packed stream, i.e. over C
+    tokens instead of B·Q_launch, which is where the pad-FLOP saving
+    physically lives. Attention realizes each segment as a window of the
+    stream (``packed_segment_attention``) and reuses the unchanged ragged
+    kernel.
+
+    Args:
+      tokens: int32[1, C] — row i occupies ``tokens[0, qoffs[i]:qoffs[i+1]]``.
+      qoffs: int32[B+1] cumulative offsets (``qoffs[0] = 0``, monotone,
+        ``qoffs[B] = Σq_i ≤ C``).
+      seq_lens: int32[B]; caches: ``[k_0, v_0, ...]`` of f32[B, H, S, Dh] —
+        same contracts as ``decode``.
+
+    Returns:
+      (logits f32[1, C, V], new_caches). ``logits[0, qoffs[i] + j]`` is
+      row i's next-token distribution after consuming its token j; filler
+      positions hold garbage. Valid positions are bitwise-identical to
+      ``decode``'s: per-token dense ops and per-query flash accumulation
+      are independent of the batch reshape, and each row's K/V land at
+      the same cache coordinates (PAD additionally writes garbage beyond
+      a row's real length — positions the attention bound never reads
+      and the next step overwrites).
+    """
+    attn = ATTN_IMPLS[attn_impl]
+    _, c_tok = tokens.shape
+    b = seq_lens.shape[0]
+    t_idx = jnp.arange(c_tok)
+    # rid[t] = segment owning packed position t; filler tokens get B.
+    rid = jnp.sum((t_idx[:, None] >= qoffs[None, 1:]).astype(jnp.int32),
+                  axis=1)
+    real = rid < b
+    rid_c = jnp.clip(rid, 0, b - 1)
+    pos_in_seg = t_idx - qoffs[rid_c]
+    pos_ids = jnp.where(real, seq_lens[rid_c] + pos_in_seg, 0)
+    x = maybe_dequant(params["embed"])[tokens] + \
+        maybe_dequant(params["pos"])[pos_ids][None]
+
+    # Scatter coordinates for the per-token KV append; filler tokens
+    # target the out-of-bounds batch row B and are dropped.
+    rid_w = jnp.where(real, rid_c, b)
+    pos_w = jnp.where(real, seq_lens[rid_c] + pos_in_seg, 0)
+    head_ids = jnp.arange(cfg.n_head)
+
+    new_caches = []
+    for l, blk in enumerate(params["blocks"]):
+        h = _ln(x, blk["ln1"])
+        qkv = _dense(h, blk["qkv"])
+        qh, kh, vh = jnp.split(qkv, 3, axis=-1)
+        qh = _split_heads(qh, cfg.n_head)                 # [1, H, C, Dh]
+        kh = _split_heads(kh, cfg.n_head)
+        vh = _split_heads(vh, cfg.n_head)
+        k_tok = kh[0].transpose(1, 0, 2)                  # [C, H, Dh]
+        v_tok = vh[0].transpose(1, 0, 2)
+        ck = caches[2 * l].at[
+            rid_w[:, None], head_ids[None, :], pos_w[:, None]].set(
+            k_tok, mode="drop")
+        cv = caches[2 * l + 1].at[
+            rid_w[:, None], head_ids[None, :], pos_w[:, None]].set(
+            v_tok, mode="drop")
+        seg = packed_segment_attention(qh[0], ck, cv, seq_lens, qoffs,
+                                       min(PACKED_WINDOW, c_tok), attn=attn)
+        attn_tok = seg.transpose(1, 0, 2).reshape(c_tok, -1)
+        x = x + _dense(attn_tok[None], blk["proj"])
+        h2 = _ln(x, blk["ln2"])
+        x = x + _dense(jax.nn.gelu(_dense(h2, blk["fc"])), blk["out"])
+        new_caches += [ck, cv]
+
+    x = _ln(x, params["ln_f"])
+    logits = x @ maybe_dequant(params["embed"]).T                  # tied head
+    return logits, new_caches
+
+
 def prefill(params, tokens, prompt_lens, cfg: ModelConfig,
             attn_impl: str = "pallas"):
     """Context-encode a prompt batch into a fresh ragged cache.
@@ -373,6 +462,69 @@ def draft_loop(params, tokens_in, n_in, seq_lens, caches, uniforms,
     draft_tokens = jnp.stack(toks, axis=1)                        # [B, K]
     qdists = jnp.stack(qs, axis=1)                                # [B, K, V]
     return draft_tokens, qdists, caches
+
+
+def draft_packed(params, tokens_in, n_in, seq_lens, caches, koffs, uniforms,
+                 temperature, top_p, k_draft: int, cfg: ModelConfig,
+                 attn_impl: str = "pallas"):
+    """Packed-ABI drafting: ``draft_loop`` with offset-addressed I/O.
+
+    The packed exec mode addresses every per-row buffer by cumulative
+    offsets instead of a rectangular ``[B, K]`` layout. Drafting is
+    auto-regressive — every step is a genuine B×1 decode, so there is no
+    *column* pad waste to reclaim (rows whose ``k_i`` is below the launch
+    bucket still step forward producing garbage the orchestrator ignores,
+    exactly as in the PAD draft program) — but the host-facing ABI packs:
+
+      * ``koffs``: int32[B+1] cumulative draft-length offsets;
+        ``k_i = koffs[i+1] - koffs[i]`` (``<= k_draft``).
+      * ``uniforms``: f32[Cu] (``Cu = B·k_draft`` capacity), row i's
+        ``k_i`` uniforms at ``koffs[i]:koffs[i+1]``; the tail is unused.
+      * returns ``(toks f32→i32[Cu], qdists f32[Cu, V], caches)`` in the
+        same packed-prefix layout; positions past ``koffs[B]`` are zero.
+
+    Step j of row i consumes ``uniforms[koffs[i] + j]`` when ``j < k_i``
+    and the PAD filler 0.0 otherwise, so tokens, q-distributions and
+    caches are bitwise-identical to ``draft_loop`` fed the equivalent
+    rectangular uniforms.
+    """
+    b = seq_lens.shape[0]
+    cu = uniforms.shape[0]
+    klens = koffs[1:] - koffs[:-1]                                # [B]
+
+    def u_at(j):
+        idx = jnp.clip(koffs[:-1] + j, 0, cu - 1)
+        return jnp.where(j < klens, uniforms[idx], 0.0)
+
+    logits2, caches = decode(params, tokens_in, seq_lens, caches, cfg,
+                             attn_impl)
+    first_logits = logits2[jnp.arange(b), n_in - 1]               # [B, V]
+    d0, q0 = sample_top_p(first_logits, u_at(0), temperature, top_p)
+    lens = seq_lens + n_in
+
+    toks, qs = [d0], [q0]
+    tok, cur = d0, lens
+    for j in range(1, k_draft):
+        logits, caches = decode(params, tok[:, None], cur, caches, cfg,
+                                attn_impl)
+        tok, q = sample_top_p(logits[:, 0], u_at(j), temperature, top_p)
+        cur = cur + 1
+        toks.append(tok)
+        qs.append(q)
+    draft_tokens = jnp.stack(toks, axis=1)                        # [B, K]
+    qdists = jnp.stack(qs, axis=1)                                # [B, K, V]
+
+    # Scatter into the packed-prefix layout; steps beyond a row's k_i
+    # target the out-of-bounds index Cu and are dropped.
+    j_idx = jnp.arange(k_draft)[None, :]
+    out_idx = jnp.where(j_idx < klens[:, None],
+                        koffs[:-1, None] + j_idx, cu)             # [B, K]
+    flat = out_idx.reshape(-1)
+    toks_packed = jnp.zeros((cu,), jnp.int32).at[flat].set(
+        draft_tokens.reshape(-1), mode="drop")
+    qdists_packed = jnp.zeros((cu, cfg.vocab), jnp.float32).at[flat].set(
+        qdists.reshape(-1, cfg.vocab), mode="drop")
+    return toks_packed, qdists_packed, caches
 
 
 # ---------------------------------------------------------------------------

@@ -36,7 +36,8 @@ except ModuleNotFoundError:  # minimal images; CI installs hypothesis
 
 import pytest
 
-from compile.model import (ModelConfig, decode, init_params, prefill,
+from compile.model import (ModelConfig, decode, decode_packed, draft_loop,
+                           draft_packed, init_params, prefill,
                            prefill_scatter, sample_top_p)
 
 jax.config.update("jax_platform_name", "cpu")
@@ -358,6 +359,165 @@ def test_ragged_cobatch_decode_matches_solo(attn):
     np.testing.assert_array_equal(
         got[1], want_b,
         err_msg=f"long row's logits != solo (attn={attn})")
+
+
+# ---------------------------------------------------------------------------
+# Packed segment layout vs BASS-PAD (ExecMode::Packed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("attn", ["dense", "pallas"])
+def test_packed_decode_matches_pad_bitwise(attn):
+    """`decode_packed` lays the ragged rows back-to-back in one [1, C]
+    stream; every real packed position must be **bitwise** the logits the
+    rectangular PAD launch produces for the same (row, q) — and the KV a
+    row appends must land byte-identical over its valid region. This is
+    the soundness contract of ExecMode::Packed: the Rust engine samples
+    from the unpacked logits byte-for-byte, so a packed co-batched run
+    stays byte-identical to PAD/solo (rust/tests/step_equivalence.rs)."""
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    rng = np.random.default_rng(11)
+    ctx_lens = [5, 9, 7]
+    qlens = [2, 5, 3]               # ragged: k_i + 1 for k = 1, 4, 2
+    q_launch = max(qlens)
+    b = len(ctx_lens)
+
+    toks = np.zeros((b, _P), np.int32)
+    ctxs = []
+    for i, n in enumerate(ctx_lens):
+        ctx = rng.integers(1, 256, size=(n,)).astype(np.int32)
+        toks[i, :n] = ctx
+        ctxs.append(ctx)
+    plens = jnp.asarray(ctx_lens, np.int32)
+    _, caches = prefill(params, jnp.asarray(toks), plens, cfg, attn)
+    seq_lens = jnp.asarray([n - 1 for n in ctx_lens], np.int32)
+
+    q_rows = [np.concatenate([[ctxs[i][-1]],
+                              rng.integers(1, 256, size=(qlens[i] - 1,))])
+              .astype(np.int32) for i in range(b)]
+
+    # PAD: rectangular launch at the batch max, nonzero junk filler.
+    q_pad = np.full((b, q_launch), 213, np.int32)
+    for i in range(b):
+        q_pad[i, : qlens[i]] = q_rows[i]
+    logits_pad, caches_pad = decode(params, jnp.asarray(q_pad), seq_lens,
+                                    caches, cfg, attn)
+    logits_pad = np.asarray(logits_pad)
+
+    # Packed: C = b·q' capacity with a filler tail past qoffs[B].
+    c_tok = b * q_launch
+    qoffs = np.concatenate([[0], np.cumsum(qlens)]).astype(np.int32)
+    packed = np.full((1, c_tok), 213, np.int32)
+    for i in range(b):
+        packed[0, qoffs[i]: qoffs[i + 1]] = q_rows[i]
+    logits_pk, caches_pk = decode_packed(params, jnp.asarray(packed),
+                                         jnp.asarray(qoffs), seq_lens,
+                                         caches, cfg, attn)
+    logits_pk = np.asarray(logits_pk)
+
+    for i in range(b):
+        np.testing.assert_array_equal(
+            logits_pk[0, qoffs[i]: qoffs[i + 1]],
+            logits_pad[i, : qlens[i]],
+            err_msg=f"row {i}: packed logits != PAD (attn={attn})")
+    for bi, (cp, ck) in enumerate(zip(caches_pad, caches_pk)):
+        cp, ck = np.asarray(cp), np.asarray(ck)
+        for i in range(b):
+            valid = ctx_lens[i] - 1 + qlens[i]
+            np.testing.assert_array_equal(
+                ck[i, :, :valid], cp[i, :, :valid],
+                err_msg=f"buffer {bi} row {i}: packed KV != PAD "
+                        f"(attn={attn})")
+
+
+def test_draft_packed_matches_draft_loop_bitwise():
+    """`draft_packed` must be the identity reshape of `draft_loop`: same
+    tokens, q-distributions and caches when the packed-prefix uniforms
+    spell the same per-(row, step) values, with the packed tail unused
+    and out-of-range steps consuming the PAD filler 0.0."""
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    rng = np.random.default_rng(13)
+    b, k_draft = 2, 4
+    klens = [2, 4]
+
+    toks = np.zeros((b, _P), np.int32)
+    ctx_lens = [6, 4]
+    for i, n in enumerate(ctx_lens):
+        toks[i, :n] = rng.integers(1, 256, size=(n,))
+    _, caches = prefill(params, jnp.asarray(toks),
+                        jnp.asarray(ctx_lens, np.int32), cfg, "dense")
+    seq_lens = jnp.asarray([n - 1 for n in ctx_lens], np.int32)
+    tokens_in = jnp.asarray([[toks[i, ctx_lens[i] - 1], 0]
+                             for i in range(b)], jnp.int32)
+    n_in = jnp.ones((b,), jnp.int32)
+    temps = jnp.asarray([0.7, 1.1], jnp.float32)
+    tps = jnp.asarray([0.9, 0.95], jnp.float32)
+
+    rect = np.zeros((b, k_draft), np.float32)
+    for i in range(b):
+        rect[i, : klens[i]] = rng.random(klens[i], np.float32)
+    koffs = np.concatenate([[0], np.cumsum(klens)]).astype(np.int32)
+    packed_u = np.zeros((b * k_draft,), np.float32)
+    for i in range(b):
+        packed_u[koffs[i]: koffs[i + 1]] = rect[i, : klens[i]]
+
+    want_t, want_q, want_c = draft_loop(
+        params, tokens_in, n_in, seq_lens, caches, jnp.asarray(rect),
+        temps, tps, cfg, "dense")
+    got_t, got_q, got_c = draft_packed(
+        params, tokens_in, n_in, seq_lens, caches, jnp.asarray(koffs),
+        jnp.asarray(packed_u), temps, tps, k_draft, cfg, "dense")
+    got_t, got_q = np.asarray(got_t), np.asarray(got_q)
+    want_t, want_q = np.asarray(want_t), np.asarray(want_q)
+
+    for i in range(b):
+        for j in range(klens[i]):
+            assert got_t[koffs[i] + j] == want_t[i, j], (i, j)
+            np.testing.assert_array_equal(
+                got_q[koffs[i] + j], want_q[i, j],
+                err_msg=f"row {i} step {j}: packed qdist != rectangular")
+    assert np.all(got_t[koffs[-1]:] == 0), "packed tail not zeroed"
+    for bi, (cw, cg) in enumerate(zip(want_c, got_c)):
+        np.testing.assert_array_equal(
+            np.asarray(cg), np.asarray(cw),
+            err_msg=f"buffer {bi}: packed draft caches != rectangular")
+
+
+def test_packed_artifact_lowers_with_offset_specs():
+    """The aot grid entries: `decode_packed` lowers with a [1, C] packed
+    token stream, s32[B+1] offsets and donated (batch,)-fused caches;
+    `draft_packed` with s32[B+1] koffs and a flat f32[B·K] uniform
+    buffer — the offset ABI `Engine::decode_packed`/`draft_packed`
+    feeds. Grid coverage: one packed artifact per (batch, bucket) pair
+    mirroring the rectangular grids."""
+    from compile.aot import PACKED_Q_BUCKETS, grid, lower_artifact
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    batch, q = 2, 3
+    text = lower_artifact(cfg, params, "decode_packed", batch, q, "dense")
+    assert text.startswith("HloModule")
+    entry = text.splitlines()[0]
+    assert "input_output_alias" in entry, "cache donation lost"
+    assert f"s32[1,{batch * q}]" in entry, "tokens are not packed [1, C]"
+    assert f"s32[{batch + 1}]" in entry, "qoffs are not s32[B+1]"
+
+    text = lower_artifact(cfg, params, "draft_packed", batch, q, "dense")
+    entry = text.splitlines()[0]
+    assert "input_output_alias" in entry, "cache donation lost"
+    assert f"s32[{batch + 1}]" in entry, "koffs are not s32[B+1]"
+    assert f"f32[{batch * q}]" in entry, "uniforms are not flat [B*K]"
+
+    specs = list(grid(quick=False))
+    decodes = {(prec, bb) for (m, prec, ph, bb, _, _) in specs
+               if ph == "decode"}
+    packs = {(prec, bb, qq) for (m, prec, ph, bb, qq, _) in specs
+             if ph == "decode_packed"}
+    assert {(p, bb) for (p, bb, _) in packs} == decodes
+    assert {qq for (_, _, qq) in packs} == set(PACKED_Q_BUCKETS)
+    drafts = {(m, prec, bb, kk) for (m, prec, ph, bb, kk, _) in specs
+              if ph == "draft"}
+    dpacks = {(m, prec, bb, kk) for (m, prec, ph, bb, kk, _) in specs
+              if ph == "draft_packed"}
+    assert dpacks == drafts, "draft_packed grid does not mirror draft"
 
 
 def test_scatter_prefill_artifact_lowers_with_batch_correct_specs():

@@ -154,6 +154,17 @@ pub struct Response {
     /// a load/behavior signal: a rising count under bursty traffic
     /// means the fused bucket is being re-shaped instead of draining.
     pub rebuckets: u64,
+    /// Step FLOPs the engine had actually launched (engine-lifetime
+    /// total) when this response was finalized: each backend accrues
+    /// what it really dispatched per draft/verify call — packed counts
+    /// the Σq_i token stream, PAD/stub the full rectangle (see
+    /// `spec::backend`'s launch accounting). 0.0 for never-admitted
+    /// answers (budget-expired while queued).
+    pub launch_flops: f64,
+    /// What a rectangular PAD launch of the same steps would have cost
+    /// — the baseline `launch_flops` is measured against. The gap is
+    /// the pad-FLOP saving the serving report surfaces.
+    pub padded_launch_flops: f64,
     /// Time to first token: wall seconds from submission to the first
     /// step on which any of this request's sequences emitted bytes.
     /// Recorded once per request — preemption/resume cannot reset it —
@@ -215,6 +226,14 @@ pub struct CoordinatorConfig {
     /// Compile all needed executables at startup (slower start, no
     /// lazy-compile spikes on the request path). Default true.
     pub prewarm: bool,
+    /// Force the host-only stub engine regardless of mode
+    /// (`--stub-engine`). Only meaningful for modes with a host-only
+    /// execution path — `Stub` (implied) and `Packed` (stub-identical
+    /// host compute in the packed layout) — so CI can exercise the
+    /// packed serving path on machines without the PJRT binding;
+    /// startup rejects other modes, whose device calls could only fail
+    /// later and more confusingly. Default false.
+    pub stub_engine: bool,
 }
 
 impl CoordinatorConfig {
@@ -226,6 +245,7 @@ impl CoordinatorConfig {
             batcher,
             preempt: true,
             prewarm: true,
+            stub_engine: false,
         }
     }
 }
@@ -335,7 +355,8 @@ struct InFlight {
 }
 
 impl InFlight {
-    fn finish(self, queue_depth: usize, rebuckets: u64) {
+    fn finish(self, queue_depth: usize, rebuckets: u64,
+              launch_flops: f64, padded_launch_flops: f64) {
         let seqs = self
             .done
             .into_iter()
@@ -350,6 +371,8 @@ impl InFlight {
             preempted: self.preempted,
             queue_depth,
             rebuckets,
+            launch_flops,
+            padded_launch_flops,
             ttft_secs: self.ttft_secs,
             draft_len_mean: if self.draft_steps > 0 {
                 self.drafted as f64 / self.draft_steps as f64
@@ -371,8 +394,19 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
     // backend needs no artifacts and nothing to prewarm, so the whole
     // scheduler stack — admission, preemption, re-bucketing, budgets —
     // runs on machines without the PJRT binding (the serving load
-    // harness and the CI perf gate drive this path).
-    let engine = if cfg.spec.mode == ExecMode::Stub {
+    // harness and the CI perf gate drive this path). `--stub-engine`
+    // extends the same no-device serving to `Packed`, whose backend
+    // has a stub-identical host path.
+    if cfg.stub_engine
+        && !matches!(cfg.spec.mode, ExecMode::Stub | ExecMode::Packed)
+    {
+        let _ = ready.send(Err(anyhow!(
+            "--stub-engine requires a mode with a host-only execution \
+             path (stub or packed); this mode's device calls would only \
+             fail mid-serving")));
+        return;
+    }
+    let engine = if cfg.spec.mode == ExecMode::Stub || cfg.stub_engine {
         Engine::stub()
     } else {
         match Engine::load(&cfg.artifacts_root) {
@@ -698,6 +732,8 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             for owner in expired {
                 let queue_depth = sched.queue_depth();
                 let rebuckets = sched.stats.rebuckets();
+                let flops = (batch.flops.launch,
+                             batch.flops.padded_launch);
                 let ids: Vec<SeqId> = seq_owner
                     .iter()
                     .filter(|(_, &o)| o == owner)
@@ -705,11 +741,12 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                     .collect();
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
-                               &mut seq_owner, queue_depth, rebuckets);
+                               &mut seq_owner, queue_depth, rebuckets,
+                               flops);
                 }
                 for parked in sched.take_parked_of(owner) {
                     deliver_parked(parked, &mut inflight, queue_depth,
-                                   rebuckets);
+                                   rebuckets, flops);
                 }
             }
             expire_queued_jobs(budget, &mut jobs, &mut sched);
@@ -721,10 +758,13 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 // returned rather than wedging their requests forever.
                 let queue_depth = sched.queue_depth();
                 let rebuckets = sched.stats.rebuckets();
+                let flops = (batch.flops.launch,
+                             batch.flops.padded_launch);
                 let ids: Vec<SeqId> = seq_owner.keys().copied().collect();
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
-                               &mut seq_owner, queue_depth, rebuckets);
+                               &mut seq_owner, queue_depth, rebuckets,
+                               flops);
                 }
             } else if sched.has_queued() || sched.parked_count() > 0 {
                 // Waiting out the co-batching window (or a transiently
@@ -802,9 +842,10 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
         // -- retire finished sequences immediately -------------------------
         let queue_depth = sched.queue_depth();
         let rebuckets = sched.stats.rebuckets();
+        let flops = (batch.flops.launch, batch.flops.padded_launch);
         for id in report.finished {
             retire_seq(&mut batch, id, &mut inflight, &mut seq_owner,
-                       queue_depth, rebuckets);
+                       queue_depth, rebuckets, flops);
         }
     }
 
@@ -955,6 +996,9 @@ fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
             preempted: 0,
             queue_depth: sched.queue_depth(),
             rebuckets: sched.stats.rebuckets(),
+            // Never admitted: this request drove no launches.
+            launch_flops: 0.0,
+            padded_launch_flops: 0.0,
             ttft_secs: None,
             draft_len_mean: 0.0,
             acceptance_rate: 0.0,
@@ -964,10 +1008,12 @@ fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
 
 /// Move one finished (or budget-stalled) sequence out of the batch and
 /// into its request's response; answer the request when it was the last.
+/// `flops` is the engine-lifetime (launch, padded_launch) pair read at
+/// the step boundary.
 fn retire_seq(batch: &mut SpecBatch, id: SeqId,
               inflight: &mut HashMap<u64, InFlight>,
               seq_owner: &mut HashMap<SeqId, u64>, queue_depth: usize,
-              rebuckets: u64) {
+              rebuckets: u64, flops: (f64, f64)) {
     let Some(owner) = seq_owner.remove(&id) else { return };
     let state = match batch.retire(id) {
         Ok(s) => s,
@@ -984,7 +1030,7 @@ fn retire_seq(batch: &mut SpecBatch, id: SeqId,
     job.remaining -= 1;
     if job.remaining == 0 {
         let job = inflight.remove(&owner).expect("job present");
-        job.finish(queue_depth, rebuckets);
+        job.finish(queue_depth, rebuckets, flops.0, flops.1);
     }
 }
 
@@ -992,7 +1038,8 @@ fn retire_seq(batch: &mut SpecBatch, id: SeqId,
 /// the time-budget path for preempted work that never got to resume.
 fn deliver_parked(parked: ParkedSeq,
                   inflight: &mut HashMap<u64, InFlight>,
-                  queue_depth: usize, rebuckets: u64) {
+                  queue_depth: usize, rebuckets: u64,
+                  flops: (f64, f64)) {
     let owner = parked.owner;
     let Some(job) = inflight.get_mut(&owner) else { return };
     let state = parked.snapshot.into_state();
@@ -1005,7 +1052,7 @@ fn deliver_parked(parked: ParkedSeq,
     job.remaining -= 1;
     if job.remaining == 0 {
         let job = inflight.remove(&owner).expect("job present");
-        job.finish(queue_depth, rebuckets);
+        job.finish(queue_depth, rebuckets, flops.0, flops.1);
     }
 }
 

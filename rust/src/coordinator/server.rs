@@ -268,6 +268,12 @@ pub fn response_json(resp: &super::Response) -> Json {
         ("preempted", resp.preempted.into()),
         ("queue_depth", resp.queue_depth.into()),
         ("rebuckets", (resp.rebuckets as usize).into()),
+        // Engine-lifetime launch accounting when this reply finalized:
+        // what the exec backend actually dispatched vs. the rectangular
+        // PAD equivalent — the gap is the packed mode's pad-FLOP saving
+        // (see `spec::backend`'s launch accounting).
+        ("launch_flops", resp.launch_flops.into()),
+        ("padded_launch_flops", resp.padded_launch_flops.into()),
         // Draft economy of this request's own sequences: mean per-row
         // draft length (the adaptive controller's realized γ) and the
         // accepted/proposed draft-token ratio.
@@ -359,6 +365,8 @@ mod tests {
             preempted: 2,
             queue_depth: 3,
             rebuckets: 5,
+            launch_flops: 1.5e9,
+            padded_launch_flops: 2.0e9,
             ttft_secs: Some(0.0255),
             draft_len_mean: 3.5,
             acceptance_rate: 0.75,
@@ -381,6 +389,11 @@ mod tests {
         assert!((dl - 3.5).abs() < 1e-9);
         let ar = j.get("acceptance_rate").unwrap().as_f64().unwrap();
         assert!((ar - 0.75).abs() < 1e-9);
+        // Launch accounting rides the wire for the serving report's
+        // "flops" section (packed's saving shows as launch < padded).
+        let lf = j.get("launch_flops").unwrap().as_f64().unwrap();
+        let pf = j.get("padded_launch_flops").unwrap().as_f64().unwrap();
+        assert!((lf - 1.5e9).abs() < 1.0 && (pf - 2.0e9).abs() < 1.0);
     }
 
     #[test]
@@ -394,6 +407,8 @@ mod tests {
             preempted: 0,
             queue_depth: 0,
             rebuckets: 0,
+            launch_flops: 0.0,
+            padded_launch_flops: 0.0,
             ttft_secs: None,
             draft_len_mean: 0.0,
             acceptance_rate: 0.0,

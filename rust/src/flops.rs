@@ -27,9 +27,20 @@ pub fn prefill_flops(info: &ModelInfo, b: usize, p: usize) -> f64 {
 }
 
 /// Running FLOP counter a decode loop updates step by step.
+///
+/// `total` counts *useful* per-row work (each row at its own `q_i`/`k_i`
+/// and context — the utilization numerator). `launch` / `padded_launch`
+/// count what the exec backend actually launches vs. what a rectangular
+/// PAD launch of the same batch would: PAD/stub launch the rectangle
+/// (`launch == padded_launch`), packed launches the Σq_i token stream
+/// plus its capacity filler, SPLIT launches each row at its own bucket.
+/// The gap `padded_launch - launch` is the pad-FLOP saving the serving
+/// report surfaces (`BENCH_serving.json` "flops").
 #[derive(Debug, Default, Clone)]
 pub struct FlopCounter {
     pub total: f64,
+    pub launch: f64,
+    pub padded_launch: f64,
 }
 
 impl FlopCounter {
@@ -40,6 +51,13 @@ impl FlopCounter {
 
     pub fn add_prefill(&mut self, info: &ModelInfo, b: usize, p: usize) {
         self.total += prefill_flops(info, b, p);
+    }
+
+    /// Accrue one launch's FLOPs: `launch` as actually dispatched,
+    /// `padded` as the rectangular PAD equivalent would have been.
+    pub fn add_launch(&mut self, launch: f64, padded: f64) {
+        self.launch += launch;
+        self.padded_launch += padded;
     }
 
     /// Utilization fraction given elapsed seconds and a calibrated peak.
@@ -87,6 +105,18 @@ mod tests {
         assert!(long > short);
         let attn_delta = long - short;
         assert_eq!(attn_delta, 4.0 * (4 * 8 * 190 * 32) as f64);
+    }
+
+    #[test]
+    fn launch_accounting_tracks_the_pad_gap() {
+        let mut c = FlopCounter::default();
+        c.add_launch(10.0, 12.0);
+        c.add_launch(5.0, 5.0);
+        assert_eq!(c.launch, 15.0);
+        assert_eq!(c.padded_launch, 17.0);
+        assert!(c.launch <= c.padded_launch);
+        // add_launch never touches the utilization numerator.
+        assert_eq!(c.total, 0.0);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!   "schema": "bass-serving-bench/v2",
 //!   "generated_by": <tool/provenance string>,
 //!   "driver": "direct" | "tcp",
-//!   "mode": "stub" | "pad" | "split",
+//!   "mode": "stub" | "pad" | "split" | "packed",
 //!   "scenarios": [{
 //!     "name", "seed", "n_requests",
 //!     "arrival":  {"kind", ...process params},
@@ -24,11 +24,20 @@
 //!                  "expired_unserved", "errors"},
 //!     "draft":    {"draft_len": {"mean", "p50", "p99"},
 //!                  "acceptance_rate": {"mean", "p50", "p99"}},
+//!     "flops":    {"launch", "padded_launch"},
 //!     "counters": {"n_requests", "n_seqs_requested", "total_tokens",
 //!                  "all_finished"}
 //!   }, ...]
 //! }
 //! ```
+//!
+//! `flops` reports the scenario's engine-lifetime step-FLOP totals:
+//! `launch` is what the backend actually dispatched, `padded_launch`
+//! the rectangular-PAD price of the same steps — the gap is the
+//! packed backend's zero-pad saving. Responses echo a monotone
+//! engine-lifetime counter, so the scenario total is the max across
+//! outcomes (same convention as `overhead.rebuckets`). The section is
+//! additive to v2 and the baseline diff treats it as optional.
 //!
 //! `draft` distributions are **across requests** (each sample is one
 //! request's server-reported `draft_len_mean` / `acceptance_rate`, over
@@ -121,6 +130,17 @@ pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
               .filter(|o| o.ok && o.draft_len_mean > 0.0)
               .map(|o| o.acceptance_rate))),
     ]);
+    // Engine-lifetime launch-FLOP totals echoed on each response; max
+    // across outcomes = the scenario total (monotone counter, same
+    // convention as overhead.rebuckets).
+    let flops = Json::obj(vec![
+        ("launch",
+         outcomes.iter().map(|o| o.launch_flops)
+             .fold(0.0_f64, f64::max).into()),
+        ("padded_launch",
+         outcomes.iter().map(|o| o.padded_launch_flops)
+             .fold(0.0_f64, f64::max).into()),
+    ]);
     let counters = Json::obj(vec![
         ("n_requests", outcomes.len().into()),
         ("n_seqs_requested",
@@ -142,6 +162,7 @@ pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
         ("goodput", goodput),
         ("overhead", overhead),
         ("draft", draft),
+        ("flops", flops),
         ("counters", counters),
     ])
 }
@@ -180,6 +201,10 @@ mod tests {
             queue_depth: 2,
             draft_len_mean: if tokens > 0 { 3.0 } else { 0.0 },
             acceptance_rate: if tokens > 0 { 0.6 } else { 0.0 },
+            // Monotone engine-lifetime echo: scale with e2e so later
+            // outcomes carry larger totals (the report takes the max).
+            launch_flops: e2e * 1.0e6,
+            padded_launch_flops: e2e * 1.5e6,
         }
     }
 
@@ -234,7 +259,7 @@ mod tests {
         assert_eq!(back.get("schema").unwrap().as_str().unwrap(), SCHEMA);
         let s = &back.get("scenarios").unwrap().as_arr().unwrap()[0];
         for section in ["arrival", "workload", "latency", "goodput",
-                        "overhead", "draft", "counters"] {
+                        "overhead", "draft", "flops", "counters"] {
             assert!(s.opt(section).is_some(), "missing {section}");
         }
         for metric in ["ttft_ms", "tpot_ms", "e2e_ms", "queue_ms"] {
@@ -266,5 +291,12 @@ mod tests {
         let ar = d.get("acceptance_rate").unwrap()
             .get("p50").unwrap().as_f64().unwrap();
         assert!((ar - 0.6).abs() < 1e-9);
+        // flops: max over the monotone per-outcome echoes (last e2e is
+        // 24.0), and launch never exceeds its own padded baseline.
+        let f = s.get("flops").unwrap();
+        let launch = f.get("launch").unwrap().as_f64().unwrap();
+        let padded = f.get("padded_launch").unwrap().as_f64().unwrap();
+        assert!((launch - 24.0e6).abs() < 1.0, "got launch {launch}");
+        assert!(launch <= padded, "launch {launch} > padded {padded}");
     }
 }

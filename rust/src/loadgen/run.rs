@@ -80,6 +80,13 @@ pub struct Outcome {
     /// Server-reported accepted/proposed draft-token ratio of this
     /// request's sequences.
     pub acceptance_rate: f64,
+    /// Engine-lifetime step FLOPs actually launched when this request
+    /// finished — what the backend really dispatched (packed: the Σq_i
+    /// stream; PAD/stub: the rectangle). 0 for never-admitted answers.
+    pub launch_flops: f64,
+    /// Same steps priced as rectangular PAD launches — the baseline the
+    /// packed saving is measured against (`launch ≤ padded` always).
+    pub padded_launch_flops: f64,
 }
 
 impl Outcome {
@@ -100,6 +107,8 @@ impl Outcome {
             queue_depth: 0,
             draft_len_mean: 0.0,
             acceptance_rate: 0.0,
+            launch_flops: 0.0,
+            padded_launch_flops: 0.0,
         }
     }
 
@@ -124,6 +133,8 @@ impl Outcome {
             queue_depth: resp.queue_depth,
             draft_len_mean: resp.draft_len_mean,
             acceptance_rate: resp.acceptance_rate,
+            launch_flops: resp.launch_flops,
+            padded_launch_flops: resp.padded_launch_flops,
         }
     }
 }
@@ -161,8 +172,10 @@ fn pace(t0: Instant, offset: f64) {
 /// accepted and *polls* them (`try_recv`, short idle sleep) rather
 /// than blocking on one: replies are observed within a poll tick of
 /// arriving regardless of completion order, so the e2e clock never
-/// inflates behind a slow co-pending request. Submission stays on the
-/// caller's thread — the open-loop pacing contract is untouched.
+/// inflates behind a slow co-pending request. A worker with nothing
+/// accepted does **not** poll — it blocks on the intake queue
+/// (`recv_timeout`), so an idle pool costs no CPU. Submission stays on
+/// the caller's thread — the open-loop pacing contract is untouched.
 pub fn run_direct(coord: &Coordinator, sc: &Scenario)
                   -> (Vec<Outcome>, f64) {
     let (offsets, reqs) = sc.requests();
@@ -209,22 +222,44 @@ pub fn run_direct(coord: &Coordinator, sc: &Scenario)
 
 /// One pool worker: accept submitted requests from the shared queue,
 /// poll the accepted reply channels round-robin, record each outcome at
-/// the moment its `Done` is observed. Exits when the submission side
-/// hung up and every accepted request has answered.
+/// the moment its `Done` is observed. Workers with nothing accepted
+/// park in a blocking intake recv rather than polling. Exits when the
+/// submission side hung up and every accepted request has answered.
 fn collect_replies(
     work_rx: &Mutex<Receiver<(usize, Instant, Receiver<Reply>)>>,
     out: &Mutex<Vec<Option<Outcome>>>,
 ) {
-    use std::sync::mpsc::TryRecvError;
+    use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
     let mut mine: Vec<(usize, Instant, Receiver<Reply>)> = Vec::new();
     let mut open = true;
     while open || !mine.is_empty() {
         let mut progressed = false;
-        {
-            // Non-blocking job intake (never hold the lock across a
-            // blocking recv — sibling workers need it for their own
-            // intake between polls).
+        if mine.is_empty() {
+            // Idle worker: **block** on the shared intake queue. The
+            // old shape spun on `try_recv` + a 100µs sleep even with
+            // nothing accepted — ~10k wakeups/s per idle worker for the
+            // length of the run. Holding the lock across the blocking
+            // recv is safe precisely here: an idle worker has no reply
+            // channels to poll, the blocked holder observes a new job
+            // with zero latency, and busy siblings fall through their
+            // `try_lock` intake below instead of queueing behind us.
             let rx = work_rx.lock().unwrap();
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(job) => {
+                    mine.push(job);
+                    progressed = true;
+                }
+                // Re-check the exit condition on a timeout tick (a
+                // sibling may have drained the queue to disconnection).
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+        } else if let Ok(rx) = work_rx.try_lock() {
+            // Busy worker: non-blocking intake, and only when no idle
+            // sibling is already camped on the queue — never hold the
+            // lock across a blocking recv while replies are pending
+            // (std mpsc has no multi-channel select, so the pending
+            // reply channels below can only be *polled*).
             loop {
                 match rx.try_recv() {
                     Ok(job) => {
@@ -268,10 +303,12 @@ fn collect_replies(
                 None => true,
             }
         });
-        if !progressed {
-            // Nothing moved this cycle: idle briefly instead of
-            // spinning. The tick bounds reply-observation skew (and
-            // thus e2e inflation) to ~0.1 ms.
+        if !progressed && !mine.is_empty() {
+            // Replies pending but nothing moved this cycle: idle
+            // briefly instead of spinning. The tick bounds
+            // reply-observation skew (and thus e2e inflation) to
+            // ~0.1 ms. (An *empty* `mine` never reaches this sleep —
+            // it parks in the blocking intake above.)
             std::thread::sleep(Duration::from_micros(100));
         }
     }
@@ -375,6 +412,8 @@ fn outcome_from_wire(j: &Json, e2e_ms: f64) -> Result<Outcome> {
         queue_depth: j.get("queue_depth")?.as_usize()?,
         draft_len_mean: j.get("draft_len_mean")?.as_f64()?,
         acceptance_rate: j.get("acceptance_rate")?.as_f64()?,
+        launch_flops: j.get("launch_flops")?.as_f64()?,
+        padded_launch_flops: j.get("padded_launch_flops")?.as_f64()?,
     })
 }
 
@@ -434,6 +473,96 @@ mod tests {
                     "ttft {ttft}ms outside e2e {}ms", o.e2e_ms);
             assert!(o.tpot_ms.is_some(), "max_new >= 8 implies a tpot");
         }
+    }
+
+    fn canned_response(n_tokens: usize) -> Response {
+        Response {
+            seqs: vec![crate::coordinator::GenSeq {
+                text: "x".repeat(n_tokens),
+                finished: true,
+                mean_logp: 0.0,
+                n_tokens,
+            }],
+            n_requested: 1,
+            batch_secs: 0.01,
+            batch_size: 1,
+            queue_secs: 0.0,
+            preempted: 0,
+            queue_depth: 0,
+            rebuckets: 0,
+            launch_flops: 3.0e6,
+            padded_launch_flops: 4.0e6,
+            ttft_secs: Some(0.001),
+            draft_len_mean: 4.0,
+            acceptance_rate: 0.5,
+        }
+    }
+
+    /// The idle/ordering pin for the pool collector: workers that have
+    /// accepted nothing **block** on intake (the pre-fix shape
+    /// busy-polled `try_recv` with a 100µs sleep), and replies resolved
+    /// in any order land at their submitting request's own index —
+    /// never shifted onto a neighbour's slot.
+    #[test]
+    fn idle_collectors_block_and_replies_land_at_their_own_index() {
+        let (work_tx, work_rx) =
+            channel::<(usize, Instant, Receiver<Reply>)>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let out: Arc<Mutex<Vec<Option<Outcome>>>> =
+            Arc::new(Mutex::new(vec![None; 3]));
+        let pool: Vec<_> = (0..2)
+            .map(|_| {
+                let work_rx = Arc::clone(&work_rx);
+                let out = Arc::clone(&out);
+                std::thread::spawn(move || collect_replies(&work_rx,
+                                                           &out))
+            })
+            .collect();
+
+        // Let the fully idle pool park on intake before any job
+        // exists; it must consume nothing and record nothing.
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(out.lock().unwrap().iter().all(Option::is_none));
+
+        let mut replies = Vec::new();
+        for i in 0..3 {
+            let (tx, rx) = channel::<Reply>();
+            replies.push(tx);
+            work_tx.send((i, Instant::now(), rx)).unwrap();
+        }
+        // Resolve strictly out of submission order: 2 answers first
+        // (after a stray step event), then 1, then 0's channel drops
+        // without a Done (an engine-side failure).
+        replies[2].send(Reply::Done(Ok(canned_response(7)))).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        replies[1]
+            .send(Reply::Step(crate::coordinator::StepEvent {
+                seq: 0,
+                text_delta: String::new(),
+                done: false,
+            }))
+            .unwrap();
+        replies[1].send(Reply::Done(Ok(canned_response(2)))).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        drop(replies); // request 0: disconnected, never answered
+        drop(work_tx); // pool drains and exits
+        for h in pool {
+            h.join().expect("collector worker panicked");
+        }
+        let out = Arc::try_unwrap(out)
+            .expect("pool exited")
+            .into_inner()
+            .unwrap();
+        let o2 = out[2].as_ref().expect("request 2 collected");
+        assert!(o2.ok);
+        assert_eq!(o2.n_tokens, 7, "reply 2 must land at index 2");
+        assert!((o2.launch_flops - 3.0e6).abs() < 1.0);
+        assert!((o2.padded_launch_flops - 4.0e6).abs() < 1.0);
+        let o1 = out[1].as_ref().expect("request 1 collected");
+        assert!(o1.ok);
+        assert_eq!(o1.n_tokens, 2, "reply 1 must land at index 1");
+        let o0 = out[0].as_ref().expect("request 0 collected");
+        assert!(!o0.ok, "a dropped reply channel is an error outcome");
     }
 
     #[test]

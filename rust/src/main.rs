@@ -3,7 +3,7 @@
 //! Subcommands:
 //! * `selftest`  — load artifacts, run a tiny generation on every path.
 //! * `generate`  — one batched generation from a prompt (`--prompt`,
-//!   `--n`, `--mode pad|split`, `--precision f32|int8`, ...).
+//!   `--n`, `--mode pad|split|packed`, `--precision f32|int8`, ...).
 //! * `serve`     — TCP line-protocol server over the continuously-batched,
 //!   **preemptively scheduled** coordinator (mid-flight admission in both
 //!   `--mode pad` and `--mode split`; wire `"priority"`/`"deadline_ms"`
@@ -18,9 +18,12 @@
 //!   pipelined TCP connection with `--tcp`) and emit the schema-stable
 //!   `BENCH_serving.json` (TTFT/TPOT/e2e mean/p50/p99, goodput under
 //!   `--slo-ms`, preemption/re-bucket overhead, deterministic
-//!   counters). Defaults to `--mode stub` — the host-only backend — so
-//!   it runs on artifact-less machines; `--deterministic` selects the
-//!   CI-gate workload whose counters are timing-independent.
+//!   counters, per-launch FLOP totals). Defaults to `--mode stub` — the
+//!   host-only backend — so it runs on artifact-less machines;
+//!   `--deterministic` selects the CI-gate workload whose counters are
+//!   timing-independent; `--mode packed --stub-engine` serves the
+//!   packed ragged backend's host-only path (same bytes as stub, packed
+//!   launch-FLOP accounting) without artifacts.
 //! * `eval`      — run a task (`--task code|summ`) and report accuracy.
 //! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
 //! * `info`      — print the manifest summary.
@@ -62,6 +65,12 @@ fn spec_config_from(args: &Args) -> Result<SpecConfig> {
         mode: match args.flag_or("mode", "pad").as_str() {
             "pad" => ExecMode::Pad,
             "split" => ExecMode::Split,
+            // Packed-segment launches: ragged rows laid back-to-back in
+            // one offset-addressed stream, so dense verify FLOPs scale
+            // with Σq_i instead of PAD's rectangle. Needs the v4
+            // decode_packed/draft_packed artifacts (`make artifacts`) —
+            // or `--stub-engine` for the host-only serving path.
+            "packed" => ExecMode::Packed,
             // Host-only deterministic backend: no artifacts, no device;
             // the serving load harness and CI perf gate run on it.
             "stub" => ExecMode::Stub,
@@ -269,8 +278,12 @@ fn serving_cmd(args: &Args) -> Result<()> {
     let mode_name = match spec.mode {
         ExecMode::Pad => "pad",
         ExecMode::Split => "split",
+        ExecMode::Packed => "packed",
         ExecMode::Stub => "stub",
     };
+    // `--stub-engine` serves a device mode on the host-only engine —
+    // only packed has such a path; the worker rejects other modes.
+    let stub_engine = args.switch("stub-engine");
 
     let scenarios = bass::loadgen::scenarios(&arrival, deterministic, n,
                                              rate, seed, slo_ms)?;
@@ -279,7 +292,7 @@ fn serving_cmd(args: &Args) -> Result<()> {
         // A fresh coordinator per scenario: engine-lifetime counters
         // (rebuckets, queue stats) start at zero, and one scenario's
         // backlog cannot bleed into the next one's latencies.
-        let cfg = CoordinatorConfig::new(
+        let mut cfg = CoordinatorConfig::new(
             artifacts_root(),
             spec.clone(),
             bass::coordinator::batcher::BatcherConfig {
@@ -287,6 +300,7 @@ fn serving_cmd(args: &Args) -> Result<()> {
                 window: std::time::Duration::from_millis(window_ms),
             },
         );
+        cfg.stub_engine = stub_engine;
         let (outcomes, makespan) = if tcp {
             let coord = Arc::new(Coordinator::start(cfg)?);
             let (addr_tx, addr_rx) = std::sync::mpsc::channel();
@@ -336,6 +350,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     // Priority preemption (suspend/resume-by-recompute) is on by default;
     // --no-preempt keeps the ranked queue but never suspends running work.
     cfg.preempt = !args.switch("no-preempt");
+    cfg.stub_engine = args.switch("stub-engine");
     let addr = format!("127.0.0.1:{}", args.usize_flag("port", 4781)?);
     let coord = Arc::new(Coordinator::start(cfg)?);
     println!("[serve] engine ready");

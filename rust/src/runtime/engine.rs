@@ -355,6 +355,47 @@ impl Engine {
         Ok(StepOut { logits, caches: new_caches })
     }
 
+    /// Packed-segment decode/verify step (`ExecMode::Packed`): the
+    /// batch's ragged rows laid back-to-back in one `[1, C]` token
+    /// stream (`C = batch * q_cap`, `q_cap` a `bucket_packed_q` ladder
+    /// member), addressed by `qoffs` `[B+1]` cumulative offsets.
+    /// Consumes `caches` (donated, `[B]`-fused like `decode`) and
+    /// returns logits `[1, C, V]` — position `qoffs[i] + j` holds row
+    /// i's logits for its token j — plus the successor cache buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_packed(&self, model: &str, precision: Precision,
+                         attn: Attn, batch: usize, q_cap: usize,
+                         tokens: &[i32], qoffs: &[i32], seq_lens: &[i32],
+                         caches: Vec<PjRtBuffer>) -> Result<StepOut> {
+        let c_tok = batch * q_cap;
+        if tokens.len() != c_tok || qoffs.len() != batch + 1
+            || seq_lens.len() != batch
+        {
+            bail!("decode_packed shape mismatch");
+        }
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::DecodePacked,
+            batch, q: q_cap, attn,
+        };
+        let w = self.weights(model, precision)?;
+        let t = self.upload_i32(tokens, &[1, c_tok])?;
+        let o = self.upload_i32(qoffs, &[batch + 1])?;
+        let l = self.upload_i32(seq_lens, &[batch])?;
+        let mut inputs: Vec<&PjRtBuffer> = w.iter().collect();
+        inputs.extend([&t, &o, &l]);
+        inputs.extend(caches.iter());
+        let mut outs = self.run(&key, &inputs, "decode_packed")?;
+        drop(caches); // donated: handles must not be reused
+        let n_cache = self.manifest.model(model)?.n_cache_bufs();
+        if outs.len() != 1 + n_cache {
+            bail!("decode_packed: expected {} outputs, got {}",
+                  1 + n_cache, outs.len());
+        }
+        let new_caches = outs.split_off(1);
+        let logits = self.download_f32(&outs[0])?;
+        Ok(StepOut { logits, caches: new_caches })
+    }
+
     /// One fused draft call: ingest 1–2 catch-up tokens per sequence, then
     /// draft `k` tokens with in-graph nucleus sampling. `uniforms` `[B, K]`
     /// supplies the randomness (host-controlled, reproducible);
@@ -391,6 +432,53 @@ impl Engine {
         if outs.len() != 2 + n_cache {
             bail!("draft: expected {} outputs, got {}", 2 + n_cache,
                   outs.len());
+        }
+        let new_caches = outs.split_off(2);
+        let tokens = self.download_i32(&outs[0])?;
+        let qdists = self.download_f32(&outs[1])?;
+        Ok(DraftOut { tokens, qdists, caches: new_caches })
+    }
+
+    /// Offset-addressed fused draft call (`ExecMode::Packed`): same
+    /// resync + K-step loop as [`Engine::draft`], but `uniforms` is a
+    /// flat packed-prefix `[B*K]` buffer addressed by `koffs` `[B+1]`
+    /// (row i's `k_i = koffs[i+1] - koffs[i]` uniforms at
+    /// `koffs[i]..koffs[i+1]`), and the returned tokens `[B*K]` /
+    /// qdists `[B*K, V]` use the same packed-prefix layout.
+    #[allow(clippy::too_many_arguments)]
+    pub fn draft_packed(&self, model: &str, precision: Precision,
+                        attn: Attn, batch: usize, k: usize,
+                        tokens_in: &[i32], n_in: &[i32], seq_lens: &[i32],
+                        koffs: &[i32], uniforms: &[f32],
+                        temperature: &[f32], top_p: &[f32],
+                        caches: Vec<PjRtBuffer>) -> Result<DraftOut> {
+        if tokens_in.len() != batch * 2 || koffs.len() != batch + 1
+            || uniforms.len() != batch * k || temperature.len() != batch
+            || top_p.len() != batch
+        {
+            bail!("draft_packed shape mismatch");
+        }
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::DraftPacked,
+            batch, q: k, attn,
+        };
+        let w = self.weights(model, precision)?;
+        let t = self.upload_i32(tokens_in, &[batch, 2])?;
+        let n = self.upload_i32(n_in, &[batch])?;
+        let l = self.upload_i32(seq_lens, &[batch])?;
+        let o = self.upload_i32(koffs, &[batch + 1])?;
+        let u = self.upload_f32(uniforms, &[batch * k])?;
+        let temp = self.upload_f32(temperature, &[batch])?;
+        let tp = self.upload_f32(top_p, &[batch])?;
+        let mut inputs: Vec<&PjRtBuffer> = w.iter().collect();
+        inputs.extend([&t, &n, &l, &o, &u, &temp, &tp]);
+        inputs.extend(caches.iter());
+        let mut outs = self.run(&key, &inputs, "draft_packed")?;
+        drop(caches);
+        let n_cache = self.manifest.model(model)?.n_cache_bufs();
+        if outs.len() != 2 + n_cache {
+            bail!("draft_packed: expected {} outputs, got {}",
+                  2 + n_cache, outs.len());
         }
         let new_caches = outs.split_off(2);
         let tokens = self.download_i32(&outs[0])?;

@@ -15,14 +15,17 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::json::Json;
 
-/// Manifest (= artifact ABI) version this runtime speaks. v3: the grid
-/// exports a per-row `prefill_scatter` artifact per batch bucket (PAD
-/// mid-flight admission scatter-prefills a new sequence into a freed row
-/// of the running fused cache); v2 made the draft artifact take `[B]`
-/// per-row temperature/top_p vectors instead of scalars. Checked at load
-/// so an artifact/binary mismatch fails with a "rebuild" message instead
-/// of an opaque device shape error mid-request.
-pub const MANIFEST_VERSION: usize = 3;
+/// Manifest (= artifact ABI) version this runtime speaks. v4: the grid
+/// exports the packed-segment `decode_packed` / `draft_packed` programs
+/// (`ExecMode::Packed` packs the batch's ragged rows into one offset-
+/// addressed token stream); v3 added a per-row `prefill_scatter`
+/// artifact per batch bucket (PAD mid-flight admission scatter-prefills
+/// a new sequence into a freed row of the running fused cache); v2 made
+/// the draft artifact take `[B]` per-row temperature/top_p vectors
+/// instead of scalars. Checked at load so an artifact/binary mismatch
+/// fails with a "rebuild" message instead of an opaque device shape
+/// error mid-request.
+pub const MANIFEST_VERSION: usize = 4;
 
 /// Numeric precision of a model's weights (paper Tables 1–3 axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -67,6 +70,14 @@ pub enum Phase {
     Decode,
     /// Fused draft loop (resync + K auto-regressive steps); `q` = K.
     Draft,
+    /// Packed-segment verification (`ExecMode::Packed`): one `[1, C]`
+    /// token stream holding the batch's ragged rows back-to-back,
+    /// addressed by `[B+1]` cumulative offsets; `q` = per-row capacity
+    /// bucket, so C = `batch * q`.
+    DecodePacked,
+    /// Offset-addressed fused draft loop: uniforms and outputs live in a
+    /// packed-prefix `[B*K]` layout indexed by `[B+1]` koffs; `q` = K.
+    DraftPacked,
 }
 
 impl Phase {
@@ -76,6 +87,8 @@ impl Phase {
             "prefill_scatter" => Phase::PrefillScatter,
             "decode" => Phase::Decode,
             "draft" => Phase::Draft,
+            "decode_packed" => Phase::DecodePacked,
+            "draft_packed" => Phase::DraftPacked,
             _ => bail!("unknown phase '{s}'"),
         })
     }
@@ -171,11 +184,12 @@ impl Manifest {
         let version = j.get("version")?.as_usize()?;
         if version != MANIFEST_VERSION {
             bail!("artifact manifest is version {version}, this runtime \
-                   needs {MANIFEST_VERSION} (v3 added the per-row \
-                   prefill_scatter artifacts PAD mid-flight admission \
-                   uses; v2 changed the draft ABI to per-row \
-                   temperature/top_p vectors) — rebuild with \
-                   `make artifacts`");
+                   needs {MANIFEST_VERSION} (v4 added the packed-segment \
+                   decode_packed/draft_packed programs ExecMode::Packed \
+                   launches; v3 added the per-row prefill_scatter \
+                   artifacts PAD mid-flight admission uses; v2 changed \
+                   the draft ABI to per-row temperature/top_p vectors) — \
+                   rebuild with `make artifacts`");
         }
         let usize_arr = |v: &Json| -> Result<Vec<usize>> {
             v.as_arr()?.iter().map(|x| x.as_usize()).collect()
@@ -306,6 +320,25 @@ impl Manifest {
         best.max(buckets[0])
     }
 
+    /// Smallest packed per-row capacity bucket `q'` whose stream
+    /// `C = batch * q'` fits `sum_q` packed tokens. The ladder is
+    /// `{k + 1}` over the full draft-bucket range, so the rectangular
+    /// launch width `max_i q_i` is always a member: a packed launch
+    /// never carries more tokens than PAD's `batch * q_launch`
+    /// rectangle (Σq_i ≤ b·q_launch rounds to `q' ≤ q_launch`).
+    pub fn bucket_packed_q(&self, batch: usize, sum_q: usize)
+                           -> Result<usize> {
+        self.draft_k_buckets
+            .iter()
+            .map(|&k| k + 1)
+            .filter(|&q| q * batch >= sum_q)
+            .min()
+            .ok_or_else(|| {
+                anyhow!("{sum_q} packed tokens exceed the largest \
+                         decode_packed capacity at batch {batch}")
+            })
+    }
+
     /// Largest exported batch bucket (0 when none are exported) — the
     /// ceiling a live PAD re-bucket may grow to.
     pub fn largest_batch(&self) -> usize {
@@ -342,7 +375,7 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "version": 3, "vocab": 256, "eos": 0, "prefill_p": 64,
+      "version": 4, "vocab": 256, "eos": 0, "prefill_p": 64,
       "batches": [1, 2, 4], "draft_k_buckets": [1, 2, 4, 8],
       "small_k_buckets": [2, 4],
       "models": {"main": {"n_layer": 4, "n_head": 8, "d_model": 256,
@@ -353,7 +386,13 @@ mod tests {
         "batch": 1, "q": 1, "attn": "dense"},
         {"file": "hlo/main_f32_prefill_scatter64_b4.hlo.txt",
         "model": "main", "precision": "f32", "phase": "prefill_scatter",
-        "batch": 4, "q": 64, "attn": "dense"}],
+        "batch": 4, "q": 64, "attn": "dense"},
+        {"file": "hlo/main_f32_decode_packed3_b2.hlo.txt",
+        "model": "main", "precision": "f32", "phase": "decode_packed",
+        "batch": 2, "q": 3, "attn": "dense"},
+        {"file": "hlo/draft_a_f32_draft_packed4_b2.hlo.txt",
+        "model": "draft_a", "precision": "f32", "phase": "draft_packed",
+        "batch": 2, "q": 4, "attn": "dense"}],
       "calib": {"file": "hlo/gemm_calib.hlo.txt", "n": 768,
         "flops": 905969664}
     }"#;
@@ -385,20 +424,43 @@ mod tests {
             attn: Attn::Dense,
         };
         assert!(m.artifact_path(&scatter).is_ok());
+        // ...and so do the v4 packed-segment phases.
+        let packed = ArtifactKey {
+            model: "main".into(),
+            precision: Precision::F32,
+            phase: Phase::DecodePacked,
+            batch: 2,
+            q: 3,
+            attn: Attn::Dense,
+        };
+        assert!(m.artifact_path(&packed).is_ok());
+        let dpacked = ArtifactKey {
+            model: "draft_a".into(),
+            precision: Precision::F32,
+            phase: Phase::DraftPacked,
+            batch: 2,
+            q: 4,
+            attn: Attn::Dense,
+        };
+        assert!(m.artifact_path(&dpacked).is_ok());
     }
 
     #[test]
     fn stale_manifest_version_is_rejected_with_rebuild_hint() {
-        // Pre-v3 artifacts lack the per-row prefill_scatter programs (and
-        // pre-v2 ones export scalar draft temp/top_p): loading them with
-        // this runtime must fail up front, not at execute time.
-        for stale in ["\"version\": 1", "\"version\": 2"] {
-            let old = SAMPLE.replace("\"version\": 3", stale);
+        // Pre-v4 artifacts lack the packed-segment programs (pre-v3 the
+        // per-row prefill_scatter ones, pre-v2 export scalar draft
+        // temp/top_p): loading them with this runtime must fail up
+        // front, not at execute time, and the error must name both the
+        // missing programs and the rebuild command.
+        for stale in ["\"version\": 1", "\"version\": 2", "\"version\": 3"] {
+            let old = SAMPLE.replace("\"version\": 4", stale);
             let err = Manifest::parse(Path::new("/tmp/x"), &old)
                 .expect_err("stale manifest must be rejected");
             let msg = format!("{err:#}");
             assert!(msg.contains("make artifacts"),
                     "unhelpful error: {msg}");
+            assert!(msg.contains("decode_packed"),
+                    "error does not name the missing programs: {msg}");
         }
     }
 
@@ -413,6 +475,26 @@ mod tests {
         assert_eq!(m.bucket_batch(1).unwrap(), 1);
         assert!(m.bucket_batch(5).is_err());
         assert_eq!(m.largest_batch(), 4);
+    }
+
+    #[test]
+    fn packed_capacity_never_exceeds_the_pad_rectangle() {
+        // Ladder from SAMPLE: draft_k [1,2,4,8] -> q' ∈ {2,3,5,9}.
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.bucket_packed_q(4, 8).unwrap(), 2);
+        assert_eq!(m.bucket_packed_q(4, 9).unwrap(), 3);
+        assert_eq!(m.bucket_packed_q(2, 10).unwrap(), 5);
+        assert_eq!(m.bucket_packed_q(1, 9).unwrap(), 9);
+        assert!(m.bucket_packed_q(1, 10).is_err());
+        // The invariant the ladder encodes: for any ragged q_i drawn
+        // from the exported buckets, the packed capacity C = b·q' stays
+        // within PAD's rectangle b·max_i(q_i).
+        for &k_hi in &m.draft_k_buckets {
+            let (b, q_launch) = (4, k_hi + 1);
+            let sum: usize = (0..b).map(|_| q_launch).sum();
+            let qp = m.bucket_packed_q(b, sum).unwrap();
+            assert!(qp <= q_launch, "C grew past the PAD rectangle");
+        }
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Mode-agnostic exec backends: everything that used to branch on
 //! [`ExecMode`] inside the spec engine lives behind the [`Backend`]
 //! trait, so the batch orchestrator ([`super::SpecBatch`]) is written
-//! once against the contract below and [`PadBackend`] / [`SplitBackend`]
-//! own the device caches and the mode-specific row lifecycle.
+//! once against the contract below and [`PadBackend`] /
+//! [`SplitBackend`] / [`PackedBackend`] own the device caches and the
+//! mode-specific row lifecycle.
 //!
 //! # The backend contract
 //!
@@ -48,6 +49,46 @@
 //!    SPLIT declines (`live_bucket` = None): its slots are
 //!    per-sequence, there is nothing to re-shape.
 //!
+//! # The packed contract (`ExecMode::Packed`)
+//!
+//! [`PackedBackend`] keeps PAD's *row lifecycle* — fused caches, lazy
+//! bucketized start, `Husk`/`Shadow` reuse, scatter-prefill binds, live
+//! re-bucketing — but swaps the *step ABI*: instead of launching the
+//! `[B, q]` rectangle at the launch width, each step packs the ragged
+//! rows back-to-back into one offset-addressed token stream:
+//!
+//! - **Verify**: row i's `q_i` tokens sit at `qoffs[i]..qoffs[i+1]` of
+//!   a `[1, C]` stream with `C = B · q'`, `q'` the smallest
+//!   `Manifest::bucket_packed_q` ladder member holding `Σq_i` (always
+//!   `q' ≤` the launch `q`, so C never exceeds PAD's rectangle).
+//!   Dense FLOPs scale with `C ≈ Σq_i` instead of `B · max_i q_i`;
+//!   rows with `q_i = 0` (Husks, Shadows past their budget) cost
+//!   nothing. Logits come back in the same packed layout and are
+//!   unpacked to the launch-width `[B, q, V]` buffer the orchestrator
+//!   indexes, so acceptance is bitwise-identical to PAD.
+//! - **Draft**: uniforms/outputs use a packed-prefix `[B·k]` layout
+//!   addressed by `koffs`; the graph still computes the `[B, k]`
+//!   rectangle (the unrolled draft loop masks per-row), so the draft
+//!   saving is the launch unification, not FLOPs — the accounting below
+//!   stays honest about that.
+//!
+//! On a host-only (stub) engine the packed backend performs the stub
+//! backend's deterministic compute *in the packed layout* and unpacks,
+//! so `Packed` serves byte-identically to `Stub` on machines without
+//! the PJRT binding while still exercising the offset math end to end.
+//!
+//! # Launch-FLOP accounting
+//!
+//! Every backend's `draft`/`verify` also accrues
+//! [`FlopCounter::add_launch`]`(launch, padded_launch)`: `launch` is
+//! what the backend actually dispatched, `padded_launch` what the PAD
+//! rectangle of the same batch would have been. PAD and the stub launch
+//! the rectangle (`launch == padded_launch`); SPLIT launches each
+//! stepping row at its own bucket; packed verify launches the `C`-token
+//! stream (full per-row cost at `q_i` plus dense-only cost for the
+//! `C - Σq_i` capacity filler). The gap is the pad-FLOP saving the
+//! serving report surfaces (`BENCH_serving.json` `"flops"`).
+//!
 //! The *only* place an [`ExecMode`] becomes concrete is [`make`]; no
 //! other code in `spec/` may match on the mode.
 
@@ -56,7 +97,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 use xla::PjRtBuffer;
 
-use crate::flops::FlopCounter;
+use crate::flops::{step_flops, FlopCounter};
 use crate::kv::SeqState;
 use crate::runtime::{Engine, ModelInfo};
 use crate::sampling::Pcg32;
@@ -170,12 +211,24 @@ pub(super) trait Backend {
 }
 
 /// The one place an [`ExecMode`] becomes a concrete backend.
-pub(super) fn make(cfg: &SpecConfig, capacity: usize) -> Box<dyn Backend> {
+///
+/// `host_only` is the engine's `is_stub()`: only the packed backend is
+/// dual-engine and branches on it (device artifacts vs. stub-identical
+/// host compute in the packed layout). PAD/SPLIT ignore it — their
+/// device calls fail fast on a stub engine — and the stub backend never
+/// touches a device in the first place.
+pub(super) fn make(cfg: &SpecConfig, capacity: usize, host_only: bool)
+                   -> Box<dyn Backend> {
     match cfg.mode {
         ExecMode::Pad => Box::new(PadBackend { store: None }),
         ExecMode::Split => Box::new(SplitBackend {
             main: (0..capacity).map(|_| Vec::new()).collect(),
             draft: (0..capacity).map(|_| Vec::new()).collect(),
+        }),
+        ExecMode::Packed => Box::new(PackedBackend {
+            store: None,
+            started: false,
+            host_only,
         }),
         ExecMode::Stub => Box::new(StubBackend { started: false }),
     }
@@ -246,6 +299,120 @@ fn commit_bucket(cfg: &SpecConfig, p: usize, rows: &mut Vec<Row>,
     Ok(n_real)
 }
 
+/// Re-encode a fused batch at `bucket` rows: keep `Seq` rows (in slot
+/// order), drop `Husk`/`Shadow` rows, pad with fresh `Shadow` rows
+/// replicating the last real context, and run the fused prefill for
+/// both models over every row's context (tail-clamped only for rows
+/// whose outputs are dead — active rows are precondition-checked by
+/// the caller). Commits rows and `store` **only on success**, so a
+/// failed prefill leaves a running bucket untouched. Returns the
+/// number of carried real rows. Shared by [`PadBackend`] and the
+/// device path of [`PackedBackend`], whose cache lifecycle is PAD's.
+///
+/// Rows are encoded from their full `prompt ‖ generated` context, so
+/// sequences resumed before the start — and every row carried across
+/// a re-bucket — prefill their pre-existing output too: the bitwise
+/// recompute that makes both paths byte-exact. Suspended sequences
+/// handed in as `resumes` are encoded in this same launch, right
+/// after the carried rows — one fused prefill covers the move *and*
+/// the resumes, instead of a scatter prefill per resume afterwards.
+fn fused_prefill(
+    cx: &mut ExecCtx, rows: &mut Vec<Row>, bucket: usize,
+    resumes: Vec<Slot>,
+    store: &mut Option<(Vec<PjRtBuffer>, Vec<PjRtBuffer>)>,
+) -> Result<usize> {
+    let cfg = cx.cfg;
+    let eng = cx.engine;
+    let p = eng.manifest.prefill_p;
+    let mut real_ctx: Vec<Vec<u8>> = rows
+        .iter()
+        .filter_map(|r| match r {
+            Row::Seq(s) => Some(s.state.context_tail(p)),
+            _ => None,
+        })
+        .collect();
+    real_ctx.extend(resumes.iter().map(|s| s.state.context_tail(p)));
+    let n_real = real_ctx.len();
+    if n_real == 0 {
+        bail!("cannot start an empty fused batch");
+    }
+    if bucket < n_real {
+        bail!("bucket {bucket} cannot hold {n_real} occupied rows");
+    }
+    let last_ctx = real_ctx.last().expect("n_real >= 1").clone();
+    let mut tokens = vec![0i32; bucket * p];
+    let mut plens = vec![0i32; bucket];
+    for i in 0..bucket {
+        let ctx = if i < n_real { &real_ctx[i] } else { &last_ctx };
+        let (t, l) = encode_window(ctx, p);
+        tokens[i * p..(i + 1) * p].copy_from_slice(&t);
+        plens[i] = l;
+    }
+    let t0 = Instant::now();
+    let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn,
+                        bucket, &tokens, &plens)?;
+    let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn,
+                        bucket, &tokens, &plens)?;
+    *cx.prefill_secs += t0.elapsed().as_secs_f64();
+    cx.flops.add_prefill(cx.main_info, bucket, p);
+    cx.flops.add_prefill(cx.draft_info, bucket, p);
+    // Commit: compact Seq rows to the front, resumes after them,
+    // fresh Shadow padding last (exactly the padded rows the fused
+    // artifact computes anyway) — the same order the contexts were
+    // encoded in above.
+    let n = commit_bucket(cfg, p, rows, bucket, resumes)?;
+    *store = Some((m.caches, d.caches));
+    Ok(n)
+}
+
+/// Mid-flight scatter-prefill of `ctx` into a reusable row of a running
+/// fused bucket (both models); shared by [`PadBackend`] and the device
+/// path of [`PackedBackend`]. The row's whole KV slice is replaced, so
+/// the previous occupant cannot leak into the new sequence, and no
+/// other row is touched. Resolving + compiling the scatter executables
+/// first means the likely failures (stale pre-v3 artifact set, bucket
+/// not exported) reject only this admission/resume and leave the
+/// running batch intact — as do upload failures inside
+/// `prefill_into_slot`, which consumes the fused caches only at the
+/// execute itself. Only an execute failure (post-donation) is
+/// batch-fatal: the next step errors and the serving layer's recovery
+/// path rebuilds a fresh batch.
+fn scatter_bind(
+    cx: &mut ExecCtx, rows: &[Row], row: usize, ctx: &[u8],
+    store: &mut (Vec<PjRtBuffer>, Vec<PjRtBuffer>),
+) -> Result<()> {
+    let cfg = cx.cfg;
+    let eng = cx.engine;
+    let b = rows.len();
+    eng.ensure_prefill_scatter(&cfg.main_model, cfg.precision,
+                               cfg.attn, b)?;
+    eng.ensure_prefill_scatter(&cfg.draft_model, cfg.precision,
+                               cfg.attn, b)?;
+    let p = eng.manifest.prefill_p;
+    let (tokens, plen) = encode_window(ctx, p);
+    let (main, draft) = store;
+    let t0 = Instant::now();
+    eng.prefill_into_slot(&cfg.main_model, cfg.precision, cfg.attn, b,
+                          row, &tokens, plen, main)
+        .context("fused scatter prefill (main model)")?;
+    eng.prefill_into_slot(&cfg.draft_model, cfg.precision, cfg.attn, b,
+                          row, &tokens, plen, draft)
+        .context("fused scatter prefill (draft model)")?;
+    *cx.prefill_secs += t0.elapsed().as_secs_f64();
+    cx.flops.add_prefill(cx.main_info, 1, p);
+    cx.flops.add_prefill(cx.draft_info, 1, p);
+    Ok(())
+}
+
+/// Σᵢ `step_flops(info, 1, q, lens[i])` — the per-row sum both sides of
+/// the launch accounting are built from (PAD's rectangle when `q` is
+/// the launch width for every row).
+fn rect_launch_flops(info: &ModelInfo, q: usize, lens: &[i32]) -> f64 {
+    lens.iter()
+        .map(|&l| step_flops(info, 1, q, l as usize))
+        .sum()
+}
+
 // ---------------------------------------------------------------------
 // BASS-PAD: one fused artifact padded to the batch bucket.
 // ---------------------------------------------------------------------
@@ -255,70 +422,6 @@ fn commit_bucket(cfg: &SpecConfig, p: usize, rows: &mut Vec<Row>,
 pub(super) struct PadBackend {
     /// (main caches, draft caches); `None` until the fused prefill.
     store: Option<(Vec<PjRtBuffer>, Vec<PjRtBuffer>)>,
-}
-
-impl PadBackend {
-    /// Re-encode the batch at `bucket` rows: keep `Seq` rows (in slot
-    /// order), drop `Husk`/`Shadow` rows, pad with fresh `Shadow` rows
-    /// replicating the last real context, and run the fused prefill for
-    /// both models over every row's context (tail-clamped only for rows
-    /// whose outputs are dead — active rows are precondition-checked by
-    /// the caller). Commits rows and caches **only on success**, so a
-    /// failed prefill leaves a running bucket untouched. Returns the
-    /// number of carried real rows.
-    ///
-    /// Rows are encoded from their full `prompt ‖ generated` context, so
-    /// sequences resumed before the start — and every row carried across
-    /// a re-bucket — prefill their pre-existing output too: the bitwise
-    /// recompute that makes both paths byte-exact. Suspended sequences
-    /// handed in as `resumes` are encoded in this same launch, right
-    /// after the carried rows — one fused prefill covers the move *and*
-    /// the resumes, instead of a scatter prefill per resume afterwards.
-    fn fused_prefill(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
-                     bucket: usize, resumes: Vec<Slot>) -> Result<usize> {
-        let cfg = cx.cfg;
-        let eng = cx.engine;
-        let p = eng.manifest.prefill_p;
-        let mut real_ctx: Vec<Vec<u8>> = rows
-            .iter()
-            .filter_map(|r| match r {
-                Row::Seq(s) => Some(s.state.context_tail(p)),
-                _ => None,
-            })
-            .collect();
-        real_ctx.extend(resumes.iter().map(|s| s.state.context_tail(p)));
-        let n_real = real_ctx.len();
-        if n_real == 0 {
-            bail!("cannot start an empty PAD batch");
-        }
-        if bucket < n_real {
-            bail!("bucket {bucket} cannot hold {n_real} occupied rows");
-        }
-        let last_ctx = real_ctx.last().expect("n_real >= 1").clone();
-        let mut tokens = vec![0i32; bucket * p];
-        let mut plens = vec![0i32; bucket];
-        for i in 0..bucket {
-            let ctx = if i < n_real { &real_ctx[i] } else { &last_ctx };
-            let (t, l) = encode_window(ctx, p);
-            tokens[i * p..(i + 1) * p].copy_from_slice(&t);
-            plens[i] = l;
-        }
-        let t0 = Instant::now();
-        let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn,
-                            bucket, &tokens, &plens)?;
-        let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn,
-                            bucket, &tokens, &plens)?;
-        *cx.prefill_secs += t0.elapsed().as_secs_f64();
-        cx.flops.add_prefill(cx.main_info, bucket, p);
-        cx.flops.add_prefill(cx.draft_info, bucket, p);
-        // Commit: compact Seq rows to the front, resumes after them,
-        // fresh Shadow padding last (exactly the padded rows the fused
-        // artifact computes anyway) — the same order the contexts were
-        // encoded in above.
-        let n = commit_bucket(cfg, p, rows, bucket, resumes)?;
-        self.store = Some((m.caches, d.caches));
-        Ok(n)
-    }
 }
 
 impl Backend for PadBackend {
@@ -357,43 +460,15 @@ impl Backend for PadBackend {
     }
 
     /// Mid-flight scatter-prefill of `ctx` into a reusable row of the
-    /// running fused bucket (both models); a no-op before the lazy
-    /// start, which encodes the row itself. The row's whole KV slice is
-    /// replaced, so the previous occupant cannot leak into the new
-    /// sequence, and no other row is touched. Resolving + compiling the
-    /// scatter executables first means the likely failures (stale
-    /// pre-v3 artifact set, bucket not exported) reject only this
-    /// admission/resume and leave the running batch intact — as do
-    /// upload failures inside `prefill_into_slot`, which consumes the
-    /// fused caches only at the execute itself. Only an execute failure
-    /// (post-donation) is batch-fatal: the next step errors and the
-    /// serving layer's recovery path rebuilds a fresh batch.
+    /// running fused bucket (both models; see [`scatter_bind`] for the
+    /// failure containment); a no-op before the lazy start, which
+    /// encodes the row itself.
     fn bind_row(&mut self, cx: &mut ExecCtx, rows: &[Row], row: usize,
                 ctx: &[u8]) -> Result<()> {
-        let cfg = cx.cfg;
-        let eng = cx.engine;
-        if self.store.is_none() {
-            return Ok(()); // lazy start encodes this row's context
+        match self.store.as_mut() {
+            None => Ok(()), // lazy start encodes this row's context
+            Some(store) => scatter_bind(cx, rows, row, ctx, store),
         }
-        let b = rows.len();
-        eng.ensure_prefill_scatter(&cfg.main_model, cfg.precision,
-                                   cfg.attn, b)?;
-        eng.ensure_prefill_scatter(&cfg.draft_model, cfg.precision,
-                                   cfg.attn, b)?;
-        let p = eng.manifest.prefill_p;
-        let (tokens, plen) = encode_window(ctx, p);
-        let (main, draft) = self.store.as_mut().expect("store present");
-        let t0 = Instant::now();
-        eng.prefill_into_slot(&cfg.main_model, cfg.precision, cfg.attn, b,
-                              row, &tokens, plen, main)
-            .context("PAD scatter prefill (main model)")?;
-        eng.prefill_into_slot(&cfg.draft_model, cfg.precision, cfg.attn, b,
-                              row, &tokens, plen, draft)
-            .context("PAD scatter prefill (draft model)")?;
-        *cx.prefill_secs += t0.elapsed().as_secs_f64();
-        cx.flops.add_prefill(cx.main_info, 1, p);
-        cx.flops.add_prefill(cx.draft_info, 1, p);
-        Ok(())
     }
 
     /// PAD lazy start: bucketize the admitted count (rounded up by
@@ -407,7 +482,8 @@ impl Backend for PadBackend {
         }
         let b = cx.engine.manifest.bucket_batch_padded(
             n_real, cx.cfg.pad_headroom, capacity)?;
-        self.fused_prefill(cx, rows, b, Vec::new()).map(|_| ())
+        fused_prefill(cx, rows, b, Vec::new(), &mut self.store)
+            .map(|_| ())
     }
 
     fn draft(&mut self, cx: &mut ExecCtx, io: &DraftIo)
@@ -417,6 +493,9 @@ impl Backend for PadBackend {
         };
         let cfg = cx.cfg;
         let b = io.stepping.len();
+        // The fused artifact computes every bucket row at the launch k.
+        let rect = rect_launch_flops(cx.draft_info, io.k, io.dlens);
+        cx.flops.add_launch(rect, rect);
         let caches = std::mem::take(draft);
         let out = cx.engine.draft(&cfg.draft_model, cfg.precision,
                                   cfg.attn, b, io.k, io.tokens_in,
@@ -433,6 +512,9 @@ impl Backend for PadBackend {
         };
         let cfg = cx.cfg;
         let b = io.stepping.len();
+        // Every bucket row decodes at the launch q = k + 1.
+        let rect = rect_launch_flops(cx.main_info, io.q, io.mlens);
+        cx.flops.add_launch(rect, rect);
         let caches = std::mem::take(main);
         let out = cx.engine.decode(&cfg.main_model, cfg.precision,
                                    cfg.attn, b, io.q, io.vtokens,
@@ -472,7 +554,7 @@ impl Backend for PadBackend {
         if self.store.is_none() {
             bail!("PAD batch has not started; nothing to re-bucket");
         }
-        self.fused_prefill(cx, rows, bucket, resumes)
+        fused_prefill(cx, rows, bucket, resumes, &mut self.store)
     }
 }
 
@@ -536,6 +618,20 @@ impl Backend for SplitBackend {
         let k = io.k;
         let mut toks = vec![0i32; b * k];
         let mut qd = vec![0f32; b * k * vocab];
+        // SPLIT launches each stepping row at its own k_i bucket; the
+        // PAD equivalent would run those rows at the launch k.
+        let mut launch = 0.0;
+        let mut rect = 0.0;
+        for i in 0..b {
+            if !io.stepping[i] {
+                continue;
+            }
+            let ctx = io.dlens[i] as usize;
+            launch += step_flops(cx.draft_info, 1,
+                                 io.klens[i] as usize, ctx);
+            rect += step_flops(cx.draft_info, 1, k, ctx);
+        }
+        cx.flops.add_launch(launch, rect);
         for i in 0..b {
             if !io.stepping[i] {
                 continue; // SPLIT skips finished/free slots
@@ -567,6 +663,18 @@ impl Backend for SplitBackend {
         let b = io.stepping.len();
         let q = io.q;
         let mut logits = vec![0f32; b * q * vocab];
+        let mut launch = 0.0;
+        let mut rect = 0.0;
+        for i in 0..b {
+            if !io.stepping[i] {
+                continue;
+            }
+            let ctx = io.mlens[i] as usize;
+            launch += step_flops(cx.main_info, 1,
+                                 io.qlens[i] as usize, ctx);
+            rect += step_flops(cx.main_info, 1, q, ctx);
+        }
+        cx.flops.add_launch(launch, rect);
         for i in 0..b {
             if !io.stepping[i] {
                 continue;
@@ -606,6 +714,282 @@ impl Backend for SplitBackend {
 
     fn live_bucket(&self, _rows: &[Row]) -> Option<usize> {
         None // per-sequence slots: no fused bucket to re-shape
+    }
+}
+
+// ---------------------------------------------------------------------
+// BASS-PACKED: one offset-addressed launch over the ragged rows.
+// ---------------------------------------------------------------------
+
+/// Packed-segment backend (see the module docs): PAD's fused-bucket
+/// row lifecycle with an offset-addressed step ABI. Dual-engine —
+/// device artifacts (`decode_packed` / `draft_packed`, manifest v4) on
+/// a real engine; stub-identical host compute in the packed layout on
+/// a stub one, so serving/CI exercise the pack/unpack math without a
+/// device.
+pub(super) struct PackedBackend {
+    /// (main caches, draft caches) once the fused prefill ran; always
+    /// `None` on a host-only engine.
+    store: Option<(Vec<PjRtBuffer>, Vec<PjRtBuffer>)>,
+    /// Lazy-start flag; on a device engine it tracks `store`, on a
+    /// host-only engine it is the whole started state (like the stub).
+    started: bool,
+    /// Stub engine: no device work, host compute in the packed layout.
+    host_only: bool,
+}
+
+impl PackedBackend {
+    /// Cumulative segment offsets `[0, l_0, l_0+l_1, ...]` (`B + 1`
+    /// entries) over per-row lengths — the `qoffs`/`koffs` ABI input.
+    fn offsets(lens: &[i32]) -> Vec<i32> {
+        let mut offs = Vec::with_capacity(lens.len() + 1);
+        let mut acc = 0i32;
+        offs.push(0);
+        for &l in lens {
+            acc += l;
+            offs.push(acc);
+        }
+        offs
+    }
+}
+
+impl Backend for PackedBackend {
+    fn started(&self) -> bool {
+        self.started
+    }
+
+    fn free_slots(&self, rows: &[Row]) -> usize {
+        if self.started {
+            rows.iter()
+                .filter(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+                .count()
+        } else {
+            rows.iter().filter(|r| r.is_free()).count()
+        }
+    }
+
+    fn admissible_row(&self, rows: &[Row]) -> Result<usize> {
+        if self.started {
+            rows.iter()
+                .position(|r| matches!(r, Row::Husk(_) | Row::Shadow(_)))
+                .ok_or_else(|| {
+                    anyhow!("no reusable packed row (bucket of {} fully \
+                             live; wait for a retirement, a re-bucket, \
+                             or the drain)",
+                            rows.len())
+                })
+        } else {
+            rows.iter().position(Row::is_free).ok_or_else(|| {
+                anyhow!("no free slot (capacity {})", rows.len())
+            })
+        }
+    }
+
+    /// Device engine: PAD's mid-flight scatter prefill into a reusable
+    /// bucket row. Host-only: nothing to build (like the stub). Both
+    /// are no-ops before the lazy start, which encodes the row itself.
+    fn bind_row(&mut self, cx: &mut ExecCtx, rows: &[Row], row: usize,
+                ctx: &[u8]) -> Result<()> {
+        match self.store.as_mut() {
+            Some(store) => scatter_bind(cx, rows, row, ctx, store),
+            None => Ok(()),
+        }
+    }
+
+    /// Lazy start: bucketize like PAD (headroom applied) and commit the
+    /// row table — with the fused prefill on a device engine, without
+    /// it on a host-only one.
+    fn start(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
+             capacity: usize) -> Result<()> {
+        let n_real = rows.iter().filter(|r| !r.is_free()).count();
+        if n_real == 0 {
+            bail!("cannot start an empty packed batch");
+        }
+        let b = cx.engine.manifest.bucket_batch_padded(
+            n_real, cx.cfg.pad_headroom, capacity)?;
+        if self.host_only {
+            commit_bucket(cx.cfg, cx.engine.manifest.prefill_p, rows, b,
+                          Vec::new())?;
+        } else {
+            fused_prefill(cx, rows, b, Vec::new(), &mut self.store)?;
+        }
+        self.started = true;
+        Ok(())
+    }
+
+    fn draft(&mut self, cx: &mut ExecCtx, io: &DraftIo)
+             -> Result<(Vec<i32>, Vec<f32>)> {
+        let cfg = cx.cfg;
+        let vocab = cx.engine.manifest.vocab;
+        let b = io.stepping.len();
+        let k = io.k;
+        // The packed draft graph still computes the [B, k] rectangle
+        // (the unrolled loop masks per row), so the draft launch is
+        // PAD's — the packed saving is the verify stream.
+        let rect = rect_launch_flops(cx.draft_info, k, io.dlens);
+        cx.flops.add_launch(rect, rect);
+        // Pack the launch-width uniforms into the packed-prefix [B·k]
+        // layout the artifact addresses through koffs.
+        let koffs = Self::offsets(io.klens);
+        let mut packed_u = vec![0f32; b * k];
+        for i in 0..b {
+            let ki = io.klens[i] as usize;
+            let o = koffs[i] as usize;
+            packed_u[o..o + ki]
+                .copy_from_slice(&io.uniforms[i * k..i * k + ki]);
+        }
+        let (ptoks, pqd) = if self.host_only {
+            // Stub-identical compute, in the packed layout: token t of
+            // the stream draws from the same uniform the launch-width
+            // stub would use, so the unpacked outputs match bitwise.
+            let mut t = vec![0i32; b * k];
+            let mut qdp = vec![0f32; b * k * vocab];
+            for x in 0..koffs[b] as usize {
+                let tok = stub_token(packed_u[x], vocab);
+                t[x] = tok as i32;
+                qdp[x * vocab + tok] = 1.0;
+            }
+            (t, qdp)
+        } else {
+            let Some((_, draft)) = self.store.as_mut() else {
+                bail!("packed store missing");
+            };
+            let caches = std::mem::take(draft);
+            let out = cx.engine.draft_packed(
+                &cfg.draft_model, cfg.precision, cfg.attn, b, k,
+                io.tokens_in, io.n_in, io.dlens, &koffs, &packed_u,
+                io.temps, io.tps, caches)?;
+            *draft = out.caches;
+            (out.tokens, out.qdists)
+        };
+        // Unpack to the launch-width layout the orchestrator indexes;
+        // positions past a row's k_i stay zero and are never read.
+        let mut toks = vec![0i32; b * k];
+        let mut qd = vec![0f32; b * k * vocab];
+        for i in 0..b {
+            let ki = io.klens[i] as usize;
+            let o = koffs[i] as usize;
+            toks[i * k..i * k + ki].copy_from_slice(&ptoks[o..o + ki]);
+            qd[i * k * vocab..(i * k + ki) * vocab]
+                .copy_from_slice(&pqd[o * vocab..(o + ki) * vocab]);
+        }
+        Ok((toks, qd))
+    }
+
+    fn verify(&mut self, cx: &mut ExecCtx, io: &VerifyIo)
+              -> Result<Vec<f32>> {
+        let cfg = cx.cfg;
+        let eng = cx.engine;
+        let vocab = eng.manifest.vocab;
+        let b = io.stepping.len();
+        let q = io.q;
+        let qoffs = Self::offsets(io.qlens);
+        let sum_q = qoffs[b] as usize;
+        let q_cap = eng.manifest.bucket_packed_q(b, sum_q)?;
+        let c = b * q_cap;
+        // Launch accounting: real rows at their own q_i (Husk/Shadow
+        // rows past their budget have q_i = 0 and cost nothing); the
+        // C - Σq_i capacity filler costs dense GEMMs only (it attends
+        // to nothing). The padded side is PAD's bucket rectangle.
+        let mut launch = 0.0;
+        let mut rect = 0.0;
+        for i in 0..b {
+            let ctx = io.mlens[i] as usize;
+            rect += step_flops(cx.main_info, 1, q, ctx);
+            let qi = io.qlens[i] as usize;
+            if qi > 0 {
+                launch += step_flops(cx.main_info, 1, qi, ctx);
+            }
+        }
+        launch +=
+            2.0 * cx.main_info.param_count as f64 * (c - sum_q) as f64;
+        cx.flops.add_launch(launch, rect);
+        // Pack the launch-width verify tokens into the [1, C] stream.
+        let mut ptokens = vec![0i32; c];
+        for i in 0..b {
+            let qi = io.qlens[i] as usize;
+            let o = qoffs[i] as usize;
+            ptokens[o..o + qi]
+                .copy_from_slice(&io.vtokens[i * q..i * q + qi]);
+        }
+        let plogits = if self.host_only {
+            // Stub-identical compute in the packed layout: position
+            // qoffs[i] + j agrees one-hot with draft token j + 1 of
+            // its own segment; the bonus sits at the segment's end.
+            let mut lg = vec![0f32; c * vocab];
+            for i in 0..b {
+                let qi = io.qlens[i] as usize;
+                if qi == 0 {
+                    continue;
+                }
+                let o = qoffs[i] as usize;
+                for j in 0..qi - 1 {
+                    let d = (ptokens[o + 1 + j] as usize).min(vocab - 1);
+                    lg[(o + j) * vocab + d] = STUB_LOGIT;
+                }
+                let bonus = 1 + (io.mlens[i] as usize % stub_span(vocab));
+                lg[(o + qi - 1) * vocab + bonus] = STUB_LOGIT;
+            }
+            lg
+        } else {
+            let Some((main, _)) = self.store.as_mut() else {
+                bail!("packed store missing");
+            };
+            let caches = std::mem::take(main);
+            let out = eng.decode_packed(&cfg.main_model, cfg.precision,
+                                        cfg.attn, b, q_cap, &ptokens,
+                                        &qoffs, io.mlens, caches)?;
+            *main = out.caches;
+            out.logits
+        };
+        // Unpack to [B, q, V]; the host reads a row only at 0..q_i, so
+        // the zero tail past it is never observed.
+        let mut logits = vec![0f32; b * q * vocab];
+        for i in 0..b {
+            let qi = io.qlens[i] as usize;
+            let o = qoffs[i] as usize;
+            logits[i * q * vocab..(i * q + qi) * vocab]
+                .copy_from_slice(&plogits[o * vocab..(o + qi) * vocab]);
+        }
+        Ok(logits)
+    }
+
+    fn release(&mut self, rows: &mut [Row], idx: usize) -> Slot {
+        let replacement = if self.started {
+            match &rows[idx] {
+                Row::Seq(s) => Row::Husk(s.state.clone()),
+                _ => unreachable!("release of a non-Seq row"),
+            }
+        } else {
+            Row::Free
+        };
+        let Row::Seq(slot) = std::mem::replace(&mut rows[idx], replacement)
+        else {
+            unreachable!("release of a non-Seq row");
+        };
+        slot
+    }
+
+    fn reset(&mut self) {
+        self.store = None;
+        self.started = false;
+    }
+
+    fn live_bucket(&self, rows: &[Row]) -> Option<usize> {
+        self.started.then_some(rows.len())
+    }
+
+    fn rebucket(&mut self, cx: &mut ExecCtx, rows: &mut Vec<Row>,
+                bucket: usize, resumes: Vec<Slot>) -> Result<usize> {
+        if !self.started {
+            bail!("packed batch has not started; nothing to re-bucket");
+        }
+        if self.host_only {
+            commit_bucket(cx.cfg, cx.engine.manifest.prefill_p, rows,
+                          bucket, resumes)
+        } else {
+            fused_prefill(cx, rows, bucket, resumes, &mut self.store)
+        }
     }
 }
 
@@ -714,6 +1098,9 @@ impl Backend for StubBackend {
         let k = io.k;
         let mut toks = vec![0i32; b * k];
         let mut qd = vec![0f32; b * k * vocab];
+        // Accounting mirrors the PAD rectangle the stub stands in for.
+        let rect = rect_launch_flops(cx.draft_info, k, io.dlens);
+        cx.flops.add_launch(rect, rect);
         // Honor the raggedness exactly: each row emits its own k_i
         // tokens from its own k_i uniforms; launch-width filler
         // positions stay zero (the host never reads them, matching the
@@ -734,6 +1121,8 @@ impl Backend for StubBackend {
         let b = io.stepping.len();
         let q = io.q;
         let mut logits = vec![0f32; b * q * vocab];
+        let rect = rect_launch_flops(cx.main_info, q, io.mlens);
+        cx.flops.add_launch(rect, rect);
         for i in 0..b {
             // This row's own verify width q_i = k_i + 1; rows without a
             // slot (qlens 0) emit nothing — their outputs are dead.
@@ -828,12 +1217,17 @@ mod tests {
 
     #[test]
     fn make_builds_the_mode_matching_backend() {
-        let pad = make(&SpecConfig::default(), 4);
+        let pad = make(&SpecConfig::default(), 4, false);
         assert!(!pad.started(), "PAD starts lazily at the fused prefill");
         let split = make(&SpecConfig { mode: ExecMode::Split,
-                                       ..SpecConfig::default() }, 4);
+                                       ..SpecConfig::default() }, 4,
+                         false);
         assert!(split.started(), "SPLIT slots need no fused start");
         assert!(split.live_bucket(&[]).is_none());
+        let packed = make(&SpecConfig { mode: ExecMode::Packed,
+                                        ..SpecConfig::default() }, 4,
+                          true);
+        assert!(!packed.started(), "packed starts lazily like PAD");
     }
 
     #[test]
@@ -877,7 +1271,7 @@ mod tests {
     fn split_rows_are_per_slot_and_never_bucketed() {
         let cfg = SpecConfig { mode: ExecMode::Split,
                                ..SpecConfig::default() };
-        let mut be = make(&cfg, 2);
+        let mut be = make(&cfg, 2, false);
         let mut rows = [Row::Seq(slot(0, vec![1, 2])), Row::Free];
         assert_eq!(be.free_slots(&rows), 1);
         assert_eq!(be.admissible_row(&rows).unwrap(), 1);
@@ -895,7 +1289,7 @@ mod tests {
     fn stub_mirrors_the_pad_row_lifecycle() {
         let cfg = SpecConfig { mode: ExecMode::Stub,
                                ..SpecConfig::default() };
-        let mut be = make(&cfg, 4);
+        let mut be = make(&cfg, 4, true);
         assert!(!be.started(), "stub starts lazily like PAD");
         let mut rows = vec![Row::Seq(slot(0, vec![1, 2])), Row::Free];
         assert_eq!(be.free_slots(&rows), 1);
@@ -1087,5 +1481,178 @@ mod tests {
         let row1 = &logits[q * vocab..];
         assert!(row1[4 * vocab..5 * vocab].contains(&STUB_LOGIT),
                 "row 1's bonus sits at the launch q - 1");
+    }
+
+    // -- packed backend ----------------------------------------------------
+
+    #[test]
+    fn packed_offsets_are_cumulative() {
+        assert_eq!(PackedBackend::offsets(&[2, 0, 3]), vec![0, 2, 2, 5]);
+        assert_eq!(PackedBackend::offsets(&[]), vec![0]);
+    }
+
+    #[test]
+    fn packed_host_mirrors_the_pad_row_lifecycle() {
+        let eng = Engine::stub();
+        let cfg = SpecConfig { mode: ExecMode::Packed,
+                               ..SpecConfig::default() };
+        let main_info = eng.manifest.model("main").unwrap().clone();
+        let draft_info = eng.manifest.model("draft_a").unwrap().clone();
+        let mut secs = 0.0;
+        let mut flops = FlopCounter::default();
+        let mut cx = ExecCtx {
+            engine: &eng,
+            cfg: &cfg,
+            main_info: &main_info,
+            draft_info: &draft_info,
+            prefill_secs: &mut secs,
+            flops: &mut flops,
+        };
+        let mut be = make(&cfg, 4, true);
+        let mut rows = vec![
+            Row::Seq(slot(0, vec![1, 2])),
+            Row::Seq(slot(1, vec![3, 4, 5])),
+            Row::Free,
+            Row::Free,
+        ];
+        assert!(!be.started());
+        be.start(&mut cx, &mut rows, 4).unwrap();
+        assert!(be.started());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(be.live_bucket(&rows), Some(2));
+        // Retiring a live row husks it, like a running PAD bucket.
+        let s = be.release(&mut rows, 0);
+        assert_eq!(s.id, 0);
+        assert!(matches!(rows[0], Row::Husk(_)));
+        assert_eq!(be.free_slots(&rows), 1);
+        assert_eq!(be.admissible_row(&rows).unwrap(), 0);
+        // Host-only bind is stateless, like the stub.
+        be.bind_row(&mut cx, &rows, 0, &[7, 8]).unwrap();
+        // Re-bucket to 4 drops the Husk and pads with Shadows.
+        be.rebucket(&mut cx, &mut rows, 4, Vec::new()).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(
+            rows.iter().filter(|r| matches!(r, Row::Shadow(_))).count(),
+            3);
+        assert_eq!(secs, 0.0, "host-only packed does no device work");
+        be.reset();
+        assert!(!be.started());
+    }
+
+    #[test]
+    fn packed_host_step_matches_the_stub_bitwise() {
+        let eng = Engine::stub();
+        let cfg = SpecConfig { mode: ExecMode::Packed,
+                               ..SpecConfig::default() };
+        let main_info = eng.manifest.model("main").unwrap().clone();
+        let draft_info = eng.manifest.model("draft_a").unwrap().clone();
+        let mut secs = 0.0;
+        let mut flops = FlopCounter::default();
+        let mut cx = ExecCtx {
+            engine: &eng,
+            cfg: &cfg,
+            main_info: &main_info,
+            draft_info: &draft_info,
+            prefill_secs: &mut secs,
+            flops: &mut flops,
+        };
+        let mut packed = PackedBackend {
+            store: None, started: true, host_only: true,
+        };
+        let mut stub = StubBackend { started: true };
+        // Three rows: ragged k_i, one Husk (k_i = 0) in the middle.
+        let k = 4;
+        let uniforms: Vec<f32> =
+            (0..3 * k).map(|i| 0.03 + (i as f32) / 15.0).collect();
+        let io = DraftIo {
+            k,
+            tokens_in: &[5, 0, 0, 0, 6, 0],
+            n_in: &[1, 1, 1],
+            dlens: &[9, 7, 12],
+            klens: &[2, 0, 4],
+            uniforms: &uniforms,
+            temps: &[1.0, 1.0, 1.0],
+            tps: &[1.0, 1.0, 1.0],
+            stepping: &[true, false, true],
+        };
+        let (pt, pq) = packed.draft(&mut cx, &io).unwrap();
+        let (st, sq) = stub.draft(&mut cx, &io).unwrap();
+        assert_eq!(pt, st, "packed draft tokens match the stub bitwise");
+        assert_eq!(pq, sq, "packed draft q-dists match the stub bitwise");
+        // Verify: ragged q_i under launch q = 5, Husk row reads nothing.
+        let q = k + 1;
+        let mut vtokens = vec![0i32; 3 * q];
+        vtokens[0] = 5;
+        vtokens[1..3].copy_from_slice(&pt[0..2]);
+        vtokens[2 * q] = 6;
+        vtokens[2 * q + 1..2 * q + 1 + k].copy_from_slice(&pt[8..12]);
+        let vio = VerifyIo {
+            q,
+            vtokens: &vtokens,
+            mlens: &[10, 7, 13],
+            qlens: &[3, 0, 5],
+            stepping: &[true, false, true],
+        };
+        let pl = packed.verify(&mut cx, &vio).unwrap();
+        let sl = stub.verify(&mut cx, &vio).unwrap();
+        assert_eq!(pl, sl, "packed verify logits match the stub bitwise");
+    }
+
+    #[test]
+    fn packed_verify_launch_beats_the_pad_rectangle() {
+        let eng = Engine::stub();
+        let cfg = SpecConfig { mode: ExecMode::Packed,
+                               ..SpecConfig::default() };
+        let main_info = eng.manifest.model("main").unwrap().clone();
+        let draft_info = eng.manifest.model("draft_a").unwrap().clone();
+        let mut secs = 0.0;
+        let mut flops = FlopCounter::default();
+        let mut cx = ExecCtx {
+            engine: &eng,
+            cfg: &cfg,
+            main_info: &main_info,
+            draft_info: &draft_info,
+            prefill_secs: &mut secs,
+            flops: &mut flops,
+        };
+        let mut be = PackedBackend {
+            store: None, started: true, host_only: true,
+        };
+        // Ragged widths under launch q = 5: Σq_i = 8 rides the q' = 5
+        // ladder rung (C = 10), but row 0 only computes q_0 = 3.
+        let q = 5;
+        let vio = VerifyIo {
+            q,
+            vtokens: &vec![1i32; 2 * q],
+            mlens: &[20, 30],
+            qlens: &[3, 5],
+            stepping: &[true, true],
+        };
+        be.verify(&mut cx, &vio).unwrap();
+        assert!(flops.launch > 0.0);
+        assert!(flops.launch < flops.padded_launch,
+                "ragged widths must launch fewer FLOPs than PAD's \
+                 rectangle (launch {} vs padded {})",
+                flops.launch, flops.padded_launch);
+        // A fully rectangular batch packs with no saving beyond the
+        // ladder rounding: launch stays ≤ padded.
+        let mut flops2 = FlopCounter::default();
+        let mut cx2 = ExecCtx {
+            engine: &eng,
+            cfg: &cfg,
+            main_info: &main_info,
+            draft_info: &draft_info,
+            prefill_secs: &mut secs,
+            flops: &mut flops2,
+        };
+        let vio_full = VerifyIo {
+            q,
+            vtokens: &vec![1i32; 2 * q],
+            mlens: &[20, 30],
+            qlens: &[5, 5],
+            stepping: &[true, true],
+        };
+        be.verify(&mut cx2, &vio_full).unwrap();
+        assert!(flops2.launch <= flops2.padded_launch);
     }
 }

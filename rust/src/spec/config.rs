@@ -12,6 +12,14 @@ pub enum ExecMode {
     Pad,
     /// Per-sequence B=1 artifacts (BASS-SPLIT).
     Split,
+    /// One packed-segment launch: the batch's ragged rows are laid
+    /// back-to-back in a single offset-addressed token stream, so dense
+    /// FLOPs scale with Σq_i instead of PAD's b·max(q_i) rectangle and
+    /// SPLIT's launch count. Follows PAD's fused-bucket row lifecycle
+    /// (Husk/Shadow rows, live re-bucketing); on a stub engine it
+    /// computes host-side in the packed layout, byte-identical to
+    /// `Stub`.
+    Packed,
     /// Host-only deterministic backend: no device, no artifacts — the
     /// draft emits seeded byte tokens with one-hot q-distributions and
     /// verify agrees exactly, so every step accepts k+1 tokens. Mirrors

@@ -155,7 +155,7 @@ impl<'a> SpecBatch<'a> {
         let main_info = engine.manifest.model(&cfg.main_model)?.clone();
         let draft_info = engine.manifest.model(&cfg.draft_model)?.clone();
         let s_max = main_info.s_max as i32;
-        let backend = backend::make(&cfg, capacity);
+        let backend = backend::make(&cfg, capacity, engine.is_stub());
         Ok(SpecBatch {
             engine,
             cfg,

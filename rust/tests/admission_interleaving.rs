@@ -3,7 +3,7 @@
 //! fan-out, per-sequence sampling params and generation budgets, delayed
 //! retirement, slot/row reuse, random mid-generation preemptions with
 //! recompute-resume — every sequence must be **byte-identical** (and
-//! logP-identical) to its solo one-shot run, in both PAD and SPLIT
+//! logP-identical) to its solo one-shot run, in PAD, SPLIT and PACKED
 //! execution modes.
 //!
 //! `step_equivalence.rs` pins a handful of hand-picked interleavings;
@@ -331,7 +331,10 @@ fn run_mode(mode: ExecMode, policy: Policy) {
     // identity checks pin); SPLIT has no fused bucket and every rebucket
     // call must have declined as a no-op.
     match mode {
-        ExecMode::Pad => {
+        // PACKED follows the PAD fused-bucket lifecycle (same
+        // grow/shrink triggers over the same row states), so it shares
+        // PAD's re-bucketing floors.
+        ExecMode::Pad | ExecMode::Packed => {
             assert!(total.grows >= 10,
                     "{mode:?}: only {} live grows across {SCHEDULES} \
                      schedules — the harness is not exercising \
@@ -379,4 +382,22 @@ fn interleaved_admission_matches_solo_heuristic_pad() {
 fn interleaved_admission_matches_solo_heuristic_split() {
     require_artifacts!();
     run_mode(ExecMode::Split, Policy::Heuristic);
+}
+
+// PACKED under the same sweep: every admission/preemption/re-bucket
+// edge now also crosses the segment-packing round trip (qoffs/koffs
+// construction, filler rows for Husk/Shadow slots, unpack back to
+// launch-width layout) — under both policies, since Heuristic is what
+// makes the packed stream genuinely ragged.
+
+#[test]
+fn interleaved_admission_matches_solo_packed() {
+    require_artifacts!();
+    run_mode(ExecMode::Packed, Policy::Fixed(K));
+}
+
+#[test]
+fn interleaved_admission_matches_solo_heuristic_packed() {
+    require_artifacts!();
+    run_mode(ExecMode::Packed, Policy::Heuristic);
 }

@@ -1,10 +1,13 @@
 //! The archetype invariant behind continuous batching: driving the
 //! resumable `SpecBatch` API step by step must reproduce the one-shot
-//! `SpecEngine::generate` **byte for byte** (and logP for logP) — in both
-//! PAD and SPLIT execution modes. If this holds, the coordinator may
-//! interleave admission/retirement at any step boundary without changing
-//! any sequence's output, because each sequence's randomness and cache
-//! state are functions of (prompt, seed, admission index) alone.
+//! `SpecEngine::generate` **byte for byte** (and logP for logP) — in
+//! PAD, SPLIT and PACKED execution modes. If this holds, the
+//! coordinator may interleave admission/retirement at any step boundary
+//! without changing any sequence's output, because each sequence's
+//! randomness and cache state are functions of (prompt, seed, admission
+//! index) alone. For PACKED the same assertions additionally pin the
+//! segment-packing round trip: offsets, filler rows and the unpack back
+//! to launch-width layout must be invisible next to a solo run.
 
 use bass::bench_util::{artifacts_available, artifacts_root};
 use bass::kv::FinishReason;
@@ -97,6 +100,12 @@ fn stepwise_equals_oneshot_pad() {
 fn stepwise_equals_oneshot_split() {
     require_artifacts!();
     assert_equivalent(ExecMode::Split);
+}
+
+#[test]
+fn stepwise_equals_oneshot_packed() {
+    require_artifacts!();
+    assert_equivalent(ExecMode::Packed);
 }
 
 #[test]
@@ -212,6 +221,16 @@ fn mixed_params_cobatch_equals_solo_split() {
     assert_mixed_params_equivalent(ExecMode::Split);
 }
 
+/// Packed-vs-solo byte exactness under `Policy::Fixed`: ragged qlens
+/// (each row accepts differently) exercise the packed verify stream
+/// with real filler slack, and every request must still match its solo
+/// run exactly.
+#[test]
+fn mixed_params_cobatch_equals_solo_packed() {
+    require_artifacts!();
+    assert_mixed_params_equivalent(ExecMode::Packed);
+}
+
 /// The per-sequence-draft-length tentpole invariant: under the
 /// **adaptive** policy a request's output is a pure function of
 /// (prompt, seed, stream). Each row runs its own Algorithm-1 controller
@@ -281,6 +300,16 @@ fn heuristic_cobatch_equals_solo_pad() {
 fn heuristic_cobatch_equals_solo_split() {
     require_artifacts!();
     assert_heuristic_cobatch_equals_solo(ExecMode::Split);
+}
+
+/// Packed-vs-solo byte exactness under the **adaptive** policy: per-row
+/// controllers diverge, so the packed draft sees genuinely ragged k_i
+/// (packed-prefix uniforms) while verify sees ragged q_i — the full
+/// zero-pad layout, pinned bitwise against solo runs.
+#[test]
+fn heuristic_cobatch_equals_solo_packed() {
+    require_artifacts!();
+    assert_heuristic_cobatch_equals_solo(ExecMode::Packed);
 }
 
 /// The preemption invariant (acceptance criterion of the scheduler PR):
@@ -376,6 +405,15 @@ fn suspend_resume_is_invisible_pad() {
 fn suspend_resume_is_invisible_split() {
     require_artifacts!();
     assert_suspend_resume_identity(ExecMode::Split);
+}
+
+/// PACKED reuses the PAD fused-bucket lifecycle (suspend leaves a Husk
+/// row, resume scatter-prefills over it), so the preemption-invisibility
+/// contract must hold unchanged.
+#[test]
+fn suspend_resume_is_invisible_packed() {
+    require_artifacts!();
+    assert_suspend_resume_identity(ExecMode::Packed);
 }
 
 /// Resume must also be exact into a *running* PAD bucket: the suspended

@@ -7,6 +7,12 @@ adaptive draft-length controller per sequence. Draft stats are
 wall-clock-independent but policy-dependent, so they are schema-checked
 (present, numeric, p50 <= p99) yet never counter-gated.
 
+The per-scenario "flops" section (launch / padded_launch step-FLOP
+totals from the exec backends' launch accounting) is additive to v2:
+optional to have — older reports predate it — but hard-checked when
+present (numeric, 0 <= launch <= padded_launch; the packed backend's
+zero-pad claim is exactly that gap).
+
 Three modes:
 
   diff_bench_serving.py CHECK run.json
@@ -105,6 +111,18 @@ def check_report(doc, path):
                  f" < n_requests {c['n_requests']}")
         if c["all_finished"] and c["total_tokens"] <= 0:
             fail(f"{path}:{name}: all_finished with zero total_tokens")
+        # "flops" is additive (reports written before the packed backend
+        # lack it): optional to *have*, hard to get *wrong*. The packed
+        # backend's whole claim is launch <= padded_launch.
+        fl = s.get("flops")
+        if fl is not None:
+            for key in ("launch", "padded_launch"):
+                if not isinstance(fl.get(key), (int, float)):
+                    fail(f"{path}:{name}: flops.{key} not a number")
+            if fl["launch"] < 0 or fl["launch"] > fl["padded_launch"]:
+                fail(f"{path}:{name}: flops.launch {fl['launch']} "
+                     f"outside [0, padded_launch "
+                     f"{fl['padded_launch']}]")
     print(f"ok: {path} passes {SCHEMA} invariants "
           f"({len(doc['scenarios'])} scenario(s))")
 
