@@ -69,6 +69,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::kv::FinishReason;
+use crate::obs::{registry, SpanKind, Tracer};
+use crate::runtime::json::Json;
 use crate::runtime::Engine;
 use crate::spec::{AdmitOpts, ExecMode, SeqId, SpecBatch, SpecConfig,
                   SuspendedSeq};
@@ -203,6 +205,11 @@ pub enum Reply {
 
 enum Msg {
     Job(Request, Sender<Reply>),
+    /// On-demand metrics snapshot (`{"cmd":"stats"}` on the wire or
+    /// [`Coordinator::stats`]): the worker answers at the next message
+    /// drain with [`registry::snapshot`] — the same registry behind the
+    /// exit summary line, so the two can never drift.
+    Stats(Sender<Json>),
     Shutdown,
 }
 
@@ -234,6 +241,15 @@ pub struct CoordinatorConfig {
     /// startup rejects other modes, whose device calls could only fail
     /// later and more confusingly. Default false.
     pub stub_engine: bool,
+    /// Span recorder shared with the engine batch ([`crate::obs`]).
+    /// Disabled by default — recording is then a no-op and the
+    /// deterministic-counters contract is untouched. The handle is a
+    /// shared ring: clone it before `start()` to export the trace after
+    /// shutdown.
+    pub tracer: Tracer,
+    /// Emit a one-line registry snapshot to stderr every this many
+    /// seconds (`--stats-every`). None (default) disables the feed.
+    pub stats_every_secs: Option<f64>,
 }
 
 impl CoordinatorConfig {
@@ -246,6 +262,8 @@ impl CoordinatorConfig {
             preempt: true,
             prewarm: true,
             stub_engine: false,
+            tracer: Tracer::disabled(),
+            stats_every_secs: None,
         }
     }
 }
@@ -290,6 +308,18 @@ impl Coordinator {
     /// Convenience: submit and block for the response.
     pub fn generate(&self, req: Request) -> Result<Response> {
         Self::wait(self.submit(req))
+    }
+
+    /// On-demand live metrics snapshot ([`registry::snapshot`]): the
+    /// scheduler counters/gauges/series plus, when tracing is enabled,
+    /// the span summary. Answered at the worker's next message drain —
+    /// an idle worker wakes for it immediately.
+    pub fn stats(&self) -> Result<Json> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Stats(tx))
+            .map_err(|_| anyhow!("engine thread terminated"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread terminated"))
     }
 
     pub fn shutdown(mut self) {
@@ -439,6 +469,9 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             return;
         }
     };
+    batch.set_tracer(cfg.tracer.clone());
+    let tracer = cfg.tracer.clone();
+    let mode = cfg.spec.mode.as_str();
     let _ = ready.send(Ok(()));
 
     let mut sched = Scheduler::new(SchedulerConfig {
@@ -454,6 +487,7 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
     let mut seq_owner: HashMap<SeqId, u64> = HashMap::new();
     let mut next_id = 0u64;
     let mut open = true;
+    let mut last_emit = Instant::now();
 
     while open || !jobs.is_empty() || !inflight.is_empty() {
         // -- pull messages; block only when fully idle ---------------------
@@ -500,6 +534,23 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                         urgency,
                     });
                 }
+                Msg::Stats(tx) => {
+                    // Advisory read of the live registry; never touches
+                    // the batch, so it cannot perturb the deterministic
+                    // counters.
+                    let _ = tx.send(registry::snapshot(&sched.stats,
+                                                       &tracer));
+                }
+            }
+        }
+
+        // -- periodic stderr snapshot (--stats-every) ----------------------
+        if let Some(every) = cfg.stats_every_secs {
+            if last_emit.elapsed().as_secs_f64() >= every {
+                last_emit = Instant::now();
+                let snap = registry::snapshot(&sched.stats, &tracer);
+                eprintln!("[bass-engine] stats: {}",
+                          snap.to_string_pretty().replace('\n', " "));
             }
         }
 
@@ -542,6 +593,7 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             seq_owner.remove(&id);
             let Some(job) = inflight.get_mut(&owner) else { continue };
             job.preempted += 1;
+            tracer.instant(SpanKind::Suspend, owner, Some(id), mode, &[]);
             let fanout_index = job.seq_index.remove(&id).unwrap_or(0);
             sched.park(ParkedSeq {
                 snapshot: snap,
@@ -615,6 +667,9 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                             ids.into_iter().zip(metas)
                         {
                             seq_owner.insert(id, owner);
+                            tracer.instant(SpanKind::Resume, owner,
+                                           Some(id), mode,
+                                           &[("rebucket_rider", 1.0)]);
                             if let Some(job) = inflight.get_mut(&owner) {
                                 job.seq_index.insert(id, fanout_index);
                             }
@@ -666,6 +721,8 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 Ok(id) => {
                     sched.stats.resumes += 1;
                     seq_owner.insert(id, owner);
+                    tracer.instant(SpanKind::Resume, owner, Some(id),
+                                   mode, &[]);
                     if let Some(job) = inflight.get_mut(&owner) {
                         job.seq_index.insert(id, fanout_index);
                     }
@@ -706,6 +763,13 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 sched.submit(rid, job.req.n_seqs.max(1), job.urgency,
                              job.enqueued);
                 jobs.insert(rid, job);
+            } else if let Some(fl) = inflight.get(&rid) {
+                // Admitted (a `None` with no inflight entry was a
+                // failed admission, already answered).
+                tracer.instant(SpanKind::Admit, rid, None, mode, &[
+                    ("n_seqs", fl.remaining as f64),
+                    ("queue_ms", fl.queue_secs * 1e3),
+                ]);
             }
         }
         // Bucket-occupancy gauge: live rows of the fused bucket only —
@@ -730,6 +794,7 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 .map(|(&id, _)| id)
                 .collect();
             for owner in expired {
+                tracer.instant(SpanKind::Expire, owner, None, mode, &[]);
                 let queue_depth = sched.queue_depth();
                 let rebuckets = sched.stats.rebuckets();
                 let flops = (batch.flops.launch,
@@ -742,14 +807,15 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
                                &mut seq_owner, queue_depth, rebuckets,
-                               flops);
+                               flops, &tracer, mode);
                 }
                 for parked in sched.take_parked_of(owner) {
                     deliver_parked(parked, &mut inflight, queue_depth,
                                    rebuckets, flops);
                 }
             }
-            expire_queued_jobs(budget, &mut jobs, &mut sched);
+            expire_queued_jobs(budget, &mut jobs, &mut sched, &tracer,
+                               mode);
         }
 
         if !batch.has_active() {
@@ -764,7 +830,7 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
                                &mut seq_owner, queue_depth, rebuckets,
-                               flops);
+                               flops, &tracer, mode);
                 }
             } else if sched.has_queued() || sched.parked_count() > 0 {
                 // Waiting out the co-batching window (or a transiently
@@ -823,6 +889,12 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             job.drafted += ev.draft_len as u64;
             job.accepted += ev.accepted as u64;
             job.draft_steps += 1;
+            // Per-sequence step marker on the owning request's trace
+            // lane: this row's own draft length and acceptance, never
+            // the batch-global launch width.
+            tracer.instant(SpanKind::SeqStep, owner, Some(ev.id), mode,
+                           &[("k_i", ev.draft_len as f64),
+                             ("accepted", ev.accepted as f64)]);
             if !ev.new_bytes.is_empty() && job.ttft_secs.is_none() {
                 // First emitted byte of the whole request (any fan-out
                 // sequence), measured from submission. Set once: later
@@ -845,37 +917,18 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
         let flops = (batch.flops.launch, batch.flops.padded_launch);
         for id in report.finished {
             retire_seq(&mut batch, id, &mut inflight, &mut seq_owner,
-                       queue_depth, rebuckets, flops);
+                       queue_depth, rebuckets, flops, &tracer, mode);
         }
     }
 
-    // Serving-period scheduler summary (the [`crate::metrics::SchedStats`]
-    // counters): one stderr line at worker exit, next to the server's
-    // other diagnostics — preemption/resume volume and per-priority queue
-    // waits are fleet-tuning signals (window, max_batch, pad_headroom).
-    let st = &sched.stats;
-    if st.preemptions > 0 || st.resumes > 0 || st.max_queue_depth > 0
-        || st.rebuckets() > 0
-    {
-        let waits: Vec<String> = st
-            .queue_wait
-            .iter()
-            .map(|(p, w)| {
-                format!("p{p}:{:.1}ms×{}",
-                        st.mean_wait_secs(*p) * 1e3, w.requests)
-            })
-            .collect();
-        eprintln!("[bass-engine] scheduler: preemptions={} resumes={} \
-                   rebuckets={} (grow {} / shrink {}, {} rows migrated) \
-                   bucket_occ≈{:.0}% draft_len≈{:.1} accept≈{:.0}% \
-                   max_queue_depth={} queue_wait[{}]",
-                  st.preemptions, st.resumes, st.rebuckets(),
-                  st.rebuckets_grow, st.rebuckets_shrink,
-                  st.rebucket_migrated,
-                  st.mean_bucket_occupancy() * 100.0,
-                  st.mean_draft_len(),
-                  st.draft_acceptance() * 100.0,
-                  st.max_queue_depth, waits.join(" "));
+    // Serving-period scheduler summary: one stderr line at worker exit,
+    // next to the server's other diagnostics — preemption/resume volume
+    // and per-priority queue waits are fleet-tuning signals (window,
+    // max_batch, pad_headroom). The line is a formatted *view* of the
+    // same [`crate::metrics::SchedStats`] registry the `stats` command
+    // snapshots, so the two can never drift.
+    if let Some(line) = sched.stats.summary_line() {
+        eprintln!("[bass-engine] scheduler: {line}");
     }
 }
 
@@ -963,7 +1016,8 @@ fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
 /// shape an admitted-but-unfinished request reports. Its age runs from
 /// submission (there is no admission timestamp).
 fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
-                      sched: &mut Scheduler) {
+                      sched: &mut Scheduler, tracer: &Tracer,
+                      mode: &'static str) {
     let expired_queued: Vec<u64> = jobs
         .iter()
         .filter(|(_, j)| j.enqueued.elapsed().as_secs_f64() >= budget)
@@ -976,6 +1030,8 @@ fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
             continue;
         }
         let Some(job) = jobs.remove(&rid) else { continue };
+        tracer.instant(SpanKind::Expire, rid, None, mode,
+                       &[("queued", 1.0)]);
         let n = job.req.n_seqs.max(1);
         let _ = job.reply.send(Reply::Done(Ok(Response {
             seqs: (0..n)
@@ -1010,15 +1066,18 @@ fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
 /// into its request's response; answer the request when it was the last.
 /// `flops` is the engine-lifetime (launch, padded_launch) pair read at
 /// the step boundary.
+#[allow(clippy::too_many_arguments)]
 fn retire_seq(batch: &mut SpecBatch, id: SeqId,
               inflight: &mut HashMap<u64, InFlight>,
               seq_owner: &mut HashMap<SeqId, u64>, queue_depth: usize,
-              rebuckets: u64, flops: (f64, f64)) {
+              rebuckets: u64, flops: (f64, f64), tracer: &Tracer,
+              mode: &'static str) {
     let Some(owner) = seq_owner.remove(&id) else { return };
     let state = match batch.retire(id) {
         Ok(s) => s,
         Err(_) => return,
     };
+    tracer.instant(SpanKind::Retire, owner, Some(id), mode, &[]);
     let Some(job) = inflight.get_mut(&owner) else { return };
     let idx = job.seq_index[&id];
     job.done[idx] = Some(GenSeq {

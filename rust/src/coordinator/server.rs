@@ -76,6 +76,20 @@
 //! (`seqs.len() < n_requested`). Out-of-range sampling params (`top_p`
 //! outside (0, 1], non-finite or negative temperature) fail that request
 //! with `{"ok": false, ...}` at admission.
+//!
+//! **Admin command**: a line of `{"cmd": "stats"}` (instead of a
+//! request) answers with a one-line snapshot of the live metrics
+//! registry — the scheduler counters/gauges/series and, when tracing
+//! is enabled, the span summary ([`crate::obs::registry::snapshot`]):
+//!
+//! ```text
+//! -> {"cmd": "stats", "id": 7}
+//! <- {"ok": true, "id": 7, "stats": {"sched": {...}, "spans": {...}}}
+//! ```
+//!
+//! It pipelines like any request (the optional `"id"` is echoed) and
+//! reads the registry without touching the engine batch, so polling it
+//! never perturbs generation or the deterministic counters.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -129,6 +143,27 @@ fn handle_conn(coord: &Coordinator, stream: TcpStream) -> Result<()> {
         let line = line?;
         if line.trim().is_empty() {
             continue;
+        }
+        // Admin lines short-circuit before request parsing: `{"cmd":
+        // "stats"}` is answered inline from the live registry (the
+        // worker replies at its next message drain, immediately when
+        // idle) and never enters the scheduler queue.
+        if let Ok(j) = Json::parse(&line) {
+            if j.opt("cmd").and_then(|c| c.as_str().ok())
+                == Some("stats")
+            {
+                let id = j.opt("id").cloned();
+                let reply = match coord.stats() {
+                    Ok(stats) => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("stats", stats),
+                    ]),
+                    Err(e) => error_json(&format!("{e:#}")),
+                };
+                let Ok(mut w) = writer.lock() else { break };
+                write_line(&mut *w, &with_id(reply, &id))?;
+                continue;
+            }
         }
         let (id, parsed) = parse_line(&line);
         match parsed {

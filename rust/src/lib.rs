@@ -23,6 +23,7 @@
 //!   (the paper's RD anchor).
 //! * [`coordinator::Coordinator`] — request queue, dynamic batcher, server.
 //! * [`loadgen`] — open-loop serving load harness (`BENCH_serving.json`).
+//! * [`obs`] — step-span tracing + the live metrics registry.
 //! * [`eval`] — ROUGE-2 / Pass@K harnesses for the paper's tasks.
 
 pub mod baseline;
@@ -34,6 +35,7 @@ pub mod flops;
 pub mod kv;
 pub mod loadgen;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sampling;
 pub mod spec;

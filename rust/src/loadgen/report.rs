@@ -26,10 +26,20 @@
 //!                  "acceptance_rate": {"mean", "p50", "p99"}},
 //!     "flops":    {"launch", "padded_launch"},
 //!     "counters": {"n_requests", "n_seqs_requested", "total_tokens",
-//!                  "all_finished"}
+//!                  "all_finished"},
+//!     "observability": {...}   // additive; only with --trace-out
 //!   }, ...]
 //! }
 //! ```
+//!
+//! Distribution stats (`mean`/`p50`/`p99`) over an **empty** sample set
+//! — e.g. `ttft_ms` when every request expired unserved — are emitted
+//! as `null`, never a fake `0.0` and never a bare `NaN` (which the
+//! hand-rolled writer would emit unquoted). The optional
+//! `observability` section ([`attach_observability`]) carries the span
+//! summary, the trace-file pointer and the live-registry snapshot for
+//! runs traced with `--trace-out`; it is advisory and excluded from
+//! the deterministic-counters contract.
 //!
 //! `flops` reports the scenario's engine-lifetime step-FLOP totals:
 //! `launch` is what the backend actually dispatched, `padded_launch`
@@ -67,10 +77,22 @@ pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
         for x in xs {
             s.add(x);
         }
+        // An empty sample set has no distribution: its stats are
+        // explicitly `null`, never a fake 0.0 — and never a bare NaN,
+        // which the hand-rolled writer would emit unquoted (invalid
+        // JSON that `json.load` still accepts silently; the baseline
+        // diff rejects non-finite numbers outright).
+        let stat = |v: f64| -> Json {
+            if s.n() == 0 || !v.is_finite() {
+                Json::Null
+            } else {
+                v.into()
+            }
+        };
         Json::obj(vec![
-            ("mean", s.mean().into()),
-            ("p50", s.percentile(0.50).into()),
-            ("p99", s.percentile(0.99).into()),
+            ("mean", stat(s.mean())),
+            ("p50", stat(s.percentile(0.50))),
+            ("p99", stat(s.percentile(0.99))),
         ])
     };
     let served = outcomes.iter().filter(|o| o.ok).count();
@@ -165,6 +187,17 @@ pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
         ("flops", flops),
         ("counters", counters),
     ])
+}
+
+/// Attach the schema-additive per-scenario `observability` section
+/// (span summary, per-phase time shares, trace-file pointer, registry
+/// snapshot — see [`crate::obs`]). Additive on top of v2: the baseline
+/// diff ignores it, and reports written with tracing off omit it
+/// entirely, so the deterministic `counters` comparison is unaffected.
+pub fn attach_observability(entry: &mut Json, obs: Json) {
+    if let Json::Obj(map) = entry {
+        map.insert("observability".to_string(), obs);
+    }
 }
 
 /// Assemble the whole `BENCH_serving.json` document.
@@ -298,5 +331,54 @@ mod tests {
         let padded = f.get("padded_launch").unwrap().as_f64().unwrap();
         assert!((launch - 24.0e6).abs() < 1.0, "got launch {launch}");
         assert!(launch <= padded, "launch {launch} > padded {padded}");
+    }
+
+    /// Satellite regression: a scenario where nothing was ever served
+    /// (every request expired unserved) has **no** TTFT/TPOT samples —
+    /// the stats must come out `null`, not 0.0 and not an unquoted NaN
+    /// that would corrupt the JSON document.
+    #[test]
+    fn empty_sample_sets_emit_null_stats_not_nan() {
+        let outcomes = vec![outcome(30.0, 0, false)];
+        let j = scenario_report(&scenario(), &outcomes, 1.0);
+        let text = j.to_string_pretty();
+        assert!(!text.contains("NaN") && !text.contains("inf"),
+                "non-finite leaked into JSON: {text}");
+        let back = Json::parse(&text).unwrap();
+        let lat = back.get("latency").unwrap();
+        // ttft_ms has one sample (the expired outcome still carries a
+        // Some(ttft) in this fixture) but the draft section is sampled
+        // only from requests that drafted — zero of them here.
+        let d = back.get("draft").unwrap().get("draft_len").unwrap();
+        for stat in ["mean", "p50", "p99"] {
+            assert_eq!(d.get(stat).unwrap(), &Json::Null,
+                       "draft_len.{stat} should be null");
+        }
+        // And a fully empty iterator: e2e over zero ok-outcomes.
+        let none = scenario_report(&scenario(), &[], 1.0);
+        let e2e = none.get("latency").unwrap().get("e2e_ms").unwrap();
+        assert_eq!(e2e.get("mean").unwrap(), &Json::Null);
+        assert_eq!(e2e.get("p99").unwrap(), &Json::Null);
+        // Single-outcome sets still emit real numbers.
+        let q = lat.get("queue_ms").unwrap();
+        assert!(q.get("p50").unwrap().as_f64().is_ok());
+    }
+
+    #[test]
+    fn observability_section_is_additive() {
+        let outcomes = vec![outcome(20.0, 8, true)];
+        let sc = scenario();
+        let mut entry = scenario_report(&sc, &outcomes, 1.0);
+        attach_observability(&mut entry, Json::obj(vec![
+            ("trace_file", "trace.t.json".into()),
+        ]));
+        let obs = entry.get("observability").unwrap();
+        assert_eq!(obs.get("trace_file").unwrap().as_str().unwrap(),
+                   "trace.t.json");
+        // Everything the v2 schema promises is still there.
+        for section in ["latency", "goodput", "overhead", "draft",
+                        "flops", "counters"] {
+            assert!(entry.opt(section).is_some(), "missing {section}");
+        }
     }
 }

@@ -23,7 +23,11 @@
 //!   `--deterministic` selects the CI-gate workload whose counters are
 //!   timing-independent; `--mode packed --stub-engine` serves the
 //!   packed ragged backend's host-only path (same bytes as stub, packed
-//!   launch-FLOP accounting) without artifacts.
+//!   launch-FLOP accounting) without artifacts; `--trace-out t.json`
+//!   exports one Chrome trace per scenario (`t.<scenario>.json`) and
+//!   adds a per-scenario `observability` section to the report;
+//!   `--stats-every S` (also on `serve`) emits periodic registry
+//!   snapshots to stderr.
 //! * `eval`      — run a task (`--task code|summ`) and report accuracy.
 //! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
 //! * `info`      — print the manifest summary.
@@ -37,6 +41,8 @@ use bass::cli::Args;
 use bass::coordinator::{server, Coordinator, CoordinatorConfig};
 use bass::eval::{aggregate, judge, Candidate};
 use bass::kv::FinishReason;
+use bass::obs::Tracer;
+use bass::runtime::json::Json;
 use bass::runtime::{Attn, Engine, Precision};
 use bass::spec::{ExecMode, Policy, SpecConfig, SpecEngine};
 use bass::tokenizer;
@@ -275,15 +281,19 @@ fn serving_cmd(args: &Args) -> Result<()> {
     let max_batch = args.usize_flag("max-batch", 8)?;
     let window_ms = args.usize_flag("window-ms", 2)? as u64;
     let driver = if tcp { "tcp" } else { "direct" };
-    let mode_name = match spec.mode {
-        ExecMode::Pad => "pad",
-        ExecMode::Split => "split",
-        ExecMode::Packed => "packed",
-        ExecMode::Stub => "stub",
-    };
+    let mode_name = spec.mode.as_str();
     // `--stub-engine` serves a device mode on the host-only engine —
     // only packed has such a path; the worker rejects other modes.
     let stub_engine = args.switch("stub-engine");
+    // `--trace-out t.json` exports one Chrome trace per scenario
+    // (`t.<scenario>.json`, Perfetto-loadable). The span ring is
+    // advisory: the deterministic counters are byte-identical with it
+    // on or off (CI asserts this).
+    let trace_out = args.flag("trace-out");
+    let stats_every = args
+        .flag("stats-every")
+        .map(|v| v.parse::<f64>())
+        .transpose()?;
 
     let scenarios = bass::loadgen::scenarios(&arrival, deterministic, n,
                                              rate, seed, slo_ms)?;
@@ -301,7 +311,14 @@ fn serving_cmd(args: &Args) -> Result<()> {
             },
         );
         cfg.stub_engine = stub_engine;
-        let (outcomes, makespan) = if tcp {
+        let tracer = if trace_out.is_some() {
+            Tracer::wall(bass::obs::DEFAULT_RING_CAP)
+        } else {
+            Tracer::disabled()
+        };
+        cfg.tracer = tracer.clone();
+        cfg.stats_every_secs = stats_every;
+        let (outcomes, makespan, stats) = if tcp {
             let coord = Arc::new(Coordinator::start(cfg)?);
             let (addr_tx, addr_rx) = std::sync::mpsc::channel();
             let srv = coord.clone();
@@ -313,13 +330,31 @@ fn serving_cmd(args: &Args) -> Result<()> {
             let addr = addr_rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("server failed to bind"))?;
-            bass::loadgen::run_tcp(&addr.to_string(), sc)?
+            let (o, m) = bass::loadgen::run_tcp(&addr.to_string(), sc)?;
+            let stats = coord.stats().ok();
+            (o, m, stats)
         } else {
             let coord = Coordinator::start(cfg)?;
-            bass::loadgen::run_direct(&coord, sc)
+            let (o, m) = bass::loadgen::run_direct(&coord, sc);
+            let stats = coord.stats().ok();
+            (o, m, stats)
         };
-        let entry = bass::loadgen::report::scenario_report(sc, &outcomes,
-                                                           makespan);
+        let mut entry = bass::loadgen::report::scenario_report(
+            sc, &outcomes, makespan);
+        if tracer.enabled() {
+            let path = trace_path(trace_out.as_deref().unwrap(), &sc.name);
+            std::fs::write(&path,
+                           tracer.chrome_trace().to_string_pretty() + "\n")?;
+            println!("[serving] wrote {path}");
+            bass::loadgen::report::attach_observability(
+                &mut entry,
+                Json::obj(vec![
+                    ("spans", tracer.summary()),
+                    ("trace_file", path.as_str().into()),
+                    ("stats", stats.unwrap_or(Json::Null)),
+                ]),
+            );
+        }
         let g = entry.get("goodput")?;
         println!("[serving] {}: {} reqs in {:.2}s — goodput {:.1} rps \
                   ({}/{} within {:.0}ms SLO)",
@@ -337,6 +372,20 @@ fn serving_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Per-scenario trace file name: `trace.json` + `poisson-gate` →
+/// `trace.poisson-gate.json`. The extension split only looks at the
+/// final path component, so dotted directories stay intact.
+fn trace_path(base: &str, scenario: &str) -> String {
+    let name_at = base.rfind('/').map_or(0, |i| i + 1);
+    match base[name_at..].rfind('.') {
+        Some(i) => {
+            let i = name_at + i;
+            format!("{}.{scenario}{}", &base[..i], &base[i..])
+        }
+        None => format!("{base}.{scenario}"),
+    }
+}
+
 fn serve_cmd(args: &Args) -> Result<()> {
     let mut cfg = CoordinatorConfig::new(
         artifacts_root(),
@@ -351,6 +400,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
     // --no-preempt keeps the ranked queue but never suspends running work.
     cfg.preempt = !args.switch("no-preempt");
     cfg.stub_engine = args.switch("stub-engine");
+    // Periodic stderr registry snapshots; the wire `{"cmd":"stats"}`
+    // admin command reads the same registry on demand.
+    cfg.stats_every_secs = args
+        .flag("stats-every")
+        .map(|v| v.parse::<f64>())
+        .transpose()?;
     let addr = format!("127.0.0.1:{}", args.usize_flag("port", 4781)?);
     let coord = Arc::new(Coordinator::start(cfg)?);
     println!("[serve] engine ready");

@@ -8,6 +8,8 @@
 use std::collections::BTreeMap;
 
 use crate::kv::SeqState;
+use crate::obs::Series;
+use crate::runtime::json::Json;
 
 /// Per-batch generation metrics.
 #[derive(Debug, Clone, Default)]
@@ -128,6 +130,16 @@ pub struct SchedStats {
     pub draft_steps: u64,
     pub draft_len_sum: u64,
     pub draft_accepted_sum: u64,
+    /// Queue-depth-over-time: every `note_depth` refresh sampled into
+    /// a bounded deterministic series ([`Series`] decimates, never
+    /// randomizes), so the report can show the shape of the backlog,
+    /// not just its high-water mark. Advisory: the *number* of
+    /// refreshes depends on arrival timing, so the series never rides
+    /// the deterministic `counters` contract.
+    pub depth_series: Series,
+    /// Bucket-occupancy-over-time, one sample per `note_bucket`
+    /// refresh (0.0 while no fused bucket runs).
+    pub occupancy_series: Series,
 }
 
 /// Aggregated queue-wait observations of one priority class.
@@ -138,10 +150,12 @@ pub struct QueueWait {
 }
 
 impl SchedStats {
-    /// Refresh the queue-depth gauge (and its high-water mark).
+    /// Refresh the queue-depth gauge (and its high-water mark, and
+    /// the bounded over-time series).
     pub fn note_depth(&mut self, depth: usize) {
         self.queue_depth = depth;
         self.max_queue_depth = self.max_queue_depth.max(depth);
+        self.depth_series.push(depth as f64);
     }
 
     /// Count one **executed** live re-bucket (after `SpecBatch::rebucket`
@@ -171,6 +185,7 @@ impl SchedStats {
             self.occupancy_rounds += 1;
             self.occupancy_sum += live as f64 / rows as f64;
         }
+        self.occupancy_series.push(self.bucket_occupancy());
     }
 
     /// Live rows over bucket rows (0 when no fused bucket is running).
@@ -233,6 +248,71 @@ impl SchedStats {
             _ => 0.0,
         }
     }
+
+    /// The registry snapshot: every counter/gauge/series this struct
+    /// tracks, as JSON. This is the **single source of truth** behind
+    /// every exposition path — the TCP `{"cmd":"stats"}` admin reply,
+    /// the periodic stderr snapshot, the report's `observability`
+    /// section — while [`SchedStats::summary_line`] renders the same
+    /// numbers as the worker-exit text, so the views cannot drift.
+    pub fn snapshot(&self) -> Json {
+        let mut waits = BTreeMap::new();
+        for (p, w) in &self.queue_wait {
+            waits.insert(format!("{p}"), Json::obj(vec![
+                ("requests", (w.requests as f64).into()),
+                ("mean_wait_ms", (self.mean_wait_secs(*p) * 1e3).into()),
+            ]));
+        }
+        Json::obj(vec![
+            ("preemptions", (self.preemptions as f64).into()),
+            ("resumes", (self.resumes as f64).into()),
+            ("rebuckets", (self.rebuckets() as f64).into()),
+            ("rebuckets_grow", (self.rebuckets_grow as f64).into()),
+            ("rebuckets_shrink", (self.rebuckets_shrink as f64).into()),
+            ("rebucket_migrated", (self.rebucket_migrated as f64).into()),
+            ("queue_depth", self.queue_depth.into()),
+            ("max_queue_depth", self.max_queue_depth.into()),
+            ("bucket_occupancy", self.bucket_occupancy().into()),
+            ("mean_bucket_occupancy",
+             self.mean_bucket_occupancy().into()),
+            ("draft_len_mean", self.mean_draft_len().into()),
+            ("acceptance_rate", self.draft_acceptance().into()),
+            ("queue_wait", Json::Obj(waits)),
+            ("queue_depth_series", self.depth_series.to_json()),
+            ("bucket_occupancy_series",
+             self.occupancy_series.to_json()),
+        ])
+    }
+
+    /// The worker-exit stderr line, as a formatted view of the
+    /// registry ([`SchedStats::snapshot`] carries the same numbers).
+    /// `None` when the scheduler never did anything worth a line.
+    pub fn summary_line(&self) -> Option<String> {
+        if self.preemptions == 0 && self.resumes == 0
+            && self.max_queue_depth == 0 && self.rebuckets() == 0
+        {
+            return None;
+        }
+        let waits: Vec<String> = self
+            .queue_wait
+            .iter()
+            .map(|(p, w)| {
+                format!("p{p}:{:.1}ms×{}",
+                        self.mean_wait_secs(*p) * 1e3, w.requests)
+            })
+            .collect();
+        Some(format!(
+            "preemptions={} resumes={} rebuckets={} (grow {} / shrink \
+             {}, {} rows migrated) bucket_occ≈{:.0}% draft_len≈{:.1} \
+             accept≈{:.0}% max_queue_depth={} queue_wait[{}]",
+            self.preemptions, self.resumes, self.rebuckets(),
+            self.rebuckets_grow, self.rebuckets_shrink,
+            self.rebucket_migrated,
+            self.mean_bucket_occupancy() * 100.0,
+            self.mean_draft_len(),
+            self.draft_acceptance() * 100.0,
+            self.max_queue_depth, waits.join(" ")))
+    }
 }
 
 /// Simple streaming statistics for benchmark harnesses.
@@ -276,7 +356,13 @@ impl Summary {
         s[lo] + (s[hi] - s[lo]) * frac
     }
 
+    /// Smallest sample — 0.0 when empty, like `mean`/`percentile`
+    /// (the old `f64::INFINITY` identity leaked a non-finite value
+    /// into JSON reports when a scenario produced no samples).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 }
@@ -390,6 +476,50 @@ mod tests {
         assert_eq!(s.bucket_occupancy(), 0.0);
         assert_eq!(s.occupancy_rounds, 2);
         assert!((s.mean_bucket_occupancy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sched_stats_snapshot_mirrors_the_summary_line() {
+        let mut s = SchedStats::default();
+        assert!(s.summary_line().is_none(), "idle scheduler: no line");
+        s.preemptions = 2;
+        s.resumes = 2;
+        s.note_rebucket(true, 3);
+        s.note_depth(4);
+        s.note_depth(1);
+        s.note_bucket(3, 4);
+        s.observe_draft(4, 2);
+        s.observe_wait(0, 0.25);
+        let j = s.snapshot();
+        assert_eq!(j.get("preemptions").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("rebuckets").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("max_queue_depth").unwrap().as_usize().unwrap(),
+                   4);
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 1);
+        let w = j.get("queue_wait").unwrap().get("0").unwrap();
+        assert_eq!(w.get("requests").unwrap().as_usize().unwrap(), 1);
+        assert!((w.get("mean_wait_ms").unwrap().as_f64().unwrap()
+                 - 250.0).abs() < 1e-9);
+        // The gauge series saw exactly the note_* refreshes.
+        let d = j.get("queue_depth_series").unwrap();
+        assert_eq!(d.get("seen").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(d.get("values").unwrap().as_arr().unwrap().len(), 2);
+        let o = j.get("bucket_occupancy_series").unwrap();
+        assert_eq!(o.get("seen").unwrap().as_usize().unwrap(), 1);
+        // The exit line is a view of the same registry numbers.
+        let line = s.summary_line().expect("active scheduler: a line");
+        assert!(line.contains("preemptions=2"));
+        assert!(line.contains("rebuckets=1"));
+        assert!(line.contains("max_queue_depth=4"));
+        assert!(line.contains("p0:250.0ms×1"));
+        // And the snapshot serializes to valid JSON (no NaN tokens).
+        let text = j.to_string_pretty();
+        Json::parse(&text).expect("snapshot round-trips");
+    }
+
+    #[test]
+    fn summary_min_is_finite_on_empty() {
+        assert_eq!(Summary::default().min(), 0.0);
     }
 
     #[test]

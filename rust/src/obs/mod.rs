@@ -1,0 +1,286 @@
+//! Observability: step-span tracing + the live metrics registry.
+//!
+//! The serving loop used to be a black box between "request in" and
+//! the exit-time `SchedStats` stderr line. This layer opens it up
+//! with two halves that share one design rule — **nothing here may
+//! perturb what the engine computes**:
+//!
+//! 1. **Step-span tracer** ([`Tracer`]): a fixed-capacity ring
+//!    ([`SpanRing`]) of typed events recorded from the spec engine,
+//!    the exec backends and the coordinator worker, exported on
+//!    demand as Chrome trace-event JSON ([`Tracer::chrome_trace`],
+//!    `bass serving --trace-out` — loadable in Perfetto, one
+//!    swimlane per request).
+//! 2. **Live metrics registry** ([`registry::snapshot`]): the
+//!    scheduler's counters/gauges plus the tracer's phase totals,
+//!    assembled into one JSON snapshot that every exposition path
+//!    reads — the TCP `{"cmd":"stats"}` admin command, the periodic
+//!    stderr snapshot, the report's per-scenario `observability`
+//!    section, and the worker-exit summary line. One source of
+//!    truth; the views cannot drift.
+//!
+//! **Span taxonomy** ([`SpanKind`]): duration spans time the phases
+//! of a step — `draft` and `verify` launches, `fused_prefill`,
+//! `scatter_bind`, `rebucket` — tagged with exec mode, launch width
+//! and launch-vs-padded FLOPs; lifecycle instants mark per-request /
+//! per-sequence transitions — `admit`, `retire`, `suspend`,
+//! `resume`, `expire`, and per-row `seq_step` outcomes carrying each
+//! row's draft `k_i` and accepted count. Engine-wide spans ride
+//! trace lane 0; per-request events ride the owning request's lane.
+//!
+//! **Clock-injection rule**: span timestamps come only from the
+//! tracer's own [`Clock`] — wall for real runs, a deterministic
+//! manual counter for tests — never from `Instant::now()` at the
+//! recording site. Nothing the engine computes (tokens, counters,
+//! RNG draws) may depend on a tracer timestamp; that keeps the
+//! stub/CI deterministic-counters contract untouched with tracing
+//! on, off, or under a test clock (CI proves it by diffing traced
+//! vs untraced serving counters bit-for-bit).
+//!
+//! **Disabled-is-free contract**: a disabled tracer is `None` inside
+//! — [`Tracer::begin`] returns `None` without reading any clock, and
+//! every record call is an early-return no-op: no allocation, no
+//! lock, no time read. The default everywhere is disabled; only
+//! `--trace-out` (or a test) turns it on.
+
+mod clock;
+pub mod registry;
+mod series;
+mod span;
+mod trace;
+
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::json::Json;
+
+pub use clock::Clock;
+pub use series::Series;
+pub use span::{SpanEvent, SpanKind, SpanRing};
+
+/// Default ring capacity: generous for a serving scenario (a gate run
+/// records a few thousand events) while bounding memory at a few MB.
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+#[derive(Debug)]
+struct Core {
+    clock: Clock,
+    ring: Mutex<SpanRing>,
+}
+
+/// Cheaply-cloneable handle to a span ring + clock; `Default` (and
+/// [`Tracer::disabled`]) is the free no-op tracer. See the module
+/// doc for the taxonomy and the disabled-is-free contract.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer(Option<Arc<Core>>);
+
+impl Tracer {
+    /// The no-op tracer: every call is an early return.
+    pub fn disabled() -> Tracer {
+        Tracer(None)
+    }
+
+    /// Wall-clock tracer (real runs).
+    pub fn wall(cap: usize) -> Tracer {
+        Tracer(Some(Arc::new(Core {
+            clock: Clock::wall(),
+            ring: Mutex::new(SpanRing::new(cap)),
+        })))
+    }
+
+    /// Deterministic-counter-clock tracer (tests).
+    pub fn manual(cap: usize) -> Tracer {
+        Tracer(Some(Arc::new(Core {
+            clock: Clock::manual(),
+            ring: Mutex::new(SpanRing::new(cap)),
+        })))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Timestamp for a span about to open — `None`, with no clock
+    /// read at all, when tracing is disabled.
+    pub fn begin(&self) -> Option<u64> {
+        self.0.as_ref().map(|c| c.clock.now_us())
+    }
+
+    /// Close a duration span opened by [`Tracer::begin`]. No-op when
+    /// disabled (then `started` is `None` too).
+    pub fn span(&self, kind: SpanKind, started: Option<u64>, request: u64,
+                seq: Option<u64>, mode: &'static str,
+                meta: &[(&'static str, f64)]) {
+        let (Some(core), Some(t0)) = (self.0.as_deref(), started) else {
+            return;
+        };
+        let t1 = core.clock.now_us();
+        core.ring.lock().unwrap().push(SpanEvent {
+            kind,
+            ts_us: t0,
+            dur_us: t1.saturating_sub(t0),
+            request,
+            seq,
+            mode,
+            meta: meta.to_vec(),
+            index: 0,
+        });
+    }
+
+    /// Zero-duration lifecycle event. No-op when disabled.
+    pub fn instant(&self, kind: SpanKind, request: u64, seq: Option<u64>,
+                   mode: &'static str, meta: &[(&'static str, f64)]) {
+        let Some(core) = self.0.as_deref() else {
+            return;
+        };
+        let ts = core.clock.now_us();
+        core.ring.lock().unwrap().push(SpanEvent {
+            kind,
+            ts_us: ts,
+            dur_us: 0,
+            request,
+            seq,
+            mode,
+            meta: meta.to_vec(),
+            index: 0,
+        });
+    }
+
+    /// The held events, oldest first (empty when disabled).
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        match self.0.as_deref() {
+            Some(c) => c.ring.lock().unwrap().snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Oldest events evicted by ring overflow.
+    pub fn dropped(&self) -> u64 {
+        self.0
+            .as_deref()
+            .map(|c| c.ring.lock().unwrap().dropped())
+            .unwrap_or(0)
+    }
+
+    /// Total events ever recorded (held + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.0
+            .as_deref()
+            .map(|c| c.ring.lock().unwrap().recorded())
+            .unwrap_or(0)
+    }
+
+    /// Chrome trace-event JSON of the current ring contents.
+    pub fn chrome_trace(&self) -> Json {
+        trace::chrome_trace(&self.snapshot(), self.dropped())
+    }
+
+    /// Aggregate view for the registry / report `observability`
+    /// section: per-kind span counts, per-phase µs totals and time
+    /// shares (among the duration spans), and ring accounting.
+    pub fn summary(&self) -> Json {
+        let events = self.snapshot();
+        let mut counts = [0u64; SpanKind::ALL.len()];
+        let mut phase_us = [0u64; SpanKind::ALL.len()];
+        for e in &events {
+            let i = SpanKind::ALL
+                .iter()
+                .position(|&k| k == e.kind)
+                .expect("kind in ALL");
+            counts[i] += 1;
+            phase_us[i] += e.dur_us;
+        }
+        let total_us: u64 = SpanKind::ALL
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.is_span())
+            .map(|(i, _)| phase_us[i])
+            .sum();
+        let mut span_counts = Vec::new();
+        let mut phases = Vec::new();
+        let mut shares = Vec::new();
+        for (i, kind) in SpanKind::ALL.iter().enumerate() {
+            span_counts.push((kind.name(), Json::from(counts[i] as f64)));
+            if kind.is_span() {
+                phases.push((kind.name(),
+                             Json::from(phase_us[i] as f64)));
+                let share = if total_us > 0 {
+                    Json::from(phase_us[i] as f64 / total_us as f64)
+                } else {
+                    Json::Null
+                };
+                shares.push((kind.name(), share));
+            }
+        }
+        Json::obj(vec![
+            ("recorded", (self.recorded() as f64).into()),
+            ("dropped", (self.dropped() as f64).into()),
+            ("span_counts", Json::obj(span_counts)),
+            ("phase_us", Json::obj(phases)),
+            ("phase_share", Json::obj(shares)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        assert_eq!(t.begin(), None, "no clock read when disabled");
+        t.span(SpanKind::Draft, None, 0, None, "stub", &[]);
+        t.instant(SpanKind::Admit, 1, None, "stub", &[]);
+        assert!(t.snapshot().is_empty());
+        assert_eq!(t.recorded(), 0);
+    }
+
+    #[test]
+    fn manual_tracer_records_deterministic_spans() {
+        let t = Tracer::manual(16);
+        let t0 = t.begin();
+        assert_eq!(t0, Some(0));
+        t.span(SpanKind::Draft, t0, 0, None, "stub", &[("k", 4.0)]);
+        t.instant(SpanKind::Admit, 3, Some(1), "stub", &[]);
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, SpanKind::Draft);
+        assert_eq!(evs[0].ts_us, 0);
+        assert_eq!(evs[0].dur_us, 1, "manual clock ticks once per read");
+        assert_eq!(evs[1].kind, SpanKind::Admit);
+        assert_eq!(evs[1].request, 3);
+        assert_eq!(evs[1].ts_us, 2);
+    }
+
+    #[test]
+    fn summary_counts_and_shares_phases() {
+        let t = Tracer::manual(16);
+        let t0 = t.begin();
+        t.span(SpanKind::Draft, t0, 0, None, "stub", &[]);
+        let t1 = t.begin();
+        t.span(SpanKind::Verify, t1, 0, None, "stub", &[]);
+        t.instant(SpanKind::Retire, 1, Some(0), "stub", &[]);
+        let s = t.summary();
+        let counts = s.get("span_counts").unwrap();
+        assert_eq!(counts.get("draft").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(counts.get("verify").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(counts.get("retire").unwrap().as_usize().unwrap(), 1);
+        let share = s.get("phase_share").unwrap();
+        let d = share.get("draft").unwrap().as_f64().unwrap();
+        let v = share.get("verify").unwrap().as_f64().unwrap();
+        assert!((d + v - 1.0).abs() < 1e-12, "spans share the total");
+        assert!(share.opt("retire").is_none(),
+                "instants carry no phase share");
+    }
+
+    #[test]
+    fn empty_summary_has_null_shares_not_nan() {
+        let t = Tracer::manual(4);
+        let s = t.summary();
+        assert!(matches!(s.get("phase_share").unwrap().opt("draft"),
+                         Some(Json::Null)));
+        let text = s.to_string_pretty();
+        assert!(!text.contains("NaN"));
+    }
+}

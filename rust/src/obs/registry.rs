@@ -1,0 +1,43 @@
+//! The live metrics registry: one assembly point for every
+//! exposition path.
+//!
+//! The registry does not own live counters — the structs that
+//! increment them do ([`crate::metrics::SchedStats`] for the
+//! scheduler, [`super::Tracer`] for span/phase totals). What it owns
+//! is the *snapshot shape*: the TCP `{"cmd":"stats"}` admin reply,
+//! the periodic stderr snapshot, the report's `observability`
+//! section and the worker-exit summary all read the same
+//! [`snapshot`] (or its [`crate::metrics::SchedStats::summary_line`]
+//! text rendering), so the views cannot drift from each other or
+//! from the numbers the scheduler actually tracked.
+
+use crate::metrics::SchedStats;
+use crate::runtime::json::Json;
+
+use super::Tracer;
+
+/// Assemble the registry snapshot: scheduler counters + gauge series
+/// under `"sched"`, tracer phase totals under `"spans"` (present
+/// only when tracing is enabled — the snapshot stays additive).
+pub fn snapshot(stats: &SchedStats, tracer: &Tracer) -> Json {
+    let mut pairs = vec![("sched", stats.snapshot())];
+    if tracer.enabled() {
+        pairs.push(("spans", tracer.summary()));
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_additive_with_tracing() {
+        let stats = SchedStats::default();
+        let off = snapshot(&stats, &Tracer::disabled());
+        assert!(off.opt("sched").is_some());
+        assert!(off.opt("spans").is_none());
+        let on = snapshot(&stats, &Tracer::manual(8));
+        assert!(on.opt("spans").is_some());
+    }
+}

@@ -1,0 +1,142 @@
+//! Deterministic bounded time series for gauge sampling.
+
+use crate::runtime::json::Json;
+
+/// A decimating sample buffer: the first `cap` samples are kept
+/// verbatim; on overflow every other retained sample is dropped and
+/// the keep-stride doubles, so the buffer always covers the full push
+/// history at bounded resolution. The retained set is a **pure
+/// function of the pushed sequence** — no RNG, no clock — so a
+/// deterministic push stream yields a byte-deterministic series
+/// (which is why this is used instead of a random reservoir).
+///
+/// Invariant: retained value `j` is the sample pushed at index
+/// `j * stride` — the capacity is rounded up to even so the retained
+/// indices stay contiguous multiples of the stride across every
+/// compaction.
+#[derive(Debug, Clone)]
+pub struct Series {
+    cap: usize,
+    stride: u64,
+    seen: u64,
+    values: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(cap: usize) -> Series {
+        let cap = cap.max(2);
+        let cap = cap + (cap & 1); // even, for contiguous decimation
+        Series { cap, stride: 1, seen: 0, values: Vec::new() }
+    }
+
+    /// Offer one sample. O(1) amortized; compaction is O(cap) and
+    /// happens once per stride doubling.
+    pub fn push(&mut self, v: f64) {
+        let i = self.seen;
+        self.seen += 1;
+        if i % self.stride != 0 {
+            return;
+        }
+        if self.values.len() == self.cap {
+            let kept: Vec<f64> =
+                self.values.iter().copied().step_by(2).collect();
+            self.values = kept;
+            self.stride *= 2;
+            if i % self.stride != 0 {
+                return;
+            }
+        }
+        self.values.push(v);
+    }
+
+    /// Samples offered over the series' lifetime.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Push-index distance between retained values.
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// `{"seen", "stride", "values"}` — value `j` was sampled at push
+    /// index `j * stride`. Non-finite samples degrade to `null`.
+    pub fn to_json(&self) -> Json {
+        let vals = self
+            .values
+            .iter()
+            .map(|&v| {
+                if v.is_finite() { Json::Num(v) } else { Json::Null }
+            })
+            .collect();
+        Json::obj(vec![
+            ("seen", (self.seen as f64).into()),
+            ("stride", (self.stride as f64).into()),
+            ("values", Json::Arr(vals)),
+        ])
+    }
+}
+
+impl Default for Series {
+    fn default() -> Series {
+        Series::new(256)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_everything_until_capacity() {
+        let mut s = Series::new(4);
+        for i in 0..4 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.stride(), 1);
+        assert_eq!(s.values(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn decimates_deterministically_and_stays_bounded() {
+        let mut a = Series::new(4);
+        let mut b = Series::new(4);
+        for i in 0..1000 {
+            a.push(i as f64);
+            b.push(i as f64);
+        }
+        assert!(a.len() <= 4, "bounded (got {})", a.len());
+        assert_eq!(a.seen(), 1000);
+        assert_eq!(a.values(), b.values(), "pure function of the pushes");
+        assert_eq!(a.stride(), b.stride());
+        // Retained value j is the sample pushed at index j*stride.
+        for (j, &v) in a.values().iter().enumerate() {
+            assert_eq!(v, (j as u64 * a.stride()) as f64);
+        }
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let mut s = Series::new(4);
+        s.push(2.0);
+        s.push(f64::NAN);
+        let j = s.to_json();
+        assert_eq!(j.get("seen").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("stride").unwrap().as_usize().unwrap(), 1);
+        let vals = j.get("values").unwrap().as_arr().unwrap();
+        assert_eq!(vals.len(), 2);
+        assert!(matches!(vals[1], Json::Null), "NaN degrades to null");
+    }
+}

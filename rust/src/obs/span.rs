@@ -1,0 +1,221 @@
+//! Typed span events and the fixed-capacity ring that stores them.
+
+use std::collections::VecDeque;
+
+/// The span taxonomy (see the [`crate::obs`] module doc). Duration
+/// spans ([`SpanKind::is_span`]) time a phase of the serving loop;
+/// the rest are zero-duration lifecycle instants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// One draft launch across the live batch.
+    Draft,
+    /// One verify launch across the live batch.
+    Verify,
+    /// Fused bucket prefill (PAD/PACKED bucket start or re-bucket).
+    FusedPrefill,
+    /// Per-row scatter prefill into a running bucket.
+    ScatterBind,
+    /// Live bucket grow/shrink (wraps the backend's fused re-encode).
+    Rebucket,
+    /// Sequence preempted out of the batch (instant).
+    Suspend,
+    /// Suspended sequence re-admitted (instant).
+    Resume,
+    /// Request admitted into the batch (instant).
+    Admit,
+    /// Sequence retired, its output delivered (instant).
+    Retire,
+    /// Request expired unserved under a time budget (instant).
+    Expire,
+    /// Per-row step outcome: draft `k_i` and accepted count (instant).
+    SeqStep,
+}
+
+impl SpanKind {
+    /// Every kind, in a fixed order (stable summary/report layout).
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::Draft,
+        SpanKind::Verify,
+        SpanKind::FusedPrefill,
+        SpanKind::ScatterBind,
+        SpanKind::Rebucket,
+        SpanKind::Suspend,
+        SpanKind::Resume,
+        SpanKind::Admit,
+        SpanKind::Retire,
+        SpanKind::Expire,
+        SpanKind::SeqStep,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Draft => "draft",
+            SpanKind::Verify => "verify",
+            SpanKind::FusedPrefill => "fused_prefill",
+            SpanKind::ScatterBind => "scatter_bind",
+            SpanKind::Rebucket => "rebucket",
+            SpanKind::Suspend => "suspend",
+            SpanKind::Resume => "resume",
+            SpanKind::Admit => "admit",
+            SpanKind::Retire => "retire",
+            SpanKind::Expire => "expire",
+            SpanKind::SeqStep => "seq_step",
+        }
+    }
+
+    /// Duration span (Chrome `X` event) vs lifecycle instant (`i`).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Draft
+                | SpanKind::Verify
+                | SpanKind::FusedPrefill
+                | SpanKind::ScatterBind
+                | SpanKind::Rebucket
+        )
+    }
+}
+
+/// One recorded event.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    /// Start timestamp, µs on the owning tracer's clock.
+    pub ts_us: u64,
+    /// Duration in µs; 0 for instants.
+    pub dur_us: u64,
+    /// Owning request id — the trace swimlane. 0 = engine-wide (the
+    /// coordinator hands out request ids starting at 1).
+    pub request: u64,
+    /// Sequence id, when the event is per-row.
+    pub seq: Option<u64>,
+    /// Exec-mode tag (`pad`/`split`/`packed`/`stub`).
+    pub mode: &'static str,
+    /// Small numeric payload (k, rows, launch FLOPs, accepted, ...).
+    pub meta: Vec<(&'static str, f64)>,
+    /// Global record index — the total order events were recorded in
+    /// (assigned by the ring; survives eviction gaps).
+    pub index: u64,
+}
+
+/// Fixed-capacity ring: when full, recording evicts the *oldest*
+/// event (counted in [`SpanRing::dropped`]) — it never blocks and
+/// never grows past the capacity chosen at construction.
+#[derive(Debug)]
+pub struct SpanRing {
+    cap: usize,
+    buf: VecDeque<SpanEvent>,
+    next_index: u64,
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> SpanRing {
+        let cap = cap.max(1);
+        SpanRing {
+            cap,
+            buf: VecDeque::with_capacity(cap),
+            next_index: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Record an event (its `index` field is assigned here).
+    pub fn push(&mut self, mut ev: SpanEvent) {
+        ev.index = self.next_index;
+        self.next_index += 1;
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever recorded (held + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.next_index
+    }
+
+    /// Oldest events evicted to make room.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The held events, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &SpanEvent> {
+        self.buf.iter()
+    }
+
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        self.buf.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: SpanKind, ts: u64) -> SpanEvent {
+        SpanEvent {
+            kind,
+            ts_us: ts,
+            dur_us: 0,
+            request: 0,
+            seq: None,
+            mode: "stub",
+            meta: Vec::new(),
+            index: 0,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_everything_under_capacity() {
+        let mut r = SpanRing::new(4);
+        for i in 0..3 {
+            r.push(ev(SpanKind::Admit, i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.recorded(), 3);
+        let idx: Vec<u64> = r.iter().map(|e| e.index).collect();
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    /// The satellite-pinned wraparound contract: on overflow the
+    /// *oldest* spans are evicted, the survivors keep their recording
+    /// order, and the eviction count is visible.
+    #[test]
+    fn ring_wraparound_evicts_oldest_and_preserves_order() {
+        let mut r = SpanRing::new(4);
+        for i in 0..10u64 {
+            r.push(ev(SpanKind::SeqStep, 100 + i));
+        }
+        assert_eq!(r.len(), 4, "capacity is a hard bound");
+        assert_eq!(r.dropped(), 6, "oldest six evicted");
+        assert_eq!(r.recorded(), 10);
+        let idx: Vec<u64> = r.iter().map(|e| e.index).collect();
+        assert_eq!(idx, vec![6, 7, 8, 9],
+                   "survivors are the newest, in recording order");
+        let ts: Vec<u64> = r.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![106, 107, 108, 109]);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = SpanRing::new(0);
+        r.push(ev(SpanKind::Admit, 1));
+        r.push(ev(SpanKind::Retire, 2));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.iter().next().unwrap().kind, SpanKind::Retire);
+    }
+}

@@ -1,0 +1,152 @@
+//! Chrome trace-event JSON export (Perfetto-loadable).
+
+use crate::runtime::json::Json;
+
+use super::span::SpanEvent;
+
+/// Non-finite values would render as bare `NaN`/`inf` tokens (invalid
+/// JSON) through [`Json::Num`]'s writer; the trace is advisory, so a
+/// poisoned metric degrades to `null` rather than a broken file.
+fn finite(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Render recorded events as a Chrome trace. One process (`pid` 1);
+/// `tid` is the owning request id (lane 0 is the engine-wide lane),
+/// so Perfetto shows one swimlane per request. Duration spans become
+/// complete `X` events, lifecycle instants become thread-scoped `i`
+/// events, and every lane gets a `thread_name` metadata record.
+/// Events are sorted by start timestamp (ties keep recording order),
+/// so `ts` is non-decreasing in file order — the invariant
+/// `scripts/check_trace.py` validates.
+pub fn chrome_trace(events: &[SpanEvent], dropped: u64) -> Json {
+    let mut evs: Vec<&SpanEvent> = events.iter().collect();
+    evs.sort_by_key(|e| (e.ts_us, e.index));
+
+    let mut out: Vec<Json> = Vec::with_capacity(evs.len() + 8);
+    let mut lanes: Vec<u64> = evs.iter().map(|e| e.request).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for lane in &lanes {
+        let name = if *lane == 0 {
+            "engine".to_string()
+        } else {
+            format!("request {lane}")
+        };
+        out.push(Json::obj(vec![
+            ("name", "thread_name".into()),
+            ("ph", "M".into()),
+            ("pid", 1usize.into()),
+            ("tid", (*lane as f64).into()),
+            ("args", Json::obj(vec![("name", name.into())])),
+        ]));
+    }
+
+    for e in evs {
+        let mut args: Vec<(&str, Json)> = vec![("mode", e.mode.into())];
+        if let Some(s) = e.seq {
+            args.push(("seq", finite(s as f64)));
+        }
+        for (key, v) in &e.meta {
+            args.push((key, finite(*v)));
+        }
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("name", e.kind.name().into()),
+            ("cat", "bass".into()),
+            ("ts", (e.ts_us as f64).into()),
+            ("pid", 1usize.into()),
+            ("tid", (e.request as f64).into()),
+            ("args", Json::obj(args)),
+        ];
+        if e.kind.is_span() {
+            fields.push(("ph", "X".into()));
+            fields.push(("dur", (e.dur_us as f64).into()));
+        } else {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+        }
+        out.push(Json::obj(fields));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", "ms".into()),
+        ("otherData",
+         Json::obj(vec![("dropped_spans", (dropped as f64).into())])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::SpanKind;
+    use super::*;
+
+    fn ev(kind: SpanKind, ts: u64, dur: u64, request: u64) -> SpanEvent {
+        SpanEvent {
+            kind,
+            ts_us: ts,
+            dur_us: dur,
+            request,
+            seq: Some(3),
+            mode: "stub",
+            meta: vec![("k", 4.0)],
+            index: ts,
+        }
+    }
+
+    #[test]
+    fn export_sorts_by_ts_and_shapes_events() {
+        let events = vec![
+            ev(SpanKind::Verify, 20, 5, 0),
+            ev(SpanKind::Admit, 10, 0, 7),
+            ev(SpanKind::Draft, 12, 6, 0),
+        ];
+        let j = chrome_trace(&events, 2);
+        let arr = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 lanes (0 and 7) -> 2 thread_name records + 3 events.
+        assert_eq!(arr.len(), 5);
+        let data: Vec<&Json> = arr
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str().unwrap() != "M"
+            })
+            .collect();
+        let ts: Vec<f64> = data
+            .iter()
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(ts, vec![10.0, 12.0, 20.0], "sorted by start ts");
+        let admit = data[0];
+        assert_eq!(admit.get("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(admit.get("tid").unwrap().as_usize().unwrap(), 7);
+        let draft = data[1];
+        assert_eq!(draft.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(draft.get("dur").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(
+            draft.get("args").unwrap().get("k").unwrap().as_f64().unwrap(),
+            4.0
+        );
+        let dropped = j
+            .get("otherData").unwrap()
+            .get("dropped_spans").unwrap()
+            .as_usize().unwrap();
+        assert_eq!(dropped, 2);
+        // The serialized form must parse back (no bare NaN tokens).
+        let text = j.to_string_pretty();
+        Json::parse(&text).expect("trace round-trips");
+    }
+
+    #[test]
+    fn non_finite_meta_degrades_to_null() {
+        let mut e = ev(SpanKind::Draft, 1, 1, 0);
+        e.meta = vec![("bad", f64::NAN)];
+        let j = chrome_trace(&[e], 0);
+        let text = j.to_string_pretty();
+        Json::parse(&text).expect("NaN meta must not poison the file");
+        assert!(!text.contains("NaN"));
+    }
+}

@@ -99,6 +99,7 @@ use xla::PjRtBuffer;
 
 use crate::flops::{step_flops, FlopCounter};
 use crate::kv::SeqState;
+use crate::obs::{SpanKind, Tracer};
 use crate::runtime::{Engine, ModelInfo};
 use crate::sampling::Pcg32;
 
@@ -116,6 +117,10 @@ pub(super) struct ExecCtx<'a> {
     pub draft_info: &'a ModelInfo,
     pub prefill_secs: &'a mut f64,
     pub flops: &'a mut FlopCounter,
+    /// Span recorder (a cheap handle clone; disabled = no-op). Backends
+    /// record `fused_prefill` / `scatter_bind` spans here; draft and
+    /// verify spans stay orchestrator-side, around the step calls.
+    pub tracer: Tracer,
 }
 
 /// Orchestrator-assembled per-row inputs of one fused draft call
@@ -349,11 +354,16 @@ fn fused_prefill(
         plens[i] = l;
     }
     let t0 = Instant::now();
+    let tr = cx.tracer.begin();
     let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn,
                         bucket, &tokens, &plens)?;
     let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn,
                         bucket, &tokens, &plens)?;
     *cx.prefill_secs += t0.elapsed().as_secs_f64();
+    cx.tracer.span(SpanKind::FusedPrefill, tr, 0, None,
+                   cfg.mode.as_str(),
+                   &[("bucket", bucket as f64),
+                     ("rows", n_real as f64)]);
     cx.flops.add_prefill(cx.main_info, bucket, p);
     cx.flops.add_prefill(cx.draft_info, bucket, p);
     // Commit: compact Seq rows to the front, resumes after them,
@@ -392,6 +402,7 @@ fn scatter_bind(
     let (tokens, plen) = encode_window(ctx, p);
     let (main, draft) = store;
     let t0 = Instant::now();
+    let tr = cx.tracer.begin();
     eng.prefill_into_slot(&cfg.main_model, cfg.precision, cfg.attn, b,
                           row, &tokens, plen, main)
         .context("fused scatter prefill (main model)")?;
@@ -399,6 +410,8 @@ fn scatter_bind(
                           row, &tokens, plen, draft)
         .context("fused scatter prefill (draft model)")?;
     *cx.prefill_secs += t0.elapsed().as_secs_f64();
+    cx.tracer.span(SpanKind::ScatterBind, tr, 0, None,
+                   cfg.mode.as_str(), &[("row", row as f64)]);
     cx.flops.add_prefill(cx.main_info, 1, p);
     cx.flops.add_prefill(cx.draft_info, 1, p);
     Ok(())
@@ -593,11 +606,14 @@ impl Backend for SplitBackend {
         let (tokens, plen) = encode_window(ctx, p);
         let plens = [plen];
         let t0 = Instant::now();
+        let tr = cx.tracer.begin();
         let m = eng.prefill(&cfg.main_model, cfg.precision, cfg.attn, 1,
                             &tokens, &plens)?;
         let d = eng.prefill(&cfg.draft_model, cfg.precision, cfg.attn, 1,
                             &tokens, &plens)?;
         *cx.prefill_secs += t0.elapsed().as_secs_f64();
+        cx.tracer.span(SpanKind::ScatterBind, tr, 0, None,
+                       cfg.mode.as_str(), &[("row", row as f64)]);
         cx.flops.add_prefill(cx.main_info, 1, p);
         cx.flops.add_prefill(cx.draft_info, 1, p);
         self.main[row] = m.caches;
@@ -1316,6 +1332,7 @@ mod tests {
             draft_info: &draft_info,
             prefill_secs: &mut secs,
             flops: &mut flops,
+            tracer: Tracer::disabled(),
         };
         let mut be = StubBackend { started: false };
         let mut rows = vec![
@@ -1365,6 +1382,7 @@ mod tests {
             draft_info: &draft_info,
             prefill_secs: &mut secs,
             flops: &mut flops,
+            tracer: Tracer::disabled(),
         };
         let mut be = StubBackend { started: true };
         let vocab = eng.manifest.vocab;
@@ -1432,6 +1450,7 @@ mod tests {
             draft_info: &draft_info,
             prefill_secs: &mut secs,
             flops: &mut flops,
+            tracer: Tracer::disabled(),
         };
         let mut be = StubBackend { started: true };
         let vocab = eng.manifest.vocab;
@@ -1507,6 +1526,7 @@ mod tests {
             draft_info: &draft_info,
             prefill_secs: &mut secs,
             flops: &mut flops,
+            tracer: Tracer::disabled(),
         };
         let mut be = make(&cfg, 4, true);
         let mut rows = vec![
@@ -1555,6 +1575,7 @@ mod tests {
             draft_info: &draft_info,
             prefill_secs: &mut secs,
             flops: &mut flops,
+            tracer: Tracer::disabled(),
         };
         let mut packed = PackedBackend {
             store: None, started: true, host_only: true,
@@ -1614,6 +1635,7 @@ mod tests {
             draft_info: &draft_info,
             prefill_secs: &mut secs,
             flops: &mut flops,
+            tracer: Tracer::disabled(),
         };
         let mut be = PackedBackend {
             store: None, started: true, host_only: true,
@@ -1644,6 +1666,7 @@ mod tests {
             draft_info: &draft_info,
             prefill_secs: &mut secs,
             flops: &mut flops2,
+            tracer: Tracer::disabled(),
         };
         let vio_full = VerifyIo {
             q,

@@ -31,6 +31,19 @@ pub enum ExecMode {
     Stub,
 }
 
+impl ExecMode {
+    /// Stable lowercase tag (CLI `--mode` vocabulary; also the trace
+    /// event `"mode"` tag).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExecMode::Pad => "pad",
+            ExecMode::Split => "split",
+            ExecMode::Packed => "packed",
+            ExecMode::Stub => "stub",
+        }
+    }
+}
+
 /// Draft-length policy selection.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Policy {

@@ -97,6 +97,7 @@ use anyhow::{bail, Result};
 
 use crate::flops::FlopCounter;
 use crate::kv::SeqState;
+use crate::obs::{SpanKind, Tracer};
 use crate::runtime::{Engine, ModelInfo};
 use crate::sampling::{logp_of, spec_accept, warp_top_p, Pcg32};
 use crate::spec::draft_len::Controller;
@@ -132,6 +133,9 @@ pub struct SpecBatch<'a> {
     main_info: ModelInfo,
     draft_info: ModelInfo,
     s_max: i32,
+    /// Span recorder ([`crate::obs`]); disabled by default — every
+    /// record call is then a no-op (the disabled-is-free contract).
+    tracer: Tracer,
     // -- aggregates across the batch lifetime ------------------------------
     pub steps: usize,
     pub drafted: usize,
@@ -167,6 +171,7 @@ impl<'a> SpecBatch<'a> {
             main_info,
             draft_info,
             s_max,
+            tracer: Tracer::disabled(),
             steps: 0,
             drafted: 0,
             accepted: 0,
@@ -192,9 +197,17 @@ impl<'a> SpecBatch<'a> {
                 draft_info: &self.draft_info,
                 prefill_secs: &mut self.prefill_secs,
                 flops: &mut self.flops,
+                tracer: self.tracer.clone(),
             },
             &mut self.rows,
         )
+    }
+
+    /// Attach a span recorder ([`crate::obs::Tracer`]). The default is
+    /// the disabled no-op tracer; tracing never changes what the batch
+    /// computes (clock-injection rule — see the `obs` module doc).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     // -- introspection ----------------------------------------------------
@@ -407,6 +420,9 @@ impl<'a> SpecBatch<'a> {
                 matches!(r, Row::Seq(s) | Row::Shadow(s) if s.state.active())
             })
             .collect();
+        let n_step = stepping.iter().filter(|&&s| s).count();
+        let tr_d = self.tracer.begin();
+        let (fl0, fp0) = (self.flops.launch, self.flops.padded_launch);
         let td = Instant::now();
         let io = DraftIo {
             k,
@@ -424,6 +440,19 @@ impl<'a> SpecBatch<'a> {
             be.draft(&mut cx, &io)?
         };
         self.draft_secs += now(td);
+        self.tracer.span(
+            SpanKind::Draft,
+            tr_d,
+            0,
+            None,
+            self.cfg.mode.as_str(),
+            &[
+                ("k", k as f64),
+                ("rows", n_step as f64),
+                ("launch_flops", self.flops.launch - fl0),
+                ("padded_launch_flops", self.flops.padded_launch - fp0),
+            ],
+        );
         // FLOP/throughput accounting charges *live* rows only, each at
         // its own k_i and its own exact context length — no per-step
         // batch averaging (the old integer mean both truncated and
@@ -467,6 +496,8 @@ impl<'a> SpecBatch<'a> {
                 qlens[i] = k_rows[i] as i32 + 1;
             }
         }
+        let tr_v = self.tracer.begin();
+        let (fl1, fp1) = (self.flops.launch, self.flops.padded_launch);
         let tv = Instant::now();
         let vio = VerifyIo {
             q,
@@ -480,6 +511,19 @@ impl<'a> SpecBatch<'a> {
             be.verify(&mut cx, &vio)?
         };
         self.verify_secs += now(tv);
+        self.tracer.span(
+            SpanKind::Verify,
+            tr_v,
+            0,
+            None,
+            self.cfg.mode.as_str(),
+            &[
+                ("q", q as f64),
+                ("rows", n_step as f64),
+                ("launch_flops", self.flops.launch - fl1),
+                ("padded_launch_flops", self.flops.padded_launch - fp1),
+            ],
+        );
         for &(ki, _, ctx_m) in &live_kc {
             self.flops.add_step(&self.main_info, 1, ki + 1, ctx_m);
         }
@@ -782,10 +826,23 @@ impl<'a> SpecBatch<'a> {
             return Ok(None);
         };
         let from = self.rows.len();
+        let tr = self.tracer.begin();
         let migrated = {
             let (be, mut cx, rows) = self.backend_cx();
             be.rebucket(&mut cx, rows, bucket, Vec::new())?
         };
+        self.tracer.span(
+            SpanKind::Rebucket,
+            tr,
+            0,
+            None,
+            self.cfg.mode.as_str(),
+            &[
+                ("from", from as f64),
+                ("to", bucket as f64),
+                ("migrated", migrated as f64),
+            ],
+        );
         Ok(Some(Rebucket { from, to: bucket, migrated }))
     }
 
@@ -832,10 +889,24 @@ impl<'a> SpecBatch<'a> {
             .collect();
         let ids: Vec<SeqId> = slots.iter().map(|s| s.id).collect();
         let from = self.rows.len();
+        let tr = self.tracer.begin();
         let migrated = {
             let (be, mut cx, rows) = self.backend_cx();
             be.rebucket(&mut cx, rows, bucket, slots)?
         };
+        self.tracer.span(
+            SpanKind::Rebucket,
+            tr,
+            0,
+            None,
+            self.cfg.mode.as_str(),
+            &[
+                ("from", from as f64),
+                ("to", bucket as f64),
+                ("migrated", migrated as f64),
+                ("resumed", ids.len() as f64),
+            ],
+        );
         Ok((Rebucket { from, to: bucket, migrated }, ids))
     }
 }

@@ -31,19 +31,27 @@ macro_rules! require_artifacts {
     };
 }
 
-fn coordinator_with(spec: SpecConfig, max_batch: usize, window_ms: u64)
-                    -> Coordinator {
-    Coordinator::start(CoordinatorConfig {
-        artifacts_root: artifacts_root(),
+fn config_with(spec: SpecConfig, max_batch: usize, window_ms: u64)
+               -> CoordinatorConfig {
+    // Built via `new()` + field mutations, so config growth cannot
+    // break this helper (a struct literal here has to chase every new
+    // field).
+    let mut cfg = CoordinatorConfig::new(
+        artifacts_root(),
         spec,
-        batcher: BatcherConfig {
+        BatcherConfig {
             max_batch,
             window: Duration::from_millis(window_ms),
         },
-        preempt: true,
-        prewarm: false, // keep tests fast; lazy compiles are fine here
-    })
-    .expect("coordinator start")
+    );
+    cfg.prewarm = false; // keep tests fast; lazy compiles are fine here
+    cfg
+}
+
+fn coordinator_with(spec: SpecConfig, max_batch: usize, window_ms: u64)
+                    -> Coordinator {
+    Coordinator::start(config_with(spec, max_batch, window_ms))
+        .expect("coordinator start")
 }
 
 fn coordinator(max_batch: usize, window_ms: u64) -> Coordinator {
@@ -710,4 +718,120 @@ fn stub_tcp_pipelining_correlates_replies_by_id() {
     let bad = &by_id["bad"];
     assert_eq!(bad.get("ok").unwrap(), &Json::Bool(false),
                "malformed tagged request must error, with the id echoed");
+}
+
+/// Tentpole acceptance (satellite 3b): a traced stub-coordinator run
+/// exports a Chrome trace whose request swimlanes are exactly the
+/// submitted requests — every `admit`/`retire` lane is a real request
+/// id, every request got both, and the export parses as valid JSON
+/// with non-decreasing timestamps.
+#[test]
+fn stub_trace_export_matches_submitted_requests() {
+    use bass::obs::{SpanKind, Tracer};
+    let tracer = Tracer::wall(4096);
+    let mut cfg = config_with(stub_spec(), 4, 1);
+    cfg.tracer = tracer.clone();
+    let coord = Coordinator::start(cfg).expect("coordinator start");
+    let rxs: Vec<_> = (0..3)
+        .map(|i| coord.submit(request(&format!("req {i}"), 1, 8, false)))
+        .collect();
+    for rx in rxs {
+        let resp = Coordinator::wait(rx).unwrap();
+        assert_eq!(resp.seqs[0].n_tokens, 8);
+    }
+    coord.shutdown();
+
+    let events = tracer.snapshot();
+    assert_eq!(tracer.dropped(), 0, "ring overflowed a tiny run");
+    // Worker request ids start at 1; three submissions → lanes {1,2,3}.
+    let admits: std::collections::HashSet<u64> = events
+        .iter()
+        .filter(|e| e.kind == SpanKind::Admit)
+        .map(|e| e.request)
+        .collect();
+    assert_eq!(admits, (1..=3).collect(),
+               "admit lanes must be exactly the submitted requests");
+    let retires: std::collections::HashSet<u64> = events
+        .iter()
+        .filter(|e| e.kind == SpanKind::Retire)
+        .map(|e| e.request)
+        .collect();
+    assert_eq!(retires, admits, "every admitted request must retire");
+    for e in &events {
+        assert!(e.request == 0 || admits.contains(&e.request),
+                "{:?} on unknown lane {}", e.kind, e.request);
+    }
+    // The step phases really recorded as duration spans on the engine
+    // lane, with the launch geometry in their meta.
+    let draft = events
+        .iter()
+        .find(|e| e.kind == SpanKind::Draft)
+        .expect("no draft span recorded");
+    assert_eq!(draft.request, 0);
+    assert_eq!(draft.mode, "stub");
+    assert!(draft.meta.iter().any(|&(k, v)| k == "k" && v > 0.0),
+            "draft span lost its launch width: {:?}", draft.meta);
+    assert!(events.iter().any(|e| e.kind == SpanKind::Verify));
+    assert!(events.iter().any(|e| e.kind == SpanKind::SeqStep));
+
+    // Chrome export: parses, timestamps non-decreasing in file order,
+    // phases restricted to complete/instant/metadata.
+    let text = tracer.chrome_trace().to_string_pretty();
+    let back = Json::parse(&text).expect("trace must be valid JSON");
+    let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(evs.len() >= events.len());
+    let mut last_ts = 0.0f64;
+    for e in evs {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        assert!(matches!(ph, "X" | "i" | "M"), "unexpected phase {ph}");
+        if ph == "M" {
+            continue;
+        }
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "timestamps regressed: {ts} < {last_ts}");
+        last_ts = ts;
+    }
+}
+
+/// The `stats` admin path: an on-demand registry snapshot over the API
+/// and the wire, served without perturbing generation. With tracing
+/// enabled the snapshot grows the `spans` section (schema-additive).
+#[test]
+fn stub_stats_snapshot_on_demand_and_over_tcp() {
+    use bass::obs::Tracer;
+    let mut cfg = config_with(stub_spec(), 4, 1);
+    cfg.tracer = Tracer::wall(4096);
+    let coord = Arc::new(Coordinator::start(cfg).expect("start"));
+    let resp = coord.generate(request("warm", 1, 8, false)).unwrap();
+    assert_eq!(resp.seqs[0].n_tokens, 8);
+
+    // Direct API.
+    let snap = coord.stats().expect("stats snapshot");
+    let sched = snap.get("sched").expect("sched section");
+    assert!(sched.get("queue_depth").unwrap().as_usize().is_ok());
+    let spans = snap.get("spans").expect("spans section (tracing on)");
+    let counts = spans.get("span_counts").unwrap();
+    assert!(counts.get("admit").unwrap().as_usize().unwrap() >= 1);
+    assert!(counts.get("retire").unwrap().as_usize().unwrap() >= 1);
+
+    // Wire admin command, pipelined with an id tag.
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv_coord = coord.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve(srv_coord, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"{\"cmd\": \"stats\", \"id\": 3}\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 3);
+    let stats = j.get("stats").unwrap();
+    assert!(stats.get("sched").is_ok());
+    assert!(stats.get("spans").is_ok(), "spans section missing on wire");
 }

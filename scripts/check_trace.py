@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace exported by `bass serving --trace-out`.
+
+The exporter (rust/src/obs/trace.rs) writes one JSON object per
+scenario: {"traceEvents": [...], "displayTimeUnit": "ms",
+"otherData": {"dropped_spans": N}}. Events use pid 1 and tid = the
+owning request id (lane 0 is the engine-wide lane); duration spans are
+complete `X` events, lifecycle markers are thread-scoped `i` instants,
+and each lane leads with a `thread_name` `M` metadata record. Data
+events are sorted by start timestamp, so `ts` must be non-decreasing
+in file order.
+
+Checks (all hard, exit 1 on the first failure):
+
+  * top-level shape: non-empty traceEvents list, numeric
+    otherData.dropped_spans >= 0;
+  * per event: ph in {X, B, E, i, M}; non-metadata events carry name,
+    cat, pid, tid and a finite ts >= 0; X events a finite dur >= 0;
+  * no bare NaN/Infinity tokens anywhere (they are invalid JSON that
+    Python's json module would otherwise accept silently);
+  * ts non-decreasing across data events in file order;
+  * B/E begin/end events (not currently emitted, but legal Chrome
+    trace) balance per tid.
+
+With --report BENCH.json --scenario NAME the trace is cross-checked
+against the serving report: the set of distinct request lanes that
+received an `admit` instant must have exactly counters.n_requests
+members, and every non-zero lane appearing anywhere in the trace must
+be one of those admitted lanes (no orphan swimlanes).
+
+Usage:
+  check_trace.py TRACE.json [--report BENCH.json --scenario NAME]
+"""
+
+import argparse
+import json
+import math
+import sys
+
+VALID_PH = {"X", "B", "E", "i", "M"}
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def _reject_constant(token):
+    raise ValueError(f"non-finite JSON token {token!r}")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f, parse_constant=_reject_constant)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: {e}")
+
+
+def _finite_number(v):
+    return (isinstance(v, (int, float)) and not isinstance(v, bool)
+            and math.isfinite(v))
+
+
+def check_trace(doc, path):
+    if not isinstance(doc, dict):
+        fail(f"{path}: top level is not an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    dropped = doc.get("otherData", {}).get("dropped_spans")
+    if not _finite_number(dropped) or dropped < 0:
+        fail(f"{path}: otherData.dropped_spans missing or negative")
+    if dropped > 0:
+        print(f"warn: {path}: {int(dropped)} span(s) dropped "
+              f"(ring capacity exceeded)", file=sys.stderr)
+
+    last_ts = None
+    open_begins = {}  # tid -> depth of unmatched B events
+    counts = {"X": 0, "i": 0, "M": 0, "B": 0, "E": 0}
+    for i, ev in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            fail(f"{where}: not an object")
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            fail(f"{where}: ph {ph!r} not in {sorted(VALID_PH)}")
+        counts[ph] += 1
+        if not _finite_number(ev.get("tid")):
+            fail(f"{where}: tid missing or non-numeric")
+        if ev.get("pid") != 1:
+            fail(f"{where}: pid {ev.get('pid')!r} != 1")
+        if ph == "M":
+            continue
+        for key in ("name", "cat"):
+            if not isinstance(ev.get(key), str) or not ev[key]:
+                fail(f"{where}: missing {key!r}")
+        ts = ev.get("ts")
+        if not _finite_number(ts) or ts < 0:
+            fail(f"{where}: ts {ts!r} not a finite number >= 0")
+        if last_ts is not None and ts < last_ts:
+            fail(f"{where}: ts {ts} < previous {last_ts} "
+                 f"(file order must be non-decreasing)")
+        last_ts = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not _finite_number(dur) or dur < 0:
+                fail(f"{where}: X event dur {dur!r} not a finite "
+                     f"number >= 0")
+        elif ph == "B":
+            open_begins[ev["tid"]] = open_begins.get(ev["tid"], 0) + 1
+        elif ph == "E":
+            depth = open_begins.get(ev["tid"], 0)
+            if depth == 0:
+                fail(f"{where}: E without matching B on tid "
+                     f"{ev['tid']}")
+            open_begins[ev["tid"]] = depth - 1
+    unbalanced = {t: d for t, d in open_begins.items() if d}
+    if unbalanced:
+        fail(f"{path}: unmatched B events on tids {sorted(unbalanced)}")
+    if counts["X"] == 0:
+        fail(f"{path}: no complete (X) spans recorded")
+    print(f"ok: {path} is a valid Chrome trace "
+          f"({counts['X']} spans, {counts['i']} instants, "
+          f"{counts['M']} lanes)")
+    return events
+
+
+def cross_check(events, report_path, scenario):
+    doc = load(report_path)
+    by_name = {s.get("name"): s for s in doc.get("scenarios", [])}
+    s = by_name.get(scenario)
+    if s is None:
+        fail(f"{report_path}: no scenario named {scenario!r} "
+             f"(have {sorted(by_name)})")
+    n_requests = s["counters"]["n_requests"]
+
+    admitted = set()
+    lanes = set()
+    for ev in events:
+        if ev.get("ph") == "M":
+            continue
+        lanes.add(ev["tid"])
+        if ev.get("name") == "admit":
+            admitted.add(ev["tid"])
+    if len(admitted) != n_requests:
+        fail(f"trace has {len(admitted)} admitted request lane(s) but "
+             f"{report_path}:{scenario} counters.n_requests = "
+             f"{n_requests}")
+    orphans = {t for t in lanes if t != 0} - admitted
+    if orphans:
+        fail(f"trace lanes {sorted(orphans)} carry events but were "
+             f"never admitted")
+    print(f"ok: trace lanes match {report_path}:{scenario} "
+          f"({n_requests} admitted requests, no orphan lanes)")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Chrome trace validator for bass --trace-out")
+    ap.add_argument("trace", help="trace JSON file to validate")
+    ap.add_argument("--report",
+                    help="BENCH_serving.json to cross-check against")
+    ap.add_argument("--scenario",
+                    help="scenario name within --report")
+    args = ap.parse_args()
+    if bool(args.report) != bool(args.scenario):
+        ap.error("--report and --scenario go together")
+
+    events = check_trace(load(args.trace), args.trace)
+    if args.report:
+        cross_check(events, args.report, args.scenario)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,14 @@ v2 = v1 + the per-scenario "draft" section (draft_len / acceptance_rate
 distributions across requests), added when the engine switched to one
 adaptive draft-length controller per sequence. Draft stats are
 wall-clock-independent but policy-dependent, so they are schema-checked
-(present, numeric, p50 <= p99) yet never counter-gated.
+(present; numeric or explicit null for an empty sample set; p50 <= p99
+when both are numbers) yet never counter-gated. Bare NaN/Infinity
+tokens — or any non-finite number smuggled in elsewhere — are hard
+failures: the emitter must write null, never NaN.
+
+The per-scenario "observability" section (span summary + trace file
+pointer from `serving --trace-out`) is schema-additive: ignored here
+beyond the global finiteness walk, validated by scripts/check_trace.py.
 
 The per-scenario "flops" section (launch / padded_launch step-FLOP
 totals from the exec backends' launch accounting) is additive to v2:
@@ -47,6 +54,7 @@ Exit status: 0 clean/advisory, 1 hard failure.
 
 import argparse
 import json
+import math
 import sys
 
 SCHEMA = "bass-serving-bench/v2"
@@ -63,12 +71,33 @@ def fail(msg):
     sys.exit(1)
 
 
+def _reject_constant(token):
+    # json.load() happily parses bare NaN/Infinity (invalid JSON that
+    # a buggy emitter writes unquoted); the report contract is finite
+    # numbers or explicit null, so these are hard failures.
+    raise ValueError(f"non-finite JSON token {token!r}")
+
+
+def _assert_finite(node, path, where="$"):
+    """Recursively reject non-finite numbers anywhere in the report."""
+    if isinstance(node, float) and not math.isfinite(node):
+        fail(f"{path}: non-finite number at {where}")
+    elif isinstance(node, dict):
+        for key, value in node.items():
+            _assert_finite(value, path, f"{where}.{key}")
+    elif isinstance(node, list):
+        for i, value in enumerate(node):
+            _assert_finite(value, path, f"{where}[{i}]")
+
+
 def load(path):
     try:
         with open(path) as f:
-            return json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
+            doc = json.load(f, parse_constant=_reject_constant)
+    except (OSError, ValueError) as e:
         fail(f"{path}: {e}")
+    _assert_finite(doc, path)
+    return doc
 
 
 def check_report(doc, path):
@@ -93,10 +122,18 @@ def check_report(doc, path):
                 if m is None:
                     fail(f"{path}:{name}: {section} missing {metric!r}")
                 for stat in STATS:
-                    if not isinstance(m.get(stat), (int, float)):
+                    if stat not in m:
+                        fail(f"{path}:{name}: {metric} missing {stat!r}")
+                    # Explicit null = empty sample set (e.g. every
+                    # request expired unserved) — allowed; anything
+                    # else must be a number.
+                    if m[stat] is not None and not isinstance(
+                            m[stat], (int, float)):
                         fail(f"{path}:{name}: {metric}.{stat} "
                              f"not a number")
-                if m["p50"] > m["p99"]:
+                if (isinstance(m["p50"], (int, float))
+                        and isinstance(m["p99"], (int, float))
+                        and m["p50"] > m["p99"]):
                     fail(f"{path}:{name}: {metric} p50 {m['p50']} > "
                          f"p99 {m['p99']}")
         g, c = s["goodput"], s["counters"]
@@ -160,6 +197,9 @@ def show_advisory(base, run):
         for metric in LATENCY_METRICS:
             cur = s["latency"][metric]["p99"]
             ref = b["latency"][metric]["p99"]
+            if cur is None or ref is None:
+                # Empty sample set on either side: no movement to show.
+                continue
             delta = cur - ref
             print(f"  {s['name']}.{metric}.p99: {ref:.3g} -> {cur:.3g} "
                   f"({delta:+.3g} ms, advisory)")
