@@ -30,7 +30,7 @@ from jax._src.lib import xla_client as xc
 from compile import bwt
 from compile.corpus import build_corpus, write_tasks
 from compile.model import (CONFIGS, ModelConfig, decode, decode_packed,
-                           draft_loop, draft_packed, prefill,
+                           draft_loop, draft_packed, kv_row_copy, prefill,
                            prefill_scatter)
 from compile.quant import quantize_params
 from compile.train import TrainConfig, held_out_loss, train_model
@@ -84,6 +84,9 @@ def grid(quick: bool = False):
             if scatter:
                 yield (MAIN, prec, "prefill_scatter", b, PREFILL_P,
                        "dense")
+                # Row-copy shares prefill_scatter's reachability: only a
+                # multi-row fused store has a donor row to copy from.
+                yield (MAIN, prec, "kv_row_copy", b, 0, "dense")
             for q in main_q:
                 yield (MAIN, prec, "decode", b, q, "dense")
             for q in packed_q:
@@ -95,6 +98,7 @@ def grid(quick: bool = False):
                 if scatter:
                     yield (d, prec, "prefill_scatter", b, PREFILL_P,
                            "dense")
+                    yield (d, prec, "kv_row_copy", b, 0, "dense")
                 for k in ks:
                     yield (d, prec, "draft", b, k, "dense")
                     yield (d, prec, "draft_packed", b, k, "dense")
@@ -165,6 +169,15 @@ def lower_artifact(cfg: ModelConfig, params, phase, batch, q, attn):
                 jax.ShapeDtypeStruct((1,), i32),
                 _cache_specs(cfg, batch))
         jitted = jax.jit(fn, donate_argnums=(4,))
+    elif phase == "kv_row_copy":
+        # Weightless: a pure per-buffer slice + scatter over the donated
+        # fused cache. src/dst are s32[1] batch rows; q is unused (0).
+        def fn(src, dst, caches):
+            return tuple(kv_row_copy(caches, src, dst))
+        args = (jax.ShapeDtypeStruct((1,), i32),
+                jax.ShapeDtypeStruct((1,), i32),
+                _cache_specs(cfg, batch))
+        jitted = jax.jit(fn, donate_argnums=(2,))
     elif phase == "decode":
         def fn(flat_w, tokens, seq_lens, caches):
             p = jax.tree_util.tree_unflatten(treedef, flat_w)
@@ -361,12 +374,14 @@ def main():
 
     # ---- manifest -----------------------------------------------------------
     manifest = {
-        # v4: adds packed-segment decode_packed / draft_packed artifacts
+        # v5: adds per-bucket kv_row_copy artifacts (prompt-prefix KV
+        # reuse: fan-out prefill sharing + the coordinator prefix cache);
+        # v4 added packed-segment decode_packed / draft_packed artifacts
         # (ExecMode::Packed, offset-addressed ragged ABI); v3 added
         # per-row prefill_scatter (PAD mid-flight admission); v2 made
         # draft temperature/top_p [B] per-row vectors.
         # Must match rust/src/runtime/manifest.rs::MANIFEST_VERSION.
-        "version": 4,
+        "version": 5,
         "vocab": 256,
         "eos": 0,
         "prefill_p": PREFILL_P,

@@ -365,6 +365,37 @@ def prefill_scatter(params, tokens, prompt_lens, row, caches,
     return last, new_caches
 
 
+def kv_row_copy(caches, src, dst):
+    """Copy one row's full ``[H, S, Dh]`` KV slab onto another row of the
+    same fused cache, leaving every other row untouched.
+
+    Strictly simpler than ``prefill_scatter``: no weights, no forward
+    pass — a pure slice + scatter per cache buffer. This is the device
+    primitive behind prompt-prefix KV reuse (fan-out prefill sharing and
+    the coordinator's prefix cache): because KV at position ``i`` is a
+    pure function of tokens ``0..i`` (the recompute-resume soundness
+    argument, ``test_resume_recompute_*``), a copied row is bitwise what
+    a fresh prefill of the same context would have produced — including
+    the zero tail when the donor row is itself freshly prefilled.
+
+    Args:
+      caches: fused cache list ``[k_0, v_0, ...]`` of f32[B, H, S, Dh]
+        (donated in the exported artifact, like ``prefill_scatter``).
+      src, dst: int32[1] batch rows (donor, destination).
+
+    Returns new_caches with row ``dst`` of every buffer replaced by row
+    ``src``; all other rows element-identical to their inputs. ``src ==
+    dst`` is the identity.
+    """
+    s, d = src[0], dst[0]
+    new_caches = []
+    for c in caches:
+        slab = jax.lax.dynamic_slice(c, (s, 0, 0, 0), (1,) + c.shape[1:])
+        new_caches.append(
+            jax.lax.dynamic_update_slice(c, slab, (d, 0, 0, 0)))
+    return new_caches
+
+
 # ---------------------------------------------------------------------------
 # In-graph nucleus sampling + the fused draft loop
 # ---------------------------------------------------------------------------

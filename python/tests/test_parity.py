@@ -37,7 +37,7 @@ except ModuleNotFoundError:  # minimal images; CI installs hypothesis
 import pytest
 
 from compile.model import (ModelConfig, decode, decode_packed, draft_loop,
-                           draft_packed, init_params, prefill,
+                           draft_packed, init_params, kv_row_copy, prefill,
                            prefill_scatter, sample_top_p)
 
 jax.config.update("jax_platform_name", "cpu")
@@ -184,6 +184,110 @@ def test_scatter_prefill_leaves_other_rows_untouched():
                 np.testing.assert_array_equal(
                     np.asarray(a[r]), np.asarray(b[r]),
                     err_msg=f"buffer {i}: row {r} changed")
+
+
+# ---------------------------------------------------------------------------
+# KV row-copy vs fresh prefill (fan-out sharing / prefix cache)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("attn", ["dense", "pallas"])
+def test_kv_row_copy_matches_fresh_prefill_bitwise(attn):
+    """Row-copying a freshly-prefilled donor row must equal a fresh
+    prefill of the same prompt into the destination row **bit for bit**
+    (the entire [H, S, Dh] slab, zero tail included) — the soundness
+    argument for fan-out prefill sharing: KV at position i is a pure
+    function of tokens 0..i, so a copy of the donor's slab IS the
+    destination's fresh prefill, and the generated bytes that ride on it
+    (`rust/tests/step_equivalence.rs` solo-vs-shared) stay identical."""
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    batch = 3
+    tokens, plens = _prompts(batch, seed=21)
+    # Reference: row 2 freshly prefilled with row 0's prompt.
+    want_tokens = np.asarray(tokens).copy()
+    want_tokens[2] = np.asarray(tokens)[0]
+    want_plens = np.asarray(plens).copy()
+    want_plens[2] = np.asarray(plens)[0]
+    last_want, caches_want = prefill(params, jnp.asarray(want_tokens),
+                                     jnp.asarray(want_plens), cfg, attn)
+    # Shared path: prefill the original batch (row 2 holds an unrelated
+    # prompt — the previous occupant), then row-copy 0 -> 2.
+    _, caches = prefill(params, tokens, plens, cfg, attn)
+    copied = kv_row_copy(caches, jnp.asarray([0], jnp.int32),
+                         jnp.asarray([2], jnp.int32))
+    for i, (cw, cc) in enumerate(zip(caches_want, copied)):
+        np.testing.assert_array_equal(
+            np.asarray(cc)[2], np.asarray(cw)[2],
+            err_msg=f"buffer {i}: copied row != fresh prefill "
+                    f"(attn={attn})")
+    # And the copied row's next decode emits bitwise the logits of the
+    # freshly-prefilled row (what sampling actually consumes).
+    nxt = jnp.asarray([[int(np.asarray(tokens)[0, plens[0] - 1]), 17, 42]],
+                      jnp.int32)
+    lens = jnp.asarray([int(plens[0]) - 1], np.int32)
+    solo_w = [c[2:3] for c in caches_want]
+    solo_c = [c[2:3] for c in copied]
+    l_w, _ = decode(params, nxt, lens, solo_w, cfg, attn)
+    l_c, _ = decode(params, nxt, lens, solo_c, cfg, attn)
+    np.testing.assert_array_equal(
+        np.asarray(l_c), np.asarray(l_w),
+        err_msg=f"next-step logits differ after row copy (attn={attn})")
+
+
+def test_kv_row_copy_leaves_other_rows_untouched():
+    """Only the destination row changes; src == dst is the identity."""
+    cfg = _SCATTER_CFG
+    before = _garbage_cache(cfg, 4)
+    # Make the donor row distinguishable from the 7.5 fill.
+    before = [c.at[1].set(float(i + 1)) for i, c in enumerate(before)]
+    after = kv_row_copy(before, jnp.asarray([1], jnp.int32),
+                        jnp.asarray([3], jnp.int32))
+    for i, (b, a) in enumerate(zip(before, after)):
+        np.testing.assert_array_equal(
+            np.asarray(a)[3], np.asarray(b)[1],
+            err_msg=f"buffer {i}: dst row != src row")
+        for r in (0, 1, 2):
+            np.testing.assert_array_equal(
+                np.asarray(a)[r], np.asarray(b)[r],
+                err_msg=f"buffer {i}: row {r} changed")
+    ident = kv_row_copy(before, jnp.asarray([2], jnp.int32),
+                        jnp.asarray([2], jnp.int32))
+    for i, (b, a) in enumerate(zip(before, ident)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"buffer {i}: src == dst is not the identity")
+
+
+def test_kv_row_copy_artifact_lowers_weightless_with_donation():
+    """The aot grid entry: `kv_row_copy` lowers weightless — two s32[1]
+    row indices plus the donated (batch,)-fused caches, nothing else —
+    and mirrors prefill_scatter's b>1 reachability (a one-row store has
+    no donor row)."""
+    from compile.aot import grid, lower_artifact
+    cfg, params = _SCATTER_CFG, _SCATTER_PARAMS
+    batch = 4
+    text = lower_artifact(cfg, params, "kv_row_copy", batch, 0, "dense")
+    assert text.startswith("HloModule")
+    entry = text.splitlines()[0]
+    assert "input_output_alias" in entry, "cache donation lost"
+    assert "s32[1]" in entry, "src/dst rows are not s32[1]"
+    cache = (f"f32[{batch},{cfg.n_head},{cfg.s_max},"
+             f"{cfg.d_model // cfg.n_head}]")
+    assert cache in entry, f"caches are not (batch,)-shaped: want {cache}"
+    # Weightless: the only f32 inputs are the 2·n_layer cache buffers.
+    assert entry.count(cache) >= 2 * cfg.n_layer
+    assert "f32[256," not in entry, "embedding weights leaked into the ABI"
+
+    specs = list(grid(quick=False))
+    scatters = {(m, prec, b) for (m, prec, ph, b, _, _) in specs
+                if ph == "prefill_scatter"}
+    copies = {(m, prec, b, q) for (m, prec, ph, b, q, _) in specs
+              if ph == "kv_row_copy"}
+    assert {(m, prec, b) for (m, prec, b, _) in copies} == scatters, \
+        "kv_row_copy grid does not mirror the prefill_scatter grid"
+    assert all(q == 0 for (_, _, _, q) in copies)
+    assert all(b > 1 for (_, _, b, _) in copies), \
+        "unreachable b=1 kv_row_copy artifact exported"
 
 
 # ---------------------------------------------------------------------------

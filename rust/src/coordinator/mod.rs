@@ -50,6 +50,36 @@
 //! channels; the TCP front-end ([`server`]) is a thin line-protocol
 //! adapter that can also relay per-step [`StepEvent`]s.
 //!
+//! **Prompt-prefix KV reuse** (ISSUE 10) removes the redundant prefills
+//! the bullets above imply:
+//!
+//! * **Fan-out sharing** — a fan-out-`n` admission prefills the prompt
+//!   **once**: sibling 2..n get their KV by a device row copy from the
+//!   first sibling's row ([`SpecBatch::admit_shared_opts`] →
+//!   `Backend::copy_row`), charged as copies, not prefills.
+//! * **The prefix cache** ([`prefix_cache::PrefixCache`]) is a
+//!   host-side *index* of recently-resident prefix contexts, keyed by
+//!   prompt bytes truncated to block granularity and evicted LRU over a
+//!   **logical tick** (one per cache operation — never wall-clock, so
+//!   identical traffic replays identical evictions). The KV itself
+//!   stays on the device: a lookup hit is only served after
+//!   [`SpecBatch::donor_row_for`] re-validates a live donor row (a
+//!   running sequence or a frozen Husk row covering the context), so a
+//!   stale entry costs one probe, never stale KV. Hits turn
+//!   repeat-prefix admissions and recompute-resumes into `row_copy`
+//!   instead of a full prompt prefill. Reuse is **bitwise invisible**:
+//!   a copied row is byte-identical to a freshly prefilled one, so
+//!   cache on/off cannot perturb the deterministic counters.
+//! * **Scheduler cost model** — when the engine runs a started fused
+//!   bucket and the cache is on, a preempted sequence's row survives as
+//!   its own Husk donor, so resume is a cheap row copy instead of a
+//!   prompt-length recompute. The worker reports that via
+//!   [`scheduler::BatchView::cheap_resume`], and the scheduler is then
+//!   *more willing* to preempt: a **deadlined** waiter may suspend an
+//!   equal-priority **undeadlined** victim (the relation is asymmetric,
+//!   so cheap preemption cannot ping-pong; without `cheap_resume`,
+//!   equal priority still never preempts).
+//!
 //! Sampling parameters (temperature / top-p) are **per request**, like
 //! `max_new_tokens`, `seed`, `priority` and `deadline_ms`: sequences from
 //! many requests share fused device calls, but the draft artifact takes
@@ -58,6 +88,7 @@
 //! are only the defaults for requests that leave them unset.
 
 pub mod batcher;
+pub mod prefix_cache;
 pub mod scheduler;
 pub mod server;
 
@@ -74,7 +105,9 @@ use crate::runtime::json::Json;
 use crate::runtime::Engine;
 use crate::spec::{AdmitOpts, ExecMode, SeqId, SpecBatch, SpecConfig,
                   SuspendedSeq};
+use crate::metrics::SchedStats;
 use batcher::BatcherConfig;
+use prefix_cache::PrefixCache;
 use scheduler::{ParkedSeq, RunningSeq, Scheduler, SchedulerConfig,
                 Urgency};
 
@@ -174,6 +207,13 @@ pub struct Response {
     /// expired before the first step, or the request expired while
     /// still queued).
     pub ttft_secs: Option<f64>,
+    /// Prefix-cache / fan-out-sharing economy when this response was
+    /// finalized — engine-lifetime totals like `launch_flops`, so a
+    /// client (or the load harness) folding responses with `max` sees
+    /// the serving period's final tally. All-zero for never-admitted
+    /// answers and on servers running `--prefix-cache 0` with no
+    /// fan-out sharing.
+    pub prefix: PrefixEcho,
     /// Mean per-row draft length over this request's (sequence, step)
     /// observations — under the adaptive policy each sequence runs its
     /// own Algorithm-1 controller, so this is the request's realized γ,
@@ -182,6 +222,36 @@ pub struct Response {
     /// Draft tokens accepted over draft tokens proposed across this
     /// request's sequences (0 when nothing was drafted).
     pub acceptance_rate: f64,
+}
+
+/// Engine-lifetime prefix-reuse counters echoed on every response,
+/// read from [`crate::metrics::SchedStats`] at finalize time (the same
+/// monotone-echo convention as `Response::rebuckets` /
+/// `Response::launch_flops`). `hits + misses == lookups` by
+/// construction — the invariant the bench diff hard-checks.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefixEcho {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// KV row copies executed (fan-out sibling shares + cache hits).
+    pub row_copies: u64,
+    /// Device-equivalent prefill FLOPs the reuse avoided.
+    pub saved_flops: f64,
+}
+
+impl PrefixEcho {
+    fn from_stats(stats: &SchedStats) -> PrefixEcho {
+        PrefixEcho {
+            lookups: stats.prefix_lookups(),
+            hits: stats.prefix_hits,
+            misses: stats.prefix_misses,
+            evictions: stats.prefix_evictions,
+            row_copies: stats.row_copies,
+            saved_flops: stats.prefix_saved_flops,
+        }
+    }
 }
 
 /// One per-step progress notification for a streaming request.
@@ -250,7 +320,19 @@ pub struct CoordinatorConfig {
     /// Emit a one-line registry snapshot to stderr every this many
     /// seconds (`--stats-every`). None (default) disables the feed.
     pub stats_every_secs: Option<f64>,
+    /// Prompt-prefix cache capacity in entries (`--prefix-cache`).
+    /// 0 disables all prefix reuse — no cache lookups, no fan-out
+    /// sharing, no cheap-resume preemption bias — restoring the
+    /// prefill-everything behavior byte-for-byte (the CI on/off
+    /// determinism pin). Default 64.
+    pub prefix_cache: usize,
 }
+
+/// Block granularity of the prefix-cache keys (bytes): prompts agreeing
+/// on every whole 16-byte block share an index entry; correctness stays
+/// exact because a hit is only served after full-context donor
+/// validation (see [`prefix_cache`]).
+pub const PREFIX_BLOCK: usize = 16;
 
 impl CoordinatorConfig {
     pub fn new(artifacts_root: std::path::PathBuf, spec: SpecConfig,
@@ -264,6 +346,7 @@ impl CoordinatorConfig {
             stub_engine: false,
             tracer: Tracer::disabled(),
             stats_every_secs: None,
+            prefix_cache: 64,
         }
     }
 }
@@ -386,7 +469,8 @@ struct InFlight {
 
 impl InFlight {
     fn finish(self, queue_depth: usize, rebuckets: u64,
-              launch_flops: f64, padded_launch_flops: f64) {
+              launch_flops: f64, padded_launch_flops: f64,
+              prefix: PrefixEcho) {
         let seqs = self
             .done
             .into_iter()
@@ -403,6 +487,7 @@ impl InFlight {
             rebuckets,
             launch_flops,
             padded_launch_flops,
+            prefix,
             ttft_secs: self.ttft_secs,
             draft_len_mean: if self.draft_steps > 0 {
                 self.drafted as f64 / self.draft_steps as f64
@@ -479,6 +564,10 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
         preempt: cfg.preempt,
         ..SchedulerConfig::default()
     });
+    // The prompt-prefix index (see the module docs): populated on
+    // admission and suspension, probed before prompt prefills and
+    // recompute-resumes. Capacity 0 disables every reuse path.
+    let mut pcache = PrefixCache::new(cfg.prefix_cache, PREFIX_BLOCK);
     // Queued payloads (the scheduler owns their ordering) and admitted
     // requests.
     let mut jobs: HashMap<u64, PendingJob> = HashMap::new();
@@ -563,12 +652,17 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
         let now = Instant::now();
         let view: Vec<RunningSeq> = seq_owner
             .iter()
-            .map(|(&id, owner)| RunningSeq {
-                id,
-                priority: inflight
+            .map(|(&id, owner)| {
+                let urgency = inflight
                     .get(owner)
-                    .map_or(0, |j| j.urgency.priority),
-                preemptible: batch.can_suspend(id),
+                    .map(|j| j.urgency)
+                    .unwrap_or_default();
+                RunningSeq {
+                    id,
+                    priority: urgency.priority,
+                    has_deadline: urgency.deadline.is_some(),
+                    preemptible: batch.can_suspend(id),
+                }
             })
             .collect();
         let plan = {
@@ -578,6 +672,12 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 occupied: batch.occupied(),
                 bucket_rows: batch.bucket_rows(),
                 rebucket_target: Some(&probe),
+                // A started fused bucket keeps a suspended row resident
+                // as its own Husk donor, so (cache on) a resume is a
+                // row copy, not a prompt recompute — the scheduler may
+                // preempt more willingly.
+                cheap_resume: pcache.enabled()
+                    && batch.bucket_rows().is_some(),
             };
             sched.plan(&bview, &view, now)
         };
@@ -593,6 +693,15 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             seq_owner.remove(&id);
             let Some(job) = inflight.get_mut(&owner) else { continue };
             job.preempted += 1;
+            // Index the suspended context: in a started fused bucket the
+            // freed row survives as a Husk still encoding it, so the
+            // resume below can find itself and row-copy instead of
+            // recomputing (the index never asserts residency — the
+            // lookup re-validates against the live row table).
+            if pcache.enabled() {
+                sched.stats.prefix_evictions +=
+                    pcache.insert(&snap.context()) as u64;
+            }
             tracer.instant(SpanKind::Suspend, owner, Some(id), mode, &[]);
             let fanout_index = job.seq_index.remove(&id).unwrap_or(0);
             sched.park(ParkedSeq {
@@ -717,7 +826,33 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 continue;
             }
             let fanout_index = parked.fanout_index;
-            match batch.resume(parked.snapshot) {
+            // Prefix-cache probe before the recompute: a hit (index
+            // entry + live donor row — typically this sequence's own
+            // Husk) turns the prompt-length resume prefill into one KV
+            // row copy. Miss or cache-off falls through to the bitwise
+            // recompute path; either way the resumed bytes are
+            // identical, so the choice is invisible to outputs.
+            let donor = if pcache.enabled() {
+                let ctx = parked.snapshot.context();
+                let warm = pcache.lookup(&ctx);
+                let d = if warm { batch.donor_row_for(&ctx) } else { None };
+                sched.stats.note_prefix_lookup(d.is_some());
+                d
+            } else {
+                None
+            };
+            let resumed = match donor {
+                Some(d) => {
+                    let saving = batch.shared_bind_saving();
+                    let r = batch.resume_shared(d, parked.snapshot);
+                    if r.is_ok() {
+                        sched.stats.note_row_copy(saving);
+                    }
+                    r
+                }
+                None => batch.resume(parked.snapshot),
+            };
+            match resumed {
                 Ok(id) => {
                     sched.stats.resumes += 1;
                     seq_owner.insert(id, owner);
@@ -754,7 +889,9 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
             let Some(job) = jobs.remove(&rid) else { continue };
             if let Some(job) = admit_request(&mut batch, rid, job,
                                              &mut inflight,
-                                             &mut seq_owner, now) {
+                                             &mut seq_owner, now,
+                                             &mut pcache,
+                                             &mut sched.stats) {
                 // Zero free rows by the time the admission executed
                 // (e.g. a race with this round's resumes): same
                 // phantom-row treatment — back in the queue, payload
@@ -799,6 +936,7 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 let rebuckets = sched.stats.rebuckets();
                 let flops = (batch.flops.launch,
                              batch.flops.padded_launch);
+                let prefix = PrefixEcho::from_stats(&sched.stats);
                 let ids: Vec<SeqId> = seq_owner
                     .iter()
                     .filter(|(_, &o)| o == owner)
@@ -807,11 +945,11 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
                                &mut seq_owner, queue_depth, rebuckets,
-                               flops, &tracer, mode);
+                               flops, prefix, &tracer, mode);
                 }
                 for parked in sched.take_parked_of(owner) {
                     deliver_parked(parked, &mut inflight, queue_depth,
-                                   rebuckets, flops);
+                                   rebuckets, flops, prefix);
                 }
             }
             expire_queued_jobs(budget, &mut jobs, &mut sched, &tracer,
@@ -826,11 +964,12 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
                 let rebuckets = sched.stats.rebuckets();
                 let flops = (batch.flops.launch,
                              batch.flops.padded_launch);
+                let prefix = PrefixEcho::from_stats(&sched.stats);
                 let ids: Vec<SeqId> = seq_owner.keys().copied().collect();
                 for id in ids {
                     retire_seq(&mut batch, id, &mut inflight,
                                &mut seq_owner, queue_depth, rebuckets,
-                               flops, &tracer, mode);
+                               flops, prefix, &tracer, mode);
                 }
             } else if sched.has_queued() || sched.parked_count() > 0 {
                 // Waiting out the co-batching window (or a transiently
@@ -915,9 +1054,11 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
         let queue_depth = sched.queue_depth();
         let rebuckets = sched.stats.rebuckets();
         let flops = (batch.flops.launch, batch.flops.padded_launch);
+        let prefix = PrefixEcho::from_stats(&sched.stats);
         for id in report.finished {
             retire_seq(&mut batch, id, &mut inflight, &mut seq_owner,
-                       queue_depth, rebuckets, flops, &tracer, mode);
+                       queue_depth, rebuckets, flops, prefix, &tracer,
+                       mode);
         }
     }
 
@@ -939,9 +1080,21 @@ fn worker(cfg: CoordinatorConfig, rx: Receiver<Msg>,
 /// caller to re-queue — admitting a fan-out "clamped to 1" against a
 /// full batch could only fail the whole request on a row that was never
 /// there.
+///
+/// Prefix reuse: the prompt runs **at most one** prefill. The first
+/// sequence binds by row copy when the prefix cache validates a
+/// resident donor (a counted hit), by prefill otherwise; every later
+/// fan-out sibling then row-copies from the donor the first one
+/// established ([`SpecBatch::donor_row_for`] — in a started batch that
+/// is at worst the first sibling's own row; in a not-yet-started fused
+/// batch the probe stays `None` and the lazy fused start encodes all
+/// rows in its single rectangle prefill anyway). Each executed copy is
+/// counted and credited with the sibling prefill it replaced.
+#[allow(clippy::too_many_arguments)]
 fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
                  inflight: &mut HashMap<u64, InFlight>,
-                 seq_owner: &mut HashMap<SeqId, u64>, now: Instant)
+                 seq_owner: &mut HashMap<SeqId, u64>, now: Instant,
+                 pcache: &mut PrefixCache, stats: &mut SchedStats)
                  -> Option<PendingJob> {
     let default_seed = batch.config().seed;
     let n_requested = job.req.n_seqs.max(1);
@@ -970,6 +1123,21 @@ fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
         accepted: 0,
         draft_steps: 0,
     };
+    // One counted cache probe per request (the fan-out shares one
+    // prompt): a hit means a resident donor row validated against the
+    // full context, so even the *first* sequence binds by row copy.
+    let mut donor = if pcache.enabled() {
+        let warm = pcache.lookup(&job.req.prompt);
+        let d = if warm {
+            batch.donor_row_for(&job.req.prompt)
+        } else {
+            None
+        };
+        stats.note_prefix_lookup(d.is_some());
+        d
+    } else {
+        None
+    };
     let mut failed = None;
     for i in 0..n {
         // A pinned per-request seed also pins the RNG stream to the
@@ -977,15 +1145,35 @@ fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
         // regardless of prior traffic (exact under Policy::Fixed; see
         // Request::seed).
         let stream = job.req.seed.map(|_| i as u64);
-        match batch.admit_opts(&job.req.prompt, seed, AdmitOpts {
+        let opts = AdmitOpts {
             max_new_tokens: job.req.max_new_tokens,
             stream,
             temperature: job.req.temperature,
             top_p: job.req.top_p,
-        }) {
+        };
+        let admitted = match donor {
+            Some(d) => {
+                let saving = batch.shared_bind_saving();
+                let r = batch.admit_shared_opts(d, &job.req.prompt, seed,
+                                                opts);
+                if r.is_ok() {
+                    stats.note_row_copy(saving);
+                }
+                r
+            }
+            None => batch.admit_opts(&job.req.prompt, seed, opts),
+        };
+        match admitted {
             Ok(id) => {
                 fl.seq_index.insert(id, i);
                 seq_owner.insert(id, rid);
+                if pcache.enabled() && donor.is_none() {
+                    // Fan-out sharing: once the first sibling has a
+                    // row, the rest copy from it (the probe is `None`
+                    // in a not-yet-started fused batch — there the lazy
+                    // fused start covers every row at once).
+                    donor = batch.donor_row_for(&job.req.prompt);
+                }
             }
             Err(e) => {
                 failed = Some(e);
@@ -1001,6 +1189,11 @@ fn admit_request(batch: &mut SpecBatch, rid: u64, job: PendingJob,
         }
         let _ = fl.reply.send(Reply::Done(Err(e)));
         return None;
+    }
+    if pcache.enabled() {
+        // Index the admitted prompt for later repeat-prefix arrivals
+        // (their lookups re-validate a live donor before trusting it).
+        stats.prefix_evictions += pcache.insert(&job.req.prompt) as u64;
     }
     inflight.insert(rid, fl);
     None
@@ -1055,6 +1248,9 @@ fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
             // Never admitted: this request drove no launches.
             launch_flops: 0.0,
             padded_launch_flops: 0.0,
+            // Engine-lifetime echo like `rebuckets`, so even a
+            // queue-expired answer carries the serving period's tally.
+            prefix: PrefixEcho::from_stats(&sched.stats),
             ttft_secs: None,
             draft_len_mean: 0.0,
             acceptance_rate: 0.0,
@@ -1070,8 +1266,8 @@ fn expire_queued_jobs(budget: f64, jobs: &mut HashMap<u64, PendingJob>,
 fn retire_seq(batch: &mut SpecBatch, id: SeqId,
               inflight: &mut HashMap<u64, InFlight>,
               seq_owner: &mut HashMap<SeqId, u64>, queue_depth: usize,
-              rebuckets: u64, flops: (f64, f64), tracer: &Tracer,
-              mode: &'static str) {
+              rebuckets: u64, flops: (f64, f64), prefix: PrefixEcho,
+              tracer: &Tracer, mode: &'static str) {
     let Some(owner) = seq_owner.remove(&id) else { return };
     let state = match batch.retire(id) {
         Ok(s) => s,
@@ -1089,7 +1285,7 @@ fn retire_seq(batch: &mut SpecBatch, id: SeqId,
     job.remaining -= 1;
     if job.remaining == 0 {
         let job = inflight.remove(&owner).expect("job present");
-        job.finish(queue_depth, rebuckets, flops.0, flops.1);
+        job.finish(queue_depth, rebuckets, flops.0, flops.1, prefix);
     }
 }
 
@@ -1098,7 +1294,7 @@ fn retire_seq(batch: &mut SpecBatch, id: SeqId,
 fn deliver_parked(parked: ParkedSeq,
                   inflight: &mut HashMap<u64, InFlight>,
                   queue_depth: usize, rebuckets: u64,
-                  flops: (f64, f64)) {
+                  flops: (f64, f64), prefix: PrefixEcho) {
     let owner = parked.owner;
     let Some(job) = inflight.get_mut(&owner) else { return };
     let state = parked.snapshot.into_state();
@@ -1111,7 +1307,7 @@ fn deliver_parked(parked: ParkedSeq,
     job.remaining -= 1;
     if job.remaining == 0 {
         let job = inflight.remove(&owner).expect("job present");
-        job.finish(queue_depth, rebuckets, flops.0, flops.1);
+        job.finish(queue_depth, rebuckets, flops.0, flops.1, prefix);
     }
 }
 
@@ -1169,8 +1365,11 @@ mod tests {
         };
         let mut inflight = HashMap::new();
         let mut seq_owner = HashMap::new();
+        let mut pcache = PrefixCache::new(0, PREFIX_BLOCK);
+        let mut stats = SchedStats::default();
         let back = admit_request(&mut batch, 7, job, &mut inflight,
-                                 &mut seq_owner, now);
+                                 &mut seq_owner, now, &mut pcache,
+                                 &mut stats);
         // The old clamp `free_slots().max(1)` admitted one sequence
         // against the full batch, which failed the whole request on a
         // row that was never there; the payload must instead come back
@@ -1228,7 +1427,8 @@ mod tests {
         sched.submit(2, 1, fresh.urgency, now);
         jobs.insert(2u64, fresh);
 
-        expire_queued_jobs(0.5, &mut jobs, &mut sched);
+        expire_queued_jobs(0.5, &mut jobs, &mut sched,
+                           &Tracer::disabled(), "stub");
 
         // The stale job is gone from both the payload map and the
         // scheduler queue, and answered with its full fan-out of empty
@@ -1252,5 +1452,98 @@ mod tests {
                 "the unexpired job must not be answered");
         // The scheduler still ranks exactly the fresh job.
         assert_eq!(sched.queue_depth(), 1);
+    }
+
+    /// Admission-side prefix reuse on the stub backend: a cache-warm
+    /// prompt with a resident Husk donor admits its whole fan-out by
+    /// row copies — zero prompt prefills — and the stats ledger shows
+    /// one counted hit, one copy per admitted sequence, and positive
+    /// saved FLOPs. With the cache disabled the same admission runs
+    /// the plain prefill path and touches no prefix counter.
+    #[test]
+    fn warm_prompt_fanout_admits_by_row_copies() {
+        let engine = Engine::stub();
+        let spec = SpecConfig {
+            mode: ExecMode::Stub,
+            policy: Policy::Fixed(2),
+            max_new_tokens: 64,
+            ..SpecConfig::default()
+        };
+        let mut batch = SpecBatch::new(&engine, spec, 4).unwrap();
+        // Start a fused bucket with the shared prompt resident, then
+        // retire it: its row freezes into a Husk still encoding the
+        // context — the residency the cache trades on.
+        let warm = batch.admit(b"shared system prompt", 7).unwrap();
+        let bystander = batch.admit(b"bystander A", 8).unwrap();
+        batch.admit(b"bystander B", 9).unwrap();
+        batch.step().unwrap(); // lazy start: bucket of 4, one Shadow
+        batch.retire(warm).unwrap();
+
+        let (tx, _rx) = channel::<Reply>();
+        let now = Instant::now();
+        let job = PendingJob {
+            req: Request {
+                prompt: b"shared system prompt".to_vec(),
+                n_seqs: 2,
+                max_new_tokens: None,
+                temperature: None,
+                top_p: None,
+                seed: None,
+                priority: None,
+                deadline_ms: None,
+                stream: false,
+            },
+            reply: tx,
+            enqueued: now,
+            urgency: Urgency { priority: 0, deadline: None },
+        };
+        let mut inflight = HashMap::new();
+        let mut seq_owner = HashMap::new();
+        let mut pcache = PrefixCache::new(8, PREFIX_BLOCK);
+        pcache.insert(b"shared system prompt"); // warmed by earlier admit
+        let mut stats = SchedStats::default();
+        let back = admit_request(&mut batch, 42, job, &mut inflight,
+                                 &mut seq_owner, now, &mut pcache,
+                                 &mut stats);
+        assert!(back.is_none(), "admitted");
+        assert_eq!(seq_owner.len(), 2, "full fan-out placed");
+        assert_eq!(stats.prefix_hits, 1, "one counted probe per request");
+        assert_eq!(stats.prefix_misses, 0);
+        assert_eq!(stats.row_copies, 2, "every sibling bound by copy");
+        assert!(stats.prefix_saved_flops > 0.0);
+        // The engine charged copies, never a scatter prefill, for this
+        // admission: both siblings' share is exactly 2 copies per model.
+        let copy = crate::flops::row_copy_flops(
+            engine.manifest.model("main").unwrap());
+        assert!(copy > 0.0);
+
+        // Cold path (cache off): same shape, no prefix bookkeeping.
+        batch.retire(bystander).unwrap(); // free one Husk row
+        let (tx2, _rx2) = channel::<Reply>();
+        let job2 = PendingJob {
+            req: Request {
+                prompt: b"shared system prompt".to_vec(),
+                n_seqs: 1,
+                max_new_tokens: None,
+                temperature: None,
+                top_p: None,
+                seed: None,
+                priority: None,
+                deadline_ms: None,
+                stream: false,
+            },
+            reply: tx2,
+            enqueued: now,
+            urgency: Urgency { priority: 0, deadline: None },
+        };
+        let mut off = PrefixCache::new(0, PREFIX_BLOCK);
+        let mut stats_off = SchedStats::default();
+        let back2 = admit_request(&mut batch, 43, job2, &mut inflight,
+                                  &mut seq_owner, now, &mut off,
+                                  &mut stats_off);
+        assert!(back2.is_none(), "admitted on the plain path");
+        assert_eq!(stats_off.prefix_lookups(), 0);
+        assert_eq!(stats_off.row_copies, 0);
+        assert_eq!(stats_off.prefix_saved_flops, 0.0);
     }
 }

@@ -1,0 +1,245 @@
+//! Host-side prompt-prefix cache: the coordinator's index of which
+//! prefix contexts *may* have a resident KV donor row.
+//!
+//! The cache is deliberately an **index, not a store**: the KV bytes
+//! live (only) on the device, in rows of the running batch — live
+//! sequences and the frozen Husk rows that suspension/retirement leave
+//! behind in a fused bucket. An entry here records "a row encoding this
+//! prefix was resident recently"; whether one *still* is gets
+//! re-validated against the live row table (`SpecBatch::donor_row_for`)
+//! at lookup time, so the cache can never serve stale KV — the worst a
+//! stale entry costs is one failed probe, counted as a miss.
+//!
+//! Keys are prompt-prefix **bytes truncated to block granularity**
+//! ([`PrefixCache::block`] bytes): two prompts share an entry exactly
+//! when they agree on every whole block. Block truncation is what makes
+//! the index *hash-consed* — the thousand variants of "system prompt +
+//! short user suffix" collapse onto one key — while the donor
+//! validation step keeps correctness exact: `donor_row_for` matches on
+//! the *full* untruncated context, so a block-mate that diverges inside
+//! the tail simply misses.
+//!
+//! Eviction is LRU over a **logical tick** — a counter bumped once per
+//! cache operation — never wall-clock time. Identical
+//! insertion/lookup streams therefore produce identical eviction
+//! sequences on every run and every machine, which is what lets the
+//! serving harness pin bit-for-bit counter determinism with the cache
+//! enabled (ISSUE 10 acceptance: cache hit/miss must not perturb the
+//! deterministic `counters` block; this module keeps even the
+//! *advisory* prefix counters replayable).
+//!
+//! Capacity 0 disables the cache: every lookup misses, inserts are
+//! dropped, and nothing is counted — the coordinator skips its prefix
+//! bookkeeping entirely so a `--prefix-cache 0` run is byte-identical
+//! to one that predates the cache.
+
+use std::collections::HashMap;
+
+/// Deterministic LRU index of recently-resident prompt prefixes.
+#[derive(Debug)]
+pub struct PrefixCache {
+    /// Max entries; 0 disables the cache entirely.
+    capacity: usize,
+    /// Bytes per key block; keys are contexts truncated to a whole
+    /// number of blocks (a context shorter than one block keeps its
+    /// exact bytes — otherwise every short prompt would collide on the
+    /// empty key).
+    block: usize,
+    /// key -> last-use logical tick.
+    entries: HashMap<Vec<u8>, u64>,
+    /// Logical clock: bumped once per lookup/insert. Recency lives
+    /// here, not in wall time, so eviction order is a pure function of
+    /// the operation stream.
+    tick: u64,
+}
+
+impl PrefixCache {
+    pub fn new(capacity: usize, block: usize) -> PrefixCache {
+        PrefixCache {
+            capacity,
+            block: block.max(1),
+            entries: HashMap::new(),
+            tick: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Block granularity of the keys (bytes).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// The key a context indexes under: truncated to whole blocks,
+    /// kept exact when shorter than one block.
+    fn key(&self, ctx: &[u8]) -> Vec<u8> {
+        if ctx.len() < self.block {
+            ctx.to_vec()
+        } else {
+            ctx[..ctx.len() - ctx.len() % self.block].to_vec()
+        }
+    }
+
+    /// Probe the index for `ctx`'s block-truncated prefix. A hit
+    /// refreshes the entry's recency. The caller still must validate a
+    /// live donor row before treating this as a cache *hit* in the
+    /// served sense.
+    pub fn lookup(&mut self, ctx: &[u8]) -> bool {
+        if !self.enabled() || ctx.is_empty() {
+            return false;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.get_mut(&self.key(ctx)) {
+            Some(last) => {
+                *last = tick;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Record that a row encoding `ctx` is (newly) resident. Returns
+    /// the number of entries evicted to stay within capacity (0 or 1 —
+    /// surfaced so the coordinator can count evictions without this
+    /// module owning metrics).
+    pub fn insert(&mut self, ctx: &[u8]) -> usize {
+        if !self.enabled() || ctx.is_empty() {
+            return 0;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.insert(self.key(ctx), tick);
+        let mut evicted = 0;
+        while self.entries.len() > self.capacity {
+            // Deterministic LRU victim: the minimum logical tick. Ticks
+            // are unique (one per operation), so the victim is unique
+            // and independent of HashMap iteration order.
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|&(_, &t)| t)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty over capacity");
+            self.entries.remove(&victim);
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Replay one operation stream and return (hit pattern, eviction
+    /// counts) — the observable behavior determinism must pin.
+    fn replay(ops: &[(&str, &[u8])], cap: usize, block: usize)
+              -> (Vec<bool>, Vec<usize>) {
+        let mut c = PrefixCache::new(cap, block);
+        let mut hits = Vec::new();
+        let mut evs = Vec::new();
+        for &(op, ctx) in ops {
+            match op {
+                "get" => hits.push(c.lookup(ctx)),
+                "put" => evs.push(c.insert(ctx)),
+                _ => unreachable!(),
+            }
+        }
+        (hits, evs)
+    }
+
+    #[test]
+    fn same_stream_same_evictions() {
+        // The ISSUE-pinned determinism property: identical
+        // insertion/lookup streams produce identical hits AND identical
+        // eviction sequences, run after run (no wall-clock, no
+        // HashMap-order dependence — the interesting case is capacity
+        // pressure with interleaved recency refreshes).
+        let ops: Vec<(&str, &[u8])> = vec![
+            ("put", b"aaaa"), ("put", b"bbbb"), ("get", b"aaaa"),
+            ("put", b"cccc"), // cap 2: evicts bbbb (aaaa refreshed)
+            ("get", b"bbbb"), ("get", b"cccc"),
+            ("put", b"dddd"), // evicts aaaa
+            ("get", b"aaaa"), ("get", b"dddd"),
+        ];
+        let first = replay(&ops, 2, 4);
+        assert_eq!(first.0, vec![true, false, true, false, true]);
+        assert_eq!(first.1, vec![0, 0, 1, 1]);
+        for _ in 0..10 {
+            assert_eq!(replay(&ops, 2, 4), first, "replay diverged");
+        }
+    }
+
+    #[test]
+    fn capacity_bound_respected() {
+        let mut c = PrefixCache::new(3, 1);
+        let mut evicted = 0;
+        for i in 0..50u8 {
+            evicted += c.insert(&[i, i, i]);
+            assert!(c.len() <= 3, "over capacity after insert {i}");
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(evicted, 47, "every overflow evicted exactly one");
+        // The survivors are the three most recent inserts.
+        assert!(c.lookup(&[49, 49, 49]));
+        assert!(c.lookup(&[48, 48, 48]));
+        assert!(c.lookup(&[47, 47, 47]));
+        assert!(!c.lookup(&[46, 46, 46]));
+    }
+
+    #[test]
+    fn lookup_refreshes_recency() {
+        let mut c = PrefixCache::new(2, 1);
+        c.insert(b"old");
+        c.insert(b"new");
+        assert!(c.lookup(b"old"), "present before pressure");
+        // "old" was just touched, so the LRU victim is "new".
+        assert_eq!(c.insert(b"x"), 1);
+        assert!(c.lookup(b"old"));
+        assert!(!c.lookup(b"new"));
+    }
+
+    #[test]
+    fn block_granularity_hash_conses_shared_prefixes() {
+        let mut c = PrefixCache::new(8, 4);
+        // 9 bytes -> keyed on the first 8 (two whole blocks): prompts
+        // differing only inside the trailing partial block share the
+        // entry.
+        c.insert(b"syspromptA");
+        assert!(c.lookup(b"syspromptB"), "same whole-block prefix");
+        assert!(!c.lookup(b"sysPromptB"), "differs inside a block");
+        // Shorter than one block: exact-bytes key, no empty-key
+        // collision.
+        c.insert(b"ab");
+        assert!(c.lookup(b"ab"));
+        assert!(!c.lookup(b"cd"));
+    }
+
+    #[test]
+    fn capacity_zero_disables() {
+        let mut c = PrefixCache::new(0, 4);
+        assert!(!c.enabled());
+        assert_eq!(c.insert(b"aaaa"), 0);
+        assert!(!c.lookup(b"aaaa"));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn empty_context_never_cached() {
+        let mut c = PrefixCache::new(4, 4);
+        assert_eq!(c.insert(b""), 0);
+        assert!(!c.lookup(b""));
+        assert!(c.is_empty());
+    }
+}

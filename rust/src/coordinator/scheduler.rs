@@ -76,6 +76,17 @@
 //! validation path (`SPLIT` and pinned-context rows simply probe to
 //! `None`), so the plan cannot drift from what the batch will execute.
 //!
+//! **Cheap-resume preemption** (prefix-KV reuse): when the engine
+//! reports [`BatchView::cheap_resume`] — a started fused bucket with
+//! the prefix cache on, so a suspended row survives as its own Husk
+//! donor and resumes by one KV row copy instead of a prompt-length
+//! recompute — the preemption threshold relaxes: a **deadlined** waiter
+//! may also suspend an *equal*-priority **undeadlined** victim. The
+//! rule is asymmetric by construction (undeadlined work never preempts
+//! a deadlined runner of the same class), so it cannot thrash; with
+//! `cheap_resume` false the old strictly-higher-priority rule applies
+//! unchanged.
+//!
 //! Starvation: a preempted sequence resumes as soon as rank order allows
 //! (its original enqueue time keeps its FIFO position within its class);
 //! under sustained strictly-higher-priority load it waits indefinitely —
@@ -146,6 +157,10 @@ pub struct RunningSeq {
     pub id: SeqId,
     /// The owning request's priority.
     pub priority: i32,
+    /// The owning request carries a deadline. Undeadlined sequences are
+    /// the only eligible *equal*-priority victims of the cheap-resume
+    /// preemption rule ([`BatchView::cheap_resume`]).
+    pub has_deadline: bool,
     /// `SpecBatch::can_suspend(id)` — live, generating, and exactly
     /// resumable (context still fits the prefill capacity).
     pub preemptible: bool,
@@ -167,6 +182,16 @@ pub struct BatchView<'a> {
     /// `None` when impossible or a no-op. `None` here disables
     /// re-bucket planning entirely.
     pub rebucket_target: Option<&'a dyn Fn(usize) -> Option<usize>>,
+    /// Resuming a preempted sequence would be a KV **row copy** rather
+    /// than a prompt-length recompute: the engine runs a started fused
+    /// bucket (a suspended row survives as its own Husk donor) and the
+    /// prefix cache is on. The cost model is then *more willing* to
+    /// preempt — a **deadlined** waiter may suspend an equal-priority
+    /// **undeadlined** victim. The relation is strictly asymmetric
+    /// (the evicted undeadlined sequence can never preempt a deadlined
+    /// one back), so cheap preemption cannot ping-pong; with this
+    /// false, equal priority never preempts, exactly as before.
+    pub cheap_resume: bool,
 }
 
 /// One admission/preemption decision round, in execution order.
@@ -338,9 +363,9 @@ impl Scheduler {
             |a, b| rank((&a.urgency, a.enqueued), (&b.urgency, b.enqueued)));
     }
 
-    /// Merged (priority, slots-needed) of all waiting work, best rank
-    /// first — the preemption planner's view of demand.
-    fn waiting_in_rank_order(&self) -> Vec<(i32, usize)> {
+    /// Merged (priority, has-deadline, slots-needed) of all waiting
+    /// work, best rank first — the preemption planner's view of demand.
+    fn waiting_in_rank_order(&self) -> Vec<(i32, bool, usize)> {
         let mut items: Vec<(Urgency, Instant, usize)> = self
             .parked
             .iter()
@@ -349,7 +374,10 @@ impl Scheduler {
                                               q.n_seqs)))
             .collect();
         items.sort_by(|a, b| rank((&a.0, a.1), (&b.0, b.1)));
-        items.into_iter().map(|(u, _, n)| (u.priority, n)).collect()
+        items
+            .into_iter()
+            .map(|(u, _, n)| (u.priority, u.deadline.is_some(), n))
+            .collect()
     }
 
     /// One decision round at a step boundary. `batch` is the engine
@@ -387,25 +415,42 @@ impl Scheduler {
             }
         }
 
-        // -- preemption: free slots for strictly-higher-priority work ------
+        // -- preemption: free slots for higher-ranked work -----------------
+        //
+        // The base rule frees slots only for *strictly* higher-priority
+        // waiting work. When resume is cheap (`BatchView::cheap_resume`
+        // — the victim's row stays resident as a Husk donor and comes
+        // back by row copy, not a prompt recompute), the cost model
+        // also lets a **deadlined** waiter suspend an equal-priority
+        // **undeadlined** victim: the preemption buys latency for the
+        // deadline at near-zero recompute cost, and the relation cannot
+        // ping-pong (the evicted undeadlined sequence never outranks a
+        // deadlined runner back).
         if self.cfg.preempt
             && !(self.queue.is_empty() && self.parked.is_empty())
         {
-            let mut victims: Vec<(SeqId, i32)> = running
+            let mut victims: Vec<(SeqId, i32, bool)> = running
                 .iter()
                 .filter(|r| r.preemptible)
-                .map(|r| (r.id, r.priority))
+                .map(|r| (r.id, r.priority, r.has_deadline))
                 .collect();
-            victims.sort_by_key(|&(_, p)| p); // weakest first
+            // Weakest first; within a priority, undeadlined before
+            // deadlined — they are the only eligible equal-priority
+            // victims, so they must be in front of the cursor.
+            victims.sort_by_key(|&(_, p, d)| (p, d));
             let mut vi = 0;
             let mut ahead = avail;
-            for (pri, need) in self.waiting_in_rank_order() {
+            for (pri, deadlined, need) in self.waiting_in_rank_order() {
                 let need = need.min(max_batch);
-                while ahead < need
-                    && vi < victims.len()
-                    && victims[vi].1 < pri
-                {
-                    plan.preempt.push(victims[vi].0);
+                while ahead < need && vi < victims.len() {
+                    let (id, vpri, vdead) = victims[vi];
+                    let eligible = vpri < pri
+                        || (batch.cheap_resume && deadlined && !vdead
+                            && vpri == pri);
+                    if !eligible {
+                        break;
+                    }
+                    plan.preempt.push(id);
                     vi += 1;
                     ahead += 1;
                 }
@@ -494,7 +539,7 @@ impl Scheduler {
             let head_need = self
                 .waiting_in_rank_order()
                 .first()
-                .map_or(0, |&(_, n)| n.min(max_batch));
+                .map_or(0, |&(_, _, n)| n.min(max_batch));
             if *avail < head_need {
                 let desired = (batch.occupied + demand).min(max_batch);
                 if let Some(to) = probe(desired) {
@@ -575,6 +620,7 @@ mod tests {
             occupied: 0,
             bucket_rows: None,
             rebucket_target: None,
+            cheap_resume: false,
         }
     }
 
@@ -589,6 +635,7 @@ mod tests {
             occupied,
             bucket_rows: Some(bucket),
             rebucket_target: Some(probe),
+            cheap_resume: false,
         }
     }
 
@@ -612,7 +659,12 @@ mod tests {
     }
 
     fn running(id: SeqId, priority: i32) -> RunningSeq {
-        RunningSeq { id, priority, preemptible: true }
+        RunningSeq {
+            id,
+            priority,
+            has_deadline: false,
+            preemptible: true,
+        }
     }
 
     /// A `now` far past the co-batch window for `enqueued` at `t0`.
@@ -693,11 +745,73 @@ mod tests {
         let mut s = sched(2, 1, true);
         s.submit(9, 1, urgency(5), t0);
         let run = [
-            RunningSeq { id: 10, priority: 0, preemptible: false },
+            RunningSeq { has_deadline: false, preemptible: false,
+                         ..running(10, 0) },
             running(11, 1),
         ];
         let plan = s.plan(&view(0), &run, late(t0));
         assert_eq!(plan.preempt, vec![11]);
+    }
+
+    /// A SPLIT-like view whose resumes would be row copies (started
+    /// fused bucket + prefix cache on, as the coordinator reports it).
+    fn cheap_view(free: usize) -> BatchView<'static> {
+        BatchView { cheap_resume: true, ..view(free) }
+    }
+
+    fn deadlined(priority: i32, at: Instant) -> Urgency {
+        Urgency { priority, deadline: Some(at) }
+    }
+
+    #[test]
+    fn cheap_resume_lets_deadlined_work_preempt_equal_priority() {
+        let t0 = Instant::now();
+        let mut s = sched(1, 1, true);
+        s.submit(9, 1, deadlined(0, t0 + Duration::from_millis(50)), t0);
+        let run = [running(10, 0)]; // equal priority, no deadline
+        // Base cost model (resume = full prompt recompute): equal
+        // priority never preempts, deadline or not.
+        let plan = s.plan(&view(0), &run, late(t0));
+        assert!(plan.preempt.is_empty(), "expensive resume: no preempt");
+        assert!(plan.admit.is_empty());
+        // Cheap resume (the victim's row survives as its own Husk donor
+        // and comes back by one row copy): the deadline is worth it.
+        let plan = s.plan(&cheap_view(0), &run, late(t0));
+        assert_eq!(plan.preempt, vec![10]);
+        assert_eq!(plan.admit, vec![9]);
+    }
+
+    #[test]
+    fn cheap_resume_keeps_the_no_thrash_asymmetry() {
+        let t0 = Instant::now();
+        // An undeadlined waiter must not evict anyone of its own class,
+        // however cheap the resume...
+        let mut s = sched(1, 1, true);
+        s.submit(9, 1, urgency(0), t0);
+        let plan = s.plan(&cheap_view(0), &[running(10, 0)], late(t0));
+        assert!(plan.preempt.is_empty(), "undeadlined waiter: no eviction");
+        // ...and a deadlined *victim* is never evicted by its own class
+        // — the asymmetry that makes ping-pong impossible (the evicted
+        // sequence could otherwise turn around and preempt its evictor).
+        let mut s = sched(1, 1, true);
+        s.submit(9, 1, deadlined(0, t0 + Duration::from_millis(50)), t0);
+        let run = [RunningSeq { has_deadline: true, ..running(10, 0) }];
+        let plan = s.plan(&cheap_view(0), &run, late(t0));
+        assert!(plan.preempt.is_empty(), "deadlined victim is protected");
+    }
+
+    #[test]
+    fn cheap_resume_prefers_undeadlined_victims_first() {
+        let t0 = Instant::now();
+        let mut s = sched(2, 1, true);
+        // Strictly-higher-priority waiter needing one slot: victim
+        // order must still put the undeadlined equal-weakest first.
+        s.submit(9, 1, deadlined(5, t0 + Duration::from_millis(50)), t0);
+        let run = [RunningSeq { has_deadline: true, ..running(10, 0) },
+                   running(11, 0)];
+        let plan = s.plan(&cheap_view(0), &run, late(t0));
+        assert_eq!(plan.preempt, vec![11],
+                   "undeadlined victim evicted before the deadlined one");
     }
 
     #[test]
@@ -723,7 +837,7 @@ mod tests {
         s.submit(9, 3, urgency(5), t0);
         s.submit(8, 1, urgency(0), t0);
         let run = [running(10, 0), running(11, 1),
-                   RunningSeq { id: 12, priority: 0, preemptible: false }];
+                   RunningSeq { preemptible: false, ..running(12, 0) }];
         let plan = s.plan(&view(0), &run, late(t0));
         assert_eq!(plan.preempt, vec![10, 11]);
         assert!(plan.admit.is_empty(),

@@ -314,6 +314,17 @@ pub fn response_json(resp: &super::Response) -> Json {
         // accepted/proposed draft-token ratio.
         ("draft_len_mean", resp.draft_len_mean.into()),
         ("acceptance_rate", resp.acceptance_rate.into()),
+        // Prompt-prefix KV reuse tally (engine-lifetime echo, like
+        // launch_flops): cache probes, KV row copies executed, and the
+        // prefill FLOPs reuse avoided. hits + misses == lookups.
+        ("prefix_cache", Json::obj(vec![
+            ("lookups", (resp.prefix.lookups as usize).into()),
+            ("hits", (resp.prefix.hits as usize).into()),
+            ("misses", (resp.prefix.misses as usize).into()),
+            ("evictions", (resp.prefix.evictions as usize).into()),
+            ("row_copies", (resp.prefix.row_copies as usize).into()),
+            ("saved_flops", resp.prefix.saved_flops.into()),
+        ])),
         // Time to first token, `null` when no byte was ever emitted
         // (a time budget expired before the first step).
         ("ttft_ms", match resp.ttft_secs {
@@ -402,6 +413,14 @@ mod tests {
             rebuckets: 5,
             launch_flops: 1.5e9,
             padded_launch_flops: 2.0e9,
+            prefix: crate::coordinator::PrefixEcho {
+                lookups: 4,
+                hits: 3,
+                misses: 1,
+                evictions: 2,
+                row_copies: 5,
+                saved_flops: 6.5e7,
+            },
             ttft_secs: Some(0.0255),
             draft_len_mean: 3.5,
             acceptance_rate: 0.75,
@@ -429,6 +448,15 @@ mod tests {
         let lf = j.get("launch_flops").unwrap().as_f64().unwrap();
         let pf = j.get("padded_launch_flops").unwrap().as_f64().unwrap();
         assert!((lf - 1.5e9).abs() < 1.0 && (pf - 2.0e9).abs() < 1.0);
+        // Prefix-reuse echoes ride the wire for the serving report's
+        // "prefix_cache" section; the tally stays internally consistent.
+        let pc = j.get("prefix_cache").unwrap();
+        let v = |k: &str| pc.get(k).unwrap().as_usize().unwrap();
+        assert_eq!(v("lookups"), 4);
+        assert_eq!(v("hits") + v("misses"), v("lookups"));
+        assert_eq!(v("row_copies"), 5);
+        let sf = pc.get("saved_flops").unwrap().as_f64().unwrap();
+        assert!((sf - 6.5e7).abs() < 1.0);
     }
 
     #[test]
@@ -444,6 +472,7 @@ mod tests {
             rebuckets: 0,
             launch_flops: 0.0,
             padded_launch_flops: 0.0,
+            prefix: crate::coordinator::PrefixEcho::default(),
             ttft_secs: None,
             draft_len_mean: 0.0,
             acceptance_rate: 0.0,

@@ -26,6 +26,15 @@ pub fn prefill_flops(info: &ModelInfo, b: usize, p: usize) -> f64 {
     step_flops(info, b, p, p / 2)
 }
 
+/// Cost of one `kv_row_copy` launch: the elements moved (2·L cache
+/// buffers of `[H, S, Dh]` each — K and V per layer). A copy is pure
+/// memory traffic, so one element-move is charged as one FLOP; the
+/// launch touches exactly one row regardless of the bucket width, so
+/// the launched and PAD-padded costs coincide.
+pub fn row_copy_flops(info: &ModelInfo) -> f64 {
+    (2 * info.n_layer * info.n_head * info.s_max * info.d_head) as f64
+}
+
 /// Running FLOP counter a decode loop updates step by step.
 ///
 /// `total` counts *useful* per-row work (each row at its own `q_i`/`k_i`
@@ -58,6 +67,17 @@ impl FlopCounter {
     pub fn add_launch(&mut self, launch: f64, padded: f64) {
         self.launch += launch;
         self.padded_launch += padded;
+    }
+
+    /// Accrue one KV row copy. Fan-out siblings and prefix-cache hits
+    /// go through here instead of [`FlopCounter::add_prefill`]: the
+    /// useful work is the element move, not a re-run of the prompt.
+    /// Copy launches are row-shaped on every backend, so launch and
+    /// padded cost are the same.
+    pub fn add_row_copy(&mut self, info: &ModelInfo) {
+        let f = row_copy_flops(info);
+        self.total += f;
+        self.add_launch(f, f);
     }
 
     /// Utilization fraction given elapsed seconds and a calibrated peak.
@@ -117,6 +137,38 @@ mod tests {
         assert!(c.launch <= c.padded_launch);
         // add_launch never touches the utilization numerator.
         assert_eq!(c.total, 0.0);
+    }
+
+    /// Satellite-pinned regression: a fan-out-n admission charges
+    /// exactly one prefill plus (n-1) row copies — not n prefills —
+    /// on both the useful-work and launch/padded axes.
+    #[test]
+    fn fanout_charges_one_prefill_plus_copies() {
+        let m = model();
+        let n = 4;
+        let p = 48;
+
+        let mut shared = FlopCounter::default();
+        shared.add_prefill(&m, 1, p);
+        let pf = prefill_flops(&m, 1, p);
+        shared.add_launch(pf, pf);
+        for _ in 1..n {
+            shared.add_row_copy(&m);
+        }
+
+        let copy = row_copy_flops(&m);
+        assert_eq!(copy, (2 * 4 * 8 * 256 * 32) as f64);
+        let expect = pf + (n - 1) as f64 * copy;
+        assert_eq!(shared.total, expect);
+        assert_eq!(shared.launch, expect);
+        assert_eq!(shared.padded_launch, expect);
+
+        // The naive per-sibling accounting is strictly more expensive.
+        let mut naive = FlopCounter::default();
+        naive.add_prefill(&m, n, p);
+        assert!(naive.total > shared.total);
+        // And a copy is far cheaper than the prefill it replaces.
+        assert!(copy < pf);
     }
 
     #[test]

@@ -27,21 +27,28 @@ pub mod workload;
 
 pub use arrival::Arrival;
 pub use run::{run_direct, run_tcp, Outcome, Scenario};
-pub use workload::{LoadRequest, Workload};
+pub use workload::{LoadRequest, PrefixPool, Workload};
 
 use anyhow::{bail, Result};
 
 /// Build the named scenario set. `deterministic` selects the CI-gate
 /// workload (fan-out 1 → timing-independent counters); otherwise the
-/// mixed serving population runs.
+/// mixed serving population runs. A `prefix_pool` override replaces
+/// the mix's default shared-prefix population (`Some` on the mixed
+/// mix, `None` on the gate) — CI uses it to run a gate-deterministic
+/// scenario that still hammers the prompt-prefix cache.
 pub fn scenarios(arrival: &str, deterministic: bool, n_requests: usize,
-                 rate_rps: f64, seed: u64, slo_ms: f64)
+                 rate_rps: f64, seed: u64, slo_ms: f64,
+                 prefix_pool: Option<Option<PrefixPool>>)
                  -> Result<Vec<Scenario>> {
-    let workload = if deterministic {
+    let mut workload = if deterministic {
         Workload::gate()
     } else {
         Workload::mixed()
     };
+    if let Some(pool) = prefix_pool {
+        workload.prefix_pool = pool;
+    }
     let poisson = Scenario {
         name: if deterministic {
             "poisson-gate".into()

@@ -25,6 +25,8 @@
 //!     "draft":    {"draft_len": {"mean", "p50", "p99"},
 //!                  "acceptance_rate": {"mean", "p50", "p99"}},
 //!     "flops":    {"launch", "padded_launch"},
+//!     "prefix_cache": {"lookups", "hits", "misses", "evictions",
+//!                      "row_copies", "saved_flops"},
 //!     "counters": {"n_requests", "n_seqs_requested", "total_tokens",
 //!                  "all_finished"},
 //!     "observability": {...}   // additive; only with --trace-out
@@ -48,6 +50,16 @@
 //! engine-lifetime counter, so the scenario total is the max across
 //! outcomes (same convention as `overhead.rebuckets`). The section is
 //! additive to v2 and the baseline diff treats it as optional.
+//!
+//! `prefix_cache` reports the scenario's prompt-prefix KV reuse
+//! (ISSUE 10): cache lookups/hits/misses/evictions, the KV row copies
+//! executed (cache hits **and** fan-out sibling shares), and the
+//! prefill FLOPs that reuse avoided. Like `flops`, each response
+//! echoes monotone engine-lifetime counters and the scenario value is
+//! the max across outcomes — every counter is non-decreasing in time,
+//! so each max is attained at the chronologically last snapshot and
+//! `hits + misses == lookups` survives the aggregation (the diff
+//! script hard-checks it). Additive to v2; optional in the diff.
 //!
 //! `draft` distributions are **across requests** (each sample is one
 //! request's server-reported `draft_len_mean` / `acceptance_rate`, over
@@ -163,6 +175,25 @@ pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
          outcomes.iter().map(|o| o.padded_launch_flops)
              .fold(0.0_f64, f64::max).into()),
     ]);
+    // Prompt-prefix KV reuse tally, aggregated exactly like `flops`:
+    // monotone engine-lifetime echoes, max across outcomes. Taking
+    // each field's max independently is sound for the same reason —
+    // all counters are non-decreasing, so every max comes from the
+    // last snapshot and the hits+misses==lookups identity is
+    // preserved.
+    let max_u64 = |f: &dyn Fn(&Outcome) -> u64| -> Json {
+        (outcomes.iter().map(f).max().unwrap_or(0) as usize).into()
+    };
+    let prefix_cache = Json::obj(vec![
+        ("lookups", max_u64(&|o| o.prefix.lookups)),
+        ("hits", max_u64(&|o| o.prefix.hits)),
+        ("misses", max_u64(&|o| o.prefix.misses)),
+        ("evictions", max_u64(&|o| o.prefix.evictions)),
+        ("row_copies", max_u64(&|o| o.prefix.row_copies)),
+        ("saved_flops",
+         outcomes.iter().map(|o| o.prefix.saved_flops)
+             .fold(0.0_f64, f64::max).into()),
+    ]);
     let counters = Json::obj(vec![
         ("n_requests", outcomes.len().into()),
         ("n_seqs_requested",
@@ -185,6 +216,7 @@ pub fn scenario_report(sc: &Scenario, outcomes: &[Outcome],
         ("overhead", overhead),
         ("draft", draft),
         ("flops", flops),
+        ("prefix_cache", prefix_cache),
         ("counters", counters),
     ])
 }
@@ -238,6 +270,14 @@ mod tests {
             // outcomes carry larger totals (the report takes the max).
             launch_flops: e2e * 1.0e6,
             padded_launch_flops: e2e * 1.5e6,
+            prefix: crate::coordinator::PrefixEcho {
+                lookups: 3,
+                hits: 2,
+                misses: 1,
+                evictions: 1,
+                row_copies: 2,
+                saved_flops: e2e * 1.0e4,
+            },
         }
     }
 
@@ -292,7 +332,8 @@ mod tests {
         assert_eq!(back.get("schema").unwrap().as_str().unwrap(), SCHEMA);
         let s = &back.get("scenarios").unwrap().as_arr().unwrap()[0];
         for section in ["arrival", "workload", "latency", "goodput",
-                        "overhead", "draft", "flops", "counters"] {
+                        "overhead", "draft", "flops", "prefix_cache",
+                        "counters"] {
             assert!(s.opt(section).is_some(), "missing {section}");
         }
         for metric in ["ttft_ms", "tpot_ms", "e2e_ms", "queue_ms"] {
@@ -331,6 +372,14 @@ mod tests {
         let padded = f.get("padded_launch").unwrap().as_f64().unwrap();
         assert!((launch - 24.0e6).abs() < 1.0, "got launch {launch}");
         assert!(launch <= padded, "launch {launch} > padded {padded}");
+        // prefix_cache: monotone-echo max aggregation must preserve the
+        // hits+misses==lookups identity the diff script hard-checks.
+        let pc = s.get("prefix_cache").unwrap();
+        let v = |k: &str| pc.get(k).unwrap().as_usize().unwrap();
+        assert_eq!(v("hits") + v("misses"), v("lookups"));
+        assert_eq!(v("row_copies"), 2);
+        let saved = pc.get("saved_flops").unwrap().as_f64().unwrap();
+        assert!((saved - 24.0e4).abs() < 1.0, "got saved {saved}");
     }
 
     /// Satellite regression: a scenario where nothing was ever served

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{Coordinator, Reply, Response};
+use crate::coordinator::{Coordinator, PrefixEcho, Reply, Response};
 use crate::runtime::json::Json;
 
 use super::arrival::Arrival;
@@ -87,6 +87,10 @@ pub struct Outcome {
     /// Same steps priced as rectangular PAD launches — the baseline the
     /// packed saving is measured against (`launch ≤ padded` always).
     pub padded_launch_flops: f64,
+    /// Engine-lifetime prompt-prefix KV reuse counters when this
+    /// request finished (monotone echo, same convention as
+    /// `launch_flops`). Zeroed for error outcomes.
+    pub prefix: PrefixEcho,
 }
 
 impl Outcome {
@@ -109,6 +113,7 @@ impl Outcome {
             acceptance_rate: 0.0,
             launch_flops: 0.0,
             padded_launch_flops: 0.0,
+            prefix: PrefixEcho::default(),
         }
     }
 
@@ -135,6 +140,7 @@ impl Outcome {
             acceptance_rate: resp.acceptance_rate,
             launch_flops: resp.launch_flops,
             padded_launch_flops: resp.padded_launch_flops,
+            prefix: resp.prefix,
         }
     }
 }
@@ -414,6 +420,27 @@ fn outcome_from_wire(j: &Json, e2e_ms: f64) -> Result<Outcome> {
         acceptance_rate: j.get("acceptance_rate")?.as_f64()?,
         launch_flops: j.get("launch_flops")?.as_f64()?,
         padded_launch_flops: j.get("padded_launch_flops")?.as_f64()?,
+        prefix: prefix_from_wire(j)?,
+    })
+}
+
+/// Parse the response line's `prefix_cache` object back into the
+/// counter echo. Tolerates its absence (all-zero) so the harness can
+/// still drive a pre-ISSUE-10 server binary.
+fn prefix_from_wire(j: &Json) -> Result<PrefixEcho> {
+    let Some(pc) = j.opt("prefix_cache") else {
+        return Ok(PrefixEcho::default());
+    };
+    let count = |k: &str| -> Result<u64> {
+        Ok(pc.get(k)?.as_usize()? as u64)
+    };
+    Ok(PrefixEcho {
+        lookups: count("lookups")?,
+        hits: count("hits")?,
+        misses: count("misses")?,
+        evictions: count("evictions")?,
+        row_copies: count("row_copies")?,
+        saved_flops: pc.get("saved_flops")?.as_f64()?,
     })
 }
 
@@ -492,6 +519,14 @@ mod tests {
             rebuckets: 0,
             launch_flops: 3.0e6,
             padded_launch_flops: 4.0e6,
+            prefix: PrefixEcho {
+                lookups: 3,
+                hits: 2,
+                misses: 1,
+                evictions: 0,
+                row_copies: 2,
+                saved_flops: 1.5e5,
+            },
             ttft_secs: Some(0.001),
             draft_len_mean: 4.0,
             acceptance_rate: 0.5,
@@ -558,6 +593,9 @@ mod tests {
         assert_eq!(o2.n_tokens, 7, "reply 2 must land at index 2");
         assert!((o2.launch_flops - 3.0e6).abs() < 1.0);
         assert!((o2.padded_launch_flops - 4.0e6).abs() < 1.0);
+        assert_eq!(o2.prefix.hits + o2.prefix.misses, o2.prefix.lookups,
+                   "the echoed prefix tally must stay internally consistent");
+        assert_eq!(o2.prefix.row_copies, 2);
         let o1 = out[1].as_ref().expect("request 1 collected");
         assert!(o1.ok);
         assert_eq!(o1.n_tokens, 2, "reply 1 must land at index 1");

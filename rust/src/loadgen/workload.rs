@@ -27,6 +27,29 @@ pub struct Workload {
     pub priorities: Vec<i32>,
     /// Deadline choices (wire `"deadline_ms"`; `None` = undeadlined).
     pub deadlines_ms: Vec<Option<u64>>,
+    /// Shared system-prompt population (`None` = every prompt fully
+    /// random, the pre-prefix-cache stream byte for byte).
+    pub prefix_pool: Option<PrefixPool>,
+}
+
+/// A seeded shared-prefix population: `n_prompts` fixed "system
+/// prompts" (drawn once per `sample` call from the same seeded stream)
+/// that a sampled request reuses with probability
+/// `reuse_permille`/1000. A reusing request keeps its sampled length —
+/// the pool prompt overwrites the leading `min(prefix_len, len)` bytes
+/// — so the length distribution is untouched and repeat-prefix traffic
+/// becomes common, which is what exercises the coordinator's
+/// prompt-prefix KV cache. Permille (not a float) keeps the reuse coin
+/// integer-exact and the scenario JSON round-trippable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixPool {
+    /// Number of distinct shared system prompts.
+    pub n_prompts: usize,
+    /// Bytes of each pool prompt (clamped to the sampled prompt length;
+    /// sized to span several cache key blocks).
+    pub prefix_len: usize,
+    /// Reuse probability in permille (0..=1000).
+    pub reuse_permille: u32,
 }
 
 /// One concrete sampled request, ready to submit.
@@ -53,6 +76,10 @@ impl Workload {
             fanout: vec![1],
             priorities: vec![-1, 0, 0, 0, 5],
             deadlines_ms: vec![None, Some(50), Some(250)],
+            // No shared prefixes: the gate stream predates the prefix
+            // cache and must stay byte-identical (prefix_pool = None
+            // draws nothing from the RNG, so the stream is untouched).
+            prefix_pool: None,
         }
     }
 
@@ -68,19 +95,54 @@ impl Workload {
             fanout: vec![1, 1, 1, 2, 2, 4],
             priorities: vec![-1, 0, 0, 0, 0, 3, 5],
             deadlines_ms: vec![None, None, Some(50), Some(150), Some(400)],
+            // Realistic serving traffic repeats system prompts: four
+            // shared prefixes, reused by ~60% of requests, each long
+            // enough (48 bytes = 3 cache key blocks) that the prefix
+            // cache and fan-out sharing actually fire.
+            prefix_pool: Some(PrefixPool {
+                n_prompts: 4,
+                prefix_len: 48,
+                reuse_permille: 600,
+            }),
         }
     }
 
     /// Render `n` concrete requests. Same `(workload, n, seed)` —
-    /// same requests, byte for byte.
+    /// same requests, byte for byte. With no `prefix_pool` the RNG
+    /// draw sequence is exactly the pre-pool one, so legacy mixes
+    /// (the gate) replay their historical streams unchanged.
     pub fn sample(&self, n: usize, seed: u64) -> Vec<LoadRequest> {
         let mut rng = Pcg32::new(seed, WORKLOAD_STREAM);
+        // Shared system prompts come off the same seeded stream, ahead
+        // of the per-request draws, so the whole population is pinned
+        // by (workload, seed) alone.
+        let pool: Vec<Vec<u8>> = match &self.prefix_pool {
+            Some(pp) => (0..pp.n_prompts)
+                .map(|_| (0..pp.prefix_len)
+                    .map(|_| b'a' + (rng.next_u32() % 26) as u8)
+                    .collect())
+                .collect(),
+            None => Vec::new(),
+        };
         (0..n)
             .map(|_| {
                 let len = range(&mut rng, self.prompt_len);
-                let prompt: Vec<u8> = (0..len)
+                let mut prompt: Vec<u8> = (0..len)
                     .map(|_| b'a' + (rng.next_u32() % 26) as u8)
                     .collect();
+                if let Some(pp) = &self.prefix_pool {
+                    // Reuse coin, then pool pick. Overwriting (never
+                    // prepending) the leading bytes keeps the sampled
+                    // length — the prompt_len distribution is the same
+                    // with and without the pool.
+                    if !pool.is_empty()
+                        && rng.next_u32() % 1000 < pp.reuse_permille
+                    {
+                        let sys = pick(&mut rng, &pool);
+                        let k = pp.prefix_len.min(prompt.len());
+                        prompt[..k].copy_from_slice(&sys[..k]);
+                    }
+                }
                 LoadRequest {
                     prompt,
                     max_new_tokens: range(&mut rng, self.max_new),
@@ -93,11 +155,13 @@ impl Workload {
     }
 
     /// Scenario-config JSON (embedded in `BENCH_serving.json`).
+    /// `prefix_pool` is emitted only when set — schema-additive, so
+    /// pool-free reports are byte-identical to pre-pool ones.
     pub fn to_json(&self) -> Json {
         let pair = |(lo, hi): (usize, usize)| {
             Json::Arr(vec![lo.into(), hi.into()])
         };
-        Json::obj(vec![
+        let mut pairs = vec![
             ("prompt_len", pair(self.prompt_len)),
             ("max_new", pair(self.max_new)),
             ("fanout",
@@ -112,7 +176,15 @@ impl Workload {
                      None => Json::Null,
                  })
                  .collect())),
-        ])
+        ];
+        if let Some(pp) = &self.prefix_pool {
+            pairs.push(("prefix_pool", Json::obj(vec![
+                ("n_prompts", pp.n_prompts.into()),
+                ("prefix_len", pp.prefix_len.into()),
+                ("reuse_permille", (pp.reuse_permille as usize).into()),
+            ])));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -198,6 +270,37 @@ mod tests {
         // Σ max_new regardless of scheduling order.
         assert!(Workload::gate().sample(64, 1).iter()
                 .all(|lr| lr.n_seqs == 1));
+        // And no prefix pool: the gate's historical byte stream (and
+        // its no-KV-reuse counters) must survive the pool feature.
+        assert!(Workload::gate().prefix_pool.is_none());
+    }
+
+    #[test]
+    fn prefix_pool_shares_whole_prefixes() {
+        let w = Workload::mixed();
+        let pp = w.prefix_pool.expect("mixed carries a pool");
+        let reqs = w.sample(300, 6);
+        // Group by the leading pool-length (clamped) prefix; reused
+        // prompts collapse onto n_prompts groups, so with ~60% reuse
+        // the most popular prefixes must repeat many times.
+        let mut counts: std::collections::HashMap<&[u8], usize> =
+            std::collections::HashMap::new();
+        for lr in &reqs {
+            let k = pp.prefix_len.min(lr.prompt.len());
+            *counts.entry(&lr.prompt[..k]).or_default() += 1;
+        }
+        let repeated: usize = counts.values()
+            .filter(|&&c| c > 1).sum();
+        assert!(repeated >= reqs.len() / 4,
+                "shared prefixes too rare: {repeated}/{}", reqs.len());
+        // Overlay preserves the sampled-distribution invariants.
+        for lr in &reqs {
+            assert!(lr.prompt.len() >= w.prompt_len.0
+                    && lr.prompt.len() <= w.prompt_len.1);
+            assert!(lr.prompt.iter().all(u8::is_ascii_lowercase));
+        }
+        // And it is seed-deterministic like everything else here.
+        assert_eq!(reqs, w.sample(300, 6));
     }
 
     #[test]

@@ -27,7 +27,12 @@
 //!   exports one Chrome trace per scenario (`t.<scenario>.json`) and
 //!   adds a per-scenario `observability` section to the report;
 //!   `--stats-every S` (also on `serve`) emits periodic registry
-//!   snapshots to stderr.
+//!   snapshots to stderr; `--prefix-cache N` (also on `serve`, default
+//!   64, 0 = all prefix KV reuse off) sizes the host-side
+//!   prompt-prefix cache, and `--prefix-pool N` / `--prefix-reuse M‰`
+//!   overlay N shared system prompts on the workload so the cache and
+//!   fan-out prefill sharing actually fire (reported in the
+//!   `prefix_cache` section).
 //! * `eval`      — run a task (`--task code|summ`) and report accuracy.
 //! * `calibrate` — measure peak FLOP/s (Fig-1 utilization denominator).
 //! * `info`      — print the manifest summary.
@@ -294,9 +299,28 @@ fn serving_cmd(args: &Args) -> Result<()> {
         .flag("stats-every")
         .map(|v| v.parse::<f64>())
         .transpose()?;
+    // Host-side prompt-prefix cache capacity; 0 disables every form of
+    // prefix KV reuse (cache, fan-out sharing, cheap-resume bias) — CI
+    // diffs a 0-run against a default run to pin that reuse is
+    // byte-invisible in the deterministic counters.
+    let prefix_cache = args.usize_flag("prefix-cache", 64)?;
+    // `--prefix-pool N` overlays a shared-prefix population of N system
+    // prompts on the chosen workload mix (even the gate mix, whose
+    // counters stay deterministic — prompt *content* never affects
+    // token counts); `--prefix-reuse M` is the reuse rate in permille.
+    let prefix_pool = match args.usize_flag("prefix-pool", 0)? {
+        0 => None,
+        n_prompts => Some(Some(bass::loadgen::PrefixPool {
+            n_prompts,
+            prefix_len: 48,
+            reuse_permille: args.usize_flag("prefix-reuse", 600)?
+                .min(1000) as u32,
+        })),
+    };
 
     let scenarios = bass::loadgen::scenarios(&arrival, deterministic, n,
-                                             rate, seed, slo_ms)?;
+                                             rate, seed, slo_ms,
+                                             prefix_pool)?;
     let mut entries = Vec::new();
     for sc in &scenarios {
         // A fresh coordinator per scenario: engine-lifetime counters
@@ -311,6 +335,7 @@ fn serving_cmd(args: &Args) -> Result<()> {
             },
         );
         cfg.stub_engine = stub_engine;
+        cfg.prefix_cache = prefix_cache;
         let tracer = if trace_out.is_some() {
             Tracer::wall(bass::obs::DEFAULT_RING_CAP)
         } else {
@@ -400,6 +425,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
     // --no-preempt keeps the ranked queue but never suspends running work.
     cfg.preempt = !args.switch("no-preempt");
     cfg.stub_engine = args.switch("stub-engine");
+    // Prompt-prefix KV reuse: cache capacity (entries); 0 disables all
+    // prefix reuse including fan-out prefill sharing.
+    cfg.prefix_cache = args.usize_flag("prefix-cache", 64)?;
     // Periodic stderr registry snapshots; the wire `{"cmd":"stats"}`
     // admin command reads the same registry on demand.
     cfg.stats_every_secs = args

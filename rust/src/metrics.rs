@@ -140,6 +140,28 @@ pub struct SchedStats {
     /// Bucket-occupancy-over-time, one sample per `note_bucket`
     /// refresh (0.0 while no fused bucket runs).
     pub occupancy_series: Series,
+    /// Prompt-prefix cache lookups that found a usable resident donor
+    /// row (admission/resume served by `row_copy` instead of a full
+    /// prompt prefill).
+    pub prefix_hits: u64,
+    /// Prefix-cache lookups that found nothing (full prefill ran).
+    /// `hits + misses` is the report's `lookups` — the invariant
+    /// `diff_bench_serving.py` hard-checks.
+    pub prefix_misses: u64,
+    /// Cache entries deterministically evicted (LRU capacity bound —
+    /// logical ticks, never wall clock).
+    pub prefix_evictions: u64,
+    /// Device-equivalent prefill FLOPs the cache + fan-out sharing
+    /// avoided: each reuse credits `prefill_flops(main) +
+    /// prefill_flops(draft)` for the prompt it did NOT re-encode
+    /// (formula-based, so the stub backend reports the same savings
+    /// the device backends realize — the same convention as its
+    /// launch-FLOP accounting).
+    pub prefix_saved_flops: f64,
+    /// KV row copies actually executed (fan-out sibling shares + cache
+    /// hits), counted like preemptions/resumes: on success, never at
+    /// plan time.
+    pub row_copies: u64,
 }
 
 /// Aggregated queue-wait observations of one priority class.
@@ -234,6 +256,31 @@ impl SchedStats {
         }
     }
 
+    /// Record one prefix-cache lookup outcome. Savings are credited by
+    /// [`SchedStats::note_row_copy`] when the reuse actually executes,
+    /// never at lookup time — a hit whose copy later fails must not
+    /// claim FLOPs it did not save.
+    pub fn note_prefix_lookup(&mut self, hit: bool) {
+        if hit {
+            self.prefix_hits += 1;
+        } else {
+            self.prefix_misses += 1;
+        }
+    }
+
+    /// Total prefix-cache lookups (`hits + misses` by construction).
+    pub fn prefix_lookups(&self) -> u64 {
+        self.prefix_hits + self.prefix_misses
+    }
+
+    /// Count one **executed** KV row copy (fan-out sibling share or
+    /// cache-hit resume); a sharing copy also credits the sibling
+    /// prefill it replaced.
+    pub fn note_row_copy(&mut self, saved_flops: f64) {
+        self.row_copies += 1;
+        self.prefix_saved_flops += saved_flops;
+    }
+
     /// Record one request's admission wait under its priority class.
     pub fn observe_wait(&mut self, priority: i32, secs: f64) {
         let w = self.queue_wait.entry(priority).or_default();
@@ -278,6 +325,14 @@ impl SchedStats {
             ("draft_len_mean", self.mean_draft_len().into()),
             ("acceptance_rate", self.draft_acceptance().into()),
             ("queue_wait", Json::Obj(waits)),
+            ("prefix_cache", Json::obj(vec![
+                ("lookups", (self.prefix_lookups() as f64).into()),
+                ("hits", (self.prefix_hits as f64).into()),
+                ("misses", (self.prefix_misses as f64).into()),
+                ("evictions", (self.prefix_evictions as f64).into()),
+                ("row_copies", (self.row_copies as f64).into()),
+                ("saved_flops", self.prefix_saved_flops.into()),
+            ])),
             ("queue_depth_series", self.depth_series.to_json()),
             ("bucket_occupancy_series",
              self.occupancy_series.to_json()),
@@ -290,6 +345,7 @@ impl SchedStats {
     pub fn summary_line(&self) -> Option<String> {
         if self.preemptions == 0 && self.resumes == 0
             && self.max_queue_depth == 0 && self.rebuckets() == 0
+            && self.prefix_lookups() == 0 && self.row_copies == 0
         {
             return None;
         }
@@ -304,13 +360,17 @@ impl SchedStats {
         Some(format!(
             "preemptions={} resumes={} rebuckets={} (grow {} / shrink \
              {}, {} rows migrated) bucket_occ≈{:.0}% draft_len≈{:.1} \
-             accept≈{:.0}% max_queue_depth={} queue_wait[{}]",
+             accept≈{:.0}% prefix[{}/{} hit, {} evicted, {} copies, \
+             {:.3e} FLOPs saved] max_queue_depth={} queue_wait[{}]",
             self.preemptions, self.resumes, self.rebuckets(),
             self.rebuckets_grow, self.rebuckets_shrink,
             self.rebucket_migrated,
             self.mean_bucket_occupancy() * 100.0,
             self.mean_draft_len(),
             self.draft_acceptance() * 100.0,
+            self.prefix_hits, self.prefix_lookups(),
+            self.prefix_evictions, self.row_copies,
+            self.prefix_saved_flops,
             self.max_queue_depth, waits.join(" ")))
     }
 }
@@ -515,6 +575,37 @@ mod tests {
         // And the snapshot serializes to valid JSON (no NaN tokens).
         let text = j.to_string_pretty();
         Json::parse(&text).expect("snapshot round-trips");
+    }
+
+    #[test]
+    fn sched_stats_track_prefix_cache_economy() {
+        let mut s = SchedStats::default();
+        assert_eq!(s.prefix_lookups(), 0);
+        assert!(s.summary_line().is_none(), "untouched cache: no line");
+        s.note_prefix_lookup(false);
+        s.note_prefix_lookup(true);
+        s.note_prefix_lookup(true);
+        s.prefix_evictions += 1;
+        // Savings accrue on the executed copy, not at lookup time.
+        assert_eq!(s.prefix_saved_flops, 0.0);
+        s.note_row_copy(1000.0);
+        s.note_row_copy(500.0);
+        assert_eq!(s.prefix_hits, 2);
+        assert_eq!(s.prefix_misses, 1);
+        assert_eq!(s.prefix_lookups(), 3);
+        assert_eq!(s.row_copies, 2);
+        assert!((s.prefix_saved_flops - 1500.0).abs() < 1e-9);
+        let j = s.snapshot();
+        let pc = j.get("prefix_cache").unwrap();
+        assert_eq!(pc.get("lookups").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(pc.get("hits").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(pc.get("misses").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(pc.get("evictions").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(pc.get("row_copies").unwrap().as_usize().unwrap(), 2);
+        assert!((pc.get("saved_flops").unwrap().as_f64().unwrap()
+                 - 1500.0).abs() < 1e-9);
+        let line = s.summary_line().expect("active cache: a line");
+        assert!(line.contains("prefix[2/3 hit"), "line: {line}");
     }
 
     #[test]

@@ -15,6 +15,9 @@ pub enum SpanKind {
     FusedPrefill,
     /// Per-row scatter prefill into a running bucket.
     ScatterBind,
+    /// Per-row KV row copy (fan-out prefill sharing / prefix-cache
+    /// reuse) into a running bucket.
+    RowCopy,
     /// Live bucket grow/shrink (wraps the backend's fused re-encode).
     Rebucket,
     /// Sequence preempted out of the batch (instant).
@@ -33,11 +36,12 @@ pub enum SpanKind {
 
 impl SpanKind {
     /// Every kind, in a fixed order (stable summary/report layout).
-    pub const ALL: [SpanKind; 11] = [
+    pub const ALL: [SpanKind; 12] = [
         SpanKind::Draft,
         SpanKind::Verify,
         SpanKind::FusedPrefill,
         SpanKind::ScatterBind,
+        SpanKind::RowCopy,
         SpanKind::Rebucket,
         SpanKind::Suspend,
         SpanKind::Resume,
@@ -53,6 +57,7 @@ impl SpanKind {
             SpanKind::Verify => "verify",
             SpanKind::FusedPrefill => "fused_prefill",
             SpanKind::ScatterBind => "scatter_bind",
+            SpanKind::RowCopy => "row_copy",
             SpanKind::Rebucket => "rebucket",
             SpanKind::Suspend => "suspend",
             SpanKind::Resume => "resume",
@@ -71,6 +76,7 @@ impl SpanKind {
                 | SpanKind::Verify
                 | SpanKind::FusedPrefill
                 | SpanKind::ScatterBind
+                | SpanKind::RowCopy
                 | SpanKind::Rebucket
         )
     }

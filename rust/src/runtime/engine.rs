@@ -323,6 +323,92 @@ impl Engine {
         self.executable(&key).map(|_| ())
     }
 
+    /// Copy row `src`'s full `[H, S, Dh]` KV slab onto row `dst` of the
+    /// same fused cache, leaving every other row untouched — the device
+    /// primitive behind fan-out prefill sharing and prefix-cache reuse.
+    /// Strictly simpler than [`Engine::prefill_into_slot`]: the v5
+    /// `kv_row_copy` artifact is weightless (two `s32[1]` row indices
+    /// plus the donated caches), so no weight upload can fail here.
+    ///
+    /// Same failure discipline as `prefill_into_slot`: `caches` is
+    /// consumed only at the execute itself — a failure before then
+    /// (host upload, lazy compile) leaves the fused caches untouched
+    /// and only rejects this copy; an execute failure donates the
+    /// buffers and leaves `caches` empty (batch-fatal).
+    pub fn kv_row_copy(&self, model: &str, precision: Precision,
+                       attn: Attn, batch: usize, src: usize, dst: usize,
+                       caches: &mut Vec<PjRtBuffer>) -> Result<()> {
+        if src >= batch || dst >= batch {
+            bail!("kv_row_copy: rows {src}->{dst} out of range for batch \
+                   {batch}");
+        }
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::KvRowCopy,
+            batch, q: 0, attn,
+        };
+        let n_cache = self.manifest.model(model)?.n_cache_bufs();
+        if caches.len() != n_cache {
+            bail!("kv_row_copy: {} cache buffers, expected {n_cache}",
+                  caches.len());
+        }
+        let s = self.upload_i32(&[src as i32], &[1])?;
+        let d = self.upload_i32(&[dst as i32], &[1])?;
+        let owned = std::mem::take(caches);
+        let mut inputs: Vec<&PjRtBuffer> = vec![&s, &d];
+        inputs.extend(owned.iter());
+        let run_res = self.run(&key, &inputs, "kv_row_copy");
+        drop(owned); // donated: handles must not be reused
+        let outs = run_res?;
+        if outs.len() != n_cache {
+            bail!("kv_row_copy: expected {n_cache} outputs, got {}",
+                  outs.len());
+        }
+        *caches = outs;
+        Ok(())
+    }
+
+    /// Resolve and compile the row-copy executable for a bucket without
+    /// touching any cache buffer — fail fast (stale artifact set,
+    /// unknown bucket) *before* donating a running batch's fused caches
+    /// to [`Engine::kv_row_copy`].
+    pub fn ensure_kv_row_copy(&self, model: &str, precision: Precision,
+                              attn: Attn, batch: usize) -> Result<()> {
+        let key = ArtifactKey {
+            model: model.into(), precision, phase: Phase::KvRowCopy,
+            batch, q: 0, attn,
+        };
+        self.executable(&key).map(|_| ())
+    }
+
+    /// Duplicate a per-slot (B=1) cache set buffer-by-buffer via a host
+    /// round-trip — SPLIT-mode fan-out sharing, where each slot owns its
+    /// own caches and the fused `kv_row_copy` artifact (b>1, one store)
+    /// does not apply. f32 values round-trip bitwise through the
+    /// download/upload pair, so the clone is byte-identical to the
+    /// donor. The donor buffers are only read; a failure leaves both
+    /// the donor and the destination slot untouched.
+    pub fn clone_cache_set(&self, model: &str, caches: &[PjRtBuffer])
+                           -> Result<Vec<PjRtBuffer>> {
+        let info = self.manifest.model(model)?;
+        let n_cache = info.n_cache_bufs();
+        if caches.len() != n_cache {
+            bail!("clone_cache_set: {} cache buffers, expected {n_cache}",
+                  caches.len());
+        }
+        let dims = [1usize, info.n_head, info.s_max, info.d_head];
+        let n_elems: usize = dims.iter().product();
+        let mut out = Vec::with_capacity(caches.len());
+        for c in caches {
+            let host = self.download_f32(c)?;
+            if host.len() != n_elems {
+                bail!("clone_cache_set: buffer holds {} elements, \
+                       expected {n_elems} (B=1 slot cache)", host.len());
+            }
+            out.push(self.upload_f32(&host, &dims)?);
+        }
+        Ok(out)
+    }
+
     /// Ragged decode/verify step. `tokens` `[B, Q]`, `seq_lens` `[B]`;
     /// consumes `caches` (donated) and returns logits `[B, Q, V]` plus the
     /// successor cache buffers.

@@ -15,17 +15,20 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::json::Json;
 
-/// Manifest (= artifact ABI) version this runtime speaks. v4: the grid
-/// exports the packed-segment `decode_packed` / `draft_packed` programs
-/// (`ExecMode::Packed` packs the batch's ragged rows into one offset-
-/// addressed token stream); v3 added a per-row `prefill_scatter`
-/// artifact per batch bucket (PAD mid-flight admission scatter-prefills
-/// a new sequence into a freed row of the running fused cache); v2 made
-/// the draft artifact take `[B]` per-row temperature/top_p vectors
-/// instead of scalars. Checked at load so an artifact/binary mismatch
-/// fails with a "rebuild" message instead of an opaque device shape
-/// error mid-request.
-pub const MANIFEST_VERSION: usize = 4;
+/// Manifest (= artifact ABI) version this runtime speaks. v5: the grid
+/// exports a weightless `kv_row_copy` program per (model, precision,
+/// b>1 bucket) — copies one row's `[H,S,Dh]` KV slab onto another row
+/// of the same fused store (fan-out prefill sharing and the coordinator
+/// prefix cache ride on it); v4 added the packed-segment
+/// `decode_packed` / `draft_packed` programs (`ExecMode::Packed` packs
+/// the batch's ragged rows into one offset-addressed token stream); v3
+/// added a per-row `prefill_scatter` artifact per batch bucket (PAD
+/// mid-flight admission scatter-prefills a new sequence into a freed
+/// row of the running fused cache); v2 made the draft artifact take
+/// `[B]` per-row temperature/top_p vectors instead of scalars. Checked
+/// at load so an artifact/binary mismatch fails with a "rebuild"
+/// message instead of an opaque device shape error mid-request.
+pub const MANIFEST_VERSION: usize = 5;
 
 /// Numeric precision of a model's weights (paper Tables 1–3 axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -78,6 +81,10 @@ pub enum Phase {
     /// Offset-addressed fused draft loop: uniforms and outputs live in a
     /// packed-prefix `[B*K]` layout indexed by `[B+1]` koffs; `q` = K.
     DraftPacked,
+    /// Copy one row's full `[H,S,Dh]` KV slab onto another row of the
+    /// same fused cache (weightless; fan-out prefill sharing + prefix-
+    /// cache reuse); `q` is unused (0), `batch` = the fused bucket.
+    KvRowCopy,
 }
 
 impl Phase {
@@ -89,6 +96,7 @@ impl Phase {
             "draft" => Phase::Draft,
             "decode_packed" => Phase::DecodePacked,
             "draft_packed" => Phase::DraftPacked,
+            "kv_row_copy" => Phase::KvRowCopy,
             _ => bail!("unknown phase '{s}'"),
         })
     }
@@ -184,7 +192,9 @@ impl Manifest {
         let version = j.get("version")?.as_usize()?;
         if version != MANIFEST_VERSION {
             bail!("artifact manifest is version {version}, this runtime \
-                   needs {MANIFEST_VERSION} (v4 added the packed-segment \
+                   needs {MANIFEST_VERSION} (v5 added the per-bucket \
+                   kv_row_copy programs fan-out prefill sharing and the \
+                   prefix cache use; v4 added the packed-segment \
                    decode_packed/draft_packed programs ExecMode::Packed \
                    launches; v3 added the per-row prefill_scatter \
                    artifacts PAD mid-flight admission uses; v2 changed \
@@ -375,7 +385,7 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "version": 4, "vocab": 256, "eos": 0, "prefill_p": 64,
+      "version": 5, "vocab": 256, "eos": 0, "prefill_p": 64,
       "batches": [1, 2, 4], "draft_k_buckets": [1, 2, 4, 8],
       "small_k_buckets": [2, 4],
       "models": {"main": {"n_layer": 4, "n_head": 8, "d_model": 256,
@@ -392,7 +402,10 @@ mod tests {
         "batch": 2, "q": 3, "attn": "dense"},
         {"file": "hlo/draft_a_f32_draft_packed4_b2.hlo.txt",
         "model": "draft_a", "precision": "f32", "phase": "draft_packed",
-        "batch": 2, "q": 4, "attn": "dense"}],
+        "batch": 2, "q": 4, "attn": "dense"},
+        {"file": "hlo/main_f32_kv_row_copy0_b4.hlo.txt",
+        "model": "main", "precision": "f32", "phase": "kv_row_copy",
+        "batch": 4, "q": 0, "attn": "dense"}],
       "calib": {"file": "hlo/gemm_calib.hlo.txt", "n": 768,
         "flops": 905969664}
     }"#;
@@ -443,22 +456,35 @@ mod tests {
             attn: Attn::Dense,
         };
         assert!(m.artifact_path(&dpacked).is_ok());
+        // ...and the v5 row-copy phase.
+        let copy = ArtifactKey {
+            model: "main".into(),
+            precision: Precision::F32,
+            phase: Phase::KvRowCopy,
+            batch: 4,
+            q: 0,
+            attn: Attn::Dense,
+        };
+        assert!(m.artifact_path(&copy).is_ok());
     }
 
     #[test]
     fn stale_manifest_version_is_rejected_with_rebuild_hint() {
-        // Pre-v4 artifacts lack the packed-segment programs (pre-v3 the
-        // per-row prefill_scatter ones, pre-v2 export scalar draft
-        // temp/top_p): loading them with this runtime must fail up
-        // front, not at execute time, and the error must name both the
-        // missing programs and the rebuild command.
-        for stale in ["\"version\": 1", "\"version\": 2", "\"version\": 3"] {
-            let old = SAMPLE.replace("\"version\": 4", stale);
+        // Pre-v5 artifacts lack the kv_row_copy programs (pre-v4 the
+        // packed-segment ones, pre-v3 the per-row prefill_scatter ones,
+        // pre-v2 export scalar draft temp/top_p): loading them with this
+        // runtime must fail up front, not at execute time, and the error
+        // must name both the missing programs and the rebuild command.
+        for stale in ["\"version\": 1", "\"version\": 2", "\"version\": 3",
+                      "\"version\": 4"] {
+            let old = SAMPLE.replace("\"version\": 5", stale);
             let err = Manifest::parse(Path::new("/tmp/x"), &old)
                 .expect_err("stale manifest must be rejected");
             let msg = format!("{err:#}");
             assert!(msg.contains("make artifacts"),
                     "unhelpful error: {msg}");
+            assert!(msg.contains("kv_row_copy"),
+                    "error does not name the missing programs: {msg}");
             assert!(msg.contains("decode_packed"),
                     "error does not name the missing programs: {msg}");
         }

@@ -89,6 +89,46 @@
 //! `C - Σq_i` capacity filler). The gap is the pad-FLOP saving the
 //! serving report surfaces (`BENCH_serving.json` `"flops"`).
 //!
+//! # Row-copy contract
+//!
+//! [`Backend::copy_row`] gives a destination row the same device KV as
+//! a donor row whose [`SeqState`] context is identical — the device
+//! primitive behind fan-out prefill sharing and prefix-cache reuse.
+//! Because each cache position's KV is a pure function of its token
+//! prefix, a copied row is **bitwise identical** to a freshly
+//! prefilled one; the Python parity suite pins this per mode.
+//!
+//! Preconditions (the orchestrator guarantees both): the donor holds a
+//! live, *unstepped-or-equal* context covering the destination's full
+//! admission context, and the destination row was returned by
+//! [`Backend::admissible_row`]. Per mode:
+//!
+//! - **PAD / Packed (device), running bucket**: one weightless v5
+//!   `kv_row_copy` launch per model over the fused store (resolve +
+//!   compile first, so a stale artifact set rejects only this copy and
+//!   leaves the running batch intact — same containment as
+//!   [`scatter_bind`]).
+//! - **PAD / Packed / Stub, before the lazy start**: a no-op, exactly
+//!   like [`Backend::bind_row`] — the fused start encodes the
+//!   destination row's own context, and the rectangle is launched
+//!   whether or not rows share a prompt, so there is nothing to save.
+//! - **Stub / host-only Packed, started**: no device KV exists (the
+//!   host [`SeqState`] *is* the sequence identity), so the copy is
+//!   free; the FLOP accounting still charges the device-equivalent
+//!   row-copy cost — the same stands-in-for-PAD convention the stub's
+//!   launch accounting uses.
+//! - **SPLIT**: per-slot B=1 caches have no shared store, so the donor
+//!   slot's cache set is cloned buffer-by-buffer through a host
+//!   round-trip (`Engine::clone_cache_set`) — bitwise-exact, and still
+//!   far cheaper than re-running the prompt.
+//!
+//! Accounting: a successful copy charges
+//! [`FlopCounter::add_row_copy`] for both models (launch == padded —
+//! the copy touches one row regardless of bucket width) instead of
+//! `add_prefill`, and records a [`SpanKind::RowCopy`] span. The
+//! fan-out identity — admitting n siblings costs exactly one prefill
+//! plus n−1 row copies — holds in every started mode.
+//!
 //! The *only* place an [`ExecMode`] becomes concrete is [`make`]; no
 //! other code in `spec/` may match on the mode.
 
@@ -177,6 +217,14 @@ pub(super) trait Backend {
     /// device KV in `row`, before the caller installs the [`Slot`].
     fn bind_row(&mut self, cx: &mut ExecCtx, rows: &[Row], row: usize,
                 ctx: &[u8]) -> Result<()>;
+
+    /// Give row `dst` the same device KV as donor row `src` (identical
+    /// context — the orchestrator guarantees it), before the caller
+    /// installs the [`Slot`]: the cheap alternative to
+    /// [`Backend::bind_row`] behind fan-out prefill sharing and
+    /// prefix-cache reuse. See the module-level "Row-copy contract".
+    fn copy_row(&mut self, cx: &mut ExecCtx, rows: &[Row], src: usize,
+                dst: usize) -> Result<()>;
 
     /// Lazy start before the first step (PAD: bucketize + shadow-pad +
     /// fused prefill; SPLIT: no-op). Only called while `!started()`.
@@ -417,6 +465,49 @@ fn scatter_bind(
     Ok(())
 }
 
+/// Mid-flight KV row copy inside a running fused bucket (both models;
+/// see the module-level "Row-copy contract"); shared by [`PadBackend`]
+/// and the device path of [`PackedBackend`]. Resolving + compiling the
+/// weightless v5 `kv_row_copy` executables first means the likely
+/// failure (stale pre-v5 artifact set) rejects only this copy and
+/// leaves the running batch intact; only an execute failure
+/// (post-donation) is batch-fatal, exactly like [`scatter_bind`].
+fn fused_row_copy(
+    cx: &mut ExecCtx, rows: &[Row], src: usize, dst: usize,
+    store: &mut (Vec<PjRtBuffer>, Vec<PjRtBuffer>),
+) -> Result<()> {
+    let cfg = cx.cfg;
+    let eng = cx.engine;
+    let b = rows.len();
+    eng.ensure_kv_row_copy(&cfg.main_model, cfg.precision, cfg.attn, b)?;
+    eng.ensure_kv_row_copy(&cfg.draft_model, cfg.precision, cfg.attn, b)?;
+    let (main, draft) = store;
+    let t0 = Instant::now();
+    let tr = cx.tracer.begin();
+    eng.kv_row_copy(&cfg.main_model, cfg.precision, cfg.attn, b, src,
+                    dst, main)
+        .context("fused KV row copy (main model)")?;
+    eng.kv_row_copy(&cfg.draft_model, cfg.precision, cfg.attn, b, src,
+                    dst, draft)
+        .context("fused KV row copy (draft model)")?;
+    *cx.prefill_secs += t0.elapsed().as_secs_f64();
+    record_row_copy(cx, tr, src, dst);
+    Ok(())
+}
+
+/// Accounting tail every successful copy shares: the `row_copy` span
+/// plus both models' copy-cost accrual ([`FlopCounter::add_row_copy`];
+/// launch == padded). Host-only backends call this alone — no device
+/// KV moves, but the device-equivalent cost is charged, the same
+/// stands-in-for-PAD convention as the stub's launch accounting.
+fn record_row_copy(cx: &mut ExecCtx, tr: Option<u64>, src: usize,
+                   dst: usize) {
+    cx.tracer.span(SpanKind::RowCopy, tr, 0, None, cx.cfg.mode.as_str(),
+                   &[("src", src as f64), ("dst", dst as f64)]);
+    cx.flops.add_row_copy(cx.main_info);
+    cx.flops.add_row_copy(cx.draft_info);
+}
+
 /// Σᵢ `step_flops(info, 1, q, lens[i])` — the per-row sum both sides of
 /// the launch accounting are built from (PAD's rectangle when `q` is
 /// the launch width for every row).
@@ -481,6 +572,17 @@ impl Backend for PadBackend {
         match self.store.as_mut() {
             None => Ok(()), // lazy start encodes this row's context
             Some(store) => scatter_bind(cx, rows, row, ctx, store),
+        }
+    }
+
+    /// Running bucket: one `kv_row_copy` launch per model on the fused
+    /// store. Pre-start: a no-op like [`Backend::bind_row`] — the lazy
+    /// start encodes the destination row itself.
+    fn copy_row(&mut self, cx: &mut ExecCtx, rows: &[Row], src: usize,
+                dst: usize) -> Result<()> {
+        match self.store.as_mut() {
+            None => Ok(()),
+            Some(store) => fused_row_copy(cx, rows, src, dst, store),
         }
     }
 
@@ -618,6 +720,31 @@ impl Backend for SplitBackend {
         cx.flops.add_prefill(cx.draft_info, 1, p);
         self.main[row] = m.caches;
         self.draft[row] = d.caches;
+        Ok(())
+    }
+
+    /// SPLIT has no shared store to row-copy inside: the donor slot's
+    /// B=1 cache sets are cloned buffer-by-buffer through a host
+    /// round-trip — bitwise-exact (f32 survives the download/upload
+    /// pair) and far cheaper than re-running the prompt. The donor is
+    /// only read; a failure leaves both slots untouched.
+    fn copy_row(&mut self, cx: &mut ExecCtx, _rows: &[Row], src: usize,
+                dst: usize) -> Result<()> {
+        if self.main[src].is_empty() || self.draft[src].is_empty() {
+            bail!("SPLIT row copy: donor slot {src} holds no caches");
+        }
+        let cfg = cx.cfg;
+        let eng = cx.engine;
+        let t0 = Instant::now();
+        let tr = cx.tracer.begin();
+        let m = eng.clone_cache_set(&cfg.main_model, &self.main[src])
+            .context("per-slot cache clone (main model)")?;
+        let d = eng.clone_cache_set(&cfg.draft_model, &self.draft[src])
+            .context("per-slot cache clone (draft model)")?;
+        *cx.prefill_secs += t0.elapsed().as_secs_f64();
+        record_row_copy(cx, tr, src, dst);
+        self.main[dst] = m;
+        self.draft[dst] = d;
         Ok(())
     }
 
@@ -808,6 +935,23 @@ impl Backend for PackedBackend {
                 ctx: &[u8]) -> Result<()> {
         match self.store.as_mut() {
             Some(store) => scatter_bind(cx, rows, row, ctx, store),
+            None => Ok(()),
+        }
+    }
+
+    /// Device engine with a running bucket: PAD's fused `kv_row_copy`.
+    /// Host-only and started: no device KV exists, so the copy is free
+    /// — charge the device-equivalent cost (stub convention). Not yet
+    /// started: a no-op like [`Backend::bind_row`].
+    fn copy_row(&mut self, cx: &mut ExecCtx, rows: &[Row], src: usize,
+                dst: usize) -> Result<()> {
+        match self.store.as_mut() {
+            Some(store) => fused_row_copy(cx, rows, src, dst, store),
+            None if self.started && self.host_only => {
+                let tr = cx.tracer.begin();
+                record_row_copy(cx, tr, src, dst);
+                Ok(())
+            }
             None => Ok(()),
         }
     }
@@ -1088,6 +1232,20 @@ impl Backend for StubBackend {
     fn bind_row(&mut self, _cx: &mut ExecCtx, _rows: &[Row], _row: usize,
                 _ctx: &[u8]) -> Result<()> {
         Ok(()) // no device KV to build; SeqState carries everything
+    }
+
+    /// No device KV to move — the copy is free on the host. Once
+    /// started, the device-equivalent cost is still charged and the
+    /// `row_copy` span recorded, the same stands-in-for-PAD convention
+    /// as the stub's launch accounting; pre-start it is a no-op like
+    /// [`Backend::bind_row`] (the rectangle start covers every row).
+    fn copy_row(&mut self, cx: &mut ExecCtx, _rows: &[Row], src: usize,
+                dst: usize) -> Result<()> {
+        if self.started {
+            let tr = cx.tracer.begin();
+            record_row_copy(cx, tr, src, dst);
+        }
+        Ok(())
     }
 
     /// Stub lazy start: bucketize like PAD (headroom applied, so the

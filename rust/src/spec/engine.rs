@@ -332,6 +332,149 @@ impl<'a> SpecBatch<'a> {
         }
     }
 
+    // -- shared admission (fan-out sharing / prefix-cache reuse) -----------
+
+    /// True when `row`'s device KV covers `ctx`: the row's encoded
+    /// verified context has `ctx` as a byte prefix and its cache extent
+    /// (`main_len`) reaches `ctx`'s restart position, so a row copy
+    /// seeds a new sequence at `main_len = ctx.len() - 1` with KV
+    /// bitwise equal to a fresh prefill of `ctx` (causal purity for the
+    /// covered positions; the exact-zero ragged mask for the donor's
+    /// tail beyond them, which the copied-into sequence overwrites as
+    /// it decodes — the same masking contract every co-batched ragged
+    /// step already relies on).
+    fn row_covers(row: &Row, ctx: &[u8]) -> bool {
+        let state = match row {
+            Row::Seq(s) => &s.state,
+            // A released row of a running fused bucket: its KV is
+            // frozen at suspension/retirement, still encoding the
+            // husk's context — the residency a prefix cache trades on.
+            Row::Husk(state) => state,
+            // Free rows hold nothing; Shadow replicas are never donors
+            // (their content is an artifact of bucket padding).
+            _ => return false,
+        };
+        state.main_len as usize + 1 >= ctx.len()
+            && state.context().starts_with(ctx)
+    }
+
+    /// A resident row whose device KV could seed a new sequence with
+    /// verified context `ctx` via the backend's row copy — a live
+    /// sequence sharing the prefix (fan-out sibling) or a still-intact
+    /// husk (a preempted/retired sequence whose row was not reused).
+    /// `None` before the batch started stepping: there is no device KV
+    /// yet, and the fused start encodes every row from its own context
+    /// anyway (sharing is vacuous pre-start).
+    /// Contexts longer than the prefill window are matched on their
+    /// `prefill_p`-byte tail — the same clamp
+    /// [`SpecBatch::admit_shared_opts`] binds with, so a probe and the
+    /// bind it gates can never disagree.
+    pub fn donor_row_for(&self, ctx: &[u8]) -> Option<usize> {
+        let p_cap = self.engine.manifest.prefill_p;
+        let ctx = if ctx.len() > p_cap {
+            &ctx[ctx.len() - p_cap..]
+        } else {
+            ctx
+        };
+        if ctx.is_empty() || !self.backend.started() {
+            return None;
+        }
+        self.rows.iter().position(|r| Self::row_covers(r, ctx))
+    }
+
+    /// The formula-based device-equivalent prefill cost a successful
+    /// shared bind avoids: one single-row prefill per model over the
+    /// `prefill_p` window — what [`SpecBatch::admit_opts`] /
+    /// [`SpecBatch::resume`] would have charged the launch accounting.
+    /// Serving layers report it as `prefix_cache.saved_flops`
+    /// regardless of backend (on the stub nothing physical is saved,
+    /// but the stub stands in for PAD by convention).
+    pub fn shared_bind_saving(&self) -> f64 {
+        let p = self.engine.manifest.prefill_p;
+        crate::flops::prefill_flops(&self.main_info, 1, p)
+            + crate::flops::prefill_flops(&self.draft_info, 1, p)
+    }
+
+    /// [`SpecBatch::admit_opts`], but the new row's KV is **row-copied**
+    /// from `donor_row` (a row [`SpecBatch::donor_row_for`] returned
+    /// for this prompt) instead of prefilled — fan-out prefill sharing
+    /// and prefix-cache admission hits. The donor is re-validated
+    /// against the prompt; everything else (SeqId, RNG streams,
+    /// sampling params) is exactly `admit_opts`, so the admitted
+    /// sequence's output is byte-identical to the prefilled path.
+    pub fn admit_shared_opts(&mut self, donor_row: usize, prompt: &[u8],
+                             seed: u64, opts: AdmitOpts) -> Result<SeqId> {
+        opts.validate()?;
+        let p_cap = self.engine.manifest.prefill_p;
+        let tail: &[u8] = if prompt.len() > p_cap {
+            &prompt[prompt.len() - p_cap..]
+        } else {
+            prompt
+        };
+        if tail.is_empty() {
+            bail!("empty prompt");
+        }
+        self.check_donor(donor_row, tail)?;
+        let row = self.backend.admissible_row(&self.rows)?;
+        let slot = self.make_slot(tail, seed, opts);
+        let id = slot.id;
+        {
+            let (be, mut cx, rows) = self.backend_cx();
+            be.copy_row(&mut cx, rows, donor_row, row)?;
+        }
+        self.rows[row] = Row::Seq(slot);
+        Ok(id)
+    }
+
+    /// [`SpecBatch::resume`], but the row KV is **row-copied** from
+    /// `donor_row` instead of recomputed by prefill — the prefix-cache
+    /// resume hit (typically the sequence's own still-intact husk). The
+    /// continuation is byte-identical to the recompute path; like
+    /// `resume`, the snapshot is consumed, so on `Err` the owning
+    /// request must be failed loudly.
+    pub fn resume_shared(&mut self, donor_row: usize, susp: SuspendedSeq)
+                         -> Result<SeqId> {
+        let p_cap = self.engine.manifest.prefill_p;
+        let ctx_len = susp.context_len();
+        if ctx_len == 0 {
+            bail!("suspended sequence has an empty context");
+        }
+        if ctx_len > p_cap {
+            bail!("suspended context ({ctx_len} bytes) exceeds the \
+                   prefill capacity ({p_cap})");
+        }
+        self.check_donor(donor_row, &susp.context())?;
+        let row = self.backend.admissible_row(&self.rows)?;
+        let id = self.next_stream;
+        self.next_stream += 1;
+        let slot = susp.into_slot(id);
+        {
+            let (be, mut cx, rows) = self.backend_cx();
+            be.copy_row(&mut cx, rows, donor_row, row)?;
+        }
+        self.rows[row] = Row::Seq(slot);
+        Ok(id)
+    }
+
+    /// Re-validate a donor row right before the copy (the row table may
+    /// have changed since [`SpecBatch::donor_row_for`]).
+    fn check_donor(&self, donor_row: usize, ctx: &[u8]) -> Result<()> {
+        if !self.backend.started() {
+            bail!("no device KV to copy from: the batch has not started \
+                   stepping (admit normally; the fused start encodes \
+                   every row)");
+        }
+        let ok = self
+            .rows
+            .get(donor_row)
+            .is_some_and(|r| Self::row_covers(r, ctx));
+        if !ok {
+            bail!("row {donor_row} is not a valid KV donor for a \
+                   {}-byte context", ctx.len());
+        }
+        Ok(())
+    }
+
     // -- step --------------------------------------------------------------
 
     /// Run one draft + verify + accept round over the active sequences.

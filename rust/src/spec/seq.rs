@@ -255,6 +255,14 @@ impl SuspendedSeq {
         self.prompt.len() + self.generated.len()
     }
 
+    /// The verified context bytes (`prompt ‖ generated`) a resume must
+    /// rebuild row KV for — what a prefix-cache lookup keys on.
+    pub fn context(&self) -> Vec<u8> {
+        let mut ctx = self.prompt.clone();
+        ctx.extend_from_slice(&self.generated);
+        ctx
+    }
+
     /// Collapse into a plain (still `Running`) sequence state — what a
     /// serving layer reports when it must answer a request whose
     /// sequence is parked (time-budget expiry, shutdown) without

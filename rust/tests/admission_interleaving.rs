@@ -10,8 +10,9 @@
 //! this harness replays hundreds of seeded PCG32-driven schedules so the
 //! row-lifecycle edges (scatter-prefill into Husk vs Shadow rows, drain
 //! auto-reset, delayed retirement, fan-out streams, suspension husks,
-//! resumes into running buckets *and* into fresh ones) are all crossed
-//! many times. Each admission pins its RNG stream and — since draft
+//! resumes into running buckets *and* into fresh ones, shared
+//! admissions/resumes that row-copy a donor row's KV instead of
+//! prefilling) are all crossed many times. Each admission pins its RNG stream and — since draft
 //! lengths went per-sequence — BOTH policies keep a row's draft-length
 //! trajectory batch-independent: `Policy::Fixed` trivially, and
 //! `Policy::Heuristic` because every row runs its own Algorithm-1
@@ -123,6 +124,12 @@ struct ScheduleOutcome {
     grows: usize,
     /// Live re-buckets that shrank it (PAD only).
     shrinks: usize,
+    /// Admissions that shared a resident row's prompt KV by row copy
+    /// (`admit_shared_opts`) instead of prefilling their own.
+    shared: usize,
+    /// Resumes that rebuilt KV by row copy off a covering donor row
+    /// (`resume_shared`) instead of recompute.
+    resumes_shared: usize,
 }
 
 /// Replay one random schedule with random admissions, retirements AND
@@ -233,7 +240,20 @@ fn run_schedule(e: &Engine, mode: ExecMode, policy: Policy,
             if stepped_since_empty && batch.occupied() > 0 {
                 out.resumes_midflight += 1;
             }
-            let id = batch.resume(snap).unwrap();
+            // Resume-by-row-copy when a resident row already covers the
+            // suspended context (an identical-plan sibling at equal or
+            // later progress) — the cheap-resume path the coordinator's
+            // prefix cache feeds. `can_suspend` gated the snapshot at
+            // ctx <= prefill_p, so `resume_shared` never rejects on
+            // length. Rare (needs a duplicate Plan co-resident), so
+            // counted but not floored.
+            let id = match batch.donor_row_for(&snap.context()) {
+                Some(d) if rng.next_f32() < 0.9 => {
+                    out.resumes_shared += 1;
+                    batch.resume_shared(d, snap).unwrap()
+                }
+                _ => batch.resume(snap).unwrap(),
+            };
             owners.insert(id, plan);
         }
 
@@ -246,7 +266,18 @@ fn run_schedule(e: &Engine, mode: ExecMode, policy: Policy,
                 out.midflight += 1; // landed in a running batch (no drain)
             }
             let (prompt, seed, opts) = plan_inputs(p);
-            let id = batch.admit_opts(&prompt, seed, opts).unwrap();
+            // Fan-out prefill sharing: when some resident row (live Seq
+            // or Husk) already encodes this prompt, admit by KV row
+            // copy off it (p=0.9) instead of prefilling. The solo
+            // checks below are what pin the copy as byte-invisible.
+            let id = match batch.donor_row_for(&prompt) {
+                Some(d) if rng.next_f32() < 0.9 => {
+                    out.shared += 1;
+                    batch.admit_shared_opts(d, &prompt, seed, opts)
+                        .unwrap()
+                }
+                _ => batch.admit_opts(&prompt, seed, opts).unwrap(),
+            };
             owners.insert(id, p);
         }
 
@@ -303,6 +334,8 @@ fn run_mode(mode: ExecMode, policy: Policy) {
         total.resumes_midflight += o.resumes_midflight;
         total.grows += o.grows;
         total.shrinks += o.shrinks;
+        total.shared += o.shared;
+        total.resumes_shared += o.resumes_shared;
     }
     assert!(total.checked >= 600,
             "{mode:?}: only {} sequences checked — schedules degenerate",
@@ -326,6 +359,16 @@ fn run_mode(mode: ExecMode, policy: Policy) {
             "{mode:?}: only {} mid-flight resumes across {SCHEDULES} \
              schedules — resumes never hit a running batch",
             total.resumes_midflight);
+    // Fan-out prefill sharing must be crossed many times per mode: with
+    // 3 prompts in the pool, a mid-flight admission usually finds a
+    // co-resident (or husked) row of the same prompt, and the harness
+    // takes the row-copy path at p=0.9 whenever one exists. Every one
+    // of those admissions is still held to the solo byte/logP identity
+    // above — that is the shared-prefill pin at scale.
+    assert!(total.shared >= 30,
+            "{mode:?}: only {} shared (row-copy) admissions across \
+             {SCHEDULES} schedules — donor rows never found",
+            total.shared);
     // Live re-bucketing floors: PAD schedules must actually grow and
     // shrink running buckets many times (the recompute-carry path the
     // identity checks pin); SPLIT has no fused bucket and every rebucket

@@ -776,6 +776,117 @@ fn split_slot_reuse_is_isolated() {
     new_state.check_invariants(s_max).unwrap();
 }
 
+/// Fan-out prefill sharing (ISSUE 10 tentpole): siblings admitted by
+/// `admit_shared_opts` — one KV row copy off a live donor row instead
+/// of their own prompt prefill — must be byte-identical (and
+/// logP-identical) to solo runs of the same (prompt, seed, stream).
+/// The donor's KV for the shared prompt positions IS the prefill the
+/// sibling would have computed, so the copy is bitwise invisible; this
+/// is what lets the coordinator admit a fan-out-n request with exactly
+/// one prefill + (n-1) row copies. Runs per exec backend: the fused
+/// modes copy through the device `kv_row_copy` program (PAD slab copy
+/// / packed offset-addressed), SPLIT copies its per-slot cache, and
+/// the stub copies host-side.
+fn assert_shared_fanout_equals_solo(e: &Engine, mode: ExecMode) {
+    let cfg = SpecConfig {
+        temperature: 2.0,
+        top_p: 1.0,
+        ..cfg(mode)
+    };
+    let prompt = &prompts()[0];
+    let solo_stream = |stream: u64| {
+        let mut refb = SpecBatch::new(e, cfg.clone(), 1).unwrap();
+        let id = refb
+            .admit_opts(prompt, 7, AdmitOpts {
+                stream: Some(stream),
+                ..AdmitOpts::default()
+            })
+            .unwrap();
+        let mut guard = 0;
+        while refb.has_active() {
+            refb.step().unwrap();
+            guard += 1;
+            assert!(guard < 200, "runaway solo sibling run");
+        }
+        refb.retire(id).unwrap()
+    };
+    let solo: Vec<_> = (0..3u64).map(solo_stream).collect();
+
+    // Shared run: the target prefills once (stream 0); two bystanders
+    // fill the bucket, step once (the fused modes only have donor rows
+    // in a STARTED bucket), then retire to free rows for the siblings.
+    let mut batch = SpecBatch::new(e, cfg.clone(), 4).unwrap();
+    assert!(batch.donor_row_for(prompt).is_none(),
+            "{mode:?}: no donor row before anything is resident");
+    let first = batch
+        .admit_opts(prompt, 7, AdmitOpts {
+            stream: Some(0),
+            ..AdmitOpts::default()
+        })
+        .unwrap();
+    let b1 = batch.admit(&prompts()[1], 11).unwrap();
+    let b2 = batch.admit(&prompts()[2], 13).unwrap();
+    batch.step().unwrap();
+    batch.retire(b1).unwrap();
+    batch.retire(b2).unwrap();
+    let mut ids = vec![first];
+    for stream in 1..3u64 {
+        let donor = batch
+            .donor_row_for(prompt)
+            .expect("a resident row encoding the prompt must donate");
+        let id = batch
+            .admit_shared_opts(donor, prompt, 7, AdmitOpts {
+                stream: Some(stream),
+                ..AdmitOpts::default()
+            })
+            .unwrap();
+        ids.push(id);
+    }
+    let mut guard = 0;
+    while batch.has_active() {
+        batch.step().unwrap();
+        guard += 1;
+        assert!(guard < 200, "runaway shared-fanout run");
+    }
+    for (i, id) in ids.into_iter().enumerate() {
+        let got = batch.retire(id).unwrap();
+        assert_eq!(solo[i].generated, got.generated,
+                   "{mode:?} sibling {i} (stream {i}): row-copy admission \
+                    diverged from the solo prefill run");
+        assert_eq!(solo[i].finish, got.finish,
+                   "{mode:?} sibling {i}: finish reason");
+        assert!((solo[i].mean_logp() - got.mean_logp()).abs() < 1e-12,
+                "{mode:?} sibling {i}: mean_logp {} vs {}",
+                solo[i].mean_logp(), got.mean_logp());
+        assert_ne!(got.finish, FinishReason::Running);
+    }
+}
+
+#[test]
+fn shared_fanout_equals_solo_pad() {
+    require_artifacts!();
+    assert_shared_fanout_equals_solo(&engine(), ExecMode::Pad);
+}
+
+#[test]
+fn shared_fanout_equals_solo_split() {
+    require_artifacts!();
+    assert_shared_fanout_equals_solo(&engine(), ExecMode::Split);
+}
+
+#[test]
+fn shared_fanout_equals_solo_packed() {
+    require_artifacts!();
+    assert_shared_fanout_equals_solo(&engine(), ExecMode::Packed);
+}
+
+/// Same contract on the host-only stub backend — no artifact gate, so
+/// CI always exercises the shared-admission path end to end.
+#[test]
+fn shared_fanout_equals_solo_stub() {
+    assert_shared_fanout_equals_solo(&Engine::stub(), ExecMode::Stub);
+}
+
 /// Satellite 3c — the disabled-is-free / tracing-is-invisible contract,
 /// on the stub backend so it runs everywhere (no artifact gate): the
 /// same workload driven with tracing OFF and with tracing ON must

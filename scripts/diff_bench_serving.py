@@ -20,6 +20,13 @@ optional to have — older reports predate it — but hard-checked when
 present (numeric, 0 <= launch <= padded_launch; the packed backend's
 zero-pad claim is exactly that gap).
 
+The per-scenario "prefix_cache" section (prompt-prefix KV reuse:
+cache lookups/hits/misses/evictions, executed KV row copies, prefill
+FLOPs saved) follows the same additive pattern: optional to have,
+hard-checked when present — every field numeric and non-negative, and
+hits + misses == lookups (the counters are monotone engine-lifetime
+echoes aggregated by max, which preserves the identity).
+
 Three modes:
 
   diff_bench_serving.py CHECK run.json
@@ -160,6 +167,22 @@ def check_report(doc, path):
                 fail(f"{path}:{name}: flops.launch {fl['launch']} "
                      f"outside [0, padded_launch "
                      f"{fl['padded_launch']}]")
+        # "prefix_cache" is additive like "flops": optional to *have*,
+        # hard to get *wrong*. The load-bearing identity is
+        # hits + misses == lookups (every probe is exactly one of the
+        # two), which max-of-monotone-echo aggregation must preserve.
+        pc = s.get("prefix_cache")
+        if pc is not None:
+            for key in ("lookups", "hits", "misses", "evictions",
+                        "row_copies", "saved_flops"):
+                v = pc.get(key)
+                if not isinstance(v, (int, float)) or v < 0:
+                    fail(f"{path}:{name}: prefix_cache.{key} "
+                         f"not a non-negative number: {v!r}")
+            if pc["hits"] + pc["misses"] != pc["lookups"]:
+                fail(f"{path}:{name}: prefix_cache tally broken: "
+                     f"hits {pc['hits']} + misses {pc['misses']} "
+                     f"!= lookups {pc['lookups']}")
     print(f"ok: {path} passes {SCHEMA} invariants "
           f"({len(doc['scenarios'])} scenario(s))")
 
